@@ -1,0 +1,51 @@
+//! Quickstart: profile → allocate → inspect the plan → run one real
+//! inference through the AOT-compiled model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use camcloud::cloud::Catalog;
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::{ResourceManager, Strategy};
+use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
+use camcloud::streams::{Camera, StreamSpec};
+use camcloud::types::{Program, VGA};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A workload: two cameras, one per analysis program.
+    let streams = vec![
+        StreamSpec::new(Camera::new(1, VGA), Program::Vgg16, 0.25),
+        StreamSpec::new(Camera::new(2, VGA), Program::Zf, 1.0),
+    ];
+    println!("workload:");
+    for s in &streams {
+        println!("  {} -> {} at {} FPS", s.camera.id, s.program, s.desired_fps);
+    }
+
+    // 2. Resource profiles.  The coordinator defaults to the paper's
+    //    calibration; `camcloud profile --live` measures this machine.
+    let coordinator = Coordinator::new();
+
+    // 3. Allocate with the paper's strategy (ST3: CPU + GPU instances).
+    let catalog = Catalog::paper_experiments();
+    let manager = ResourceManager::new(catalog, &coordinator);
+    let plan = manager.allocate(&streams, Strategy::St3)?;
+    println!("\nallocation plan:\n{}", plan.summary());
+
+    // 4. Real inference: load the AOT artifact (HLO text -> PJRT) and
+    //    run a frame from camera 2 through ZF-mini.
+    let runtime = ModelRuntime::load(default_artifacts_dir())?;
+    let variant = Program::Zf.variant(VGA);
+    let frame = streams[1].camera.frame_at(0.0);
+    let (detections, stats) = runtime.infer(&variant, &frame)?;
+    println!(
+        "real inference ({variant}): {} detection(s) in {:.1} ms",
+        detections.len(),
+        stats.wall_seconds * 1e3
+    );
+    for d in detections.items.iter().take(3) {
+        println!("  {} ({:.0}%)", d.class_name, d.score * 100.0);
+    }
+    Ok(())
+}

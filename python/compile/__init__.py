@@ -1,0 +1,1 @@
+"""camcloud build-time compile package (Layer 1 + Layer 2 + AOT)."""

@@ -1,0 +1,164 @@
+"""AOT compile path: lower every (model, frame-size) variant to HLO text.
+
+HLO *text* (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py for the reference wiring.
+
+Outputs (under ``artifacts/``):
+  {model}_{H}x{W}.hlo.txt   one self-contained module per variant
+                            (weights baked as constants)
+  kernel_matmul_{M}x{K}x{N}.hlo.txt
+                            bare Layer-1 kernel for the rust microbench
+  meta.json                 manifest the rust runtime loads at startup
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged).  Python
+never runs again after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul_bias_act
+
+# Bare-kernel microbench shape: one MXU-tile-aligned GEMM.
+KERNEL_BENCH_SHAPE: Tuple[int, int, int] = (512, 256, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked model weights must survive the text
+    # round trip — the default printer elides them as ``constant({...})``.
+    return comp.as_hlo_text(True)
+
+
+def lower_model(spec: M.ModelSpec, frame_hw: Tuple[int, int]) -> str:
+    """Lower one detector variant to HLO text."""
+    fwd = M.build_forward(spec, frame_hw)
+    h, w = frame_hw
+    arg = jax.ShapeDtypeStruct((1, h, w, 3), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(arg))
+
+
+def lower_kernel_bench(m: int, k: int, n: int) -> str:
+    """Lower the bare matmul kernel (relu epilogue) for the L1 microbench."""
+
+    def fn(x, w, b):
+        return (matmul_bias_act(x, w, b, act="relu"),)
+
+    args = (
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def golden_frame(h: int, w: int) -> "np.ndarray":
+    """Deterministic test frame, reimplemented identically in rust.
+
+    ``frame[0, y, x, c] = ((y*31 + x*17 + c*7) % 256) / 255`` — no RNG, so
+    the rust integration tests can regenerate it bit-exactly and compare
+    model outputs against ``golden.json``.
+    """
+    import numpy as np
+
+    y = np.arange(h, dtype=np.int64)[:, None, None]
+    x = np.arange(w, dtype=np.int64)[None, :, None]
+    c = np.arange(3, dtype=np.int64)[None, None, :]
+    vals = ((y * 31 + x * 17 + c * 7) % 256).astype(np.float32) / 255.0
+    return vals[None]
+
+
+def build_all(out_dir: pathlib.Path) -> dict:
+    """Lower every variant, write artifacts, and return the manifest."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {
+        "model_h": M.MODEL_H,
+        "model_w": M.MODEL_W,
+        "classes": list(M.CLASSES),
+        "num_anchors": M.NUM_ANCHORS,
+        "head_out": M.HEAD_OUT,
+        "models": [],
+        "kernels": [],
+    }
+
+    golden: dict = {}
+    for spec in M.MODELS.values():
+        for h, w in M.FRAME_SIZES:
+            name = f"{spec.name}_{h}x{w}"
+            path = out_dir / f"{name}.hlo.txt"
+            text = lower_model(spec, (h, w))
+            path.write_text(text)
+            fwd = jax.jit(M.build_forward(spec, (h, w)))
+            out = fwd(golden_frame(h, w))[0]
+            golden[name] = [float(v) for v in out.reshape(-1)]
+            manifest["models"].append(
+                {
+                    "name": spec.name,
+                    "variant": name,
+                    "hlo": path.name,
+                    "frame_h": h,
+                    "frame_w": w,
+                    "input_shape": [1, h, w, 3],
+                    "output_shape": [M.NUM_ANCHORS, M.HEAD_OUT],
+                    "flops_per_frame": M.flops_per_frame(spec, (h, w)),
+                    "param_count": M.param_count(spec),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    m, k, n = KERNEL_BENCH_SHAPE
+    kname = f"kernel_matmul_{m}x{k}x{n}"
+    kpath = out_dir / f"{kname}.hlo.txt"
+    kpath.write_text(lower_kernel_bench(m, k, n))
+    manifest["kernels"].append(
+        {
+            "name": kname,
+            "hlo": kpath.name,
+            "m": m,
+            "k": k,
+            "n": n,
+            "flops": 2 * m * k * n,
+        }
+    )
+    print(f"wrote {kpath}")
+
+    golden_path = out_dir / "golden.json"
+    golden_path.write_text(json.dumps(golden) + "\n")
+    print(f"wrote {golden_path}")
+
+    meta_path = out_dir / "meta.json"
+    meta_path.write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {meta_path}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out",
+        default="../artifacts/meta.json",
+        help="path of the manifest; artifacts land in its directory",
+    )
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out).resolve().parent
+    build_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Layer-1 Pallas kernels for the camcloud analysis programs.
+
+Public surface:
+  matmul_bias_act — MXU-tiled matmul with fused bias + activation
+  conv2d_bias_act — im2col conv built on the matmul kernel
+  maxpool2d       — 2x2 (or NxN) non-overlapping max pool
+  avgpool_resize  — integer-factor frame downsample (camera ingest)
+  ref             — pure-jnp oracles for all of the above
+"""
+
+from .conv import conv2d_bias_act, flatten_conv_weights, im2col
+from .matmul import (
+    matmul_bias_act,
+    mxu_utilization_estimate,
+    round_up,
+    vmem_bytes,
+)
+from .pool import avgpool_resize, maxpool2d
+
+__all__ = [
+    "avgpool_resize",
+    "conv2d_bias_act",
+    "flatten_conv_weights",
+    "im2col",
+    "matmul_bias_act",
+    "maxpool2d",
+    "mxu_utilization_estimate",
+    "round_up",
+    "vmem_bytes",
+]

@@ -1,0 +1,84 @@
+"""Conv2D built on the Layer-1 Pallas matmul kernel via im2col.
+
+The paper's analysis programs are Caffe-era CNNs whose CUDA hot path is
+``im2col`` + SGEMM; this module re-expresses exactly that structure for the
+TPU: patches are materialized once (a cheap gather/concat that XLA fuses)
+and the heavy lifting happens inside :func:`kernels.matmul.matmul_bias_act`,
+the MXU-tiled Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_bias_act
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """Extract convolution patches from an NHWC tensor.
+
+    Returns ``[N, Ho, Wo, kh*kw*C]`` with patch elements ordered
+    (kh-major, kw, then C) — matching :func:`flatten_conv_weights`.
+    """
+    if x.ndim != 4:
+        raise ValueError(f"im2col wants NHWC, got shape {x.shape}")
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    n, h, w, c = x.shape
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    # Gather patches with *contiguous* slices at stride 1, then subsample
+    # once.  kh*kw strided slices are pathologically slow on older XLA CPU
+    # backends (EXPERIMENTS.md §Perf, L2 iteration 2); one big strided
+    # slice over the assembled patch tensor is cheap.
+    h1 = h - kh + 1
+    w1 = w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + h1, j : j + w1, :])
+    patches = jnp.concatenate(cols, axis=-1)
+    if stride > 1:
+        patches = patches[:, : (ho - 1) * stride + 1 : stride,
+                          : (wo - 1) * stride + 1 : stride, :]
+    return patches
+
+
+def flatten_conv_weights(w: jax.Array) -> jax.Array:
+    """Reshape ``[kh, kw, Cin, Cout]`` weights to the im2col ``[K, Cout]`` layout."""
+    kh, kw, cin, cout = w.shape
+    return w.reshape(kh * kw * cin, cout)
+
+
+def conv2d_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    act: str = "relu",
+) -> jax.Array:
+    """``act(conv2d(x, w) + b)`` over NHWC input / HWIO weights.
+
+    The convolution is computed as im2col + the Pallas matmul kernel, so
+    every conv in the model body exercises the Layer-1 hot path.
+    """
+    if w.ndim != 4:
+        raise ValueError(f"weights must be HWIO, got shape {w.shape}")
+    kh, kw, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"input channels {x.shape[-1]} != weight Cin {cin}")
+
+    patches = im2col(x, kh, kw, stride, padding)
+    n, ho, wo, k = patches.shape
+    out = matmul_bias_act(
+        patches.reshape(n * ho * wo, k),
+        flatten_conv_weights(w),
+        b,
+        act=act,
+    )
+    return out.reshape(n, ho, wo, cout)

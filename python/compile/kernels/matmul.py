@@ -1,0 +1,217 @@
+"""Layer-1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute hot-spot of both analysis programs (VGG16-mini and
+ZF-mini): every convolution is lowered to im2col + this matmul, and the
+fully-connected / detection-head layers call it directly.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(M/bm, N/bn, K/bk); each (i, j) output tile owns an f32 VMEM accumulator
+scratch and the K dimension is the innermost grid axis, so the HBM->VMEM
+pipeline double-buffers the A and B tiles while the MXU consumes the
+previous pair.  Block sizes default to MXU-shaped 128-wide tiles and are
+shrunk (aligned to a multiple of 8) for the mini models' small channel
+counts.  On this image the kernel runs with interpret=True (CPU), which
+lowers to plain HLO; the BlockSpec structure is what carries to real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Sublane granularity we align block dims to.  8 is the f32 sublane width;
+# a real-TPU deployment pads N and K up to the 128-lane width — the analytic
+# perf model in DESIGN.md §Perf accounts for that padding waste explicitly.
+_ALIGN = 8
+# MXU-shaped default tile.  M is capped higher because im2col matrices are
+# tall and skinny (M = H*W, K = kh*kw*C).
+_DEFAULT_BM = 512
+_DEFAULT_BN = 128
+_DEFAULT_BK = 128
+
+_ACTIVATIONS = ("none", "relu")
+
+# VMEM budget for the single-step fast path (16 MiB per TPU core, half
+# reserved for the pipeline).
+_VMEM_BUDGET_BYTES = 8 * 2**20
+
+
+def round_up(value: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``value``."""
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def _pick_block(dim: int, default: int) -> int:
+    """Largest aligned block not exceeding the (aligned) dimension."""
+    return min(default, round_up(dim, _ALIGN))
+
+
+def _matmul_kernel_single(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """Whole-problem kernel: one grid step, no accumulator loop.
+
+    Perf fast path (EXPERIMENTS.md §Perf, L1 iteration 1): when the
+    padded operands + output fit the VMEM budget, a single-step kernel
+    avoids the grid loop entirely — on TPU that removes the K-loop
+    bookkeeping, and under interpret=True it removes a while-loop +
+    dynamic-slice chain per call, which dominated small-layer latency.
+    """
+    out = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    out = out + b_ref[...]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nsteps: int, act: str):
+    """One grid step: acc += x_tile @ w_tile; fused epilogue on last K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        out = acc_ref[...] + b_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    act: str = "none",
+    block_m: int = _DEFAULT_BM,
+    block_n: int = _DEFAULT_BN,
+    block_k: int = _DEFAULT_BK,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with the tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` input activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias, or None for zero bias.
+      act: ``"none"`` or ``"relu"``.
+      block_m / block_n / block_k: tile-shape overrides (perf knobs).
+
+    Returns:
+      ``[M, N]`` array with the dtype of ``x``.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_bias_act wants 2D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if act not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; expected one of {_ACTIVATIONS}")
+
+    m, k = x.shape
+    _, n = w.shape
+    if b is None:
+        b = jnp.zeros((n,), dtype=x.dtype)
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+
+    m_pad = round_up(m, bm)
+    n_pad = round_up(n, bn)
+    k_pad = round_up(k, bk)
+
+    # Zero padding keeps the contraction exact; padded rows/cols are sliced
+    # away below.  (relu(0 + 0) == 0, so the epilogue is pad-safe too.)
+    x_p = jnp.pad(x, ((0, m_pad - m), (0, k_pad - k)))
+    w_p = jnp.pad(w, ((0, k_pad - k), (0, n_pad - n)))
+    b_p = jnp.pad(b, (0, n_pad - n)).reshape(1, n_pad)
+
+    # Fast path: the whole (padded) problem fits the VMEM budget — run a
+    # single grid step with no accumulator loop (§Perf, L1 iteration 1).
+    single_bytes = 4 * (m_pad * k_pad + k_pad * n_pad + 2 * m_pad * n_pad + n_pad)
+    if single_bytes <= _VMEM_BUDGET_BYTES:
+        out = pl.pallas_call(
+            functools.partial(_matmul_kernel_single, act=act),
+            out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x.dtype),
+            interpret=True,
+        )(x_p, w_p, b_p)
+        return out[:m, :n]
+
+    grid = (m_pad // bm, n_pad // bn, k_pad // bk)
+    kernel = functools.partial(_matmul_kernel, nsteps=grid[2], act=act)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x_p, w_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_bytes(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int = _DEFAULT_BM,
+    block_n: int = _DEFAULT_BN,
+    block_k: int = _DEFAULT_BK,
+    dtype_bytes: int = 4,
+) -> int:
+    """Analytic VMEM footprint of one grid step (double-buffered operands).
+
+    Used by the §Perf analysis: x-tile + w-tile are double-buffered by the
+    pipeline (x2), the accumulator + output tile + bias row are single.
+    """
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    operands = 2 * (bm * bk + bk * bn) * dtype_bytes
+    acc = bm * bn * 4  # f32 accumulator
+    out = bm * bn * dtype_bytes
+    bias = bn * dtype_bytes
+    return operands + acc + out + bias
+
+
+def mxu_utilization_estimate(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block_m: int = _DEFAULT_BM,
+    block_n: int = _DEFAULT_BN,
+    block_k: int = _DEFAULT_BK,
+    mxu: int = 128,
+) -> float:
+    """Fraction of MXU work that is useful (not padding), per DESIGN.md §Perf.
+
+    The MXU consumes ceil-to-128 shaped tiles; useful-FLOP fraction is the
+    product of fill ratios in each dim after block padding.
+    """
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    m_pad, n_pad, k_pad = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    # Tiles are further padded to the MXU edge on hardware.
+    m_hw = round_up(m_pad, mxu)
+    n_hw = round_up(n_pad, mxu)
+    k_hw = round_up(k_pad, mxu)
+    return (m * k * n) / float(m_hw * k_hw * n_hw)

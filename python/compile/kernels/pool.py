@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernels: 2x2 max-pooling and average-pool frame resize.
+
+Both analysis programs interleave conv blocks with 2x2/stride-2 max pools
+(VGG16) or 3x3/stride-2 pools (ZF — approximated here by the same 2x2 pool,
+see DESIGN.md §Hardware-Adaptation).  The resize kernel implements the
+frame-ingest stage: network cameras deliver 640x480 (etc.) frames and the
+model body runs at a fixed 96x128 resolution, so the first op of every AOT
+artifact is this pooled downsample.
+
+TPU mapping: pooling is a pure VPU (vector unit) op — the kernel processes
+one batch row-block per grid step with the channel axis innermost (lane
+axis), so the reshape-max compiles to lane-parallel max instructions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, window: int):
+    """Max over non-overlapping ``window x window`` tiles of an NHWC block."""
+    x = x_ref[...]
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // window, window, w // window, window, c)
+    o_ref[...] = jnp.max(x, axis=(2, 4))
+
+
+def maxpool2d(x: jax.Array, *, window: int = 2) -> jax.Array:
+    """Non-overlapping max pool over an NHWC tensor via a Pallas kernel.
+
+    H and W must be divisible by ``window``.
+    """
+    if x.ndim != 4:
+        raise ValueError(f"maxpool2d wants NHWC, got shape {x.shape}")
+    n, h, w, c = x.shape
+    if h % window or w % window:
+        raise ValueError(f"H={h}, W={w} not divisible by window={window}")
+    out_shape = (n, h // window, w // window, c)
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, window=window),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, h // window, w // window, c), lambda i: (i, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _avgpool_resize_kernel(x_ref, o_ref, *, fh: int, fw: int):
+    """Average over ``fh x fw`` tiles — integer-factor downsample."""
+    x = x_ref[...]
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // fh, fh, w // fw, fw, c)
+    o_ref[...] = jnp.mean(x, axis=(2, 4))
+
+
+def avgpool_resize(x: jax.Array, out_hw: tuple[int, int]) -> jax.Array:
+    """Downsample NHWC frames to ``out_hw`` by integer-factor average pooling.
+
+    The camera frame sizes the simulator produces (480x640, 960x1280,
+    192x256, ...) are all integer multiples of the 96x128 model resolution,
+    so a box filter is exact and cheap.  Non-integer ratios are rejected —
+    the AOT step picks frame-size variants accordingly.
+    """
+    if x.ndim != 4:
+        raise ValueError(f"avgpool_resize wants NHWC, got shape {x.shape}")
+    n, h, w, c = x.shape
+    oh, ow = out_hw
+    if h % oh or w % ow:
+        raise ValueError(f"frame {h}x{w} is not an integer multiple of {oh}x{ow}")
+    fh, fw = h // oh, w // ow
+    if (fh, fw) == (1, 1):
+        return x
+    return pl.pallas_call(
+        functools.partial(_avgpool_resize_kernel, fh=fh, fw=fw),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps)
+assert the Pallas kernels match these to float tolerance across shapes and
+dtypes.  Nothing here may import pallas.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    act: str = "none",
+) -> jax.Array:
+    """Reference for :func:`kernels.matmul.matmul_bias_act`."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out.astype(x.dtype)
+
+
+def conv2d_bias_act_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    act: str = "relu",
+) -> jax.Array:
+    """Reference conv via lax.conv_general_dilated (NHWC / HWIO)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out.astype(x.dtype)
+
+
+def maxpool2d_ref(x: jax.Array, *, window: int = 2) -> jax.Array:
+    """Reference for :func:`kernels.pool.maxpool2d`."""
+    init = (
+        -jnp.inf
+        if jnp.issubdtype(x.dtype, jnp.floating)
+        else jnp.iinfo(x.dtype).min
+    )
+    return jax.lax.reduce_window(
+        x,
+        jnp.array(init, dtype=x.dtype),
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, window, window, 1),
+        padding="VALID",
+    )
+
+
+def avgpool_resize_ref(x: jax.Array, out_hw: tuple[int, int]) -> jax.Array:
+    """Reference for :func:`kernels.pool.avgpool_resize`."""
+    n, h, w, c = x.shape
+    oh, ow = out_hw
+    fh, fw = h // oh, w // ow
+    summed = jax.lax.reduce_window(
+        x.astype(jnp.float32),
+        jnp.float32(0.0),
+        jax.lax.add,
+        window_dimensions=(1, fh, fw, 1),
+        window_strides=(1, fh, fw, 1),
+        padding="VALID",
+    )
+    return (summed / (fh * fw)).astype(x.dtype)

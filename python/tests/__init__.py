@@ -1,0 +1,1 @@
+"""pytest suite for the camcloud compile package."""

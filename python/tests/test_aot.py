@@ -1,0 +1,91 @@
+"""AOT path tests: HLO text round-trips, manifest integrity, golden frames."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_golden_frame_is_deterministic_pattern():
+    f = aot.golden_frame(4, 5)
+    assert f.shape == (1, 4, 5, 3)
+    assert f.dtype == np.float32
+    assert f[0, 0, 0, 0] == 0.0
+    assert f[0, 1, 0, 0] == np.float32(31 / 255.0)
+    assert f[0, 0, 1, 0] == np.float32(17 / 255.0)
+    assert f[0, 0, 0, 1] == np.float32(7 / 255.0)
+    assert f[0, 2, 3, 1] == np.float32(((2 * 31 + 3 * 17 + 7) % 256) / 255.0)
+
+
+def test_kernel_bench_hlo_parses_back():
+    """Lowered HLO text must parse back through the text parser.
+
+    (Execution of the round-tripped module is covered by the rust
+    integration tests, which compare against golden.json — that is the
+    deployment path.)
+    """
+    text = aot.lower_kernel_bench(16, 8, 8)
+    assert "ENTRY" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    proto = mod.as_serialized_hlo_module_proto()
+    assert len(proto) > 100
+
+
+def test_small_model_lowering_has_no_elided_constants():
+    """Weights must survive the text round trip (print_large_constants)."""
+    text = aot.lower_model(M.ZF_MINI, (192, 256))
+    assert "constant({...})" not in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "meta.json").exists(), reason="run `make artifacts` first")
+class TestBuiltArtifacts:
+    def setup_method(self):
+        self.meta = json.loads((ARTIFACTS / "meta.json").read_text())
+
+    def test_manifest_covers_all_variants(self):
+        names = {m["variant"] for m in self.meta["models"]}
+        assert names == {
+            f"{s}_{h}x{w}" for s in M.MODELS for (h, w) in M.FRAME_SIZES
+        }
+
+    def test_artifact_files_exist_and_nonempty(self):
+        # Models carry baked weights (megabytes); the bare kernel is a
+        # single fused GEMM and is only a few KB.
+        for entry in self.meta["models"]:
+            path = ARTIFACTS / entry["hlo"]
+            assert path.exists() and path.stat().st_size > 100_000
+        for entry in self.meta["kernels"]:
+            path = ARTIFACTS / entry["hlo"]
+            assert path.exists() and path.stat().st_size > 1_000
+
+    def test_no_elided_constants_in_artifacts(self):
+        for entry in self.meta["models"]:
+            text = (ARTIFACTS / entry["hlo"]).read_text()
+            assert "constant({...})" not in text, entry["variant"]
+
+    def test_manifest_flops_match_model(self):
+        for entry in self.meta["models"]:
+            spec = M.MODELS[entry["name"]]
+            hw = (entry["frame_h"], entry["frame_w"])
+            assert entry["flops_per_frame"] == M.flops_per_frame(spec, hw)
+            assert entry["param_count"] == M.param_count(spec)
+
+    def test_golden_outputs_match_live_forward(self):
+        golden = json.loads((ARTIFACTS / "golden.json").read_text())
+        # Spot-check the cheapest variant live (full sweep is `make artifacts`).
+        name = "zf_192x256"
+        fwd = jax.jit(M.build_forward(M.ZF_MINI, (192, 256)))
+        out = np.asarray(fwd(aot.golden_frame(192, 256))[0]).reshape(-1)
+        np.testing.assert_allclose(out, np.array(golden[name]), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,249 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes/dtypes for every Layer-1 kernel and asserts
+allclose against ``kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    avgpool_resize,
+    conv2d_bias_act,
+    flatten_conv_weights,
+    im2col,
+    matmul_bias_act,
+    maxpool2d,
+    mxu_utilization_estimate,
+    round_up,
+    vmem_bytes,
+)
+from compile.kernels import ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, dtype):
+    return rng.normal(size=shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu"]),
+    with_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, with_bias, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), np.float32)
+    w = _rand(rng, (k, n), np.float32)
+    b = _rand(rng, (n,), np.float32) if with_bias else None
+    got = np.asarray(matmul_bias_act(x, w, b, act=act))
+    want = np.asarray(ref.matmul_bias_act_ref(x, w, b, act=act))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 48),
+    n=st.integers(1, 32),
+    bm=st.sampled_from([8, 16, 64]),
+    bn=st.sampled_from([8, 16, 64]),
+    bk=st.sampled_from([8, 16, 64]),
+)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, bk):
+    """Result must not depend on tile-shape perf knobs."""
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (m, k), np.float32)
+    w = _rand(rng, (k, n), np.float32)
+    got = np.asarray(matmul_bias_act(x, w, block_m=bm, block_n=bn, block_k=bk))
+    want = np.asarray(ref.matmul_bias_act_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16():
+    rng = np.random.default_rng(3)
+    import jax.numpy as jnp
+
+    x = jnp.asarray(_rand(rng, (32, 24), np.float32), dtype=jnp.bfloat16)
+    w = jnp.asarray(_rand(rng, (24, 16), np.float32), dtype=jnp.bfloat16)
+    got = np.asarray(matmul_bias_act(x, w), dtype=np.float32)
+    want = np.asarray(ref.matmul_bias_act_ref(x, w), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = np.zeros((4, 5), np.float32)
+    w = np.zeros((6, 3), np.float32)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        matmul_bias_act(x, w)
+    with pytest.raises(ValueError, match="unknown activation"):
+        matmul_bias_act(x, np.zeros((5, 3), np.float32), act="gelu")
+    with pytest.raises(ValueError, match="bias shape"):
+        matmul_bias_act(x, np.zeros((5, 3), np.float32), np.zeros(4, np.float32))
+    with pytest.raises(ValueError, match="2D operands"):
+        matmul_bias_act(np.zeros((2, 2, 2), np.float32), w)
+
+
+def test_matmul_relu_clamps_negative():
+    x = -np.eye(8, dtype=np.float32)
+    w = np.eye(8, dtype=np.float32)
+    out = np.asarray(matmul_bias_act(x, w, act="relu"))
+    assert (out >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# conv2d_bias_act / im2col
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    h=st.integers(4, 20),
+    w=st.integers(4, 20),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_lax(h, w, cin, cout, k, stride, seed):
+    pad = k // 2
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (1, h, w, cin), np.float32)
+    wts = _rand(rng, (k, k, cin, cout), np.float32)
+    b = _rand(rng, (cout,), np.float32)
+    got = np.asarray(conv2d_bias_act(x, wts, b, stride=stride, padding=pad))
+    want = np.asarray(ref.conv2d_bias_act_ref(x, wts, b, stride=stride, padding=pad))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_conv_large_kernel_stride2():
+    """ZF's 7x7/s2 first layer shape."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (1, 32, 48, 3), np.float32)
+    wts = _rand(rng, (7, 7, 3, 12), np.float32)
+    got = np.asarray(conv2d_bias_act(x, wts, stride=2, padding=3, act="none"))
+    want = np.asarray(ref.conv2d_bias_act_ref(x, wts, stride=2, padding=3, act="none"))
+    assert got.shape == (1, 16, 24, 12)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_patch_order_matches_weight_flattening():
+    """im2col column order must agree with flatten_conv_weights."""
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (1, 6, 6, 2), np.float32)
+    wts = _rand(rng, (3, 3, 2, 4), np.float32)
+    patches = im2col(x, 3, 3, 1, 1)
+    n, ho, wo, kdim = patches.shape
+    manual = np.asarray(patches).reshape(ho * wo, kdim) @ np.asarray(
+        flatten_conv_weights(wts)
+    )
+    want = np.asarray(
+        ref.conv2d_bias_act_ref(x, wts, stride=1, padding=1, act="none")
+    ).reshape(ho * wo, 4)
+    np.testing.assert_allclose(manual, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="HWIO"):
+        conv2d_bias_act(np.zeros((1, 4, 4, 3), np.float32), np.zeros((3, 3, 3), np.float32))
+    with pytest.raises(ValueError, match="input channels"):
+        conv2d_bias_act(
+            np.zeros((1, 4, 4, 2), np.float32), np.zeros((3, 3, 3, 4), np.float32)
+        )
+
+
+# ---------------------------------------------------------------------------
+# pooling / resize
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(1, 12),
+    w=st.integers(1, 12),
+    c=st.integers(1, 8),
+    window=st.sampled_from([2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(n, h, w, c, window, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, h * window, w * window, c), np.float32)
+    got = np.asarray(maxpool2d(x, window=window))
+    want = np.asarray(ref.maxpool2d_ref(x, window=window))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**_SETTINGS)
+@given(
+    fh=st.sampled_from([1, 2, 5]),
+    fw=st.sampled_from([1, 2, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_resize_matches_ref(fh, fw, seed):
+    rng = np.random.default_rng(seed)
+    oh, ow = 6, 8
+    x = _rand(rng, (1, oh * fh, ow * fw, 3), np.float32)
+    got = np.asarray(avgpool_resize(x, (oh, ow)))
+    want = np.asarray(ref.avgpool_resize_ref(x, (oh, ow)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_resize_identity_passthrough():
+    x = np.random.default_rng(0).random((1, 6, 8, 3), np.float32)
+    got = np.asarray(avgpool_resize(x, (6, 8)))
+    np.testing.assert_array_equal(got, x)
+
+
+def test_resize_rejects_non_integer_factor():
+    x = np.zeros((1, 10, 12, 3), np.float32)
+    with pytest.raises(ValueError, match="integer multiple"):
+        avgpool_resize(x, (4, 8))
+
+
+def test_maxpool_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="NHWC"):
+        maxpool2d(np.zeros((4, 4), np.float32))
+    with pytest.raises(ValueError, match="divisible"):
+        maxpool2d(np.zeros((1, 5, 4, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# analytic perf model (§Perf helpers)
+# ---------------------------------------------------------------------------
+
+
+def test_round_up():
+    assert round_up(1, 8) == 8
+    assert round_up(8, 8) == 8
+    assert round_up(9, 8) == 16
+
+
+def test_vmem_fits_budget_for_all_model_gemms():
+    """Every GEMM the models issue must fit the 16 MiB VMEM budget."""
+    # Worst case: first VGG conv at model res — M = 96*128, K = 27, N = 8.
+    budget = 16 * 2**20
+    for (m, k, n) in [(12288, 27, 8), (12288, 72, 8), (3072, 144, 16), (1, 3072, 256)]:
+        assert vmem_bytes(m, k, n) < budget
+
+
+def test_mxu_utilization_bounds():
+    for (m, k, n) in [(128, 128, 128), (12288, 27, 8), (1, 3072, 256)]:
+        u = mxu_utilization_estimate(m, k, n)
+        assert 0.0 < u <= 1.0
+    # A perfectly MXU-shaped GEMM wastes nothing.
+    assert mxu_utilization_estimate(256, 128, 128) == 1.0

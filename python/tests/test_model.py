@@ -1,0 +1,110 @@
+"""Layer-2 model tests: shapes, determinism, architecture invariants."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module", params=list(M.MODELS))
+def spec(request):
+    return M.MODELS[request.param]
+
+
+def test_model_registry():
+    assert set(M.MODELS) == {"vgg16", "zf"}
+    assert M.MODELS["vgg16"] is M.VGG16_MINI
+    assert M.MODELS["zf"] is M.ZF_MINI
+
+
+def test_final_hw_matches_anchor_grid(spec):
+    """The head flattens the final feature map — grids must agree."""
+    assert spec.final_hw() == M.ANCHOR_GRID
+
+
+def test_param_shapes_chain(spec):
+    params = M.init_params(spec)
+    cin = 3
+    for idx, layer in enumerate(spec.convs):
+        w = params[f"conv{idx}_w"]
+        assert w.shape == (layer.k, layer.k, cin, layer.out_ch)
+        assert params[f"conv{idx}_b"].shape == (layer.out_ch,)
+        cin = layer.out_ch
+    h, w_ = spec.final_hw()
+    dim = h * w_ * cin
+    for idx, out_dim in enumerate(spec.fc_dims):
+        assert params[f"fc{idx}_w"].shape == (dim, out_dim)
+        dim = out_dim
+    assert params["head_w"].shape == (dim, M.NUM_ANCHORS * M.HEAD_OUT)
+
+
+def test_params_deterministic(spec):
+    a = M.init_params(spec)
+    b = M.init_params(spec)
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key])
+
+
+def test_models_have_distinct_weights():
+    a = M.init_params(M.VGG16_MINI)["conv0_w"]
+    b = M.init_params(M.ZF_MINI)["conv0_w"]
+    assert a.shape != b.shape or not np.array_equal(a, b)
+
+
+def test_forward_output_shape(spec):
+    params = M.init_params(spec)
+    frame = np.random.default_rng(0).random((1, 192, 256, 3), np.float32)
+    out = M.forward(spec, params, frame)
+    assert out.shape == (M.NUM_ANCHORS, M.HEAD_OUT)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_forward_deterministic(spec):
+    params = M.init_params(spec)
+    frame = np.random.default_rng(1).random((1, 192, 256, 3), np.float32)
+    a = np.asarray(M.forward(spec, params, frame))
+    b = np.asarray(M.forward(spec, params, frame))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_forward_rejects_bad_frames(spec):
+    params = M.init_params(spec)
+    with pytest.raises(ValueError, match=r"\[1, H, W, 3\]"):
+        M.forward(spec, params, np.zeros((2, 192, 256, 3), np.float32))
+    with pytest.raises(ValueError, match=r"\[1, H, W, 3\]"):
+        M.forward(spec, params, np.zeros((192, 256, 3), np.float32))
+
+
+def test_build_forward_rejects_non_multiple_frame(spec):
+    with pytest.raises(ValueError, match="integer multiple"):
+        M.build_forward(spec, (100, 200))
+
+
+def test_frame_sizes_are_integer_multiples():
+    for h, w in M.FRAME_SIZES:
+        assert h % M.MODEL_H == 0 and w % M.MODEL_W == 0
+        assert h // M.MODEL_H == w // M.MODEL_W  # aspect preserved
+
+
+def test_flops_monotone_in_frame_size(spec):
+    f = [M.flops_per_frame(spec, hw) for hw in M.FRAME_SIZES]
+    assert f == sorted(f)
+
+
+def test_vgg_heavier_than_zf():
+    """The paper's VGG-16 is the slower program — ours must be too."""
+    assert M.flops_per_frame(M.VGG16_MINI, (480, 640)) > 3 * M.flops_per_frame(
+        M.ZF_MINI, (480, 640)
+    )
+    assert M.param_count(M.VGG16_MINI) > M.param_count(M.ZF_MINI)
+
+
+def test_frame_size_changes_resize_only(spec):
+    """Body compute is frame-size-invariant: only ingest FLOPs differ."""
+    f_small = M.flops_per_frame(spec, (192, 256))
+    f_big = M.flops_per_frame(spec, (960, 1280))
+    ingest_small = 192 * 256 * 3 * 2
+    ingest_big = 960 * 1280 * 3 * 2
+    assert f_big - f_small == ingest_big - ingest_small

@@ -1,0 +1,81 @@
+//! Ablation benches (DESIGN.md ablations A and B):
+//!
+//! * **A** — exact branch-and-bound vs FFD/BFD heuristics: cost gap and
+//!   solve time over randomized workloads of increasing size;
+//! * **B** — arc-flow graph compression: node/arc counts before vs
+//!   after the Brandão-Pedroso compression step.
+
+use camcloud::cloud::Catalog;
+use camcloud::config::Scenario;
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::ResourceManager;
+use camcloud::packing::arcflow::{discretize, ArcFlowGraph};
+use camcloud::packing::{solve_best_fit, solve_exact, solve_first_fit};
+use camcloud::util::bench::Bench;
+use camcloud::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("ablation_solver");
+    let coordinator = Coordinator::new();
+
+    // --- Ablation A: solver quality & speed --------------------------
+    for &n in &[4u32, 8, 12, 16, 20] {
+        let mut exact_total = 0.0;
+        let mut ffd_total = 0.0;
+        let mut bfd_total = 0.0;
+        let trials = 8u64;
+        for seed in 0..trials {
+            let scenario = Scenario::random(seed * 97 + n as u64, n, Catalog::paper_experiments());
+            let mgr = ResourceManager::new(scenario.catalog.clone(), &coordinator);
+            let built = match mgr.build_problem(&scenario.streams, camcloud::manager::Strategy::St3) {
+                Ok(b) => b,
+                Err(_) => continue, // infeasible random workloads are skipped
+            };
+            let exact = solve_exact(&built.problem).expect("feasible");
+            let ffd = solve_first_fit(&built.problem).expect("feasible");
+            let bfd = solve_best_fit(&built.problem).expect("feasible");
+            exact.validate(&built.problem).unwrap();
+            ffd.validate(&built.problem).unwrap();
+            bfd.validate(&built.problem).unwrap();
+            let e = exact.cost(&built.problem).as_f64();
+            exact_total += e;
+            ffd_total += ffd.cost(&built.problem).as_f64();
+            bfd_total += bfd.cost(&built.problem).as_f64();
+            // Exact is never worse — the definition of exact.
+            assert!(e <= ffd.cost(&built.problem).as_f64() + 1e-9);
+            assert!(e <= bfd.cost(&built.problem).as_f64() + 1e-9);
+        }
+        bench.record(&format!("ffd_over_exact_cost@{n}"), ffd_total / exact_total);
+        bench.record(&format!("bfd_over_exact_cost@{n}"), bfd_total / exact_total);
+
+        // Timing on a representative instance.
+        let scenario = Scenario::random(1234 + n as u64, n, Catalog::paper_experiments());
+        let mgr = ResourceManager::new(scenario.catalog.clone(), &coordinator);
+        if let Ok(built) = mgr.build_problem(&scenario.streams, camcloud::manager::Strategy::St3) {
+            bench.measure(&format!("exact_bb@{n}_items"), 2, 10, || {
+                std::hint::black_box(solve_exact(&built.problem));
+            });
+            bench.measure(&format!("bfd@{n}_items"), 2, 10, || {
+                std::hint::black_box(solve_best_fit(&built.problem));
+            });
+        }
+    }
+
+    // --- Ablation B: arc-flow graph compression ----------------------
+    let mut rng = Rng::new(42);
+    for &n in &[10usize, 20, 40, 80] {
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.05, 0.6)).collect();
+        let (grid_weights, cap) = discretize(&weights, 1.0, 100);
+        let graph = ArcFlowGraph::build(&grid_weights, cap);
+        bench.record(
+            &format!("arcflow_nodes_uncompressed@{n}"),
+            graph.uncompressed_nodes as f64,
+        );
+        bench.record(&format!("arcflow_nodes_compressed@{n}"), graph.nodes.len() as f64);
+        bench.record(&format!("arcflow_compression_ratio@{n}"), graph.compression_ratio());
+        bench.measure(&format!("arcflow_build@{n}_items"), 2, 20, || {
+            std::hint::black_box(ArcFlowGraph::build(&grid_weights, cap));
+        });
+    }
+    bench.finish();
+}

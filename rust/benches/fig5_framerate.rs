@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig. 5 — VGG-16 on GPU, utilization & performance
+//! vs desired frame rate — and measure simulation throughput.
+
+use camcloud::coordinator::Coordinator;
+use camcloud::reports;
+use camcloud::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig5_framerate");
+    let coordinator = Coordinator::new();
+    let rates = [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0];
+
+    let rows = reports::fig5(&coordinator, &rates, 120.0);
+    println!("{}", reports::fig5_table(&rows).render());
+
+    // Record the series for EXPERIMENTS.md (shape: linear until the
+    // GPU's 3.61 FPS latency limit, then performance decays).
+    for r in &rows {
+        bench.record(&format!("cpu_util@{}", r.fps), r.cpu_util);
+        bench.record(&format!("gpu_util@{}", r.fps), r.gpu_util);
+        bench.record(&format!("perf@{}", r.fps), r.performance);
+    }
+    // Linearity check on the pre-saturation region (paper's claim).
+    let pre: Vec<(f64, f64)> = rows
+        .iter()
+        .filter(|r| r.fps <= 3.0)
+        .map(|r| (r.fps, r.cpu_util))
+        .collect();
+    let fit = camcloud::profiler::model::LinearFit::fit(&pre).unwrap();
+    bench.record("cpu_util_linearity_r2", fit.r2);
+    assert!(fit.r2 > 0.99, "utilization must be linear in fps");
+
+    bench.measure("fig5_single_point_sim_120s", 1, 5, || {
+        std::hint::black_box(reports::fig5(&coordinator, &[2.0], 120.0));
+    });
+    bench.finish();
+}

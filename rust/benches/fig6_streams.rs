@@ -1,0 +1,60 @@
+//! Bench: regenerate Fig. 6 — utilization & performance vs number of
+//! cameras (VGG-16 at 2 FPS on one GPU instance).
+
+use camcloud::coordinator::Coordinator;
+use camcloud::reports;
+use camcloud::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig6_streams");
+    let coordinator = Coordinator::new();
+    let counts = [1u32, 2, 3, 4, 5, 6];
+
+    let rows = reports::fig6(&coordinator, &counts, 120.0);
+    println!("{}", reports::fig6_table(&rows).render());
+
+    for r in &rows {
+        bench.record(&format!("cpu_util@{}cams", r.cameras), r.cpu_util);
+        bench.record(&format!("gpu_util@{}cams", r.cameras), r.gpu_util);
+        bench.record(&format!("perf@{}cams", r.cameras), r.performance);
+    }
+    // Pre-saturation linearity in #cameras (paper: "increase almost
+    // linearly with the number of cameras").  At the paper's 2 FPS the
+    // calibrated CPU residual saturates by 2 cameras, so the linearity
+    // claim is checked on a 1 FPS sweep where 1-3 cameras stay under
+    // the 90% ceiling.
+    let pre: Vec<(f64, f64)> = [1u32, 2, 3]
+        .iter()
+        .map(|&n| {
+            let r = reports::single_instance_run(
+                &coordinator,
+                camcloud::types::Program::Vgg16,
+                1.0,
+                n,
+                camcloud::profiler::ExecChoice::Gpu(0),
+                120.0,
+            );
+            (
+                n as f64,
+                r.device_utilization[&(0, "cpu".to_string())].0,
+            )
+        })
+        .collect();
+    let fit = camcloud::profiler::model::LinearFit::fit(&pre).unwrap();
+    bench.record("cpu_util_linearity_r2_at_1fps", fit.r2);
+    assert!(fit.r2 > 0.98, "utilization must be ~linear in #cameras");
+    // And the 2 FPS series itself: monotone utilization, saturating at 1.
+    for pair in rows.windows(2) {
+        assert!(pair[1].cpu_util >= pair[0].cpu_util - 1e-6);
+        assert!(pair[1].performance <= pair[0].performance + 1e-6);
+    }
+
+    // Performance must hold at low counts and drop once CPU saturates.
+    assert!(rows[0].performance > 0.95);
+    assert!(rows.last().unwrap().performance < 0.8);
+
+    bench.measure("fig6_sweep_sim_120s_x6", 1, 3, || {
+        std::hint::black_box(reports::fig6(&coordinator, &counts, 120.0));
+    });
+    bench.finish();
+}

@@ -1,0 +1,93 @@
+//! Hot-path microbenchmarks for the §Perf pass:
+//!
+//! * L1/L2: AOT model + bare-kernel execution via PJRT (real inference);
+//! * L3: frame generation, requirement vectors, MVBP solve, simulation
+//!   step throughput — everything on the allocation/serving path.
+
+use camcloud::config::paper_scenario;
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::{ResourceManager, Strategy};
+use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
+use camcloud::sched::SimConfig;
+use camcloud::streams::Frame;
+use camcloud::types::{FrameSize, Program, VGA};
+use camcloud::util::bench::Bench;
+use camcloud::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("hotpath");
+    let coordinator = Coordinator::new();
+
+    // --- L3: frame generation (ingest path) --------------------------
+    bench.measure("frame_synthetic_vga", 3, 20, || {
+        std::hint::black_box(Frame::synthetic(VGA, 1, 0.5, 5));
+    });
+    bench.measure("frame_golden_vga", 3, 20, || {
+        std::hint::black_box(Frame::golden(VGA));
+    });
+    bench.measure("frame_synthetic_192x256", 3, 50, || {
+        std::hint::black_box(Frame::synthetic(FrameSize::new(192, 256), 1, 0.5, 5));
+    });
+
+    // --- L3: allocation end-to-end -----------------------------------
+    let scenario = paper_scenario(3).unwrap(); // the largest paper scenario
+    let mgr = ResourceManager::new(scenario.catalog.clone(), &coordinator);
+    bench.measure("allocate_scenario3_st3", 3, 20, || {
+        std::hint::black_box(mgr.allocate(&scenario.streams, Strategy::St3).unwrap());
+    });
+
+    // --- L3: simulation throughput ------------------------------------
+    bench.measure("simulate_scenario3_st3_120s", 1, 5, || {
+        std::hint::black_box(
+            coordinator
+                .run_scenario(
+                    &scenario,
+                    Strategy::St3,
+                    SimConfig { duration_s: 120.0, dt: 0.01, queue_cap: 32 },
+                )
+                .unwrap(),
+        );
+    });
+
+    // --- L1/L2: PJRT execution ---------------------------------------
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("meta.json").exists() {
+        bench.note("pjrt", "skipped (run `make artifacts`)");
+        bench.finish();
+        return;
+    }
+    let runtime = ModelRuntime::load(&artifacts).expect("runtime");
+
+    // Bare Layer-1 kernel.
+    let kernel = runtime.manifest().kernels[0].clone();
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..kernel.m * kernel.k).map(|_| rng.f64() as f32).collect();
+    let w: Vec<f32> = (0..kernel.k * kernel.n).map(|_| rng.f64() as f32).collect();
+    let b: Vec<f32> = (0..kernel.n).map(|_| rng.f64() as f32).collect();
+    runtime.run_kernel(&kernel.name, &x, &w, &b).expect("kernel warm");
+    let p50 = bench
+        .measure("kernel_matmul_512x256x128", 3, 30, || {
+            std::hint::black_box(runtime.run_kernel(&kernel.name, &x, &w, &b).unwrap());
+        })
+        .p50();
+    let gflops = kernel.flops as f64 / p50 / 1e9;
+    bench.record("kernel_matmul_gflops_p50", gflops);
+
+    // Full models (one frame, CPU).
+    for program in Program::ALL {
+        let variant = program.variant(VGA);
+        runtime.prepare(&variant).expect("compile");
+        let frame = Frame::synthetic(VGA, 1, 0.0, 3);
+        let p50 = bench
+            .measure(&format!("infer_{}_vga", program.name()), 2, 15, || {
+                std::hint::black_box(runtime.infer_raw(&variant, &frame).unwrap());
+            })
+            .p50();
+        let entry = runtime.manifest().model(&variant).unwrap();
+        bench.record(
+            &format!("infer_{}_gflops_p50", program.name()),
+            entry.flops_per_frame as f64 / p50 / 1e9,
+        );
+    }
+    bench.finish();
+}

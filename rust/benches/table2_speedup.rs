@@ -1,0 +1,57 @@
+//! Bench: regenerate Table 2 (max achievable frame rates + GPU speedup).
+//!
+//! The CPU rates are *measured* — real PJRT inference on this machine —
+//! and the GPU rates come from the calibrated device model (DESIGN.md
+//! §Hardware-Adaptation).  Alongside the paper's table we report the
+//! paper-calibrated values so shape can be compared directly.
+
+use camcloud::coordinator::Coordinator;
+use camcloud::reports;
+use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
+use camcloud::types::{Program, VGA};
+use camcloud::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("table2_speedup");
+
+    // Paper-calibrated table (the reproduction target).
+    let coordinator = Coordinator::new();
+    let profiles = reports::vga_profiles(&coordinator);
+    println!("{}", reports::table2(&profiles).render());
+    for program in Program::ALL {
+        let p = &profiles[&program];
+        bench.record(&format!("{}_speedup_calibrated", program.name()), p.speedup());
+    }
+
+    // Measured table: live inference latency per program.
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("meta.json").exists() {
+        bench.note("live", "skipped (run `make artifacts`)");
+        bench.finish();
+        return;
+    }
+    let runtime = ModelRuntime::load(&artifacts).expect("runtime");
+    for program in Program::ALL {
+        let variant = program.variant(VGA);
+        runtime.prepare(&variant).expect("compile");
+        let frame = camcloud::streams::Frame::synthetic(VGA, 1, 0.0, 3);
+        let m = bench.measure(&format!("infer_{}_cpu", program.name()), 2, 10, || {
+            runtime.infer_raw(&variant, &frame).expect("infer");
+        });
+        let max_fps_cpu = 1.0 / m.p50();
+        let cal = coordinator.calibration.get(program);
+        let speedup = cal.max_fps_gpu / cal.max_fps_cpu;
+        bench.record(&format!("{}_max_fps_cpu_measured", program.name()), max_fps_cpu);
+        bench.record(
+            &format!("{}_max_fps_gpu_modeled", program.name()),
+            max_fps_cpu * speedup,
+        );
+        bench.record(&format!("{}_speedup_modeled", program.name()), speedup);
+    }
+    // Shape check the paper cares about: ZF faster than VGG on CPU.
+    bench.note(
+        "shape",
+        "expect VGG-16 slower than ZF on CPU; speedups ~12.9x / ~16.3x",
+    );
+    bench.finish();
+}

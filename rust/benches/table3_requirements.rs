@@ -1,0 +1,49 @@
+//! Bench: regenerate Table 3 (CPU/GPU requirements at 0.2 FPS) and
+//! measure the requirement-model evaluation cost (a manager hot path:
+//! one call per stream per allocation).
+
+use camcloud::coordinator::Coordinator;
+use camcloud::profiler::ExecChoice;
+use camcloud::reports;
+use camcloud::types::{DimLayout, Program};
+use camcloud::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("table3_requirements");
+    let coordinator = Coordinator::new();
+    let profiles = reports::vga_profiles(&coordinator);
+    println!("{}", reports::table3(&profiles).render());
+
+    // Record the table values for the JSON log (paper: 39.4/5.3/4.6 and
+    // 17.8/2.2/1.2 percent).
+    let layout = DimLayout::new(1);
+    for program in Program::ALL {
+        let p = &profiles[&program];
+        let cpu = p.requirement(0.2, ExecChoice::Cpu, layout);
+        let gpu = p.requirement(0.2, ExecChoice::Gpu(0), layout);
+        bench.record(
+            &format!("{}_cpu_mode_cpu_pct", program.name()),
+            cpu[DimLayout::CPU] / 8.0 * 100.0,
+        );
+        bench.record(
+            &format!("{}_gpu_mode_cpu_pct", program.name()),
+            gpu[DimLayout::CPU] / 8.0 * 100.0,
+        );
+        bench.record(
+            &format!("{}_gpu_mode_gpu_pct", program.name()),
+            gpu[layout.gpu_cores(0)] / 1536.0 * 100.0,
+        );
+    }
+
+    // Hot-path micro: requirement vector construction.
+    let p = profiles[&Program::Vgg16].clone();
+    bench.measure("requirement_vector_cpu_choice", 100, 200, || {
+        for fps in [0.2, 0.5, 1.0, 2.0] {
+            std::hint::black_box(p.requirement(fps, ExecChoice::Cpu, layout));
+        }
+    });
+    bench.measure("requirement_choices_full", 100, 200, || {
+        std::hint::black_box(p.choices(1.0, layout));
+    });
+    bench.finish();
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate Table 6 — instances, hourly costs, and savings for
+//! every (scenario, strategy) pair — and measure allocation latency
+//! (the manager's end-to-end decision time).
+
+use camcloud::config::paper_scenario;
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::{ResourceManager, Strategy};
+use camcloud::reports;
+use camcloud::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("table6_scenarios");
+    let coordinator = Coordinator::new();
+
+    for n in 1..=3u32 {
+        println!("{}", reports::table6(&coordinator, n, 120.0).render());
+        let scenario = paper_scenario(n).unwrap();
+        for strategy in Strategy::ALL {
+            let mgr = ResourceManager::new(scenario.catalog.clone(), &coordinator);
+            let label = format!("allocate_s{n}_{strategy}");
+            match mgr.allocate(&scenario.streams, strategy) {
+                Ok(plan) => {
+                    bench.record(
+                        &format!("cost_s{n}_{strategy}"),
+                        plan.hourly_cost.as_f64(),
+                    );
+                    bench.measure(&label, 3, 20, || {
+                        std::hint::black_box(
+                            mgr.allocate(&scenario.streams, strategy).unwrap(),
+                        );
+                    });
+                }
+                Err(_) => bench.note(&format!("cost_s{n}_{strategy}"), "Fail"),
+            }
+        }
+    }
+
+    // The paper's headline numbers, asserted so the bench doubles as a
+    // regression gate.
+    let s1 = paper_scenario(1).unwrap();
+    let mgr = ResourceManager::new(s1.catalog.clone(), &coordinator);
+    let st1 = mgr.allocate(&s1.streams, Strategy::St1).unwrap();
+    let st3 = mgr.allocate(&s1.streams, Strategy::St3).unwrap();
+    let saving = st3.hourly_cost.savings_vs(st1.hourly_cost);
+    bench.record("scenario1_st3_savings_pct", saving);
+    assert_eq!(saving.round() as i64, 61, "the paper's 61% headline");
+    bench.finish();
+}

@@ -1,0 +1,106 @@
+//! Hourly billing meter over the simulation clock.
+//!
+//! Implements the pay-as-you-go model the paper relies on (§1): each
+//! instance bills its hourly cost for every *started* hour between
+//! provisioning and termination (classic EC2 semantics).
+
+use super::catalog::InstanceType;
+use super::instance::{InstanceId, SimInstance};
+use crate::types::Dollars;
+use std::collections::BTreeMap;
+
+/// Accumulates per-instance usage and prices it.
+#[derive(Default, Debug)]
+pub struct BillingMeter {
+    records: BTreeMap<InstanceId, (InstanceType, f64, Option<f64>)>,
+}
+
+impl BillingMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_provision(&mut self, inst: &SimInstance) {
+        self.records
+            .insert(inst.id, (inst.itype.clone(), inst.started_at, None));
+    }
+
+    pub fn on_terminate(&mut self, id: InstanceId, now: f64) {
+        if let Some((_, start, end)) = self.records.get_mut(&id) {
+            *end = Some(now.max(*start));
+        }
+    }
+
+    /// Billed started-hours for a usage span.
+    fn billed_hours(seconds: f64) -> u32 {
+        if seconds <= 0.0 {
+            // Provisioned at all -> first hour billed.
+            1
+        } else {
+            (seconds / 3600.0).ceil().max(1.0) as u32
+        }
+    }
+
+    /// Total cost of all usage up to `now`.
+    pub fn total_cost(&self, now: f64) -> Dollars {
+        self.records
+            .values()
+            .map(|(itype, start, end)| {
+                let span = end.unwrap_or(now) - start;
+                itype.hourly_cost * Self::billed_hours(span)
+            })
+            .sum()
+    }
+
+    /// Combined hourly run-rate of instances still running at `now`.
+    pub fn hourly_rate(&self, now: f64) -> Dollars {
+        self.records
+            .values()
+            .filter(|(_, start, end)| *start <= now && end.is_none())
+            .map(|(itype, _, _)| itype.hourly_cost)
+            .sum()
+    }
+
+    pub fn instance_count(&self) -> usize {
+        self.records.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::catalog::Catalog;
+
+    fn meter_with(id: u32, type_name: &str, start: f64) -> (BillingMeter, SimInstance) {
+        let t = Catalog::aws_table1().get(type_name).unwrap().clone();
+        let inst = SimInstance::new(InstanceId(id), t, start);
+        let mut m = BillingMeter::new();
+        m.on_provision(&inst);
+        (m, inst)
+    }
+
+    #[test]
+    fn first_hour_billed_immediately() {
+        let (m, _) = meter_with(1, "c4.2xlarge", 0.0);
+        assert_eq!(m.total_cost(1.0), Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn started_hours_round_up() {
+        let (mut m, _) = meter_with(1, "g2.2xlarge", 0.0);
+        m.on_terminate(InstanceId(1), 3601.0); // 1h + 1s -> 2 hours
+        assert_eq!(m.total_cost(10_000.0), Dollars::from_f64(1.300));
+    }
+
+    #[test]
+    fn hourly_rate_counts_only_running() {
+        let (mut m, _) = meter_with(1, "c4.2xlarge", 0.0);
+        let t2 = Catalog::aws_table1().get("g2.2xlarge").unwrap().clone();
+        let i2 = SimInstance::new(InstanceId(2), t2, 0.0);
+        m.on_provision(&i2);
+        assert_eq!(m.hourly_rate(10.0), Dollars::from_f64(1.069));
+        m.on_terminate(InstanceId(1), 20.0);
+        assert_eq!(m.hourly_rate(30.0), Dollars::from_f64(0.650));
+        assert_eq!(m.instance_count(), 2);
+    }
+}

@@ -1,0 +1,216 @@
+//! Instance-type catalog (the paper's Table 1).
+
+use crate::types::{DimLayout, Dollars, ResourceVec};
+
+/// One GPU inside an instance type.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    /// CUDA-core count in the paper's unit convention (g2: 1536).
+    pub cores: f64,
+    /// GPU memory in GB.
+    pub mem_gb: f64,
+}
+
+/// A cloud instance type: capabilities and hourly cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstanceType {
+    pub name: String,
+    pub cpu_cores: f64,
+    pub mem_gb: f64,
+    pub gpus: Vec<GpuSpec>,
+    pub hourly_cost: Dollars,
+}
+
+impl InstanceType {
+    /// Capability vector under `layout` (absolute units, no headroom).
+    ///
+    /// Panics if the type has more GPUs than the layout admits — the
+    /// manager always sizes the layout from the catalog it uses.
+    pub fn capability(&self, layout: DimLayout) -> ResourceVec {
+        assert!(
+            self.gpus.len() <= layout.max_gpus,
+            "{} has {} GPUs but layout admits {}",
+            self.name,
+            self.gpus.len(),
+            layout.max_gpus
+        );
+        let mut v = ResourceVec::zeros(layout.dims());
+        v[DimLayout::CPU] = self.cpu_cores;
+        v[DimLayout::MEM] = self.mem_gb;
+        for (g, gpu) in self.gpus.iter().enumerate() {
+            v[layout.gpu_cores(g)] = gpu.cores;
+            v[layout.gpu_mem(g)] = gpu.mem_gb;
+        }
+        v
+    }
+
+    pub fn has_gpu(&self) -> bool {
+        !self.gpus.is_empty()
+    }
+}
+
+/// A set of instance types offered by the (simulated) cloud vendor.
+#[derive(Clone, Debug, Default)]
+pub struct Catalog {
+    pub types: Vec<InstanceType>,
+}
+
+impl Catalog {
+    /// The paper's Table 1 (Amazon EC2, Oregon).
+    pub fn aws_table1() -> Catalog {
+        let g2_gpu = GpuSpec { cores: 1536.0, mem_gb: 4.0 };
+        Catalog {
+            types: vec![
+                InstanceType {
+                    name: "c4.2xlarge".into(),
+                    cpu_cores: 8.0,
+                    mem_gb: 15.0,
+                    gpus: vec![],
+                    hourly_cost: Dollars::from_f64(0.419),
+                },
+                InstanceType {
+                    name: "c4.8xlarge".into(),
+                    cpu_cores: 36.0,
+                    mem_gb: 60.0,
+                    gpus: vec![],
+                    hourly_cost: Dollars::from_f64(1.675),
+                },
+                InstanceType {
+                    name: "g2.2xlarge".into(),
+                    cpu_cores: 8.0,
+                    mem_gb: 15.0,
+                    gpus: vec![g2_gpu],
+                    hourly_cost: Dollars::from_f64(0.650),
+                },
+                InstanceType {
+                    name: "g2.8xlarge".into(),
+                    cpu_cores: 32.0,
+                    mem_gb: 60.0,
+                    gpus: vec![g2_gpu; 4],
+                    hourly_cost: Dollars::from_f64(2.600),
+                },
+            ],
+        }
+    }
+
+    /// The two-type catalog the paper's experiments actually price
+    /// against ("the same pricing of the c4.2xlarge and g2.2xlarge
+    /// instances is used", §4.1).
+    pub fn paper_experiments() -> Catalog {
+        Catalog::aws_table1().subset(&["c4.2xlarge", "g2.2xlarge"])
+    }
+
+    /// Restrict to the named types (preserving catalog order).
+    pub fn subset(&self, names: &[&str]) -> Catalog {
+        Catalog {
+            types: self
+                .types
+                .iter()
+                .filter(|t| names.contains(&t.name.as_str()))
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Only non-GPU types (strategy ST1).
+    pub fn non_gpu_only(&self) -> Catalog {
+        Catalog {
+            types: self.types.iter().filter(|t| !t.has_gpu()).cloned().collect(),
+        }
+    }
+
+    /// Only GPU types (strategy ST2).
+    pub fn gpu_only(&self) -> Catalog {
+        Catalog {
+            types: self.types.iter().filter(|t| t.has_gpu()).cloned().collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&InstanceType> {
+        self.types.iter().find(|t| t.name == name)
+    }
+
+    /// Dimension layout wide enough for every type in this catalog.
+    pub fn layout(&self) -> DimLayout {
+        DimLayout::new(self.types.iter().map(|t| t.gpus.len()).max().unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let cat = Catalog::aws_table1();
+        assert_eq!(cat.types.len(), 4);
+        let c4 = cat.get("c4.2xlarge").unwrap();
+        assert_eq!(c4.cpu_cores, 8.0);
+        assert_eq!(c4.mem_gb, 15.0);
+        assert!(!c4.has_gpu());
+        assert_eq!(c4.hourly_cost, Dollars::from_f64(0.419));
+
+        let g28 = cat.get("g2.8xlarge").unwrap();
+        assert_eq!(g28.gpus.len(), 4);
+        assert_eq!(g28.cpu_cores, 32.0);
+        assert_eq!(g28.hourly_cost, Dollars::from_f64(2.600));
+    }
+
+    #[test]
+    fn capability_vectors_match_paper_section_3_2() {
+        let cat = Catalog::aws_table1();
+        // "[8, 15, 0, 0] represents a non-GPU instance" (N = 1 layout).
+        let layout = DimLayout::new(1);
+        let c4 = cat.get("c4.2xlarge").unwrap().capability(layout);
+        assert_eq!(c4.0, vec![8.0, 15.0, 0.0, 0.0]);
+        // "[8, 15, 1536, 4] represents a GPU instance".
+        let g2 = cat.get("g2.2xlarge").unwrap().capability(layout);
+        assert_eq!(g2.0, vec![8.0, 15.0, 1536.0, 4.0]);
+        // g2.8xlarge under N = 4: [32, 60, (1536, 4) x4].
+        let l4 = DimLayout::new(4);
+        let g28 = cat.get("g2.8xlarge").unwrap().capability(l4);
+        assert_eq!(
+            g28.0,
+            vec![32.0, 60.0, 1536.0, 4.0, 1536.0, 4.0, 1536.0, 4.0, 1536.0, 4.0]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "layout admits")]
+    fn capability_panics_on_narrow_layout() {
+        let cat = Catalog::aws_table1();
+        cat.get("g2.8xlarge").unwrap().capability(DimLayout::new(1));
+    }
+
+    #[test]
+    fn strategy_subsets() {
+        let cat = Catalog::aws_table1();
+        assert_eq!(
+            cat.non_gpu_only()
+                .types
+                .iter()
+                .map(|t| t.name.as_str())
+                .collect::<Vec<_>>(),
+            vec!["c4.2xlarge", "c4.8xlarge"]
+        );
+        assert_eq!(
+            cat.gpu_only()
+                .types
+                .iter()
+                .map(|t| t.name.as_str())
+                .collect::<Vec<_>>(),
+            vec!["g2.2xlarge", "g2.8xlarge"]
+        );
+        assert_eq!(Catalog::paper_experiments().types.len(), 2);
+    }
+
+    #[test]
+    fn layout_sized_from_catalog() {
+        assert_eq!(Catalog::aws_table1().layout(), DimLayout::new(4));
+        assert_eq!(Catalog::paper_experiments().layout(), DimLayout::new(1));
+        assert_eq!(
+            Catalog::aws_table1().non_gpu_only().layout(),
+            DimLayout::new(0)
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Provisioned-instance lifecycle.
+
+use super::catalog::InstanceType;
+use crate::types::{DimLayout, ResourceVec};
+
+/// Opaque instance identifier, unique per provisioning session.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct InstanceId(pub u32);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "i-{:04}", self.0)
+    }
+}
+
+/// Lifecycle state of a simulated instance.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum InstanceState {
+    /// Provision requested, booting (cloud boot latency).
+    Provisioning,
+    /// Serving assigned streams.
+    Running,
+    /// Terminated; no longer billed after the current hour.
+    Terminated,
+}
+
+/// One provisioned cloud instance.
+#[derive(Clone, Debug)]
+pub struct SimInstance {
+    pub id: InstanceId,
+    pub itype: InstanceType,
+    pub state: InstanceState,
+    /// Simulation time (seconds) at which the instance started billing.
+    pub started_at: f64,
+    /// Simulation time at which it terminated (if it did).
+    pub terminated_at: Option<f64>,
+}
+
+impl SimInstance {
+    pub fn new(id: InstanceId, itype: InstanceType, now: f64) -> Self {
+        SimInstance {
+            id,
+            itype,
+            state: InstanceState::Provisioning,
+            started_at: now,
+            terminated_at: None,
+        }
+    }
+
+    pub fn mark_running(&mut self) {
+        assert_eq!(self.state, InstanceState::Provisioning);
+        self.state = InstanceState::Running;
+    }
+
+    pub fn terminate(&mut self, now: f64) {
+        if self.state != InstanceState::Terminated {
+            self.state = InstanceState::Terminated;
+            self.terminated_at = Some(now);
+        }
+    }
+
+    /// Usable capacity after the paper's 90% headroom rule.
+    pub fn usable_capacity(&self, layout: DimLayout, headroom: f64) -> ResourceVec {
+        self.itype.capability(layout).scale(headroom)
+    }
+
+    /// Billable seconds in `[self.started_at, now]`.
+    pub fn billable_seconds(&self, now: f64) -> f64 {
+        let end = self.terminated_at.unwrap_or(now);
+        (end - self.started_at).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::catalog::Catalog;
+
+    fn inst() -> SimInstance {
+        let t = Catalog::aws_table1().get("c4.2xlarge").unwrap().clone();
+        SimInstance::new(InstanceId(1), t, 100.0)
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut i = inst();
+        assert_eq!(i.state, InstanceState::Provisioning);
+        i.mark_running();
+        assert_eq!(i.state, InstanceState::Running);
+        i.terminate(200.0);
+        assert_eq!(i.state, InstanceState::Terminated);
+        assert_eq!(i.terminated_at, Some(200.0));
+        // Idempotent terminate.
+        i.terminate(300.0);
+        assert_eq!(i.terminated_at, Some(200.0));
+    }
+
+    #[test]
+    fn billable_seconds() {
+        let mut i = inst();
+        assert_eq!(i.billable_seconds(160.0), 60.0);
+        i.terminate(130.0);
+        assert_eq!(i.billable_seconds(1000.0), 30.0);
+    }
+
+    #[test]
+    fn usable_capacity_headroom() {
+        let i = inst();
+        let cap = i.usable_capacity(crate::types::DimLayout::new(0), 0.9);
+        assert!((cap[0] - 7.2).abs() < 1e-12);
+        assert!((cap[1] - 13.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_id() {
+        assert_eq!(InstanceId(7).to_string(), "i-0007");
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulated cloud substrate: instance catalog, lifecycle, and billing.
+//!
+//! The paper evaluates on Amazon EC2 (Table 1).  This module implements
+//! the equivalent substrate: the instance-type catalog with capability
+//! vectors and hourly costs, provisioned-instance lifecycle, and a
+//! billing meter over the simulation clock.  The GPU *device model* —
+//! how fast a simulated GPU executes an analysis program — lives in
+//! [`crate::profiler::calibration`]; this module only knows capacities.
+
+pub mod billing;
+pub mod catalog;
+pub mod instance;
+
+pub use billing::BillingMeter;
+pub use catalog::{Catalog, GpuSpec, InstanceType};
+pub use instance::{InstanceId, InstanceState, SimInstance};

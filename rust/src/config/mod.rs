@@ -1,0 +1,221 @@
+//! Workload / scenario configuration (the paper's Table 5) and JSON
+//! config files for user-defined workloads.
+
+use crate::cloud::Catalog;
+use crate::streams::{Camera, StreamSpec};
+use crate::types::{FrameSize, Program, VGA};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// A named workload plus the catalog it prices against.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub streams: Vec<StreamSpec>,
+    pub catalog: Catalog,
+}
+
+/// The paper's three evaluation scenarios (Table 5).  All use VGA
+/// streams and the two-type catalog of §4.1.
+pub fn paper_scenario(number: u32) -> Result<Scenario> {
+    let catalog = Catalog::paper_experiments();
+    let mut streams = Vec::new();
+    match number {
+        1 => {
+            streams.extend(StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.25));
+            streams.extend(StreamSpec::replicate(100, 3, VGA, Program::Zf, 0.55));
+        }
+        2 => {
+            streams.extend(StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.20));
+            streams.extend(StreamSpec::replicate(100, 1, VGA, Program::Zf, 0.50));
+        }
+        3 => {
+            streams.extend(StreamSpec::replicate(0, 2, VGA, Program::Vgg16, 0.20));
+            streams.extend(StreamSpec::replicate(100, 10, VGA, Program::Zf, 8.00));
+        }
+        other => return Err(anyhow!("paper scenarios are 1-3, got {other}")),
+    }
+    Ok(Scenario {
+        name: format!("scenario-{number}"),
+        streams,
+        catalog,
+    })
+}
+
+impl Scenario {
+    /// Parse a scenario from a JSON config:
+    ///
+    /// ```json
+    /// {
+    ///   "name": "my-workload",
+    ///   "catalog": ["c4.2xlarge", "g2.2xlarge"],
+    ///   "streams": [
+    ///     {"program": "vgg16", "fps": 0.25, "cameras": 2,
+    ///      "frame_h": 480, "frame_w": 640}
+    ///   ]
+    /// }
+    /// ```
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let name = v.str_field("name")?.to_string();
+        let catalog = match v.get("catalog") {
+            None => Catalog::aws_table1(),
+            Some(c) => {
+                let names: Vec<&str> = c
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("catalog must be an array of type names"))?
+                    .iter()
+                    .map(|x| x.as_str().ok_or_else(|| anyhow!("catalog entries are strings")))
+                    .collect::<Result<Vec<_>>>()?;
+                let cat = Catalog::aws_table1().subset(&names);
+                if cat.types.len() != names.len() {
+                    return Err(anyhow!("unknown instance type in catalog {names:?}"));
+                }
+                cat
+            }
+        };
+        let mut streams = Vec::new();
+        let mut next_camera = 0u32;
+        for row in v.arr_field("streams")? {
+            let program: Program = row
+                .str_field("program")?
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let fps = row.f64_field("fps")?;
+            if fps <= 0.0 {
+                return Err(anyhow!("fps must be positive"));
+            }
+            let cameras = row.get("cameras").and_then(Json::as_u64).unwrap_or(1) as u32;
+            let h = row.get("frame_h").and_then(Json::as_u64).unwrap_or(VGA.h as u64) as u32;
+            let w = row.get("frame_w").and_then(Json::as_u64).unwrap_or(VGA.w as u64) as u32;
+            streams.extend(StreamSpec::replicate(
+                next_camera,
+                cameras,
+                FrameSize::new(h, w),
+                program,
+                fps,
+            ));
+            next_camera += cameras.max(1) * 100;
+        }
+        if streams.is_empty() {
+            return Err(anyhow!("scenario has no streams"));
+        }
+        Ok(Scenario { name, streams, catalog })
+    }
+
+    pub fn load(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)?;
+        Scenario::from_json(&Json::parse(&text)?)
+    }
+
+    /// Serialize back to the config JSON shape (one row per stream).
+    pub fn to_json(&self) -> Json {
+        let streams: Vec<Json> = self
+            .streams
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("program".to_string(), Json::Str(s.program.name().to_string())),
+                    ("fps".to_string(), Json::Num(s.desired_fps)),
+                    ("cameras".to_string(), Json::Num(1.0)),
+                    ("frame_h".to_string(), Json::Num(s.camera.frame_size.h as f64)),
+                    ("frame_w".to_string(), Json::Num(s.camera.frame_size.w as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            (
+                "catalog".to_string(),
+                Json::Arr(
+                    self.catalog
+                        .types
+                        .iter()
+                        .map(|t| Json::Str(t.name.clone()))
+                        .collect(),
+                ),
+            ),
+            ("streams".to_string(), Json::Arr(streams)),
+        ])
+    }
+
+    /// A randomized workload for ablation benchmarks: `n` streams with
+    /// mixed programs, rates, and frame sizes.
+    pub fn random(seed: u64, n: u32, catalog: Catalog) -> Scenario {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let sizes = crate::types::FRAME_SIZES;
+        let streams = (0..n)
+            .map(|i| {
+                let program = if rng.bool(0.5) { Program::Vgg16 } else { Program::Zf };
+                // Rates drawn so CPU choice is sometimes feasible,
+                // sometimes not (mirrors the paper's mixed scenarios).
+                let fps = match program {
+                    Program::Vgg16 => rng.range_f64(0.05, 3.0),
+                    Program::Zf => rng.range_f64(0.1, 8.0),
+                };
+                let size = *rng.choose(&sizes);
+                StreamSpec::new(Camera::new(i, size), program, fps)
+            })
+            .collect();
+        Scenario {
+            name: format!("random-{seed}-{n}"),
+            streams,
+            catalog,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scenarios_match_table5() {
+        let s1 = paper_scenario(1).unwrap();
+        assert_eq!(s1.streams.len(), 4);
+        assert_eq!(s1.catalog.types.len(), 2);
+        let s2 = paper_scenario(2).unwrap();
+        assert_eq!(s2.streams.len(), 2);
+        let s3 = paper_scenario(3).unwrap();
+        assert_eq!(s3.streams.len(), 12);
+        assert_eq!(
+            s3.streams.iter().filter(|s| s.program == Program::Zf).count(),
+            10
+        );
+        assert!(paper_scenario(4).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = paper_scenario(1).unwrap();
+        let back = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.streams.len(), s.streams.len());
+        assert_eq!(back.catalog.types.len(), 2);
+        assert_eq!(back.name, "scenario-1");
+    }
+
+    #[test]
+    fn from_json_validates() {
+        assert!(Scenario::from_json(&Json::parse(r#"{"name":"x","streams":[]}"#).unwrap()).is_err());
+        let bad_fps = r#"{"name":"x","streams":[{"program":"zf","fps":-1}]}"#;
+        assert!(Scenario::from_json(&Json::parse(bad_fps).unwrap()).is_err());
+        let bad_type = r#"{"name":"x","catalog":["h100.mega"],"streams":[{"program":"zf","fps":1}]}"#;
+        assert!(Scenario::from_json(&Json::parse(bad_type).unwrap()).is_err());
+        let bad_program = r#"{"name":"x","streams":[{"program":"resnet","fps":1}]}"#;
+        assert!(Scenario::from_json(&Json::parse(bad_program).unwrap()).is_err());
+    }
+
+    #[test]
+    fn random_workloads_are_deterministic_and_varied() {
+        let a = Scenario::random(7, 20, Catalog::paper_experiments());
+        let b = Scenario::random(7, 20, Catalog::paper_experiments());
+        assert_eq!(a.streams.len(), 20);
+        for (x, y) in a.streams.iter().zip(&b.streams) {
+            assert_eq!(x.desired_fps, y.desired_fps);
+            assert_eq!(x.program, y.program);
+        }
+        let programs: std::collections::BTreeSet<_> =
+            a.streams.iter().map(|s| s.program.name()).collect();
+        assert_eq!(programs.len(), 2);
+    }
+}

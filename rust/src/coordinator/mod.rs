@@ -1,0 +1,277 @@
+//! End-to-end orchestration: profile → allocate → provision → run →
+//! report.  This is the binary's engine and what the examples drive.
+
+use crate::cloud::{BillingMeter, InstanceId, SimInstance};
+use crate::config::Scenario;
+use crate::manager::{AllocationError, AllocationPlan, ResourceManager, Strategy};
+use crate::profiler::calibration::Calibration;
+use crate::profiler::live::TestRunner;
+use crate::profiler::store::ProfileStore;
+use crate::profiler::ResourceProfile;
+use crate::runtime::ModelRuntime;
+use crate::sched::{SimConfig, SimReport, Simulation};
+use crate::streams::StreamSpec;
+use crate::types::{Dollars, Program, VGA};
+use anyhow::Result;
+
+/// Outcome of one scenario run under one strategy.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub strategy: Strategy,
+    pub plan: AllocationPlan,
+    pub report: SimReport,
+    /// Cost actually billed for the simulated span (started hours).
+    pub billed: Dollars,
+}
+
+/// Outcome or failure per strategy — Table 6 rows ("Fail" included).
+pub type StrategyOutcome = std::result::Result<RunOutcome, AllocationError>;
+
+/// The coordinator: owns profiles and drives the full pipeline.
+pub struct Coordinator {
+    pub calibration: Calibration,
+    /// Measured profiles (live test runs) override calibration when set.
+    pub profiles: Option<ProfileStore>,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Coordinator { calibration: Calibration::paper(), profiles: None }
+    }
+}
+
+impl Coordinator {
+    pub fn new() -> Coordinator {
+        Coordinator::default()
+    }
+
+    /// Use live-measured profiles (from [`Coordinator::profile_live`]).
+    pub fn with_profiles(mut self, profiles: ProfileStore) -> Coordinator {
+        self.profiles = Some(profiles);
+        self
+    }
+
+    /// Resolve the profile for one stream spec.
+    pub fn profile_for(&self, spec: &StreamSpec) -> ResourceProfile {
+        if let Some(store) = &self.profiles {
+            if let Some(p) = store.get(spec.program, spec.camera.frame_size) {
+                return p.clone();
+            }
+        }
+        self.calibration
+            .profile(spec.program, spec.camera.frame_size)
+    }
+
+    /// Run the paper's test-run step for both programs at VGA on the
+    /// real PJRT runtime, producing a measured profile store.
+    pub fn profile_live(&self, runtime: &ModelRuntime, frames: usize) -> Result<ProfileStore> {
+        let mut runner = TestRunner::new(runtime);
+        runner.frames = frames;
+        let mut store = ProfileStore::new();
+        for program in Program::ALL {
+            store.insert(runner.profile(program, VGA, &self.calibration)?);
+        }
+        Ok(store)
+    }
+
+    /// Allocate + provision + simulate one scenario under one strategy.
+    pub fn run_scenario(
+        &self,
+        scenario: &Scenario,
+        strategy: Strategy,
+        sim: SimConfig,
+    ) -> StrategyOutcome {
+        let mgr = ResourceManager::new(scenario.catalog.clone(), self);
+        let plan = mgr.allocate(&scenario.streams, strategy)?;
+
+        // Provision simulated instances + billing.
+        let mut billing = BillingMeter::new();
+        for (i, inst) in plan.instances.iter().enumerate() {
+            let itype = scenario
+                .catalog
+                .get(&inst.type_name)
+                .expect("plan types come from the catalog")
+                .clone();
+            let mut sim_inst = SimInstance::new(InstanceId(i as u32), itype, 0.0);
+            billing.on_provision(&sim_inst);
+            sim_inst.mark_running();
+        }
+
+        // Execute the frame loops.
+        let layout = scenario.catalog.layout();
+        let mut simulation = Simulation::from_plan(
+            &plan,
+            &scenario.streams,
+            layout,
+            |i| self.profile_for(&scenario.streams[i]),
+            &scenario.catalog,
+        );
+        let report = simulation.run(sim);
+        let billed = billing.total_cost(sim.duration_s);
+        Ok(RunOutcome { strategy, plan, report, billed })
+    }
+
+    /// Run all three strategies on a scenario — one Table 6 block.
+    pub fn compare_strategies(
+        &self,
+        scenario: &Scenario,
+        sim: SimConfig,
+    ) -> Vec<(Strategy, StrategyOutcome)> {
+        Strategy::ALL
+            .iter()
+            .map(|&s| (s, self.run_scenario(scenario, s, sim)))
+            .collect()
+    }
+}
+
+impl crate::manager::ProfileSource for Coordinator {
+    fn profile_for(&self, spec: &StreamSpec) -> Option<ResourceProfile> {
+        Some(Coordinator::profile_for(self, spec))
+    }
+}
+
+/// Render a Table-6-style block for one scenario's strategy outcomes.
+pub fn render_table6_block(
+    scenario: &Scenario,
+    outcomes: &[(Strategy, StrategyOutcome)],
+) -> crate::metrics::Table {
+    let mut table = crate::metrics::Table::new(&format!(
+        "Table 6 — {} ({} streams)",
+        scenario.name,
+        scenario.streams.len()
+    ))
+    .header(&[
+        "Strategy", "non-GPU", "GPU", "Hourly Cost", "Savings", "Perf",
+    ]);
+    // Savings are relative to the most expensive successful strategy,
+    // exactly as the paper computes them.
+    let max_cost = outcomes
+        .iter()
+        .filter_map(|(_, o)| o.as_ref().ok())
+        .map(|o| o.plan.hourly_cost)
+        .max()
+        .unwrap_or(Dollars::ZERO);
+    for (strategy, outcome) in outcomes {
+        match outcome {
+            Ok(run) => {
+                let (non_gpu, gpu) = run.plan.instance_counts(&scenario.catalog);
+                table.row(&[
+                    strategy.to_string(),
+                    non_gpu.to_string(),
+                    gpu.to_string(),
+                    run.plan.hourly_cost.to_string(),
+                    format!("{:.0}%", run.plan.hourly_cost.savings_vs(max_cost)),
+                    format!("{:.0}%", run.report.overall_performance() * 100.0),
+                ]);
+            }
+            Err(_) => {
+                table.row(&[
+                    strategy.to_string(),
+                    "Fail".into(),
+                    "Fail".into(),
+                    "Fail".into(),
+                    "Fail".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_scenario;
+
+    fn quick_sim() -> SimConfig {
+        SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 32 }
+    }
+
+    #[test]
+    fn scenario1_table6_row() {
+        let c = Coordinator::new();
+        let scenario = paper_scenario(1).unwrap();
+        let outcomes = c.compare_strategies(&scenario, quick_sim());
+
+        let st1 = outcomes[0].1.as_ref().unwrap();
+        assert_eq!(st1.plan.hourly_cost, Dollars::from_f64(1.676));
+        let st2 = outcomes[1].1.as_ref().unwrap();
+        assert_eq!(st2.plan.hourly_cost, Dollars::from_f64(0.650));
+        let st3 = outcomes[2].1.as_ref().unwrap();
+        assert_eq!(st3.plan.hourly_cost, Dollars::from_f64(0.650));
+        // 61% saving of ST3 vs ST1.
+        assert_eq!(
+            st3.plan.hourly_cost.savings_vs(st1.plan.hourly_cost).round() as i64,
+            61
+        );
+        // All strategies must meet the >=90% performance target.
+        for (_, o) in &outcomes {
+            let o = o.as_ref().unwrap();
+            assert!(
+                o.report.overall_performance() >= 0.9,
+                "{}: perf {}",
+                o.strategy,
+                o.report.overall_performance()
+            );
+        }
+    }
+
+    #[test]
+    fn scenario2_table6_row() {
+        let c = Coordinator::new();
+        let scenario = paper_scenario(2).unwrap();
+        let outcomes = c.compare_strategies(&scenario, quick_sim());
+        let st1 = outcomes[0].1.as_ref().unwrap();
+        let st2 = outcomes[1].1.as_ref().unwrap();
+        let st3 = outcomes[2].1.as_ref().unwrap();
+        assert_eq!(st1.plan.hourly_cost, Dollars::from_f64(0.419));
+        assert_eq!(st2.plan.hourly_cost, Dollars::from_f64(0.650));
+        assert_eq!(st3.plan.hourly_cost, Dollars::from_f64(0.419));
+        assert_eq!(
+            st3.plan.hourly_cost.savings_vs(st2.plan.hourly_cost).round() as i64,
+            36
+        );
+    }
+
+    #[test]
+    fn scenario3_table6_row() {
+        let c = Coordinator::new();
+        let scenario = paper_scenario(3).unwrap();
+        let outcomes = c.compare_strategies(&scenario, quick_sim());
+        assert!(outcomes[0].1.is_err(), "ST1 must fail scenario 3");
+        let st2 = outcomes[1].1.as_ref().unwrap();
+        let st3 = outcomes[2].1.as_ref().unwrap();
+        assert_eq!(st2.plan.hourly_cost, Dollars::from_f64(7.150));
+        assert_eq!(st3.plan.hourly_cost, Dollars::from_f64(6.919));
+        assert_eq!(st2.plan.instance_counts(&scenario.catalog), (0, 11));
+        assert_eq!(st3.plan.instance_counts(&scenario.catalog), (1, 10));
+        assert_eq!(
+            st3.plan.hourly_cost.savings_vs(st2.plan.hourly_cost).round() as i64,
+            3
+        );
+    }
+
+    #[test]
+    fn billing_covers_simulated_hours() {
+        let c = Coordinator::new();
+        let scenario = paper_scenario(2).unwrap();
+        let run = c
+            .run_scenario(&scenario, Strategy::St3, quick_sim())
+            .unwrap();
+        // One c4.2xlarge for <=1h -> one billed hour.
+        assert_eq!(run.billed, Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn table6_rendering_includes_fail() {
+        let c = Coordinator::new();
+        let scenario = paper_scenario(3).unwrap();
+        let outcomes = c.compare_strategies(&scenario, quick_sim());
+        let rendered = render_table6_block(&scenario, &outcomes).render();
+        assert!(rendered.contains("Fail"));
+        assert!(rendered.contains("$6.919"));
+        assert!(rendered.contains("$7.150"));
+        assert!(rendered.contains("3%"));
+    }
+}

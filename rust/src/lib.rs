@@ -1,0 +1,44 @@
+//! # camcloud — cloud resource management for network-camera analytics
+//!
+//! Reproduction of *"Analyzing Real-Time Multimedia Content From Network
+//! Cameras Using CPUs and GPUs in the Cloud"* (Kaseb et al., 2018).
+//!
+//! The library implements the paper's resource manager and every substrate
+//! it depends on (see `DESIGN.md` for the full inventory):
+//!
+//! * [`packing`] — multiple-choice vector bin packing: exact
+//!   branch-and-bound, an arc-flow (Brandão–Pedroso) bound/1-D solver, and
+//!   first/best-fit heuristics.
+//! * [`cloud`] — simulated cloud: the Table-1 EC2 catalog, instance
+//!   lifecycle + hourly billing, and calibrated CPU/GPU device models.
+//! * [`streams`] — simulated network cameras producing frames at desired
+//!   rates and sizes.
+//! * [`profiler`] — the paper's test-run subsystem: measure a program on
+//!   CPU (really, via PJRT) and on GPU (via the calibrated device model),
+//!   fit the linear utilization-vs-fps resource model.
+//! * [`manager`] — the contribution: formulate allocation as MVBP under
+//!   strategies ST1/ST2/ST3 and emit an allocation plan.
+//! * [`sched`] — per-instance frame-loop schedulers over a discrete-event
+//!   simulation clock (plus a real-time tokio mode used by the examples).
+//! * [`runtime`] — PJRT CPU runtime loading the AOT HLO artifacts
+//!   produced by `python/compile/aot.py`.
+//! * [`coordinator`] — end-to-end orchestration: profile → allocate →
+//!   provision → run → report.
+//!
+//! Python is build-time only; the request path is entirely in this crate.
+
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod manager;
+pub mod metrics;
+pub mod packing;
+pub mod util;
+pub mod profiler;
+pub mod reports;
+pub mod runtime;
+pub mod sched;
+pub mod streams;
+pub mod types;
+
+pub use types::{Dollars, FrameSize, ResourceVec};

@@ -1,0 +1,393 @@
+//! `camcloud` — CLI for the cloud resource manager.
+//!
+//! ```text
+//! camcloud catalog                       print Table 1
+//! camcloud profile [--live] [...]        run test runs, save profiles
+//! camcloud allocate --scenario N ...     print an allocation plan
+//! camcloud run --scenario N ...          allocate + simulate + report
+//! camcloud report --all | --table2 ...   regenerate paper tables/figures
+//! camcloud infer --program vgg16 ...     real PJRT inference on frames
+//! ```
+
+use camcloud::config::{paper_scenario, Scenario};
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::Strategy;
+use camcloud::profiler::store::ProfileStore;
+use camcloud::reports;
+use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
+use camcloud::sched::SimConfig;
+use camcloud::streams::{Camera, Frame};
+use camcloud::types::{Program, VGA};
+use camcloud::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("catalog") => cmd_catalog(),
+        Some("profile") => cmd_profile(&args),
+        Some("allocate") => cmd_allocate(&args),
+        Some("run") => cmd_run(&args),
+        Some("report") => cmd_report(&args),
+        Some("whatif") => cmd_whatif(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}; see `camcloud help`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "camcloud — cloud resource manager for network-camera analytics\n\
+         (reproduction of Kaseb et al., 2018)\n\n\
+         Subcommands:\n\
+         \u{20}  catalog                     print the instance catalog (Table 1)\n\
+         \u{20}  profile [--live] [--frames N] [--out FILE]\n\
+         \u{20}                              estimate resource requirements via test runs\n\
+         \u{20}  allocate --scenario N --strategy st1|st2|st3 [--profiles FILE]\n\
+         \u{20}  allocate --config FILE ...  allocate a custom JSON workload\n\
+         \u{20}  run --scenario N [--strategy stX] [--duration S]\n\
+         \u{20}                              allocate + simulate + performance/cost report\n\
+         \u{20}  report --all|--table2|--table3|--table5|--table6|--fig5|--fig6\n\
+         \u{20}                              regenerate the paper's tables and figures\n\
+         \u{20}  whatif --scenario N [--strategy stX]\n\
+         \u{20}                              cost curves vs frame-rate multiplier + cliffs\n\
+         \u{20}  infer --program vgg16|zf [--frames N]\n\
+         \u{20}                              real PJRT inference on synthetic camera frames"
+    );
+}
+
+fn coordinator_with_profiles(args: &Args) -> Result<Coordinator, String> {
+    let mut c = Coordinator::new();
+    if let Some(path) = args.opt("profiles") {
+        let store = ProfileStore::load(std::path::Path::new(path))
+            .map_err(|e| format!("loading profiles {path}: {e}"))?;
+        c = c.with_profiles(store);
+    }
+    Ok(c)
+}
+
+fn load_scenario(args: &Args) -> Result<Scenario, String> {
+    if let Some(path) = args.opt("config") {
+        return Scenario::load(std::path::Path::new(path))
+            .map_err(|e| format!("loading scenario {path}: {e}"));
+    }
+    let n = args
+        .u32_opt("scenario")?
+        .ok_or("need --scenario N or --config FILE")?;
+    paper_scenario(n).map_err(|e| e.to_string())
+}
+
+fn cmd_catalog() -> i32 {
+    print!(
+        "{}",
+        reports::table1(&camcloud::cloud::Catalog::aws_table1()).render()
+    );
+    0
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    let live = args.has("live");
+    let frames = args.u32_opt("frames").unwrap_or(None).unwrap_or(8) as usize;
+    let out = args.opt_or("out", "profiles.json");
+    let coordinator = Coordinator::new();
+    let store = if live {
+        let runtime = match ModelRuntime::load(default_artifacts_dir()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        };
+        println!("running live test runs ({frames} frames per program)...");
+        match coordinator.profile_live(&runtime, frames) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        // Calibrated profiles for every program x frame size.
+        let mut s = ProfileStore::new();
+        for program in Program::ALL {
+            for size in camcloud::types::FRAME_SIZES {
+                s.insert(coordinator.calibration.profile(program, size));
+            }
+        }
+        s
+    };
+    for p in store.iter() {
+        println!(
+            "{:<16} cpu {:>7.3} core-s/frame | gpu {:>8.2} core-s/frame | max fps {:>6.2} (cpu) {:>6.2} (gpu)",
+            p.program.variant(p.frame_size),
+            p.cpu_work_cpu_mode,
+            p.gpu_work,
+            p.max_fps_cpu,
+            p.max_fps_gpu
+        );
+    }
+    if let Err(e) = store.save(std::path::Path::new(out)) {
+        eprintln!("error saving {out}: {e:#}");
+        return 1;
+    }
+    println!("saved {} profiles to {out}", store.len());
+    0
+}
+
+fn cmd_allocate(args: &Args) -> i32 {
+    let scenario = match load_scenario(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let coordinator = match coordinator_with_profiles(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let strategies: Vec<Strategy> = match args.opt("strategy") {
+        Some(s) => match s.parse() {
+            Ok(st) => vec![st],
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        None => Strategy::ALL.to_vec(),
+    };
+    let mgr = camcloud::manager::ResourceManager::new(scenario.catalog.clone(), &coordinator);
+    for strategy in strategies {
+        println!("--- {strategy} ---");
+        match mgr.allocate(&scenario.streams, strategy) {
+            Ok(plan) => print!("{}", plan.summary()),
+            Err(e) => println!("FAIL: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let scenario = match load_scenario(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let coordinator = match coordinator_with_profiles(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let duration = args.f64_opt("duration").unwrap_or(None).unwrap_or(120.0);
+    let sim = SimConfig { duration_s: duration, dt: 0.01, queue_cap: 32 };
+    match args.opt("strategy") {
+        Some(s) => {
+            let strategy: Strategy = match s.parse() {
+                Ok(st) => st,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            match coordinator.run_scenario(&scenario, strategy, sim) {
+                Ok(run) => {
+                    print!("{}", run.plan.summary());
+                    println!(
+                        "simulated {duration}s: performance {:.1}%, {} frames ({} dropped), billed {}",
+                        run.report.overall_performance() * 100.0,
+                        run.report.frames_completed,
+                        run.report.frames_dropped,
+                        run.billed
+                    );
+                    0
+                }
+                Err(e) => {
+                    println!("FAIL: {e}");
+                    1
+                }
+            }
+        }
+        None => {
+            let outcomes = coordinator.compare_strategies(&scenario, sim);
+            print!(
+                "{}",
+                camcloud::coordinator::render_table6_block(&scenario, &outcomes).render()
+            );
+            0
+        }
+    }
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    let coordinator = match coordinator_with_profiles(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let duration = args.f64_opt("duration").unwrap_or(None).unwrap_or(60.0);
+    let all = args.has("all") || args.switches.is_empty();
+    let profiles = reports::vga_profiles(&coordinator);
+    if all || args.has("table1") {
+        println!(
+            "{}",
+            reports::table1(&camcloud::cloud::Catalog::aws_table1()).render()
+        );
+    }
+    if all || args.has("table2") {
+        println!("{}", reports::table2(&profiles).render());
+    }
+    if all || args.has("table3") {
+        println!("{}", reports::table3(&profiles).render());
+    }
+    if all || args.has("table5") {
+        println!("{}", reports::table5().render());
+    }
+    if all || args.has("fig5") {
+        let rows = reports::fig5(
+            &coordinator,
+            &[0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0],
+            duration,
+        );
+        println!("{}", reports::fig5_table(&rows).render());
+    }
+    if all || args.has("fig6") {
+        let rows = reports::fig6(&coordinator, &[1, 2, 3, 4, 5, 6], duration);
+        println!("{}", reports::fig6_table(&rows).render());
+    }
+    if all || args.has("table6") {
+        for n in 1..=3 {
+            println!("{}", reports::table6(&coordinator, n, duration).render());
+        }
+    }
+    0
+}
+
+fn cmd_infer(args: &Args) -> i32 {
+    let program: Program = match args.opt_or("program", "zf").parse() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let frames = args.u32_opt("frames").unwrap_or(None).unwrap_or(5);
+    let runtime = match ModelRuntime::load(default_artifacts_dir()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let camera = Camera::new(7, VGA);
+    let variant = program.variant(VGA);
+    println!("compiling {variant}...");
+    if let Err(e) = runtime.prepare(&variant) {
+        eprintln!("error: {e:#}");
+        return 1;
+    }
+    for i in 0..frames {
+        let t = i as f64 * 0.5;
+        let frame: Frame = camera.frame_at(t);
+        match runtime.infer(&variant, &frame) {
+            Ok((dets, stats)) => {
+                println!(
+                    "frame t={t:.1}s: {} detection(s) in {:.1} ms",
+                    dets.len(),
+                    stats.wall_seconds * 1e3
+                );
+                for d in dets.items.iter().take(4) {
+                    println!(
+                        "    {} ({:.0}%) bbox [{:.2} {:.2} {:.2} {:.2}]",
+                        d.class_name,
+                        d.score * 100.0,
+                        d.bbox[0],
+                        d.bbox[1],
+                        d.bbox[2],
+                        d.bbox[3]
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_whatif(args: &Args) -> i32 {
+    let scenario = match load_scenario(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let coordinator = match coordinator_with_profiles(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let strategies: Vec<Strategy> = match args.opt("strategy") {
+        Some(s) => match s.parse() {
+            Ok(st) => vec![st],
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        None => Strategy::ALL.to_vec(),
+    };
+    let mgr = camcloud::manager::ResourceManager::new(scenario.catalog.clone(), &coordinator);
+    let multipliers = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+    for strategy in strategies {
+        println!("--- {strategy}: cost vs frame-rate multiplier ---");
+        let curve = camcloud::manager::whatif::sweep_rate_multiplier(
+            &mgr,
+            &scenario.streams,
+            strategy,
+            &multipliers,
+        );
+        for p in &curve {
+            match p.cost {
+                Some(c) => println!("  x{:<5} {:>10}  ({} instance(s))", p.x, c.to_string(), p.instances),
+                None => println!("  x{:<5} {:>10}", p.x, "FAIL"),
+            }
+        }
+        if let Some(cliff) = camcloud::manager::whatif::feasibility_cliff(
+            &mgr,
+            &scenario.streams,
+            strategy,
+            0.25,
+            16.0,
+        ) {
+            println!("  feasibility cliff at x{cliff:.2}");
+        }
+    }
+    0
+}

@@ -1,0 +1,292 @@
+//! The cloud resource manager — the paper's contribution (§3).
+//!
+//! Given a workload (streams: program + desired fps + frame size), the
+//! profiles from the test runs, and an instance catalog, the manager:
+//!
+//! 1. builds the requirement choices of every stream at its desired rate
+//!    from the linear resource models (§3.1);
+//! 2. formulates a multiple-choice vector bin packing problem whose bins
+//!    are instance types with 90%-headroom capacities (§3.2);
+//! 3. solves it (exact branch-and-bound, BFD fallback at scale) and maps
+//!    the packing back to an [`AllocationPlan`]: which instances to
+//!    provision, which streams on which instance, and which device (CPU
+//!    or GPU *g*) analyzes each stream.
+
+pub mod plan;
+pub mod realloc;
+pub mod strategy;
+pub mod whatif;
+
+pub use plan::{AllocationPlan, PlannedInstance, StreamAssignment};
+pub use realloc::{plan_transition, worth_reallocating, Reallocation, TransitionAction};
+pub use strategy::Strategy;
+
+use crate::cloud::Catalog;
+use crate::packing::{self, BinType, Item, MvbpProblem};
+use crate::profiler::{ExecChoice, ResourceProfile};
+use crate::streams::StreamSpec;
+use crate::types::DimLayout;
+use thiserror::Error;
+
+/// Allocation failure modes.
+#[derive(Debug, Error)]
+pub enum AllocationError {
+    /// Some streams cannot be analyzed at their desired rate under this
+    /// strategy at all (Table 6's "Fail" row: ZF at 8 FPS under ST1).
+    #[error("streams not satisfiable under {strategy}: {stream_ids:?}")]
+    Infeasible {
+        strategy: Strategy,
+        stream_ids: Vec<String>,
+    },
+    /// No profile available for (program, frame size).
+    #[error("no resource profile for {0}")]
+    MissingProfile(String),
+    /// The catalog for this strategy is empty.
+    #[error("strategy {0} leaves no instance types in the catalog")]
+    EmptyCatalog(Strategy),
+    /// The solver could not pack the items (should not happen once
+    /// per-item feasibility holds, but surfaced rather than panicking).
+    #[error("packing failed: {0}")]
+    SolverFailed(String),
+}
+
+/// Source of resource profiles for the manager.
+pub trait ProfileSource {
+    fn profile_for(&self, spec: &StreamSpec) -> Option<ResourceProfile>;
+}
+
+impl ProfileSource for crate::profiler::store::ProfileStore {
+    fn profile_for(&self, spec: &StreamSpec) -> Option<ResourceProfile> {
+        self.get(spec.program, spec.camera.frame_size).cloned()
+    }
+}
+
+impl ProfileSource for crate::profiler::calibration::Calibration {
+    fn profile_for(&self, spec: &StreamSpec) -> Option<ResourceProfile> {
+        Some(self.profile(spec.program, spec.camera.frame_size))
+    }
+}
+
+/// The resource manager.
+pub struct ResourceManager<'p> {
+    pub catalog: Catalog,
+    pub profiles: &'p dyn ProfileSource,
+    /// The paper's 90% utilization ceiling.
+    pub headroom: f64,
+    /// Max items for the exact solver before falling back to BFD.
+    pub exact_cutoff: usize,
+}
+
+/// A built MVBP instance plus the mapping back to streams/choices.
+pub struct BuiltProblem {
+    pub problem: MvbpProblem,
+    /// `choice_map[item][dense_choice]` = the ExecChoice it encodes.
+    pub choice_map: Vec<Vec<ExecChoice>>,
+    pub layout: DimLayout,
+}
+
+impl<'p> ResourceManager<'p> {
+    pub fn new(catalog: Catalog, profiles: &'p dyn ProfileSource) -> ResourceManager<'p> {
+        ResourceManager {
+            catalog,
+            profiles,
+            headroom: 0.9,
+            exact_cutoff: 24,
+        }
+    }
+
+    /// Formulate the MVBP instance for `streams` under `strategy`.
+    pub fn build_problem(
+        &self,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+    ) -> Result<BuiltProblem, AllocationError> {
+        let catalog = strategy.filter_catalog(&self.catalog);
+        if catalog.types.is_empty() {
+            return Err(AllocationError::EmptyCatalog(strategy));
+        }
+        let layout = catalog.layout();
+
+        let bin_types: Vec<BinType> = catalog
+            .types
+            .iter()
+            .map(|t| BinType {
+                name: t.name.clone(),
+                cost: t.hourly_cost,
+                capacity: t.capability(layout).scale(self.headroom),
+            })
+            .collect();
+
+        let mut items = Vec::with_capacity(streams.len());
+        let mut choice_map = Vec::with_capacity(streams.len());
+        let mut infeasible = Vec::new();
+        for spec in streams {
+            let profile = self
+                .profiles
+                .profile_for(spec)
+                .ok_or_else(|| {
+                    AllocationError::MissingProfile(spec.program.variant(spec.camera.frame_size))
+                })?;
+            let mut choices = Vec::new();
+            let mut map = Vec::new();
+            for (idx, req) in profile.choices(spec.desired_fps, layout).into_iter().enumerate() {
+                let exec = ExecChoice::from_index(idx);
+                if !strategy.allows_choice(exec) {
+                    continue;
+                }
+                if let Some(req) = req {
+                    choices.push(req);
+                    map.push(exec);
+                }
+            }
+            if choices.is_empty() {
+                infeasible.push(spec.id());
+            }
+            items.push(Item { id: spec.id(), choices });
+            choice_map.push(map);
+        }
+        if !infeasible.is_empty() {
+            return Err(AllocationError::Infeasible { strategy, stream_ids: infeasible });
+        }
+
+        let problem = MvbpProblem { dims: layout.dims(), bin_types, items };
+        // Latency-feasible choices can still exceed every instance
+        // (e.g. desired rate needing 12 cores).  Report those too.
+        let unpackable = problem.infeasible_items();
+        if !unpackable.is_empty() {
+            return Err(AllocationError::Infeasible {
+                strategy,
+                stream_ids: unpackable
+                    .into_iter()
+                    .map(|i| streams[i].id())
+                    .collect(),
+            });
+        }
+        Ok(BuiltProblem { problem, choice_map, layout })
+    }
+
+    /// Full allocation: formulate, solve, and map back to a plan.
+    pub fn allocate(
+        &self,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+    ) -> Result<AllocationPlan, AllocationError> {
+        let built = self.build_problem(streams, strategy)?;
+        let (solution, solver) = packing::solve_auto(&built.problem, self.exact_cutoff)
+            .ok_or_else(|| AllocationError::SolverFailed("no packing found".into()))?;
+        solution
+            .validate(&built.problem)
+            .map_err(AllocationError::SolverFailed)?;
+        Ok(AllocationPlan::from_solution(
+            &built, &solution, streams, strategy, solver,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::calibration::Calibration;
+    use crate::streams::{Camera, StreamSpec};
+    use crate::types::{Dollars, Program, VGA};
+
+    fn streams_scenario1() -> Vec<StreamSpec> {
+        // Table 5, scenario 1: VGG-16 @0.25 x1, ZF @0.55 x3.
+        let mut v = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.25);
+        v.extend(StreamSpec::replicate(10, 3, VGA, Program::Zf, 0.55));
+        v
+    }
+
+    fn manager(cal: &Calibration) -> ResourceManager<'_> {
+        ResourceManager::new(Catalog::paper_experiments(), cal)
+    }
+
+    #[test]
+    fn scenario1_st3_uses_one_gpu_instance() {
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let plan = mgr.allocate(&streams_scenario1(), Strategy::St3).unwrap();
+        assert_eq!(plan.instances.len(), 1);
+        assert_eq!(plan.instances[0].type_name, "g2.2xlarge");
+        assert_eq!(plan.hourly_cost, Dollars::from_f64(0.650));
+        // The paper's outcome: one GPU instance hosts all four streams.
+        // At least some must offload to the GPU (pure-CPU would not fit:
+        // 3.94 + 3 x 3.92 cores > 7.2 usable), though the solver may
+        // keep one stream on the instance's CPU at identical cost.
+        assert_eq!(plan.instances[0].streams.len(), 4);
+        assert!(plan.instances[0]
+            .streams
+            .iter()
+            .any(|a| a.choice.is_gpu()));
+    }
+
+    #[test]
+    fn scenario1_st1_needs_four_cpu_instances() {
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let plan = mgr.allocate(&streams_scenario1(), Strategy::St1).unwrap();
+        assert_eq!(plan.instances.len(), 4);
+        assert!(plan
+            .instances
+            .iter()
+            .all(|i| i.type_name == "c4.2xlarge"));
+        assert_eq!(plan.hourly_cost, Dollars::from_f64(1.676));
+    }
+
+    #[test]
+    fn scenario3_st1_fails_zf_at_8fps() {
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let mut streams = StreamSpec::replicate(0, 2, VGA, Program::Vgg16, 0.20);
+        streams.extend(StreamSpec::replicate(10, 10, VGA, Program::Zf, 8.0));
+        let err = mgr.allocate(&streams, Strategy::St1).unwrap_err();
+        match err {
+            AllocationError::Infeasible { stream_ids, .. } => {
+                assert_eq!(stream_ids.len(), 10); // all ten ZF streams
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn st2_forbids_cpu_choice() {
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let built = mgr
+            .build_problem(&streams_scenario1(), Strategy::St2)
+            .unwrap();
+        for map in &built.choice_map {
+            assert!(map.iter().all(|c| c.is_gpu()));
+        }
+    }
+
+    #[test]
+    fn missing_profile_errors() {
+        struct NoProfiles;
+        impl ProfileSource for NoProfiles {
+            fn profile_for(&self, _: &StreamSpec) -> Option<ResourceProfile> {
+                None
+            }
+        }
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &NoProfiles);
+        let streams = vec![StreamSpec::new(Camera::new(0, VGA), Program::Zf, 0.5)];
+        assert!(matches!(
+            mgr.allocate(&streams, Strategy::St3),
+            Err(AllocationError::MissingProfile(_))
+        ));
+    }
+
+    #[test]
+    fn empty_catalog_for_strategy_errors() {
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(
+            Catalog::paper_experiments().gpu_only(),
+            &cal,
+        );
+        let streams = vec![StreamSpec::new(Camera::new(0, VGA), Program::Zf, 0.5)];
+        assert!(matches!(
+            mgr.allocate(&streams, Strategy::St1),
+            Err(AllocationError::EmptyCatalog(Strategy::St1))
+        ));
+    }
+}

@@ -1,0 +1,200 @@
+//! Allocation plans: the manager's output (Figure 2's decisions A–D).
+
+use super::strategy::Strategy;
+use super::BuiltProblem;
+use crate::packing::{Solution, SolverKind};
+use crate::profiler::ExecChoice;
+use crate::streams::StreamSpec;
+use crate::types::{Dollars, ResourceVec};
+use std::collections::BTreeMap;
+
+/// One stream placed on an instance.
+#[derive(Clone, Debug)]
+pub struct StreamAssignment {
+    /// Index into the workload's stream list.
+    pub stream_index: usize,
+    pub stream_id: String,
+    /// Which device analyzes the stream (decision D).
+    pub choice: ExecChoice,
+    /// The requirement vector the packing used.
+    pub requirement: ResourceVec,
+}
+
+/// One instance to provision, with its assigned streams.
+#[derive(Clone, Debug)]
+pub struct PlannedInstance {
+    /// Catalog type name (decision A).
+    pub type_name: String,
+    pub hourly_cost: Dollars,
+    /// Usable (headroom-scaled) capacity the packing respected.
+    pub capacity: ResourceVec,
+    /// Streams analyzed by this instance (decision C).
+    pub streams: Vec<StreamAssignment>,
+}
+
+impl PlannedInstance {
+    /// Total requirement over assigned streams.
+    pub fn load(&self) -> ResourceVec {
+        let dims = self.capacity.dims();
+        let mut load = ResourceVec::zeros(dims);
+        for s in &self.streams {
+            load.add_assign(&s.requirement);
+        }
+        load
+    }
+
+    /// Utilization per dimension against the *full* (unscaled) capacity
+    /// would require the catalog; this reports against usable capacity.
+    pub fn utilization(&self) -> ResourceVec {
+        let load = self.load();
+        ResourceVec(
+            load.0
+                .iter()
+                .zip(&self.capacity.0)
+                .map(|(l, c)| if *c > 0.0 { l / c } else { 0.0 })
+                .collect(),
+        )
+    }
+}
+
+/// The manager's full output.
+#[derive(Clone, Debug)]
+pub struct AllocationPlan {
+    pub strategy: Strategy,
+    pub solver: SolverKind,
+    pub instances: Vec<PlannedInstance>,
+    pub hourly_cost: Dollars,
+}
+
+impl AllocationPlan {
+    /// Map a packing solution back into provisioning decisions.
+    pub fn from_solution(
+        built: &BuiltProblem,
+        solution: &Solution,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+        solver: SolverKind,
+    ) -> AllocationPlan {
+        let mut instances = Vec::with_capacity(solution.bins.len());
+        for bin in &solution.bins {
+            let bt = &built.problem.bin_types[bin.bin_type];
+            let mut assignments = Vec::with_capacity(bin.assignments.len());
+            for &(item, dense_choice) in &bin.assignments {
+                assignments.push(StreamAssignment {
+                    stream_index: item,
+                    stream_id: streams[item].id(),
+                    choice: built.choice_map[item][dense_choice],
+                    requirement: built.problem.items[item].choices[dense_choice].clone(),
+                });
+            }
+            instances.push(PlannedInstance {
+                type_name: bt.name.clone(),
+                hourly_cost: bt.cost,
+                capacity: bt.capacity.clone(),
+                streams: assignments,
+            });
+        }
+        let hourly_cost = instances.iter().map(|i| i.hourly_cost).sum();
+        AllocationPlan { strategy, solver, instances, hourly_cost }
+    }
+
+    /// `(non_gpu, gpu)` instance counts — Table 6's "Instances" columns.
+    pub fn instance_counts(&self, catalog: &crate::cloud::Catalog) -> (u32, u32) {
+        let mut non_gpu = 0;
+        let mut gpu = 0;
+        for inst in &self.instances {
+            match catalog.get(&inst.type_name) {
+                Some(t) if t.has_gpu() => gpu += 1,
+                Some(_) => non_gpu += 1,
+                None => {}
+            }
+        }
+        (non_gpu, gpu)
+    }
+
+    /// Instance counts per type name.
+    pub fn counts_by_type(&self) -> BTreeMap<String, u32> {
+        let mut counts = BTreeMap::new();
+        for inst in &self.instances {
+            *counts.entry(inst.type_name.clone()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Human-readable summary for CLI output.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "strategy {} | solver {} | {} instance(s) | hourly cost {}\n",
+            self.strategy,
+            self.solver,
+            self.instances.len(),
+            self.hourly_cost
+        );
+        for (i, inst) in self.instances.iter().enumerate() {
+            let util = inst.utilization();
+            out.push_str(&format!(
+                "  [{i}] {} ({}): {} stream(s), max util {:.1}%\n",
+                inst.type_name,
+                inst.hourly_cost,
+                inst.streams.len(),
+                util.0.iter().fold(0.0f64, |a, &b| a.max(b)) * 100.0
+            ));
+            for s in &inst.streams {
+                out.push_str(&format!("      {} -> {}\n", s.stream_id, s.choice));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::manager::ResourceManager;
+    use crate::profiler::calibration::Calibration;
+    use crate::streams::StreamSpec;
+    use crate::types::{Program, VGA};
+
+    fn plan_scenario2() -> AllocationPlan {
+        // Scenario 2: VGG @0.20 x1 + ZF @0.50 x1 -> one c4.2xlarge.
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &cal);
+        let mut streams = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.20);
+        streams.extend(StreamSpec::replicate(10, 1, VGA, Program::Zf, 0.50));
+        mgr.allocate(&streams, Strategy::St3).unwrap()
+    }
+
+    #[test]
+    fn scenario2_plan_shape() {
+        let plan = plan_scenario2();
+        assert_eq!(plan.instances.len(), 1);
+        assert_eq!(plan.instances[0].type_name, "c4.2xlarge");
+        assert_eq!(plan.hourly_cost, Dollars::from_f64(0.419));
+        let (non_gpu, gpu) = plan.instance_counts(&Catalog::paper_experiments());
+        assert_eq!((non_gpu, gpu), (1, 0));
+        assert_eq!(plan.counts_by_type().get("c4.2xlarge"), Some(&1));
+    }
+
+    #[test]
+    fn load_and_utilization_consistent() {
+        let plan = plan_scenario2();
+        let inst = &plan.instances[0];
+        let load = inst.load();
+        // VGG 0.2*15.76 + ZF 0.5*7.12 = 3.152 + 3.56 = 6.712 cores.
+        assert!((load[0] - 6.712).abs() < 1e-9);
+        let util = inst.utilization();
+        // Against usable capacity 7.2 cores: 93.2%.
+        assert!((util[0] - 6.712 / 7.2).abs() < 1e-9);
+        assert!(util[0] <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn summary_mentions_devices() {
+        let plan = plan_scenario2();
+        let s = plan.summary();
+        assert!(s.contains("c4.2xlarge"));
+        assert!(s.contains("CPU"));
+        assert!(s.contains("ST3"));
+    }
+}

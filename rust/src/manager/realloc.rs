@@ -1,0 +1,193 @@
+//! Reallocation: adapting a running fleet to a changed workload.
+//!
+//! The paper's motivation (§1) is bursty demand — "the analysis is
+//! needed occasionally (e.g., during emergencies)" — which implies the
+//! manager re-solves as cameras/rates change.  A fresh MVBP solve gives
+//! the cost-optimal *target* fleet; this module computes the cheapest
+//! transition from the currently provisioned fleet:
+//!
+//! * instances whose type still appears in the target plan are
+//!   **reused** (streams may be re-assigned — streams are stateless,
+//!   so moving one costs nothing);
+//! * surplus instances are **terminated**;
+//! * missing instances are **provisioned** (paying cloud boot latency
+//!   and a fresh billed hour).
+//!
+//! Because bins of one type are interchangeable, matching by type
+//! count is optimal for any transition-cost function that is monotone
+//! in the number of provision/terminate actions.
+
+use super::plan::AllocationPlan;
+use crate::types::Dollars;
+use std::collections::BTreeMap;
+
+/// One step of a fleet transition.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransitionAction {
+    /// Keep `count` already-running instances of `type_name`.
+    Keep { type_name: String, count: u32 },
+    /// Provision `count` new instances of `type_name`.
+    Provision { type_name: String, count: u32 },
+    /// Terminate `count` instances of `type_name`.
+    Terminate { type_name: String, count: u32 },
+}
+
+/// A reallocation: the target plan plus the cheapest transition to it.
+#[derive(Clone, Debug)]
+pub struct Reallocation {
+    pub actions: Vec<TransitionAction>,
+    /// Instances kept running (no churn).
+    pub kept: u32,
+    pub provisioned: u32,
+    pub terminated: u32,
+    /// Hourly cost delta (target - current).
+    pub hourly_delta: Dollars,
+}
+
+/// Compute the transition from `current` to `target` by type matching.
+pub fn plan_transition(current: &AllocationPlan, target: &AllocationPlan) -> Reallocation {
+    let cur = current.counts_by_type();
+    let tgt = target.counts_by_type();
+    let mut actions = Vec::new();
+    let mut kept = 0;
+    let mut provisioned = 0;
+    let mut terminated = 0;
+
+    let all_types: std::collections::BTreeSet<&String> = cur.keys().chain(tgt.keys()).collect();
+    for type_name in all_types {
+        let have = *cur.get(type_name).unwrap_or(&0);
+        let want = *tgt.get(type_name).unwrap_or(&0);
+        let keep = have.min(want);
+        if keep > 0 {
+            kept += keep;
+            actions.push(TransitionAction::Keep { type_name: type_name.clone(), count: keep });
+        }
+        if want > have {
+            provisioned += want - have;
+            actions.push(TransitionAction::Provision {
+                type_name: type_name.clone(),
+                count: want - have,
+            });
+        } else if have > want {
+            terminated += have - want;
+            actions.push(TransitionAction::Terminate {
+                type_name: type_name.clone(),
+                count: have - want,
+            });
+        }
+    }
+    Reallocation {
+        actions,
+        kept,
+        provisioned,
+        terminated,
+        hourly_delta: target.hourly_cost - current.hourly_cost,
+    }
+}
+
+/// Hysteresis policy: is a reallocation *worth it*?
+///
+/// Terminating mid-hour wastes the remainder of a billed hour, so a
+/// cheaper target plan only pays off if the saving over the planning
+/// horizon exceeds the churn waste.  `wasted_fraction` is the mean
+/// unused fraction of the current billing hour (0.5 if unknown).
+pub fn worth_reallocating(
+    realloc: &Reallocation,
+    current: &AllocationPlan,
+    horizon_hours: f64,
+    wasted_fraction: f64,
+) -> bool {
+    if realloc.provisioned == 0 && realloc.terminated == 0 {
+        return false; // same fleet, nothing to do
+    }
+    if realloc.hourly_delta > Dollars::ZERO {
+        return true; // workload grew: must scale up regardless of cost
+    }
+    // Scale-down: compare horizon savings vs wasted billed time.
+    let saving = -realloc.hourly_delta.as_f64() * horizon_hours;
+    let mut waste_per_terminated: BTreeMap<&str, f64> = BTreeMap::new();
+    for inst in &current.instances {
+        waste_per_terminated
+            .entry(inst.type_name.as_str())
+            .or_insert(inst.hourly_cost.as_f64() * wasted_fraction);
+    }
+    let waste: f64 = realloc
+        .actions
+        .iter()
+        .filter_map(|a| match a {
+            TransitionAction::Terminate { type_name, count } => Some(
+                waste_per_terminated.get(type_name.as_str()).unwrap_or(&0.0) * *count as f64,
+            ),
+            _ => None,
+        })
+        .sum();
+    saving > waste
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::config::paper_scenario;
+    use crate::coordinator::Coordinator;
+    use crate::manager::{ResourceManager, Strategy};
+    use crate::streams::StreamSpec;
+    use crate::types::{Program, VGA};
+
+    fn plan_for(streams: &[StreamSpec]) -> AllocationPlan {
+        let c = Coordinator::new();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        mgr.allocate(streams, Strategy::St3).unwrap()
+    }
+
+    #[test]
+    fn identical_plans_need_no_actions() {
+        let s = paper_scenario(1).unwrap();
+        let plan = plan_for(&s.streams);
+        let r = plan_transition(&plan, &plan);
+        assert_eq!(r.provisioned, 0);
+        assert_eq!(r.terminated, 0);
+        assert!(r.kept > 0);
+        assert_eq!(r.hourly_delta, Dollars::ZERO);
+        assert!(!worth_reallocating(&r, &plan, 12.0, 0.5));
+    }
+
+    #[test]
+    fn scale_up_provisions_and_reuses() {
+        // Normal ops (3 ZF @0.2) -> emergency (10 ZF @1.0).
+        let small = plan_for(&StreamSpec::replicate(0, 3, VGA, Program::Zf, 0.2));
+        let big = plan_for(&StreamSpec::replicate(0, 10, VGA, Program::Zf, 1.0));
+        let r = plan_transition(&small, &big);
+        assert!(r.provisioned > 0 || r.hourly_delta > Dollars::ZERO);
+        assert_eq!(r.terminated + r.kept, small.instances.len() as u32);
+        // Scale-up is always worth it (performance at stake).
+        if r.provisioned + r.terminated > 0 {
+            assert!(worth_reallocating(&r, &small, 1.0, 0.9));
+        }
+    }
+
+    #[test]
+    fn scale_down_terminates_surplus() {
+        let big = plan_for(&StreamSpec::replicate(0, 10, VGA, Program::Zf, 1.0));
+        let small = plan_for(&StreamSpec::replicate(0, 3, VGA, Program::Zf, 0.2));
+        let r = plan_transition(&big, &small);
+        assert!(r.terminated > 0);
+        assert!(r.hourly_delta < Dollars::ZERO);
+        // Worth it over a long horizon...
+        assert!(worth_reallocating(&r, &big, 24.0, 0.5));
+        // ...but not for the last sliver of an almost-over emergency.
+        assert!(!worth_reallocating(&r, &big, 0.01, 0.99));
+    }
+
+    #[test]
+    fn type_change_counts_both_actions() {
+        // CPU-heavy plan -> GPU-heavy plan swaps instance types.
+        let cpu_plan = plan_for(&StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.3));
+        let gpu_plan = plan_for(&StreamSpec::replicate(0, 6, VGA, Program::Zf, 3.0));
+        let r = plan_transition(&cpu_plan, &gpu_plan);
+        let kinds: Vec<_> = r.actions.iter().collect();
+        assert!(!kinds.is_empty());
+        // Every current instance is either kept or terminated.
+        assert_eq!(r.kept + r.terminated, cpu_plan.instances.len() as u32);
+    }
+}

@@ -1,0 +1,101 @@
+//! Resource allocation strategies (the paper's Table 4).
+
+use crate::cloud::Catalog;
+use crate::profiler::ExecChoice;
+
+/// The three strategies compared in the paper's evaluation (§4.4).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Strategy {
+    /// ST1: always use non-GPU instances (CPU analysis only).
+    St1,
+    /// ST2: always use GPU instances (GPU analysis only).
+    St2,
+    /// ST3 (this paper): consider both, minimize overall cost.
+    St3,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [Strategy::St1, Strategy::St2, Strategy::St3];
+
+    /// Restrict the catalog to the instance types this strategy admits.
+    pub fn filter_catalog(self, catalog: &Catalog) -> Catalog {
+        match self {
+            Strategy::St1 => catalog.non_gpu_only(),
+            Strategy::St2 => catalog.gpu_only(),
+            Strategy::St3 => catalog.clone(),
+        }
+    }
+
+    /// Whether a stream may be analyzed with `choice` under this
+    /// strategy.  Matches the paper: "For ST1 (or ST2), there is a
+    /// single choice for the resource requirements of each program".
+    pub fn allows_choice(self, choice: ExecChoice) -> bool {
+        match self {
+            Strategy::St1 => !choice.is_gpu(),
+            Strategy::St2 => choice.is_gpu(),
+            Strategy::St3 => true,
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Strategy::St1 => "ST1",
+            Strategy::St2 => "ST2",
+            Strategy::St3 => "ST3",
+        })
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "st1" | "1" | "cpu" => Ok(Strategy::St1),
+            "st2" | "2" | "gpu" => Ok(Strategy::St2),
+            "st3" | "3" | "both" => Ok(Strategy::St3),
+            other => Err(format!("unknown strategy {other:?} (expected st1/st2/st3)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_filtering() {
+        let cat = Catalog::aws_table1();
+        assert!(Strategy::St1
+            .filter_catalog(&cat)
+            .types
+            .iter()
+            .all(|t| !t.has_gpu()));
+        assert!(Strategy::St2
+            .filter_catalog(&cat)
+            .types
+            .iter()
+            .all(|t| t.has_gpu()));
+        assert_eq!(Strategy::St3.filter_catalog(&cat).types.len(), 4);
+    }
+
+    #[test]
+    fn choice_rules_match_table4() {
+        assert!(Strategy::St1.allows_choice(ExecChoice::Cpu));
+        assert!(!Strategy::St1.allows_choice(ExecChoice::Gpu(0)));
+        assert!(!Strategy::St2.allows_choice(ExecChoice::Cpu));
+        assert!(Strategy::St2.allows_choice(ExecChoice::Gpu(1)));
+        assert!(Strategy::St3.allows_choice(ExecChoice::Cpu));
+        assert!(Strategy::St3.allows_choice(ExecChoice::Gpu(0)));
+    }
+
+    #[test]
+    fn parsing_and_display() {
+        assert_eq!("st1".parse::<Strategy>().unwrap(), Strategy::St1);
+        assert_eq!("GPU".parse::<Strategy>().unwrap(), Strategy::St2);
+        assert_eq!("both".parse::<Strategy>().unwrap(), Strategy::St3);
+        assert!("st4".parse::<Strategy>().is_err());
+        assert_eq!(Strategy::St3.to_string(), "ST3");
+    }
+}

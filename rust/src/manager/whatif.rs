@@ -1,0 +1,179 @@
+//! What-if cost exploration: the paper's trade-off (§3, Fig. 2 goal II)
+//! quantified — how does the hourly cost move with desired frame rate,
+//! stream count, or strategy?
+//!
+//! Used by the `camcloud whatif` CLI and the ablation analysis; also a
+//! practical operator tool ("what does doubling the rate cost me?").
+
+use super::{AllocationError, ResourceManager, Strategy};
+use crate::streams::StreamSpec;
+use crate::types::Dollars;
+
+/// One point of a cost curve.
+#[derive(Clone, Debug)]
+pub struct CostPoint {
+    /// The swept parameter value (fps multiplier or stream count).
+    pub x: f64,
+    /// Hourly cost, or None where allocation fails.
+    pub cost: Option<Dollars>,
+    pub instances: usize,
+}
+
+/// Sweep a frame-rate multiplier over a base workload.
+///
+/// Every stream's desired fps is scaled by each multiplier; the curve
+/// shows where rates become infeasible for a strategy (e.g. ST1 hits
+/// the CPU's max achievable rate — the paper's scenario 3 cliff).
+pub fn sweep_rate_multiplier(
+    manager: &ResourceManager<'_>,
+    base: &[StreamSpec],
+    strategy: Strategy,
+    multipliers: &[f64],
+) -> Vec<CostPoint> {
+    multipliers
+        .iter()
+        .map(|&mult| {
+            let streams: Vec<StreamSpec> = base
+                .iter()
+                .map(|s| {
+                    let mut s2 = s.clone();
+                    s2.desired_fps *= mult;
+                    s2
+                })
+                .collect();
+            match manager.allocate(&streams, strategy) {
+                Ok(plan) => CostPoint {
+                    x: mult,
+                    cost: Some(plan.hourly_cost),
+                    instances: plan.instances.len(),
+                },
+                Err(AllocationError::Infeasible { .. }) => {
+                    CostPoint { x: mult, cost: None, instances: 0 }
+                }
+                Err(_) => CostPoint { x: mult, cost: None, instances: 0 },
+            }
+        })
+        .collect()
+}
+
+/// Sweep the number of identical streams (camera-count scaling).
+pub fn sweep_stream_count(
+    manager: &ResourceManager<'_>,
+    template: &StreamSpec,
+    strategy: Strategy,
+    counts: &[u32],
+) -> Vec<CostPoint> {
+    counts
+        .iter()
+        .map(|&n| {
+            let streams = StreamSpec::replicate(
+                0,
+                n,
+                template.camera.frame_size,
+                template.program,
+                template.desired_fps,
+            );
+            match manager.allocate(&streams, strategy) {
+                Ok(plan) => CostPoint {
+                    x: n as f64,
+                    cost: Some(plan.hourly_cost),
+                    instances: plan.instances.len(),
+                },
+                Err(_) => CostPoint { x: n as f64, cost: None, instances: 0 },
+            }
+        })
+        .collect()
+}
+
+/// The rate multiplier at which a strategy first fails (binary search
+/// over a bracket), or None if it never fails in the bracket.
+pub fn feasibility_cliff(
+    manager: &ResourceManager<'_>,
+    base: &[StreamSpec],
+    strategy: Strategy,
+    lo: f64,
+    hi: f64,
+) -> Option<f64> {
+    let feasible = |mult: f64| {
+        let streams: Vec<StreamSpec> = base
+            .iter()
+            .map(|s| {
+                let mut s2 = s.clone();
+                s2.desired_fps *= mult;
+                s2
+            })
+            .collect();
+        manager.allocate(&streams, strategy).is_ok()
+    };
+    if feasible(hi) {
+        return None;
+    }
+    if !feasible(lo) {
+        return Some(lo);
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::coordinator::Coordinator;
+    use crate::streams::Camera;
+    use crate::types::{Program, VGA};
+
+    fn fixture() -> (Coordinator, Vec<StreamSpec>) {
+        let c = Coordinator::new();
+        let base = vec![StreamSpec::new(Camera::new(0, VGA), Program::Zf, 0.2)];
+        (c, base)
+    }
+
+    #[test]
+    fn cost_is_monotone_in_rate() {
+        let (c, base) = fixture();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        let curve = sweep_rate_multiplier(&mgr, &base, Strategy::St3, &[1.0, 5.0, 20.0, 40.0]);
+        let costs: Vec<f64> = curve.iter().map(|p| p.cost.unwrap().as_f64()).collect();
+        for w in costs.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "costs {costs:?}");
+        }
+    }
+
+    #[test]
+    fn st1_cliff_is_the_cpu_max_rate() {
+        // ZF base at 0.2 fps; CPU max is 0.56 -> cliff multiplier ~2.8.
+        let (c, base) = fixture();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        let cliff = feasibility_cliff(&mgr, &base, Strategy::St1, 1.0, 10.0).unwrap();
+        assert!((cliff - 2.8).abs() < 0.05, "cliff {cliff}");
+        // ST3 survives the same bracket (GPU path).
+        assert!(feasibility_cliff(&mgr, &base, Strategy::St3, 1.0, 10.0).is_none());
+    }
+
+    #[test]
+    fn stream_count_sweep_scales_instances() {
+        let (c, base) = fixture();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        let curve = sweep_stream_count(&mgr, &base[0], Strategy::St1, &[1, 4, 16]);
+        assert!(curve.iter().all(|p| p.cost.is_some()));
+        assert!(curve[2].instances >= curve[0].instances);
+    }
+
+    #[test]
+    fn infeasible_points_reported_not_panicked() {
+        let (c, base) = fixture();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        let curve = sweep_rate_multiplier(&mgr, &base, Strategy::St1, &[1.0, 100.0]);
+        assert!(curve[0].cost.is_some());
+        assert!(curve[1].cost.is_none());
+    }
+}

@@ -1,0 +1,121 @@
+//! Metrics: utilization accounting, performance, and report rendering.
+//!
+//! The paper's two system-level metrics (§3):
+//!
+//! * **performance** of a stream = actual / desired frame rate (capped
+//!   at 1); **overall performance** = average over streams; the manager
+//!   targets ≥ 90%;
+//! * **utilization** of a resource = used / capacity; the manager keeps
+//!   every resource ≤ 90% utilized.
+
+pub mod table;
+
+pub use table::Table;
+
+/// Performance of one analyzed stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamPerf {
+    pub stream_id: String,
+    pub desired_fps: f64,
+    pub achieved_fps: f64,
+}
+
+impl StreamPerf {
+    /// `min(1, achieved/desired)` per the paper's definition.
+    pub fn performance(&self) -> f64 {
+        if self.desired_fps <= 0.0 {
+            return 1.0;
+        }
+        (self.achieved_fps / self.desired_fps).min(1.0)
+    }
+}
+
+/// Average performance over streams (the paper's "overall performance").
+pub fn overall_performance(streams: &[StreamPerf]) -> f64 {
+    if streams.is_empty() {
+        return 1.0;
+    }
+    streams.iter().map(StreamPerf::performance).sum::<f64>() / streams.len() as f64
+}
+
+/// Time-weighted utilization accumulator for one resource dimension.
+#[derive(Clone, Debug, Default)]
+pub struct UtilizationMeter {
+    weighted_sum: f64,
+    total_time: f64,
+    peak: f64,
+}
+
+impl UtilizationMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `utilization` (0..=1+) holding for `dt` seconds.
+    pub fn record(&mut self, utilization: f64, dt: f64) {
+        self.weighted_sum += utilization * dt;
+        self.total_time += dt;
+        if utilization > self.peak {
+            self.peak = utilization;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total_time > 0.0 {
+            self.weighted_sum / self.total_time
+        } else {
+            0.0
+        }
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn performance_caps_at_one() {
+        let p = StreamPerf {
+            stream_id: "s".into(),
+            desired_fps: 2.0,
+            achieved_fps: 3.0,
+        };
+        assert_eq!(p.performance(), 1.0);
+        let q = StreamPerf {
+            stream_id: "s".into(),
+            desired_fps: 2.0,
+            achieved_fps: 1.0,
+        };
+        assert_eq!(q.performance(), 0.5);
+    }
+
+    #[test]
+    fn overall_performance_averages() {
+        let streams = vec![
+            StreamPerf { stream_id: "a".into(), desired_fps: 1.0, achieved_fps: 1.0 },
+            StreamPerf { stream_id: "b".into(), desired_fps: 1.0, achieved_fps: 0.5 },
+        ];
+        assert_eq!(overall_performance(&streams), 0.75);
+        assert_eq!(overall_performance(&[]), 1.0);
+    }
+
+    #[test]
+    fn utilization_meter_time_weights() {
+        let mut m = UtilizationMeter::new();
+        m.record(0.5, 10.0);
+        m.record(1.0, 10.0);
+        assert!((m.mean() - 0.75).abs() < 1e-12);
+        assert_eq!(m.peak(), 1.0);
+        assert_eq!(UtilizationMeter::new().mean(), 0.0);
+    }
+
+    #[test]
+    fn zero_desired_fps_counts_as_met() {
+        let p = StreamPerf { stream_id: "s".into(), desired_fps: 0.0, achieved_fps: 0.0 };
+        assert_eq!(p.performance(), 1.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Fixed-width text table rendering for CLI reports and benches.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Table {
+        self.header = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Table {
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with column alignment, a title rule, and a header rule.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(Vec::len)
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        for row in std::iter::once(&self.header).chain(self.rows.iter()) {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let render_row = |row: &[String]| -> String {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        let total: usize = widths.iter().sum::<usize>() + 3 * ncols.max(1) + 1;
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&"=".repeat(total.max(self.title.chars().count())));
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&render_row(&self.header));
+            out.push('\n');
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&render_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a ratio as a percentage with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Format an f64 with sensible precision for rates.
+pub fn rate(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo").header(&["name", "value"]);
+        t.row_str(&["a", "1"]);
+        t.row_str(&["longer-name", "22"]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| name        | value |"));
+        assert!(s.contains("| longer-name | 22    |"));
+    }
+
+    #[test]
+    fn empty_table_renders_title() {
+        let t = Table::new("Empty").header(&["a"]);
+        assert!(t.is_empty());
+        assert!(t.render().starts_with("Empty\n"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.614), "61.4%");
+        assert_eq!(rate(0.28), "0.280");
+        assert_eq!(rate(3.61), "3.61");
+        assert_eq!(rate(150.0), "150");
+    }
+}

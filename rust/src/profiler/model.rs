@@ -1,0 +1,112 @@
+//! Least-squares linear fitting for utilization-vs-frame-rate samples.
+//!
+//! The paper observes (§3.1.2, Fig. 5) that CPU and GPU utilization grow
+//! linearly with the analysis frame rate, which lets the manager
+//! extrapolate from a single test run.  The live profiler fits
+//! [`LinearFit`] over (fps, utilization) samples and checks linearity
+//! via R² before trusting the extrapolation.
+
+
+/// `y = slope * x + intercept`, with goodness-of-fit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination in `[0, 1]`; 1 = perfectly linear.
+    pub r2: f64,
+}
+
+impl LinearFit {
+    /// Ordinary least squares over `(x, y)` samples.
+    ///
+    /// Returns `None` for fewer than 2 samples or zero x-variance.
+    pub fn fit(samples: &[(f64, f64)]) -> Option<LinearFit> {
+        let n = samples.len() as f64;
+        if samples.len() < 2 {
+            return None;
+        }
+        let mean_x = samples.iter().map(|(x, _)| x).sum::<f64>() / n;
+        let mean_y = samples.iter().map(|(_, y)| y).sum::<f64>() / n;
+        let sxx: f64 = samples.iter().map(|(x, _)| (x - mean_x).powi(2)).sum();
+        if sxx <= 0.0 {
+            return None;
+        }
+        let sxy: f64 = samples
+            .iter()
+            .map(|(x, y)| (x - mean_x) * (y - mean_y))
+            .sum();
+        let slope = sxy / sxx;
+        let intercept = mean_y - slope * mean_x;
+        let ss_tot: f64 = samples.iter().map(|(_, y)| (y - mean_y).powi(2)).sum();
+        let ss_res: f64 = samples
+            .iter()
+            .map(|(x, y)| (y - (slope * x + intercept)).powi(2))
+            .sum();
+        let r2 = if ss_tot > 0.0 {
+            (1.0 - ss_res / ss_tot).clamp(0.0, 1.0)
+        } else {
+            1.0 // constant y is perfectly explained by slope ~ 0
+        };
+        Some(LinearFit { slope, intercept, r2 })
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+
+    /// Whether the relationship is linear enough to extrapolate from
+    /// (the manager requires this before trusting a single test run).
+    pub fn is_linear(&self, min_r2: f64) -> bool {
+        self.r2 >= min_r2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_exact_line() {
+        let samples: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 * i as f64 + 1.0)).collect();
+        let f = LinearFit::fit(&samples).unwrap();
+        assert!((f.slope - 3.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!((f.predict(20.0) - 61.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_noisy_line_with_high_r2() {
+        let samples: Vec<(f64, f64)> = (0..20)
+            .map(|i| {
+                let x = i as f64 * 0.5;
+                let noise = if i % 2 == 0 { 0.05 } else { -0.05 };
+                (x, 2.0 * x + noise)
+            })
+            .collect();
+        let f = LinearFit::fit(&samples).unwrap();
+        assert!((f.slope - 2.0).abs() < 0.02);
+        assert!(f.is_linear(0.99));
+    }
+
+    #[test]
+    fn detects_nonlinearity() {
+        let samples: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, (i as f64).powi(2))).collect();
+        let f = LinearFit::fit(&samples).unwrap();
+        assert!(!f.is_linear(0.99));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(LinearFit::fit(&[]).is_none());
+        assert!(LinearFit::fit(&[(1.0, 2.0)]).is_none());
+        assert!(LinearFit::fit(&[(1.0, 2.0), (1.0, 3.0)]).is_none()); // zero variance
+    }
+
+    #[test]
+    fn constant_y_is_linear() {
+        let f = LinearFit::fit(&[(0.0, 5.0), (1.0, 5.0), (2.0, 5.0)]).unwrap();
+        assert_eq!(f.slope, 0.0);
+        assert_eq!(f.r2, 1.0);
+    }
+}

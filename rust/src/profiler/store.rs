@@ -1,0 +1,183 @@
+//! Profile persistence: "the test runs are conducted once and the
+//! estimations ... can be used for future executions" (§3.1.1).
+
+use super::ResourceProfile;
+use crate::types::{FrameSize, Program};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// JSON-backed store of resource profiles keyed by (program, frame size).
+#[derive(Default, Debug)]
+pub struct ProfileStore {
+    profiles: BTreeMap<String, ResourceProfile>,
+}
+
+fn key(program: Program, size: FrameSize) -> String {
+    program.variant(size)
+}
+
+impl ResourceProfile {
+    /// Serialize to a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("program".to_string(), Json::Str(self.program.name().to_string())),
+            ("frame_h".to_string(), Json::Num(self.frame_size.h as f64)),
+            ("frame_w".to_string(), Json::Num(self.frame_size.w as f64)),
+            ("cpu_work_cpu_mode".to_string(), Json::Num(self.cpu_work_cpu_mode)),
+            ("cpu_work_gpu_mode".to_string(), Json::Num(self.cpu_work_gpu_mode)),
+            ("gpu_work".to_string(), Json::Num(self.gpu_work)),
+            ("mem_gb_cpu_mode".to_string(), Json::Num(self.mem_gb_cpu_mode)),
+            ("mem_gb_gpu_mode".to_string(), Json::Num(self.mem_gb_gpu_mode)),
+            ("gpu_mem_gb".to_string(), Json::Num(self.gpu_mem_gb)),
+            ("max_fps_cpu".to_string(), Json::Num(self.max_fps_cpu)),
+            ("max_fps_gpu".to_string(), Json::Num(self.max_fps_gpu)),
+            (
+                "measured_cpu_latency".to_string(),
+                Json::Num(self.measured_cpu_latency),
+            ),
+        ])
+    }
+
+    /// Parse from a JSON object.
+    pub fn from_json(v: &Json) -> anyhow::Result<ResourceProfile> {
+        Ok(ResourceProfile {
+            program: v.str_field("program")?.parse().map_err(anyhow::Error::msg)?,
+            frame_size: FrameSize::new(
+                v.u64_field("frame_h")? as u32,
+                v.u64_field("frame_w")? as u32,
+            ),
+            cpu_work_cpu_mode: v.f64_field("cpu_work_cpu_mode")?,
+            cpu_work_gpu_mode: v.f64_field("cpu_work_gpu_mode")?,
+            gpu_work: v.f64_field("gpu_work")?,
+            mem_gb_cpu_mode: v.f64_field("mem_gb_cpu_mode")?,
+            mem_gb_gpu_mode: v.f64_field("mem_gb_gpu_mode")?,
+            gpu_mem_gb: v.f64_field("gpu_mem_gb")?,
+            max_fps_cpu: v.f64_field("max_fps_cpu")?,
+            max_fps_gpu: v.f64_field("max_fps_gpu")?,
+            measured_cpu_latency: v.f64_field("measured_cpu_latency")?,
+        })
+    }
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, profile: ResourceProfile) {
+        self.profiles
+            .insert(key(profile.program, profile.frame_size), profile);
+    }
+
+    pub fn get(&self, program: Program, size: FrameSize) -> Option<&ResourceProfile> {
+        self.profiles.get(&key(program, size))
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ResourceProfile> {
+        self.profiles.values()
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let obj = Json::obj(
+            self.profiles
+                .iter()
+                .map(|(k, p)| (k.clone(), p.to_json())),
+        );
+        std::fs::write(path, obj.to_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ProfileStore> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        let map = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("profile store root must be an object"))?;
+        let mut store = ProfileStore::new();
+        for profile in map.values() {
+            store.insert(ResourceProfile::from_json(profile)?);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::calibration::Calibration;
+    use crate::types::VGA;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "camcloud-test-{}-{}-{name}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        p
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut store = ProfileStore::new();
+        assert!(store.is_empty());
+        let p = Calibration::paper().profile(Program::Vgg16, VGA);
+        store.insert(p.clone());
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(Program::Vgg16, VGA), Some(&p));
+        assert!(store.get(Program::Zf, VGA).is_none());
+    }
+
+    #[test]
+    fn insert_overwrites_same_key() {
+        let mut store = ProfileStore::new();
+        let mut p = Calibration::paper().profile(Program::Zf, VGA);
+        store.insert(p.clone());
+        p.max_fps_cpu = 99.0;
+        store.insert(p.clone());
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(Program::Zf, VGA).unwrap().max_fps_cpu, 99.0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_profile() {
+        let p = Calibration::paper().profile(Program::Vgg16, VGA);
+        let back = ResourceProfile::from_json(&Json::parse(&p.to_json().to_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = temp_path("profiles.json");
+        let mut store = ProfileStore::new();
+        let cal = Calibration::paper();
+        store.insert(cal.profile(Program::Vgg16, VGA));
+        store.insert(cal.profile(Program::Zf, VGA));
+        store.save(&path).unwrap();
+        let loaded = ProfileStore::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(
+            loaded.get(Program::Vgg16, VGA),
+            store.get(Program::Vgg16, VGA)
+        );
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(ProfileStore::load(Path::new("/nonexistent/p.json")).is_err());
+    }
+}

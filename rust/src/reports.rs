@@ -1,0 +1,346 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! Shared by the `camcloud report` CLI and the benchmark harness, so
+//! EXPERIMENTS.md rows come from exactly the code paths a user runs.
+
+use crate::cloud::Catalog;
+use crate::config::{paper_scenario, Scenario};
+use crate::coordinator::{render_table6_block, Coordinator};
+use crate::manager::AllocationPlan;
+use crate::metrics::{table::rate, Table};
+use crate::profiler::{ExecChoice, ResourceProfile};
+use crate::sched::{SimConfig, Simulation};
+use crate::streams::StreamSpec;
+use crate::types::{DimLayout, Program, VGA};
+use std::collections::BTreeMap;
+
+/// Table 1: the instance catalog.
+pub fn table1(catalog: &Catalog) -> Table {
+    let mut t = Table::new("Table 1 — instance types (Amazon EC2, Oregon)")
+        .header(&["Instance", "Cores", "Memory (GB)", "GPUs", "Cost"]);
+    for itype in &catalog.types {
+        t.row(&[
+            itype.name.clone(),
+            format!("{}", itype.cpu_cores as u32),
+            format!("{}", itype.mem_gb as u32),
+            if itype.gpus.is_empty() {
+                "-".to_string()
+            } else {
+                itype.gpus.len().to_string()
+            },
+            itype.hourly_cost.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: max achievable frame rates CPU vs GPU + speedup.
+pub fn table2(profiles: &BTreeMap<Program, ResourceProfile>) -> Table {
+    let mut t = Table::new("Table 2 — max achievable frame rates")
+        .header(&["Program", "Using CPU", "Using GPU", "Speedup"]);
+    for program in Program::ALL {
+        let p = &profiles[&program];
+        t.row(&[
+            program.to_string(),
+            rate(p.max_fps_cpu),
+            rate(p.max_fps_gpu),
+            format!("{:.2}", p.speedup()),
+        ]);
+    }
+    t
+}
+
+/// Table 3: CPU and GPU requirements at 0.2 FPS (percent of the paper's
+/// 8-core instance / 1536-core GPU).
+pub fn table3(profiles: &BTreeMap<Program, ResourceProfile>) -> Table {
+    use crate::profiler::calibration::{PAPER_CPU_CORES, PAPER_GPU_CORES};
+    let fps = 0.2;
+    let layout = DimLayout::new(1);
+    let mut t = Table::new("Table 3 — requirements at 0.2 FPS")
+        .header(&["Program", "CPU-mode CPU", "GPU-mode CPU", "GPU-mode GPU"]);
+    for program in Program::ALL {
+        let p = &profiles[&program];
+        let cpu_mode = p.requirement(fps, ExecChoice::Cpu, layout);
+        let gpu_mode = p.requirement(fps, ExecChoice::Gpu(0), layout);
+        t.row(&[
+            program.to_string(),
+            format!("{:.1}%", cpu_mode[DimLayout::CPU] / PAPER_CPU_CORES * 100.0),
+            format!("{:.1}%", gpu_mode[DimLayout::CPU] / PAPER_CPU_CORES * 100.0),
+            format!(
+                "{:.1}%",
+                gpu_mode[layout.gpu_cores(0)] / PAPER_GPU_CORES * 100.0
+            ),
+        ]);
+    }
+    t
+}
+
+/// Table 5: the evaluation scenarios.
+pub fn table5() -> Table {
+    let mut t = Table::new("Table 5 — evaluation scenarios")
+        .header(&["Scenario", "Program", "Frame Rate", "Cameras"]);
+    for n in 1..=3 {
+        let s = paper_scenario(n).unwrap();
+        // Group identical (program, fps) rows.
+        let mut groups: BTreeMap<(String, String), u32> = BTreeMap::new();
+        for stream in &s.streams {
+            *groups
+                .entry((stream.program.to_string(), rate(stream.desired_fps)))
+                .or_insert(0) += 1;
+        }
+        for ((program, fps), cameras) in groups {
+            t.row(&[n.to_string(), program, fps, cameras.to_string()]);
+        }
+    }
+    t
+}
+
+/// One row of the Fig. 5 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub fps: f64,
+    pub cpu_util: f64,
+    pub gpu_util: f64,
+    pub performance: f64,
+}
+
+/// Fig. 5: VGG-16 on the GPU of one g2.2xlarge at increasing desired
+/// frame rates — utilization grows linearly, performance drops once a
+/// resource saturates.
+pub fn fig5(coordinator: &Coordinator, rates: &[f64], duration_s: f64) -> Vec<Fig5Row> {
+    rates
+        .iter()
+        .map(|&fps| {
+            let report = single_instance_run(
+                coordinator,
+                Program::Vgg16,
+                fps,
+                1,
+                ExecChoice::Gpu(0),
+                duration_s,
+            );
+            Fig5Row {
+                fps,
+                cpu_util: report.device_utilization[&(0, "cpu".to_string())].0,
+                gpu_util: report.device_utilization[&(0, "gpu0".to_string())].0,
+                performance: report.overall_performance(),
+            }
+        })
+        .collect()
+}
+
+/// One row of the Fig. 6 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub cameras: u32,
+    pub cpu_util: f64,
+    pub gpu_util: f64,
+    pub performance: f64,
+}
+
+/// Fig. 6: N cameras analyzed with VGG-16 at 2 FPS on one g2.2xlarge.
+pub fn fig6(coordinator: &Coordinator, counts: &[u32], duration_s: f64) -> Vec<Fig6Row> {
+    counts
+        .iter()
+        .map(|&n| {
+            let report = single_instance_run(
+                coordinator,
+                Program::Vgg16,
+                2.0,
+                n,
+                ExecChoice::Gpu(0),
+                duration_s,
+            );
+            Fig6Row {
+                cameras: n,
+                cpu_util: report.device_utilization[&(0, "cpu".to_string())].0,
+                gpu_util: report.device_utilization[&(0, "gpu0".to_string())].0,
+                performance: report.overall_performance(),
+            }
+        })
+        .collect()
+}
+
+/// Run `n` identical streams on one g2.2xlarge with a forced device
+/// choice (bypasses the manager — these figures characterize a single
+/// instance, not an allocation).
+pub fn single_instance_run(
+    coordinator: &Coordinator,
+    program: Program,
+    fps: f64,
+    n: u32,
+    choice: ExecChoice,
+    duration_s: f64,
+) -> crate::sched::SimReport {
+    let catalog = Catalog::paper_experiments();
+    let streams = StreamSpec::replicate(0, n, VGA, program, fps);
+    let layout = catalog.layout();
+    let itype = catalog.get("g2.2xlarge").unwrap();
+    let plan = AllocationPlan {
+        strategy: crate::manager::Strategy::St3,
+        solver: crate::packing::SolverKind::Exact,
+        instances: vec![crate::manager::PlannedInstance {
+            type_name: itype.name.clone(),
+            hourly_cost: itype.hourly_cost,
+            capacity: itype.capability(layout),
+            streams: streams
+                .iter()
+                .enumerate()
+                .map(|(i, s)| crate::manager::StreamAssignment {
+                    stream_index: i,
+                    stream_id: s.id(),
+                    choice,
+                    requirement: coordinator
+                        .profile_for(s)
+                        .requirement(fps, choice, layout),
+                })
+                .collect(),
+        }],
+        hourly_cost: itype.hourly_cost,
+    };
+    let mut sim = Simulation::from_plan(
+        &plan,
+        &streams,
+        layout,
+        |i| coordinator.profile_for(&streams[i]),
+        &catalog,
+    );
+    sim.run(SimConfig { duration_s, dt: 0.01, queue_cap: 32 })
+}
+
+/// Render fig5 rows as a table.
+pub fn fig5_table(rows: &[Fig5Row]) -> Table {
+    let mut t = Table::new("Fig. 5 — VGG-16 on GPU: utilization & performance vs frame rate")
+        .header(&["FPS", "CPU util", "GPU util", "Performance"]);
+    for r in rows {
+        t.row(&[
+            rate(r.fps),
+            format!("{:.1}%", r.cpu_util * 100.0),
+            format!("{:.1}%", r.gpu_util * 100.0),
+            format!("{:.0}%", r.performance * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Render fig6 rows as a table.
+pub fn fig6_table(rows: &[Fig6Row]) -> Table {
+    let mut t = Table::new("Fig. 6 — VGG-16 @2FPS on GPU: utilization & performance vs #cameras")
+        .header(&["Cameras", "CPU util", "GPU util", "Performance"]);
+    for r in rows {
+        t.row(&[
+            r.cameras.to_string(),
+            format!("{:.1}%", r.cpu_util * 100.0),
+            format!("{:.1}%", r.gpu_util * 100.0),
+            format!("{:.0}%", r.performance * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Profiles for both programs at VGA from the coordinator's source.
+pub fn vga_profiles(coordinator: &Coordinator) -> BTreeMap<Program, ResourceProfile> {
+    Program::ALL
+        .iter()
+        .map(|&p| {
+            let spec = StreamSpec::new(crate::streams::Camera::new(0, VGA), p, 1.0);
+            (p, coordinator.profile_for(&spec))
+        })
+        .collect()
+}
+
+/// Table 6 for one paper scenario (returns the rendered table).
+pub fn table6(coordinator: &Coordinator, scenario_number: u32, duration_s: f64) -> Table {
+    let scenario = paper_scenario(scenario_number).unwrap();
+    let outcomes = coordinator.compare_strategies(
+        &scenario,
+        SimConfig { duration_s, dt: 0.01, queue_cap: 32 },
+    );
+    render_table6_block(&scenario, &outcomes)
+}
+
+/// Table 6 over a custom scenario.
+pub fn table6_custom(coordinator: &Coordinator, scenario: &Scenario, duration_s: f64) -> Table {
+    let outcomes = coordinator.compare_strategies(
+        scenario,
+        SimConfig { duration_s, dt: 0.01, queue_cap: 32 },
+    );
+    render_table6_block(scenario, &outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contains_catalog() {
+        let s = table1(&Catalog::aws_table1()).render();
+        assert!(s.contains("c4.2xlarge"));
+        assert!(s.contains("g2.8xlarge"));
+        assert!(s.contains("$2.600"));
+    }
+
+    #[test]
+    fn table2_matches_paper_speedups() {
+        let c = Coordinator::new();
+        let s = table2(&vga_profiles(&c)).render();
+        assert!(s.contains("12.89"));
+        assert!(s.contains("16.34"));
+        assert!(s.contains("0.280"));
+        assert!(s.contains("9.15"));
+    }
+
+    #[test]
+    fn table3_matches_paper_percentages() {
+        let c = Coordinator::new();
+        let s = table3(&vga_profiles(&c)).render();
+        assert!(s.contains("39.4%"));
+        assert!(s.contains("5.3%"));
+        assert!(s.contains("4.6%"));
+        assert!(s.contains("17.8%"));
+        assert!(s.contains("2.2%"));
+        assert!(s.contains("1.2%"));
+    }
+
+    #[test]
+    fn table5_lists_all_rows() {
+        let s = table5().render();
+        assert!(s.contains("8.00"));
+        assert!(s.contains("0.550"));
+        assert!(s.contains("10"));
+    }
+
+    #[test]
+    fn fig5_shape_linear_then_drop() {
+        let c = Coordinator::new();
+        let rows = fig5(&c, &[0.5, 1.0, 2.0, 3.0, 5.0], 60.0);
+        // Utilization linear in fps while performance holds.
+        let r0 = &rows[0];
+        let r2 = &rows[2];
+        assert!((r2.cpu_util / r0.cpu_util - 4.0).abs() < 0.4);
+        assert!((r2.gpu_util / r0.gpu_util - 4.0).abs() < 0.4);
+        assert!(rows[0].performance > 0.97);
+        assert!(rows[3].performance > 0.9); // 3.0 < max 3.61
+        assert!(rows[4].performance < 0.8); // 5.0 > max 3.61 -> drop
+    }
+
+    #[test]
+    fn fig6_shape_linear_then_drop() {
+        let c = Coordinator::new();
+        let rows = fig6(&c, &[1, 2, 3, 4], 60.0);
+        assert!((rows[1].cpu_util / rows[0].cpu_util - 2.0).abs() < 0.25);
+        assert!(rows[0].performance > 0.97);
+        // 4 cameras x 2 fps x 2.12 = 17 cores > 8 -> CPU saturated.
+        assert!(rows[3].performance < 0.8);
+        assert!(rows[3].cpu_util > 0.9);
+    }
+
+    #[test]
+    fn table6_renders_all_scenarios() {
+        let c = Coordinator::new();
+        for n in 1..=3 {
+            let s = table6(&c, n, 30.0).render();
+            assert!(s.contains("ST3"), "scenario {n}: {s}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Decoding the detector head output into object detections.
+//!
+//! The model emits `[num_anchors, head_out]` where each row is
+//! `[class logits (C) ‖ box refinement (4)]`.  Decoding applies a
+//! softmax over the logits, drops background/below-threshold anchors,
+//! and maps box refinements onto the anchor grid (3x4 cells x 3
+//! aspect ratios, in normalized image coordinates).
+
+
+/// One detected object.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Detection {
+    pub anchor: usize,
+    pub class_index: usize,
+    pub class_name: String,
+    /// Softmax probability of the winning class.
+    pub score: f32,
+    /// Normalized `[x0, y0, x1, y1]` in `[0, 1]`.
+    pub bbox: [f32; 4],
+}
+
+/// All detections from one frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Detections {
+    pub items: Vec<Detection>,
+}
+
+/// Anchor grid layout: must match `python/compile/model.py`.
+const GRID_H: usize = 3;
+const GRID_W: usize = 4;
+const ASPECTS: usize = 3;
+/// Detection confidence threshold.
+const SCORE_THRESHOLD: f32 = 0.5;
+
+fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|l| (l - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Anchor base box in normalized coordinates.
+fn anchor_box(anchor: usize) -> [f32; 4] {
+    let cell = anchor / ASPECTS;
+    let aspect = anchor % ASPECTS;
+    let gy = cell / GRID_W;
+    let gx = cell % GRID_W;
+    let cx = (gx as f32 + 0.5) / GRID_W as f32;
+    let cy = (gy as f32 + 0.5) / GRID_H as f32;
+    // Aspect ratios 0.5, 1.0, 2.0 over a base extent of one cell.
+    let (bw, bh) = match aspect {
+        0 => (0.5 / GRID_W as f32, 1.0 / GRID_H as f32),
+        1 => (1.0 / GRID_W as f32, 1.0 / GRID_H as f32),
+        _ => (1.0 / GRID_W as f32, 0.5 / GRID_H as f32),
+    };
+    [cx - bw / 2.0, cy - bh / 2.0, cx + bw / 2.0, cy + bh / 2.0]
+}
+
+impl Detections {
+    /// Decode the raw head output.
+    ///
+    /// `head_out = classes.len() + 4`; anchors with background argmax or
+    /// score below threshold are dropped.
+    pub fn from_head_output(
+        raw: &[f32],
+        num_anchors: usize,
+        head_out: usize,
+        classes: &[String],
+    ) -> Detections {
+        assert_eq!(raw.len(), num_anchors * head_out, "head output shape");
+        let n_classes = classes.len();
+        assert_eq!(head_out, n_classes + 4, "head_out = classes + 4");
+        let mut items = Vec::new();
+        for a in 0..num_anchors {
+            let row = &raw[a * head_out..(a + 1) * head_out];
+            let probs = softmax(&row[..n_classes]);
+            let (best, &score) = probs
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap();
+            if best == 0 || score < SCORE_THRESHOLD {
+                continue; // background or low confidence
+            }
+            let base = anchor_box(a);
+            let refine = &row[n_classes..];
+            // Small additive refinement, clamped to the image.
+            let bbox = [
+                (base[0] + 0.1 * refine[0].tanh()).clamp(0.0, 1.0),
+                (base[1] + 0.1 * refine[1].tanh()).clamp(0.0, 1.0),
+                (base[2] + 0.1 * refine[2].tanh()).clamp(0.0, 1.0),
+                (base[3] + 0.1 * refine[3].tanh()).clamp(0.0, 1.0),
+            ];
+            items.push(Detection {
+                anchor: a,
+                class_index: best,
+                class_name: classes[best].clone(),
+                score,
+                bbox,
+            });
+        }
+        Detections { items }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Count of detections of a given class name.
+    pub fn count_class(&self, name: &str) -> usize {
+        self.items.iter().filter(|d| d.class_name == name).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes() -> Vec<String> {
+        ["background", "person", "car", "bus", "monitor"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn decodes_confident_foreground() {
+        let cls = classes();
+        let mut raw = vec![0.0f32; 36 * 9];
+        // Anchor 5: strong "car" logit.
+        raw[5 * 9 + 2] = 10.0;
+        let d = Detections::from_head_output(&raw, 36, 9, &cls);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.items[0].class_name, "car");
+        assert_eq!(d.items[0].anchor, 5);
+        assert!(d.items[0].score > 0.9);
+        assert_eq!(d.count_class("car"), 1);
+        assert_eq!(d.count_class("person"), 0);
+    }
+
+    #[test]
+    fn background_and_uncertain_dropped() {
+        let cls = classes();
+        let mut raw = vec![0.0f32; 36 * 9];
+        raw[9] = 10.0; // anchor 1: background
+        let d = Detections::from_head_output(&raw, 36, 9, &cls);
+        // Uniform logits elsewhere -> score 0.2 < threshold; bg dropped.
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn bboxes_inside_image() {
+        let cls = classes();
+        let mut raw = vec![0.0f32; 36 * 9];
+        for a in 0..36 {
+            raw[a * 9 + 1] = 8.0; // everyone is a person
+            for r in 0..4 {
+                raw[a * 9 + 5 + r] = 100.0; // extreme refinements
+            }
+        }
+        let d = Detections::from_head_output(&raw, 36, 9, &cls);
+        assert_eq!(d.len(), 36);
+        for det in &d.items {
+            for v in det.bbox {
+                assert!((0.0..=1.0).contains(&v));
+            }
+            assert!(det.bbox[0] <= det.bbox[2]);
+            assert!(det.bbox[1] <= det.bbox[3]);
+        }
+    }
+
+    #[test]
+    fn anchor_boxes_tile_the_grid() {
+        // First cell's middle-aspect anchor is centred at (1/8, 1/6).
+        let b = anchor_box(1);
+        assert!((((b[0] + b[2]) / 2.0) - 0.125).abs() < 1e-6);
+        assert!((((b[1] + b[3]) / 2.0) - 1.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "head output shape")]
+    fn rejects_bad_shape() {
+        Detections::from_head_output(&[0.0; 10], 36, 9, &classes());
+    }
+}

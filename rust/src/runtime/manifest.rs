@@ -1,0 +1,197 @@
+//! Artifact manifest (`artifacts/meta.json`), written by the AOT step.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    /// Program name (`vgg16` / `zf`).
+    pub name: String,
+    /// Variant name (`vgg16_480x640`).
+    pub variant: String,
+    /// HLO text filename relative to the artifacts dir.
+    pub hlo: String,
+    pub frame_h: u32,
+    pub frame_w: u32,
+    pub input_shape: Vec<u32>,
+    pub output_shape: Vec<u32>,
+    /// Analytic FLOPs per frame (from `model.flops_per_frame`).
+    pub flops_per_frame: u64,
+    pub param_count: u64,
+}
+
+/// One bare-kernel artifact (microbenchmarks).
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub name: String,
+    pub hlo: String,
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+    pub flops: u64,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model_h: u32,
+    pub model_w: u32,
+    pub classes: Vec<String>,
+    pub num_anchors: u32,
+    pub head_out: u32,
+    pub models: Vec<ModelEntry>,
+    pub kernels: Vec<KernelEntry>,
+}
+
+fn u32_arr(v: &Json, key: &str) -> Result<Vec<u32>> {
+    v.arr_field(key)?
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .map(|n| n as u32)
+                .ok_or_else(|| anyhow::anyhow!("{key}: non-integer element"))
+        })
+        .collect()
+}
+
+impl ModelEntry {
+    fn from_json(v: &Json) -> Result<ModelEntry> {
+        Ok(ModelEntry {
+            name: v.str_field("name")?.to_string(),
+            variant: v.str_field("variant")?.to_string(),
+            hlo: v.str_field("hlo")?.to_string(),
+            frame_h: v.u64_field("frame_h")? as u32,
+            frame_w: v.u64_field("frame_w")? as u32,
+            input_shape: u32_arr(v, "input_shape")?,
+            output_shape: u32_arr(v, "output_shape")?,
+            flops_per_frame: v.u64_field("flops_per_frame")?,
+            param_count: v.u64_field("param_count")?,
+        })
+    }
+}
+
+impl KernelEntry {
+    fn from_json(v: &Json) -> Result<KernelEntry> {
+        Ok(KernelEntry {
+            name: v.str_field("name")?.to_string(),
+            hlo: v.str_field("hlo")?.to_string(),
+            m: v.u64_field("m")? as u32,
+            k: v.u64_field("k")? as u32,
+            n: v.u64_field("n")? as u32,
+            flops: v.u64_field("flops")?,
+        })
+    }
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest json")?;
+        Ok(Manifest {
+            model_h: v.u64_field("model_h")? as u32,
+            model_w: v.u64_field("model_w")? as u32,
+            classes: v
+                .arr_field("classes")?
+                .iter()
+                .map(|c| {
+                    c.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("classes: non-string element"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            num_anchors: v.u64_field("num_anchors")? as u32,
+            head_out: v.u64_field("head_out")? as u32,
+            models: v
+                .arr_field("models")?
+                .iter()
+                .map(ModelEntry::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            kernels: v
+                .arr_field("kernels")?
+                .iter()
+                .map(KernelEntry::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let json = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&json).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn model(&self, variant: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.variant == variant)
+    }
+
+    pub fn kernel(&self, name: &str) -> Option<&KernelEntry> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// All variants of one program.
+    pub fn variants_of(&self, program: &str) -> Vec<&ModelEntry> {
+        self.models.iter().filter(|m| m.name == program).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model_h": 96, "model_w": 128,
+      "classes": ["background", "person"],
+      "num_anchors": 36, "head_out": 9,
+      "models": [{
+        "name": "vgg16", "variant": "vgg16_480x640",
+        "hlo": "vgg16_480x640.hlo.txt",
+        "frame_h": 480, "frame_w": 640,
+        "input_shape": [1, 480, 640, 3], "output_shape": [36, 9],
+        "flops_per_frame": 124478464, "param_count": 502124
+      }],
+      "kernels": [{
+        "name": "kernel_matmul_512x256x128",
+        "hlo": "kernel_matmul_512x256x128.hlo.txt",
+        "m": 512, "k": 256, "n": 128, "flops": 33554432
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model_h, 96);
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.models[0].input_shape, vec![1, 480, 640, 3]);
+        assert_eq!(m.kernels[0].flops, 33_554_432);
+    }
+
+    #[test]
+    fn lookup_helpers() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("vgg16_480x640").is_some());
+        assert!(m.model("nope").is_none());
+        assert!(m.kernel("kernel_matmul_512x256x128").is_some());
+        assert_eq!(m.variants_of("vgg16").len(), 1);
+        assert_eq!(m.variants_of("zf").len(), 0);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse("{}").is_err());
+        let bad = SAMPLE.replace("\"frame_h\": 480,", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        let path = dir.join("meta.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert_eq!(m.models.len(), 6); // 2 programs x 3 frame sizes
+            assert_eq!(m.num_anchors, 36);
+            assert_eq!(m.head_out, 9);
+            assert_eq!(m.classes.len(), 5);
+        }
+    }
+}

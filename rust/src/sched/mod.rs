@@ -1,0 +1,19 @@
+//! Per-instance frame-loop scheduling over a simulated timeline.
+//!
+//! Executes an [`AllocationPlan`](crate::manager::AllocationPlan):
+//! each stream emits frames at its desired rate; each frame is a job
+//! consuming CPU core-seconds (and GPU core-seconds for GPU-mode
+//! streams) on its instance's devices.  Devices are fluid-capacity
+//! servers with per-job parallelism caps, so an idle instance serves a
+//! frame in exactly the profile's latency while an overloaded one
+//! degrades throughput gracefully — reproducing the performance
+//! behaviour of the paper's Figs. 5–6.
+//!
+//! The engine is a deterministic fixed-step simulation (`dt` default
+//! 10 ms).  Real inference (PJRT) is exercised by the coordinator's
+//! live mode instead; here the latencies come from the profiles, which
+//! the live test runs calibrate.
+
+pub mod sim;
+
+pub use sim::{SimConfig, SimReport, Simulation};

@@ -1,0 +1,464 @@
+//! The fixed-step fluid simulation engine.
+
+use crate::manager::AllocationPlan;
+use crate::metrics::{overall_performance, StreamPerf, UtilizationMeter};
+use crate::profiler::{ExecChoice, ResourceProfile};
+use crate::streams::StreamSpec;
+use crate::types::DimLayout;
+use std::collections::BTreeMap;
+
+/// Simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Simulated duration in seconds.
+    pub duration_s: f64,
+    /// Time step (seconds).  10 ms resolves the fastest latencies the
+    /// calibrated profiles produce.
+    pub dt: f64,
+    /// Per-stream job-queue cap; frames arriving beyond it are dropped
+    /// (a real ingest pipeline drops frames under backpressure too).
+    pub queue_cap: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { duration_s: 120.0, dt: 0.01, queue_cap: 32 }
+    }
+}
+
+/// One frame in flight.
+#[derive(Clone, Debug)]
+struct Job {
+    stream: usize,
+    /// Remaining work per device slot (same indexing as `DeviceSlot`).
+    remaining_cpu: f64,
+    remaining_gpu: f64,
+}
+
+/// A fluid-capacity device on an instance.
+#[derive(Clone, Debug)]
+struct Device {
+    /// Capacity in core-seconds per second.
+    capacity: f64,
+    meter: UtilizationMeter,
+}
+
+/// Per-stream static execution parameters derived from profile+choice.
+#[derive(Clone, Debug)]
+struct StreamExec {
+    instance: usize,
+    /// Device index of the GPU used (instance-local), if GPU mode.
+    gpu_index: Option<usize>,
+    desired_fps: f64,
+    cpu_work: f64,
+    gpu_work: f64,
+    /// Max draw rates (cores) reproducing the solo latency.
+    cpu_parallelism: f64,
+    gpu_parallelism: f64,
+    id: String,
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub streams: Vec<StreamPerf>,
+    /// `(instance_index, device_name) -> (mean, peak)` utilization.
+    pub device_utilization: BTreeMap<(usize, String), (f64, f64)>,
+    pub frames_completed: u64,
+    pub frames_dropped: u64,
+    pub duration_s: f64,
+}
+
+impl SimReport {
+    /// The paper's overall performance (average of per-stream ratios).
+    pub fn overall_performance(&self) -> f64 {
+        overall_performance(&self.streams)
+    }
+
+    /// Highest mean utilization across devices of one instance.
+    pub fn max_mean_utilization(&self) -> f64 {
+        self.device_utilization
+            .values()
+            .map(|(mean, _)| *mean)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// The simulation: instances with devices, streams with assignments.
+pub struct Simulation {
+    devices: Vec<Device>,
+    /// `(instance, slot)` -> device index in `devices`; slot 0 = CPU,
+    /// slot 1+g = GPU g.
+    device_index: BTreeMap<(usize, usize), usize>,
+    device_names: Vec<(usize, String)>,
+    streams: Vec<StreamExec>,
+}
+
+impl Simulation {
+    /// Build a simulation from an allocation plan.
+    ///
+    /// `resolve_profile` maps a stream index to its resource profile
+    /// (the same source the manager used).
+    pub fn from_plan(
+        plan: &AllocationPlan,
+        specs: &[StreamSpec],
+        layout: DimLayout,
+        resolve_profile: impl Fn(usize) -> ResourceProfile,
+        catalog: &crate::cloud::Catalog,
+    ) -> Simulation {
+        let mut sim = Simulation {
+            devices: Vec::new(),
+            device_index: BTreeMap::new(),
+            device_names: Vec::new(),
+            streams: Vec::new(),
+        };
+        for (inst_idx, inst) in plan.instances.iter().enumerate() {
+            let itype = catalog
+                .get(&inst.type_name)
+                .unwrap_or_else(|| panic!("unknown instance type {}", inst.type_name));
+            sim.add_device(inst_idx, 0, "cpu", itype.cpu_cores);
+            for (g, gpu) in itype.gpus.iter().enumerate() {
+                sim.add_device(inst_idx, 1 + g, &format!("gpu{g}"), gpu.cores);
+            }
+            for assign in &inst.streams {
+                let profile = resolve_profile(assign.stream_index);
+                let spec = &specs[assign.stream_index];
+                sim.add_stream(inst_idx, spec, &profile, assign.choice, layout);
+            }
+        }
+        sim
+    }
+
+    fn add_device(&mut self, instance: usize, slot: usize, name: &str, capacity: f64) {
+        let idx = self.devices.len();
+        self.devices.push(Device { capacity, meter: UtilizationMeter::new() });
+        self.device_index.insert((instance, slot), idx);
+        self.device_names.push((instance, name.to_string()));
+    }
+
+    fn add_stream(
+        &mut self,
+        instance: usize,
+        spec: &StreamSpec,
+        profile: &ResourceProfile,
+        choice: ExecChoice,
+        _layout: DimLayout,
+    ) {
+        let exec = match choice {
+            ExecChoice::Cpu => StreamExec {
+                instance,
+                gpu_index: None,
+                desired_fps: spec.desired_fps,
+                cpu_work: profile.cpu_work_cpu_mode,
+                gpu_work: 0.0,
+                cpu_parallelism: (profile.cpu_work_cpu_mode * profile.max_fps_cpu).max(1e-9),
+                gpu_parallelism: 0.0,
+                id: spec.id(),
+            },
+            ExecChoice::Gpu(g) => StreamExec {
+                instance,
+                gpu_index: Some(g),
+                desired_fps: spec.desired_fps,
+                cpu_work: profile.cpu_work_gpu_mode,
+                gpu_work: profile.gpu_work,
+                // Solo latency = 1/max_fps_gpu on both device legs.
+                cpu_parallelism: (profile.cpu_work_gpu_mode * profile.max_fps_gpu).max(1e-9),
+                gpu_parallelism: (profile.gpu_work * profile.max_fps_gpu).max(1e-9),
+                id: spec.id(),
+            },
+        };
+        self.streams.push(exec);
+    }
+
+    /// Run the simulation.
+    pub fn run(&mut self, config: SimConfig) -> SimReport {
+        let steps = (config.duration_s / config.dt).round() as u64;
+        let mut queues: Vec<Vec<Job>> = vec![Vec::new(); self.streams.len()];
+        let mut next_arrival: Vec<f64> = self
+            .streams
+            .iter()
+            .map(|s| if s.desired_fps > 0.0 { 0.0 } else { f64::INFINITY })
+            .collect();
+        let mut completed = vec![0u64; self.streams.len()];
+        let mut dropped = 0u64;
+
+        for step in 0..steps {
+            let now = step as f64 * config.dt;
+
+            // 1. Frame arrivals.
+            for (s, exec) in self.streams.iter().enumerate() {
+                while next_arrival[s] <= now {
+                    next_arrival[s] += 1.0 / exec.desired_fps;
+                    if queues[s].len() >= config.queue_cap {
+                        dropped += 1;
+                        continue;
+                    }
+                    queues[s].push(Job {
+                        stream: s,
+                        remaining_cpu: exec.cpu_work,
+                        remaining_gpu: exec.gpu_work,
+                    });
+                }
+            }
+
+            // 2. Capacity allocation per device (water-filling over the
+            //    *oldest active job of each stream* — frames of one
+            //    stream are processed in order, streams share fairly).
+            // Gather demands: (device, job pointer, parallelism cap).
+            let mut used = vec![0.0f64; self.devices.len()];
+            // Collect per-device active lists.
+            let mut active: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.devices.len()];
+            for (s, exec) in self.streams.iter().enumerate() {
+                if let Some(job) = queues[s].first() {
+                    if job.remaining_cpu > 0.0 {
+                        let dev = self.device_index[&(exec.instance, 0)];
+                        active[dev].push((s, exec.cpu_parallelism));
+                    }
+                    if job.remaining_gpu > 0.0 {
+                        if let Some(g) = exec.gpu_index {
+                            let dev = self.device_index[&(exec.instance, 1 + g)];
+                            active[dev].push((s, exec.gpu_parallelism));
+                        }
+                    }
+                }
+            }
+            // Water-fill each device and apply work.
+            for (dev_idx, demands) in active.iter().enumerate() {
+                if demands.is_empty() {
+                    continue;
+                }
+                let rates = water_fill(self.devices[dev_idx].capacity, demands);
+                for ((s, _cap), rate) in demands.iter().zip(&rates) {
+                    let job = &mut queues[*s][0];
+                    let is_cpu_leg = {
+                        let exec = &self.streams[*s];
+                        self.device_index[&(exec.instance, 0)] == dev_idx
+                    };
+                    if is_cpu_leg {
+                        job.remaining_cpu -= rate * config.dt;
+                    } else {
+                        job.remaining_gpu -= rate * config.dt;
+                    }
+                    used[dev_idx] += rate;
+                }
+            }
+
+            // 3. Completions.
+            for queue in queues.iter_mut() {
+                if let Some(job) = queue.first() {
+                    if job.remaining_cpu <= 1e-12 && job.remaining_gpu <= 1e-12 {
+                        completed[job.stream] += 1;
+                        queue.remove(0);
+                    }
+                }
+            }
+
+            // 4. Utilization accounting.
+            for (dev_idx, device) in self.devices.iter_mut().enumerate() {
+                let util = if device.capacity > 0.0 {
+                    used[dev_idx] / device.capacity
+                } else {
+                    0.0
+                };
+                device.meter.record(util, config.dt);
+            }
+        }
+
+        let streams = self
+            .streams
+            .iter()
+            .enumerate()
+            .map(|(s, exec)| StreamPerf {
+                stream_id: exec.id.clone(),
+                desired_fps: exec.desired_fps,
+                achieved_fps: completed[s] as f64 / config.duration_s,
+            })
+            .collect();
+        let device_utilization = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                (
+                    self.device_names[i].clone(),
+                    (d.meter.mean(), d.meter.peak()),
+                )
+            })
+            .collect();
+        SimReport {
+            streams,
+            device_utilization,
+            frames_completed: completed.iter().sum(),
+            frames_dropped: dropped,
+            duration_s: config.duration_s,
+        }
+    }
+}
+
+/// Water-filling: split `capacity` among demands with per-demand caps.
+/// Returns the rate granted to each demand.
+fn water_fill(capacity: f64, demands: &[(usize, f64)]) -> Vec<f64> {
+    let mut rates = vec![0.0f64; demands.len()];
+    let mut remaining = capacity;
+    let mut open: Vec<usize> = (0..demands.len()).collect();
+    // Iteratively give each open demand an equal share, capping at its
+    // parallelism; repeat with the leftover.
+    while !open.is_empty() && remaining > 1e-12 {
+        let share = remaining / open.len() as f64;
+        let mut next_open = Vec::with_capacity(open.len());
+        let mut leftover = 0.0;
+        for &i in &open {
+            let cap = demands[i].1;
+            let want = cap - rates[i];
+            if want <= share {
+                rates[i] = cap;
+                leftover += share - want;
+            } else {
+                rates[i] += share;
+                next_open.push(i);
+            }
+        }
+        if next_open.len() == open.len() {
+            // Nobody hit their cap: allocation is final.
+            break;
+        }
+        open = next_open;
+        remaining = leftover;
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::manager::{ResourceManager, Strategy};
+    use crate::profiler::calibration::Calibration;
+    use crate::streams::StreamSpec;
+    use crate::types::{Program, VGA};
+
+    fn simulate(
+        streams: Vec<StreamSpec>,
+        strategy: Strategy,
+        duration: f64,
+    ) -> (SimReport, crate::manager::AllocationPlan) {
+        let cal = Calibration::paper();
+        let catalog = Catalog::paper_experiments();
+        let mgr = ResourceManager::new(catalog.clone(), &cal);
+        let plan = mgr.allocate(&streams, strategy).unwrap();
+        let layout = catalog.layout();
+        let mut sim = Simulation::from_plan(
+            &plan,
+            &streams,
+            layout,
+            |i| cal.profile(streams[i].program, streams[i].camera.frame_size),
+            &catalog,
+        );
+        let report = sim.run(SimConfig { duration_s: duration, dt: 0.01, queue_cap: 32 });
+        (report, plan)
+    }
+
+    #[test]
+    fn water_fill_respects_caps_and_capacity() {
+        let rates = water_fill(10.0, &[(0, 2.0), (1, 100.0)]);
+        assert!((rates[0] - 2.0).abs() < 1e-9);
+        assert!((rates[1] - 8.0).abs() < 1e-9);
+        let rates = water_fill(4.0, &[(0, 3.0), (1, 3.0)]);
+        assert!((rates[0] - 2.0).abs() < 1e-9 && (rates[1] - 2.0).abs() < 1e-9);
+        let total: f64 = water_fill(1.0, &[(0, 0.4), (1, 0.4)]).iter().sum();
+        assert!(total <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn underloaded_instance_meets_rates() {
+        // Scenario 2 on one c4.2xlarge: must hit ~100% performance.
+        let mut streams = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.20);
+        streams.extend(StreamSpec::replicate(10, 1, VGA, Program::Zf, 0.50));
+        let (report, _) = simulate(streams, Strategy::St3, 120.0);
+        assert!(
+            report.overall_performance() > 0.9,
+            "performance {}",
+            report.overall_performance()
+        );
+        assert_eq!(report.frames_dropped, 0);
+        // CPU utilization ~ 6.712/8 = 84%.
+        let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
+        assert!((mean - 0.839).abs() < 0.05, "cpu util {mean}");
+    }
+
+    #[test]
+    fn gpu_mode_uses_both_devices() {
+        let streams = StreamSpec::replicate(0, 4, VGA, Program::Zf, 2.0);
+        let (report, plan) = simulate(streams, Strategy::St2, 60.0);
+        assert_eq!(plan.instances[0].type_name, "g2.2xlarge");
+        let cpu = report.device_utilization[&(0, "cpu".to_string())];
+        let gpu = report.device_utilization[&(0, "gpu0".to_string())];
+        // 4 streams x 2 fps: cpu 8*0.88/8 = 88%... wait: 4*2*0.88 = 7.04/8.
+        assert!(cpu.0 > 0.5, "cpu util {}", cpu.0);
+        assert!(gpu.0 > 0.2, "gpu util {}", gpu.0);
+        assert!(report.overall_performance() > 0.9);
+    }
+
+    #[test]
+    fn overload_degrades_performance() {
+        // Force overload by simulating a plan, then doubling rates via a
+        // hand-built over-subscribed workload on ST2 GPU instance:
+        // 3 VGG streams at 3 FPS each = 9 fps total vs max 3.61 per GPU
+        // — but the manager would refuse; build sim manually instead.
+        let cal = Calibration::paper();
+        let catalog = Catalog::paper_experiments();
+        let streams = StreamSpec::replicate(0, 3, VGA, Program::Vgg16, 3.0);
+        // Manager would give 3 instances; cram them onto one by hand.
+        let mut sim = Simulation {
+            devices: Vec::new(),
+            device_index: BTreeMap::new(),
+            device_names: Vec::new(),
+            streams: Vec::new(),
+        };
+        sim.add_device(0, 0, "cpu", 8.0);
+        sim.add_device(0, 1, "gpu0", 1536.0);
+        let layout = catalog.layout();
+        for spec in &streams {
+            let p = cal.profile(spec.program, spec.camera.frame_size);
+            sim.add_stream(0, spec, &p, ExecChoice::Gpu(0), layout);
+        }
+        let report = sim.run(SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 8 });
+        // Offered load: GPU 3 x 3 x 353.28 = 3179 > 1536 gpu-cores AND
+        // CPU residual 3 x 3 x 2.12 = 19.1 > 8 cores.  The CPU residual
+        // is the binding leg (paper Fig. 5: "performance starts to drop
+        // ... after the CPU resources get overutilized").
+        assert!(report.overall_performance() < 0.7);
+        assert!(report.frames_dropped > 0);
+        let cpu = report.device_utilization[&(0, "cpu".to_string())];
+        assert!(cpu.0 > 0.95, "cpu should saturate, got {}", cpu.0);
+        let gpu = report.device_utilization[&(0, "gpu0".to_string())];
+        assert!(gpu.0 > 0.7, "gpu should be busy, got {}", gpu.0);
+    }
+
+    #[test]
+    fn solo_latency_matches_profile() {
+        // One ZF stream on CPU at a low rate: every frame must complete
+        // within ~1/0.56 s, performance 100%.
+        let streams = StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.25);
+        let (report, _) = simulate(streams, Strategy::St1, 120.0);
+        assert!(report.overall_performance() > 0.95);
+        // Utilization: 0.25 * 7.12 / 8 = 22.25%.
+        let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
+        assert!((mean - 0.2225).abs() < 0.03, "cpu util {mean}");
+    }
+
+    #[test]
+    fn utilization_linear_in_stream_count() {
+        // Fig. 6 shape: utilization grows ~linearly with cameras.
+        let mut utils = Vec::new();
+        for n in [1u32, 2, 3] {
+            let streams = StreamSpec::replicate(0, n, VGA, Program::Vgg16, 1.0);
+            let (report, _) = simulate(streams, Strategy::St2, 60.0);
+            utils.push(report.device_utilization[&(0, "cpu".to_string())].0);
+        }
+        let r21 = utils[1] / utils[0];
+        let r32 = utils[2] / utils[1];
+        assert!((r21 - 2.0).abs() < 0.2, "ratio {r21}");
+        assert!((r32 - 1.5).abs() < 0.15, "ratio {r32}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Frame buffers and synthetic content generation.
+
+use crate::types::FrameSize;
+
+/// One RGB frame in HWC layout, f32 pixels in `[0, 1]` — exactly the
+/// input layout of the AOT model artifacts (`[1, H, W, 3]` with the
+/// leading batch dim implicit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub size: FrameSize,
+    pub data: Vec<f32>,
+}
+
+impl Frame {
+    /// Number of f32 elements for a frame of `size`.
+    pub fn elements(size: FrameSize) -> usize {
+        (size.pixels() * 3) as usize
+    }
+
+    /// Black frame.
+    pub fn zeros(size: FrameSize) -> Frame {
+        Frame {
+            size,
+            data: vec![0.0; Self::elements(size)],
+        }
+    }
+
+    /// The deterministic golden pattern shared with the python AOT step:
+    /// `frame[y, x, c] = ((y*31 + x*17 + c*7) % 256) / 255`.
+    ///
+    /// MUST stay bit-identical to `python/compile/aot.py::golden_frame`;
+    /// the cross-language integration test depends on it.
+    pub fn golden(size: FrameSize) -> Frame {
+        let (h, w) = (size.h as usize, size.w as usize);
+        let mut data = Vec::with_capacity(Self::elements(size));
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3usize {
+                    let v = (y * 31 + x * 17 + c * 7) % 256;
+                    data.push(v as f32 / 255.0);
+                }
+            }
+        }
+        Frame { size, data }
+    }
+
+    /// Synthetic camera content at time `t` (seconds): a textured
+    /// background with `n_objects` bright rectangles orbiting at
+    /// object-specific speeds.  Deterministic in `(seed, t)`.
+    pub fn synthetic(size: FrameSize, seed: u64, t: f64, n_objects: usize) -> Frame {
+        let (h, w) = (size.h as usize, size.w as usize);
+        let mut frame = Frame::golden(size);
+        // Dim the background texture.
+        for v in frame.data.iter_mut() {
+            *v *= 0.3;
+        }
+        for obj in 0..n_objects {
+            // Simple LCG-style per-object parameters.
+            let mix = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(obj as u64 * 1442695040888963407);
+            let ow = 8 + (mix % 24) as usize; // object width
+            let oh = 8 + ((mix >> 8) % 24) as usize;
+            let speed_x = 10.0 + ((mix >> 16) % 40) as f64;
+            let speed_y = 5.0 + ((mix >> 24) % 20) as f64;
+            let phase = ((mix >> 32) % 1000) as f64 / 1000.0;
+            let cx = ((phase * w as f64 + speed_x * t) % w as f64) as usize;
+            let cy = ((phase * h as f64 + speed_y * t) % h as f64) as usize;
+            let color = [
+                0.5 + 0.5 * ((mix >> 40) % 2) as f32,
+                0.5 + 0.5 * ((mix >> 41) % 2) as f32,
+                0.5 + 0.5 * ((mix >> 42) % 2) as f32,
+            ];
+            for dy in 0..oh {
+                for dx in 0..ow {
+                    let y = (cy + dy) % h;
+                    let x = (cx + dx) % w;
+                    let base = (y * w + x) * 3;
+                    frame.data[base..base + 3].copy_from_slice(&color);
+                }
+            }
+        }
+        frame
+    }
+
+    /// Mean pixel value (test helper / content sanity checks).
+    pub fn mean(&self) -> f32 {
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{FrameSize, VGA};
+
+    const SMALL: FrameSize = FrameSize::new(192, 256);
+
+    #[test]
+    fn golden_matches_python_formula() {
+        let f = Frame::golden(SMALL);
+        assert_eq!(f.data.len(), 192 * 256 * 3);
+        assert_eq!(f.data[0], 0.0);
+        // (y=0, x=0, c=1) -> 7/255
+        assert!((f.data[1] - 7.0 / 255.0).abs() < 1e-7);
+        // (y=0, x=1, c=0) -> 17/255
+        assert!((f.data[3] - 17.0 / 255.0).abs() < 1e-7);
+        // (y=1, x=0, c=0) -> 31/255 at offset w*3
+        assert!((f.data[256 * 3] - 31.0 / 255.0).abs() < 1e-7);
+        // (y=2, x=3, c=1) -> ((62+51+7)%256)/255
+        let idx = (2 * 256 + 3) * 3 + 1;
+        assert!((f.data[idx] - 120.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn golden_is_deterministic() {
+        assert_eq!(Frame::golden(SMALL), Frame::golden(SMALL));
+    }
+
+    #[test]
+    fn synthetic_moves_with_time() {
+        let a = Frame::synthetic(VGA, 1, 0.0, 3);
+        let b = Frame::synthetic(VGA, 1, 1.0, 3);
+        assert_ne!(a, b);
+        // Same (seed, t) reproduces exactly.
+        assert_eq!(a, Frame::synthetic(VGA, 1, 0.0, 3));
+        // Different seeds give different content.
+        assert_ne!(a, Frame::synthetic(VGA, 2, 0.0, 3));
+    }
+
+    #[test]
+    fn synthetic_objects_brighten_frame() {
+        let empty = Frame::synthetic(SMALL, 7, 0.0, 0);
+        let busy = Frame::synthetic(SMALL, 7, 0.0, 8);
+        assert!(busy.mean() > empty.mean());
+    }
+
+    #[test]
+    fn pixel_range_valid() {
+        let f = Frame::synthetic(SMALL, 3, 2.5, 5);
+        assert!(f.data.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}

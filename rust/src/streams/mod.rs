@@ -1,0 +1,15 @@
+//! Simulated network cameras (DESIGN.md substitution: public MJPEG
+//! streams → synthetic frame generators).
+//!
+//! A [`Camera`] produces [`Frame`]s at its native rate; a
+//! [`StreamSpec`] pairs a camera with the analysis program and *desired*
+//! frame rate the user wants (the paper's workload unit).  Frame content
+//! is synthetic — moving rectangles over a deterministic background —
+//! because allocation decisions depend only on rates and sizes, but the
+//! pixels are real enough that detectors produce stable outputs.
+
+pub mod camera;
+pub mod frame;
+
+pub use camera::{Camera, CameraId, StreamSpec};
+pub use frame::Frame;

@@ -1,0 +1,384 @@
+//! Core value types shared across the crate.
+//!
+//! The resource-vector convention follows the paper (§3.2): dimension
+//! `0` is CPU cores, dimension `1` is memory (GB), and each GPU `g`
+//! contributes two further dimensions `2 + 2g` (GPU cores) and `3 + 2g`
+//! (GPU memory, GB).  A [`DimLayout`] fixes the maximum number of GPUs
+//! `N` and hence the dimensionality `2 + 2N` of every vector in a given
+//! allocation problem.
+
+use std::fmt;
+
+/// Monetary amount in US dollars (hourly costs, totals).
+///
+/// Stored as micro-dollars internally so that cost comparisons and sums
+/// are exact — the paper's savings percentages (61%, 36%, 3%) must not
+/// wobble with float error.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Dollars(pub i64);
+
+impl Dollars {
+    pub const ZERO: Dollars = Dollars(0);
+
+    /// From a dollar amount, e.g. `Dollars::from_f64(0.419)`.
+    pub fn from_f64(dollars: f64) -> Self {
+        Dollars((dollars * 1e6).round() as i64)
+    }
+
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    /// Percentage saving of `self` relative to `baseline`.
+    pub fn savings_vs(self, baseline: Dollars) -> f64 {
+        if baseline.0 == 0 {
+            return 0.0;
+        }
+        100.0 * (baseline.0 - self.0) as f64 / baseline.0 as f64
+    }
+}
+
+impl std::ops::Add for Dollars {
+    type Output = Dollars;
+    fn add(self, rhs: Dollars) -> Dollars {
+        Dollars(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::Sub for Dollars {
+    type Output = Dollars;
+    fn sub(self, rhs: Dollars) -> Dollars {
+        Dollars(self.0 - rhs.0)
+    }
+}
+
+impl std::ops::Mul<u32> for Dollars {
+    type Output = Dollars;
+    fn mul(self, rhs: u32) -> Dollars {
+        Dollars(self.0 * rhs as i64)
+    }
+}
+
+impl std::iter::Sum for Dollars {
+    fn sum<I: Iterator<Item = Dollars>>(iter: I) -> Dollars {
+        iter.fold(Dollars::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Dollars {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "${:.3}", self.as_f64())
+    }
+}
+
+impl fmt::Debug for Dollars {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// A camera frame size in pixels.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FrameSize {
+    pub h: u32,
+    pub w: u32,
+}
+
+impl FrameSize {
+    pub const fn new(h: u32, w: u32) -> Self {
+        FrameSize { h, w }
+    }
+
+    /// Pixel count per frame.
+    pub fn pixels(self) -> u64 {
+        self.h as u64 * self.w as u64
+    }
+
+    /// The artifact-variant suffix, e.g. `480x640`.
+    pub fn variant_suffix(self) -> String {
+        format!("{}x{}", self.h, self.w)
+    }
+}
+
+/// Common sizes streamed by public network cameras; must stay in sync
+/// with `python/compile/model.py::FRAME_SIZES`.
+pub const FRAME_SIZES: [FrameSize; 3] = [
+    FrameSize::new(192, 256),
+    FrameSize::new(480, 640),
+    FrameSize::new(960, 1280),
+];
+
+/// The VGA default used throughout the paper's experiments.
+pub const VGA: FrameSize = FrameSize::new(480, 640);
+
+impl fmt::Display for FrameSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.w, self.h)
+    }
+}
+
+impl fmt::Debug for FrameSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// An analysis program (the paper evaluates two CNN object detectors).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Program {
+    /// VGG-16 backbone Faster-R-CNN (the heavier program).
+    Vgg16,
+    /// ZF backbone Faster-R-CNN (the lighter, faster program).
+    Zf,
+}
+
+impl Program {
+    pub const ALL: [Program; 2] = [Program::Vgg16, Program::Zf];
+
+    /// Model name as used in artifact filenames and meta.json.
+    pub fn name(self) -> &'static str {
+        match self {
+            Program::Vgg16 => "vgg16",
+            Program::Zf => "zf",
+        }
+    }
+
+    /// Artifact variant name for a frame size, e.g. `vgg16_480x640`.
+    pub fn variant(self, size: FrameSize) -> String {
+        format!("{}_{}", self.name(), size.variant_suffix())
+    }
+}
+
+impl std::str::FromStr for Program {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "vgg16" | "vgg-16" | "vgg" => Ok(Program::Vgg16),
+            "zf" => Ok(Program::Zf),
+            other => Err(format!("unknown program {other:?} (expected vgg16 or zf)")),
+        }
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Program::Vgg16 => "VGG-16",
+            Program::Zf => "ZF",
+        })
+    }
+}
+
+/// Dimension layout of resource vectors: `2 + 2 * max_gpus` dims.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct DimLayout {
+    pub max_gpus: usize,
+}
+
+impl DimLayout {
+    pub const fn new(max_gpus: usize) -> Self {
+        DimLayout { max_gpus }
+    }
+
+    pub const fn dims(self) -> usize {
+        2 + 2 * self.max_gpus
+    }
+
+    pub const CPU: usize = 0;
+    pub const MEM: usize = 1;
+
+    /// Dimension index of GPU `g`'s core capacity.
+    pub const fn gpu_cores(self, g: usize) -> usize {
+        2 + 2 * g
+    }
+
+    /// Dimension index of GPU `g`'s memory capacity.
+    pub const fn gpu_mem(self, g: usize) -> usize {
+        3 + 2 * g
+    }
+}
+
+/// A resource vector: requirements of a stream or capacity of an instance.
+///
+/// Units are absolute (CPU cores, GB, GPU cores, GB) rather than the
+/// paper's instance-relative percentages, so the same requirement vector
+/// is valid against any instance type.
+#[derive(Clone, PartialEq, Debug, Default)]
+pub struct ResourceVec(pub Vec<f64>);
+
+impl ResourceVec {
+    pub fn zeros(dims: usize) -> Self {
+        ResourceVec(vec![0.0; dims])
+    }
+
+    pub fn from_slice(v: &[f64]) -> Self {
+        ResourceVec(v.to_vec())
+    }
+
+    pub fn dims(&self) -> usize {
+        self.0.len()
+    }
+
+    /// `self + other`, element-wise.
+    pub fn add(&self, other: &ResourceVec) -> ResourceVec {
+        debug_assert_eq!(self.dims(), other.dims());
+        ResourceVec(
+            self.0
+                .iter()
+                .zip(&other.0)
+                .map(|(a, b)| a + b)
+                .collect(),
+        )
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &ResourceVec) {
+        debug_assert_eq!(self.dims(), other.dims());
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += b;
+        }
+    }
+
+    /// In-place `self -= other` (may go slightly negative from float error;
+    /// clamped at a small epsilon by `fits` users).
+    pub fn sub_assign(&mut self, other: &ResourceVec) {
+        debug_assert_eq!(self.dims(), other.dims());
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a -= b;
+        }
+    }
+
+    /// Scale every dimension by `k`.
+    pub fn scale(&self, k: f64) -> ResourceVec {
+        ResourceVec(self.0.iter().map(|a| a * k).collect())
+    }
+
+    /// Whether `self` fits inside `capacity` in every dimension.
+    ///
+    /// A small epsilon absorbs float accumulation error — requirement sums
+    /// equal to capacity (e.g. exactly 90% headroom) must count as fitting.
+    pub fn fits(&self, capacity: &ResourceVec) -> bool {
+        debug_assert_eq!(self.dims(), capacity.dims());
+        const EPS: f64 = 1e-9;
+        self.0
+            .iter()
+            .zip(&capacity.0)
+            .all(|(need, cap)| *need <= cap + EPS)
+    }
+
+    /// Max over dimensions of `self[d] / denom[d]` (0/0 counts as 0).
+    /// The "how full would this make the bin" measure used for item
+    /// ordering and lower bounds.
+    pub fn max_ratio(&self, denom: &ResourceVec) -> f64 {
+        self.0
+            .iter()
+            .zip(&denom.0)
+            .map(|(a, b)| if *b > 0.0 { a / b } else { 0.0 })
+            .fold(0.0, f64::max)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0.iter().all(|v| *v == 0.0)
+    }
+}
+
+impl std::ops::Index<usize> for ResourceVec {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.0[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for ResourceVec {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.0[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dollars_roundtrip_and_display() {
+        let d = Dollars::from_f64(0.419);
+        assert_eq!(d.0, 419_000);
+        assert_eq!(format!("{d}"), "$0.419");
+        assert!((d.as_f64() - 0.419).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dollars_arithmetic_exact() {
+        let a = Dollars::from_f64(0.419) * 4;
+        assert_eq!(a, Dollars::from_f64(1.676));
+        let sum: Dollars = [Dollars::from_f64(0.65); 11].into_iter().sum();
+        assert_eq!(sum, Dollars::from_f64(7.15));
+    }
+
+    #[test]
+    fn savings_match_paper_table6() {
+        // Scenario 1: $0.650 vs $1.676 -> 61%.
+        let s1 = Dollars::from_f64(0.650).savings_vs(Dollars::from_f64(1.676));
+        assert_eq!(s1.round() as i64, 61);
+        // Scenario 2: $0.419 vs $0.650 -> 36%.
+        let s2 = Dollars::from_f64(0.419).savings_vs(Dollars::from_f64(0.650));
+        assert_eq!(s2.round() as i64, 36);
+        // Scenario 3: $6.919 vs $7.150 -> 3%.
+        let s3 = Dollars::from_f64(6.919).savings_vs(Dollars::from_f64(7.150));
+        assert_eq!(s3.round() as i64, 3);
+    }
+
+    #[test]
+    fn dim_layout_indices() {
+        let l = DimLayout::new(4);
+        assert_eq!(l.dims(), 10);
+        assert_eq!(DimLayout::CPU, 0);
+        assert_eq!(DimLayout::MEM, 1);
+        assert_eq!(l.gpu_cores(0), 2);
+        assert_eq!(l.gpu_mem(0), 3);
+        assert_eq!(l.gpu_cores(3), 8);
+        assert_eq!(l.gpu_mem(3), 9);
+    }
+
+    #[test]
+    fn resource_vec_ops() {
+        let mut a = ResourceVec::from_slice(&[1.0, 2.0]);
+        let b = ResourceVec::from_slice(&[0.5, 1.0]);
+        assert_eq!(a.add(&b).0, vec![1.5, 3.0]);
+        a.add_assign(&b);
+        a.sub_assign(&b);
+        assert_eq!(a.0, vec![1.0, 2.0]);
+        assert_eq!(a.scale(2.0).0, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn fits_with_epsilon() {
+        let need = ResourceVec::from_slice(&[0.1 + 0.2]); // 0.30000000000000004
+        let cap = ResourceVec::from_slice(&[0.3]);
+        assert!(need.fits(&cap));
+        assert!(!ResourceVec::from_slice(&[0.31]).fits(&cap));
+    }
+
+    #[test]
+    fn max_ratio_ignores_zero_capacity_dims() {
+        let need = ResourceVec::from_slice(&[4.0, 0.0]);
+        let cap = ResourceVec::from_slice(&[8.0, 0.0]);
+        assert_eq!(need.max_ratio(&cap), 0.5);
+    }
+
+    #[test]
+    fn frame_size_helpers() {
+        assert_eq!(VGA.pixels(), 307_200);
+        assert_eq!(VGA.variant_suffix(), "480x640");
+        assert_eq!(format!("{VGA}"), "640x480");
+    }
+
+    #[test]
+    fn program_parsing_and_naming() {
+        assert_eq!("vgg-16".parse::<Program>().unwrap(), Program::Vgg16);
+        assert_eq!("ZF".parse::<Program>().unwrap(), Program::Zf);
+        assert!("resnet".parse::<Program>().is_err());
+        assert_eq!(Program::Vgg16.variant(VGA), "vgg16_480x640");
+        assert_eq!(format!("{}", Program::Zf), "ZF");
+    }
+}

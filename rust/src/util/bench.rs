@@ -1,0 +1,173 @@
+//! Benchmark measurement harness (criterion substitute).
+//!
+//! `rust/benches/*.rs` are `harness = false` binaries that use this
+//! module: warmup, timed samples, and a mean / p50 / p95 report in both
+//! human and JSON-lines form (`target/bench-results.jsonl`) so the
+//! EXPERIMENTS.md tables can be regenerated mechanically.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+        sorted[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner for one `bench` binary.
+pub struct Bench {
+    suite: String,
+    results: Vec<Measurement>,
+    /// Extra key/value rows to include in the JSON record (workload
+    /// parameters, derived metrics).
+    extra: Vec<(String, Json)>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        println!("== bench suite: {suite} ==");
+        Bench { suite: suite.to_string(), results: Vec::new(), extra: Vec::new() }
+    }
+
+    /// Measure `f` for `samples` timed runs after `warmup` untimed runs.
+    pub fn measure<F: FnMut()>(&mut self, name: &str, warmup: usize, samples: usize, mut f: F) -> &Measurement {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), samples: times };
+        println!(
+            "{:<48} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+            m.name,
+            fmt_secs(m.mean()),
+            fmt_secs(m.p50()),
+            fmt_secs(m.p95()),
+            m.samples.len()
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record a derived scalar (e.g. "speedup", "savings_pct") for the
+    /// JSON record and print it.
+    pub fn record(&mut self, key: &str, value: f64) {
+        println!("{key:<48} {value:.4}");
+        self.extra.push((key.to_string(), Json::Num(value)));
+    }
+
+    /// Record a free-form note / table row.
+    pub fn note(&mut self, key: &str, value: &str) {
+        println!("{key:<48} {value}");
+        self.extra.push((key.to_string(), Json::Str(value.to_string())));
+    }
+
+    /// Append the suite record to `target/bench-results.jsonl`.
+    pub fn finish(self) {
+        let mut obj = vec![("suite".to_string(), Json::Str(self.suite.clone()))];
+        let measurements: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name".to_string(), Json::Str(m.name.clone())),
+                    ("mean_s".to_string(), Json::Num(m.mean())),
+                    ("p50_s".to_string(), Json::Num(m.p50())),
+                    ("p95_s".to_string(), Json::Num(m.p95())),
+                    ("min_s".to_string(), Json::Num(m.min())),
+                    ("n".to_string(), Json::Num(m.samples.len() as f64)),
+                ])
+            })
+            .collect();
+        obj.push(("measurements".to_string(), Json::Arr(measurements)));
+        obj.extend(self.extra);
+        let record = Json::obj(obj).to_compact();
+        let path = std::path::Path::new("target/bench-results.jsonl");
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = writeln!(f, "{record}");
+        }
+        println!("== suite {} done ==\n", self.suite);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+        };
+        assert_eq!(m.mean(), 22.0);
+        assert_eq!(m.p50(), 3.0);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.p95(), 100.0);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_secs(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn measure_runs_and_reports() {
+        let mut b = Bench::new("selftest");
+        let mut count = 0;
+        b.measure("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].samples.len(), 5);
+    }
+}

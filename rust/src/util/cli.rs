@@ -1,0 +1,182 @@
+//! Tiny argument parser for the `camcloud` binary (clap substitute).
+//!
+//! Supports `subcommand --flag value --switch positional` grammars with
+//! typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, `--key value` options, bare `--switch`
+/// flags, and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+/// Declared flags a command accepts (for validation + usage text).
+#[derive(Clone, Debug)]
+pub struct Spec {
+    /// `(name, takes_value, help)`.
+    pub flags: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]).  The first non-flag token is the
+    /// subcommand; later non-flag tokens are positionals.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag name".into());
+                }
+                if let Some((key, value)) = name.split_once('=') {
+                    out.options.insert(key.to_string(), value.to_string());
+                } else if iter.peek().map_or(false, |next| !next.starts_with("--")) {
+                    out.options.insert(name.to_string(), iter.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u32_opt(&self, key: &str) -> Result<Option<u32>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Reject unknown flags against a spec (catches typos).
+    pub fn validate(&self, spec: &Spec) -> Result<(), String> {
+        for key in self.options.keys() {
+            match spec.flags.iter().find(|(n, _, _)| n == key) {
+                None => return Err(format!("unknown option --{key}")),
+                Some((_, takes_value, _)) if !takes_value => {
+                    return Err(format!("--{key} does not take a value"))
+                }
+                _ => {}
+            }
+        }
+        for key in &self.switches {
+            match spec.flags.iter().find(|(n, _, _)| n == key) {
+                None => return Err(format!("unknown flag --{key}")),
+                Some((_, takes_value, _)) if *takes_value => {
+                    return Err(format!("--{key} requires a value"))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Spec {
+    pub fn usage(&self, command: &str, summary: &str) -> String {
+        let mut out = format!("{summary}\n\nUsage: camcloud {command} [options]\n\nOptions:\n");
+        for (name, takes_value, help) in &self.flags {
+            let arg = if *takes_value {
+                format!("--{name} <value>")
+            } else {
+                format!("--{name}")
+            };
+            out.push_str(&format!("  {arg:<28} {help}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        // NB: flags greedily consume the next non-flag token as a value,
+        // so positionals must precede bare switches.
+        let a = parse("allocate --scenario 1 --strategy st3 extra --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("allocate"));
+        assert_eq!(a.opt("scenario"), Some("1"));
+        assert_eq!(a.opt("strategy"), Some("st3"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --fps=2.5");
+        assert_eq!(a.f64_opt("fps").unwrap(), Some(2.5));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("run --fps abc");
+        assert!(a.f64_opt("fps").is_err());
+        assert!(a.u32_opt("fps").is_err());
+        assert_eq!(a.f64_opt("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn trailing_switch_is_switch() {
+        let a = parse("report --table2 --json");
+        assert!(a.has("table2"));
+        assert!(a.has("json"));
+    }
+
+    #[test]
+    fn validation_catches_unknown_and_misused() {
+        let spec = Spec {
+            flags: vec![
+                ("fps", true, "desired rate"),
+                ("json", false, "machine output"),
+            ],
+        };
+        assert!(parse("x --fps 1").validate(&spec).is_ok());
+        assert!(parse("x --nope 1").validate(&spec).is_err());
+        assert!(parse("x --json 1").validate(&spec).is_err()); // value to switch
+        assert!(parse("x --fps").validate(&spec).is_err()); // switch use of option
+        assert!(spec.usage("x", "test").contains("--fps <value>"));
+    }
+}

@@ -1,0 +1,19 @@
+//! In-tree utility substrates.
+//!
+//! The offline build environment vendors only `xla`, `anyhow`,
+//! `thiserror` and `log`, so the small libraries a crate like this
+//! would normally pull from crates.io are implemented here instead
+//! (DESIGN.md §Substitutions):
+//!
+//! * [`json`] — JSON parser/serializer (manifest, profiles, reports);
+//! * [`rng`] — SplitMix64/xoshiro PRNG (workload generators);
+//! * [`cli`] — argument parsing for the `camcloud` binary;
+//! * [`bench`] — measurement harness used by `rust/benches/*`
+//!   (criterion-style warmup + timed samples + percentile report);
+//! * [`proptest`] — seeded randomized property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,118 @@
+//! Cross-language numerics: the rust runtime must reproduce the python
+//! (jax) outputs bit-closely for every AOT artifact.
+//!
+//! `python/compile/aot.py` runs each model variant on the deterministic
+//! golden frame and stores the outputs in `artifacts/golden.json`; here
+//! we regenerate the same frame in rust, execute the HLO artifact via
+//! PJRT, and compare.  This is THE proof that the AOT interchange
+//! (HLO text, weights baked) is faithful.
+
+use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
+use camcloud::streams::Frame;
+use camcloud::types::FrameSize;
+use camcloud::util::json::Json;
+
+fn runtime_or_skip() -> Option<ModelRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ModelRuntime::load(dir).expect("runtime"))
+}
+
+#[test]
+fn golden_outputs_match_python_for_all_variants() {
+    let Some(runtime) = runtime_or_skip() else { return };
+    let golden_path = runtime.artifacts_dir().join("golden.json");
+    let golden = Json::parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+    let obj = golden.as_obj().unwrap();
+    assert_eq!(obj.len(), 6, "expected 6 golden variants");
+
+    for entry in &runtime.manifest().models.clone() {
+        let expected: Vec<f32> = obj[&entry.variant]
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let frame = Frame::golden(FrameSize::new(entry.frame_h, entry.frame_w));
+        let (got, _) = runtime.infer_raw(&entry.variant, &frame).unwrap();
+        assert_eq!(got.len(), expected.len(), "{}", entry.variant);
+        let mut max_abs = 0f32;
+        for (g, e) in got.iter().zip(&expected) {
+            max_abs = max_abs.max((g - e).abs());
+        }
+        // f32 forward pass, identical graph: tolerance covers only
+        // instruction-ordering differences between CPU backends.
+        assert!(
+            max_abs < 1e-3,
+            "{}: max abs diff {max_abs} vs python",
+            entry.variant
+        );
+        println!("{}: max abs diff {max_abs:.2e} (OK)", entry.variant);
+    }
+}
+
+#[test]
+fn inference_is_deterministic() {
+    let Some(runtime) = runtime_or_skip() else { return };
+    let entry = runtime.manifest().models[0].clone();
+    let frame = Frame::synthetic(FrameSize::new(entry.frame_h, entry.frame_w), 3, 1.5, 4);
+    let (a, _) = runtime.infer_raw(&entry.variant, &frame).unwrap();
+    let (b, _) = runtime.infer_raw(&entry.variant, &frame).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn kernel_artifact_computes_relu_matmul() {
+    let Some(runtime) = runtime_or_skip() else { return };
+    let kernel = runtime.manifest().kernels[0].clone();
+    let (m, k, n) = (kernel.m as usize, kernel.k as usize, kernel.n as usize);
+    // Deterministic small-valued inputs.
+    let x: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) / 13.0).collect();
+    let w: Vec<f32> = (0..k * n).map(|i| ((i % 7) as f32 - 3.0) / 7.0).collect();
+    let b: Vec<f32> = (0..n).map(|i| ((i % 5) as f32 - 2.0) / 5.0).collect();
+    let (got, _) = runtime.run_kernel(&kernel.name, &x, &w, &b).unwrap();
+    assert_eq!(got.len(), m * n);
+    // Reference matmul in rust.
+    let mut max_err = 0f32;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for l in 0..k {
+                acc += x[i * k + l] as f64 * w[l * n + j] as f64;
+            }
+            let want = ((acc + b[j] as f64).max(0.0)) as f32;
+            max_err = max_err.max((got[i * n + j] - want).abs());
+        }
+    }
+    assert!(max_err < 1e-3, "kernel max err {max_err}");
+}
+
+#[test]
+fn wrong_frame_size_is_rejected() {
+    let Some(runtime) = runtime_or_skip() else { return };
+    let frame = Frame::zeros(FrameSize::new(96, 128)); // model res, not a camera size
+    let err = runtime.infer_raw("zf_480x640", &frame).unwrap_err();
+    assert!(err.to_string().contains("wants"));
+}
+
+#[test]
+fn unknown_variant_is_rejected() {
+    let Some(runtime) = runtime_or_skip() else { return };
+    let frame = Frame::zeros(FrameSize::new(480, 640));
+    assert!(runtime.infer_raw("resnet_480x640", &frame).is_err());
+}
+
+#[test]
+fn detections_have_valid_geometry_on_live_output() {
+    let Some(runtime) = runtime_or_skip() else { return };
+    let frame = Frame::synthetic(FrameSize::new(480, 640), 9, 0.0, 6);
+    let (dets, _) = runtime.infer("vgg16_480x640", &frame).unwrap();
+    for d in &dets.items {
+        assert!(d.class_index > 0 && d.class_index < 5);
+        assert!((0.5..=1.0).contains(&d.score));
+        assert!(d.bbox[0] <= d.bbox[2] && d.bbox[1] <= d.bbox[3]);
+    }
+}
