@@ -26,7 +26,7 @@ fn phase(name: &str, streams: Vec<StreamSpec>, coordinator: &Coordinator) -> Dol
         streams,
         catalog: Catalog::paper_experiments(),
     };
-    let sim = SimConfig { duration_s: 120.0, dt: 0.01, queue_cap: 32 };
+    let sim = SimConfig::for_duration(120.0);
     let outcomes = coordinator.compare_strategies(&scenario, sim);
     println!("{}", render_table6_block(&scenario, &outcomes).render());
     let st3 = outcomes

@@ -12,7 +12,7 @@ use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
 use camcloud::streams::{Camera, StreamSpec};
 use camcloud::types::{Program, VGA};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> camcloud::util::error::Result<()> {
     // 1. A workload: two cameras, one per analysis program.
     let streams = vec![
         StreamSpec::new(Camera::new(1, VGA), Program::Vgg16, 0.25),

@@ -33,7 +33,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[((sorted.len() - 1) as f64 * p).round() as usize]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> camcloud::util::error::Result<()> {
     let vga = FrameSize::new(480, 640);
     let small = FrameSize::new(192, 256);
 
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         catalog: Catalog::paper_experiments(),
     };
     println!("\n[2/3] allocation across strategies (measured profiles):\n");
-    let sim = SimConfig { duration_s: 120.0, dt: 0.01, queue_cap: 32 };
+    let sim = SimConfig::for_duration(120.0);
     let outcomes = coordinator.compare_strategies(&scenario, sim);
     println!("{}", render_table6_block(&scenario, &outcomes).render());
 

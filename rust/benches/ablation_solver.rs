@@ -27,7 +27,8 @@ fn main() {
         for seed in 0..trials {
             let scenario = Scenario::random(seed * 97 + n as u64, n, Catalog::paper_experiments());
             let mgr = ResourceManager::new(scenario.catalog.clone(), &coordinator);
-            let built = match mgr.build_problem(&scenario.streams, camcloud::manager::Strategy::St3) {
+            let st3 = camcloud::manager::Strategy::St3;
+            let built = match mgr.build_problem(&scenario.streams, st3) {
                 Ok(b) => b,
                 Err(_) => continue, // infeasible random workloads are skipped
             };

@@ -1,0 +1,60 @@
+//! Bench: event-driven vs fixed-step simulation engines at fleet scale.
+//!
+//! Sweeps synthetic fleets of 10 / 100 / 1,000 / 5,000 cameras through
+//! the same allocation plan and times both engines over a 120 s
+//! simulated horizon.  Doubles as a regression gate for the tentpole
+//! claims: the engines agree on overall performance within 1%, and at
+//! 1,000 streams the event engine is at least 10x faster.
+
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::Strategy;
+use camcloud::sched::{SimConfig, SimEngine};
+use camcloud::util::bench::Bench;
+use camcloud::workload::FleetSpec;
+
+fn main() {
+    let mut bench = Bench::new("engine_compare");
+    let coordinator = Coordinator::new();
+    let horizon = 120.0;
+
+    for &n in &[10u32, 100, 1_000, 5_000] {
+        let fleet = FleetSpec::new(n).seed(42).build();
+        let profiled = coordinator.profile_workload(fleet);
+        let plan = profiled.allocate(Strategy::St3).expect("default fleet allocates");
+        bench.record(&format!("instances@{n}"), plan.instances.len() as f64);
+
+        // Fewer samples at scale: the fixed-step engine is the slow leg.
+        let (warmup, samples) = if n >= 1_000 { (1, 3) } else { (2, 10) };
+
+        let mut perf = [0.0f64; 2];
+        let mut p50 = [0.0f64; 2];
+        for (e, engine) in [SimEngine::Event, SimEngine::FixedStep].into_iter().enumerate() {
+            let config = SimConfig::for_duration(horizon).with_engine(engine);
+            perf[e] = profiled.simulation(&plan).run(config).overall_performance();
+            p50[e] = bench
+                .measure(&format!("{engine}_{n}streams_120s"), warmup, samples, || {
+                    let mut sim = profiled.simulation(&plan);
+                    std::hint::black_box(sim.run(config));
+                })
+                .p50();
+        }
+
+        let speedup = p50[1] / p50[0];
+        bench.record(&format!("event_speedup@{n}"), speedup);
+        bench.record(&format!("perf_event@{n}"), perf[0]);
+        bench.record(&format!("perf_fixed@{n}"), perf[1]);
+        assert!(
+            (perf[0] - perf[1]).abs() <= 0.01,
+            "engines disagree at {n} streams: event {} vs fixed {}",
+            perf[0],
+            perf[1]
+        );
+        if n == 1_000 {
+            assert!(
+                speedup >= 10.0,
+                "event engine must be >=10x faster at 1,000 streams, got {speedup:.1}x"
+            );
+        }
+    }
+    bench.finish();
+}

@@ -8,7 +8,7 @@ use camcloud::config::paper_scenario;
 use camcloud::coordinator::Coordinator;
 use camcloud::manager::{ResourceManager, Strategy};
 use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
-use camcloud::sched::SimConfig;
+use camcloud::sched::{SimConfig, SimEngine};
 use camcloud::streams::Frame;
 use camcloud::types::{FrameSize, Program, VGA};
 use camcloud::util::bench::Bench;
@@ -37,13 +37,23 @@ fn main() {
     });
 
     // --- L3: simulation throughput ------------------------------------
-    bench.measure("simulate_scenario3_st3_120s", 1, 5, || {
+    // Both engines on the same plan: the event engine is the serving
+    // default, the fixed-step engine the cross-validation baseline
+    // (see benches/engine_compare.rs for the fleet-scale sweep).
+    bench.measure("simulate_scenario3_st3_event_120s", 1, 5, || {
+        std::hint::black_box(
+            coordinator
+                .run_scenario(&scenario, Strategy::St3, SimConfig::for_duration(120.0))
+                .unwrap(),
+        );
+    });
+    bench.measure("simulate_scenario3_st3_fixed_120s", 1, 5, || {
         std::hint::black_box(
             coordinator
                 .run_scenario(
                     &scenario,
                     Strategy::St3,
-                    SimConfig { duration_s: 120.0, dt: 0.01, queue_cap: 32 },
+                    SimConfig::for_duration(120.0).with_engine(SimEngine::FixedStep),
                 )
                 .unwrap(),
         );

@@ -52,6 +52,19 @@ impl BillingMeter {
             .sum()
     }
 
+    /// `(instance, billed hours, cost)` per record up to `now` — the
+    /// per-instance breakdown of [`BillingMeter::total_cost`].
+    pub fn per_instance(&self, now: f64) -> Vec<(InstanceId, u32, Dollars)> {
+        self.records
+            .iter()
+            .map(|(id, (itype, start, end))| {
+                let span = end.unwrap_or(now) - start;
+                let hours = Self::billed_hours(span);
+                (*id, hours, itype.hourly_cost * hours)
+            })
+            .collect()
+    }
+
     /// Combined hourly run-rate of instances still running at `now`.
     pub fn hourly_rate(&self, now: f64) -> Dollars {
         self.records
@@ -90,6 +103,20 @@ mod tests {
         let (mut m, _) = meter_with(1, "g2.2xlarge", 0.0);
         m.on_terminate(InstanceId(1), 3601.0); // 1h + 1s -> 2 hours
         assert_eq!(m.total_cost(10_000.0), Dollars::from_f64(1.300));
+    }
+
+    #[test]
+    fn per_instance_breakdown_sums_to_total() {
+        let (mut m, _) = meter_with(1, "c4.2xlarge", 0.0);
+        let t2 = Catalog::aws_table1().get("g2.2xlarge").unwrap().clone();
+        m.on_provision(&SimInstance::new(InstanceId(2), t2, 0.0));
+        m.on_terminate(InstanceId(2), 3601.0); // 2 started hours
+        let per = m.per_instance(100.0);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0], (InstanceId(1), 1, Dollars::from_f64(0.419)));
+        assert_eq!(per[1], (InstanceId(2), 2, Dollars::from_f64(1.300)));
+        let total: Dollars = per.iter().map(|(_, _, c)| *c).sum();
+        assert_eq!(total, m.total_cost(100.0));
     }
 
     #[test]

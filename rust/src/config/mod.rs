@@ -2,10 +2,10 @@
 //! config files for user-defined workloads.
 
 use crate::cloud::Catalog;
-use crate::streams::{Camera, StreamSpec};
+use crate::streams::StreamSpec;
 use crate::types::{FrameSize, Program, VGA};
+use crate::util::error::{anyhow, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 use std::path::Path;
 
 /// A named workload plus the catalog it prices against.
@@ -80,7 +80,7 @@ impl Scenario {
             let program: Program = row
                 .str_field("program")?
                 .parse()
-                .map_err(anyhow::Error::msg)?;
+                .map_err(crate::util::error::Error::msg)?;
             let fps = row.f64_field("fps")?;
             if fps <= 0.0 {
                 return Err(anyhow!("fps must be positive"));
@@ -140,27 +140,21 @@ impl Scenario {
     }
 
     /// A randomized workload for ablation benchmarks: `n` streams with
-    /// mixed programs, rates, and frame sizes.
+    /// mixed programs, rates, and frame sizes.  Thin wrapper over the
+    /// [`FleetSpec`](crate::workload::FleetSpec) generator with mixed
+    /// frame sizes, so rates are drawn such that the CPU choice is
+    /// sometimes feasible, sometimes not (mirrors the paper's mixed
+    /// scenarios) and some draws are infeasible outright.
     pub fn random(seed: u64, n: u32, catalog: Catalog) -> Scenario {
-        let mut rng = crate::util::rng::Rng::new(seed);
-        let sizes = crate::types::FRAME_SIZES;
-        let streams = (0..n)
-            .map(|i| {
-                let program = if rng.bool(0.5) { Program::Vgg16 } else { Program::Zf };
-                // Rates drawn so CPU choice is sometimes feasible,
-                // sometimes not (mirrors the paper's mixed scenarios).
-                let fps = match program {
-                    Program::Vgg16 => rng.range_f64(0.05, 3.0),
-                    Program::Zf => rng.range_f64(0.1, 8.0),
-                };
-                let size = *rng.choose(&sizes);
-                StreamSpec::new(Camera::new(i, size), program, fps)
-            })
-            .collect();
+        let fleet = crate::workload::FleetSpec::new(n)
+            .seed(seed)
+            .frame_sizes(&crate::types::FRAME_SIZES)
+            .catalog(catalog)
+            .build();
         Scenario {
             name: format!("random-{seed}-{n}"),
-            streams,
-            catalog,
+            streams: fleet.streams,
+            catalog: fleet.catalog,
         }
     }
 }
@@ -196,7 +190,8 @@ mod tests {
 
     #[test]
     fn from_json_validates() {
-        assert!(Scenario::from_json(&Json::parse(r#"{"name":"x","streams":[]}"#).unwrap()).is_err());
+        let empty = r#"{"name":"x","streams":[]}"#;
+        assert!(Scenario::from_json(&Json::parse(empty).unwrap()).is_err());
         let bad_fps = r#"{"name":"x","streams":[{"program":"zf","fps":-1}]}"#;
         assert!(Scenario::from_json(&Json::parse(bad_fps).unwrap()).is_err());
         let bad_type = r#"{"name":"x","catalog":["h100.mega"],"streams":[{"program":"zf","fps":1}]}"#;

@@ -1,9 +1,30 @@
-//! End-to-end orchestration: profile → allocate → provision → run →
-//! report.  This is the binary's engine and what the examples drive.
+//! End-to-end orchestration: profile → allocate → provision → simulate
+//! → bill.  This is the binary's engine and what the examples drive.
+//!
+//! The pipeline is composed of explicit stages that consume a
+//! [`Workload`](crate::workload::Workload):
+//!
+//! 1. [`Coordinator::profile_workload`] resolves every stream's
+//!    [`ResourceProfile`] once (workload store → coordinator store →
+//!    calibration) into a [`ProfiledWorkload`];
+//! 2. [`ProfiledWorkload::allocate`] runs the resource manager under a
+//!    strategy and yields an [`AllocationPlan`];
+//! 3. [`Provisioned::provision`] boots the planned [`SimInstance`]s and
+//!    starts their [`BillingMeter`] records — the instances are
+//!    *retained* so per-instance billed hours survive the run;
+//! 4. [`ProfiledWorkload::simulation`] + [`Simulation::run`] execute
+//!    the frame loops under the configured engine;
+//! 5. [`Provisioned::settle`] terminates the fleet at the simulated
+//!    horizon and prices the billed span.
+//!
+//! [`Coordinator::run_workload`] composes the five stages;
+//! [`Coordinator::run_scenario`] is the scenario-flavored facade the
+//! reports and examples use.  Paper scenarios and synthetic fleets go
+//! through the same path.
 
-use crate::cloud::{BillingMeter, InstanceId, SimInstance};
+use crate::cloud::{BillingMeter, Catalog, InstanceId, SimInstance};
 use crate::config::Scenario;
-use crate::manager::{AllocationError, AllocationPlan, ResourceManager, Strategy};
+use crate::manager::{AllocationError, AllocationPlan, ProfileSource, ResourceManager, Strategy};
 use crate::profiler::calibration::Calibration;
 use crate::profiler::live::TestRunner;
 use crate::profiler::store::ProfileStore;
@@ -12,9 +33,19 @@ use crate::runtime::ModelRuntime;
 use crate::sched::{SimConfig, SimReport, Simulation};
 use crate::streams::StreamSpec;
 use crate::types::{Dollars, Program, VGA};
-use anyhow::Result;
+use crate::util::error::Result;
+use crate::workload::Workload;
+use std::collections::BTreeMap;
 
-/// Outcome of one scenario run under one strategy.
+/// Billed span of one retained instance.
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceBill {
+    pub id: InstanceId,
+    pub hours: u32,
+    pub cost: Dollars,
+}
+
+/// Outcome of one workload run under one strategy.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
     pub strategy: Strategy,
@@ -22,6 +53,11 @@ pub struct RunOutcome {
     pub report: SimReport,
     /// Cost actually billed for the simulated span (started hours).
     pub billed: Dollars,
+    /// The provisioned instances, terminated at the simulated horizon —
+    /// retained so lifecycle and billing can be inspected per instance.
+    pub instances: Vec<SimInstance>,
+    /// Per-instance billed hours and cost (sums to `billed`).
+    pub instance_bills: Vec<InstanceBill>,
 }
 
 /// Outcome or failure per strategy — Table 6 rows ("Fail" included).
@@ -37,6 +73,107 @@ pub struct Coordinator {
 impl Default for Coordinator {
     fn default() -> Self {
         Coordinator { calibration: Calibration::paper(), profiles: None }
+    }
+}
+
+/// Stage-1 output: a workload with every stream's profile resolved.
+///
+/// Implements [`ProfileSource`] so the allocation stage and any
+/// re-planning consume the *same* resolved profiles the simulation
+/// will use.
+pub struct ProfiledWorkload {
+    pub workload: Workload,
+    /// Resolved profile per (program, frame-size) variant in use.
+    by_variant: BTreeMap<String, ResourceProfile>,
+    /// Resolved profile per stream (parallel to `workload.streams`),
+    /// materialized once so simulation setup is allocation-cheap even
+    /// when called repeatedly (benches build one `Simulation` per run).
+    per_stream: Vec<ResourceProfile>,
+}
+
+impl ProfiledWorkload {
+    /// The resolved profile of stream `index`.
+    pub fn profile(&self, index: usize) -> &ResourceProfile {
+        &self.per_stream[index]
+    }
+
+    /// Profiles parallel to the stream list (simulation input).
+    pub fn per_stream(&self) -> &[ResourceProfile] {
+        &self.per_stream
+    }
+
+    /// Stage 2: allocate instances for the workload under `strategy`.
+    pub fn allocate(
+        &self,
+        strategy: Strategy,
+    ) -> std::result::Result<AllocationPlan, AllocationError> {
+        let mgr = ResourceManager::new(self.workload.catalog.clone(), self);
+        mgr.allocate(&self.workload.streams, strategy)
+    }
+
+    /// Stage 4 setup: build the frame-loop simulation for a plan.
+    pub fn simulation(&self, plan: &AllocationPlan) -> Simulation {
+        let layout = self.workload.catalog.layout();
+        Simulation::from_plan(
+            plan,
+            &self.workload.streams,
+            layout,
+            &self.per_stream,
+            &self.workload.catalog,
+        )
+    }
+}
+
+impl ProfileSource for ProfiledWorkload {
+    fn profile_for(&self, spec: &StreamSpec) -> Option<ResourceProfile> {
+        self.by_variant
+            .get(&spec.program.variant(spec.camera.frame_size))
+            .cloned()
+    }
+}
+
+/// Stage-3 output: the provisioned fleet plus its running meter.
+pub struct Provisioned {
+    pub instances: Vec<SimInstance>,
+    pub billing: BillingMeter,
+}
+
+impl Provisioned {
+    /// Boot one [`SimInstance`] per planned instance at time `now`,
+    /// opening a billing record for each.
+    pub fn provision(plan: &AllocationPlan, catalog: &Catalog, now: f64) -> Provisioned {
+        let mut billing = BillingMeter::new();
+        let instances = plan
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| {
+                let itype = catalog
+                    .get(&inst.type_name)
+                    .expect("plan types come from the catalog")
+                    .clone();
+                let mut sim_inst = SimInstance::new(InstanceId(i as u32), itype, now);
+                billing.on_provision(&sim_inst);
+                sim_inst.mark_running();
+                sim_inst
+            })
+            .collect();
+        Provisioned { instances, billing }
+    }
+
+    /// Stage 5: terminate the fleet at time `now` and price the span.
+    pub fn settle(&mut self, now: f64) -> (Dollars, Vec<InstanceBill>) {
+        for inst in &mut self.instances {
+            inst.terminate(now);
+            self.billing.on_terminate(inst.id, now);
+        }
+        let bills: Vec<InstanceBill> = self
+            .billing
+            .per_instance(now)
+            .into_iter()
+            .map(|(id, hours, cost)| InstanceBill { id, hours, cost })
+            .collect();
+        (self.billing.total_cost(now), bills)
     }
 }
 
@@ -74,6 +211,53 @@ impl Coordinator {
         Ok(store)
     }
 
+    /// Stage 1: resolve every stream's profile once.  Precedence:
+    /// workload-attached store, then the coordinator's store, then
+    /// calibration.
+    pub fn profile_workload(&self, workload: Workload) -> ProfiledWorkload {
+        let mut by_variant = BTreeMap::new();
+        for spec in &workload.streams {
+            let variant = spec.program.variant(spec.camera.frame_size);
+            if by_variant.contains_key(&variant) {
+                continue;
+            }
+            let profile = workload
+                .profiles
+                .as_ref()
+                .and_then(|store| store.get(spec.program, spec.camera.frame_size).cloned())
+                .unwrap_or_else(|| self.profile_for(spec));
+            by_variant.insert(variant, profile);
+        }
+        let per_stream = workload
+            .streams
+            .iter()
+            .map(|spec| by_variant[&spec.program.variant(spec.camera.frame_size)].clone())
+            .collect();
+        ProfiledWorkload { workload, by_variant, per_stream }
+    }
+
+    /// The full pipeline on one workload under one strategy.
+    pub fn run_workload(
+        &self,
+        workload: Workload,
+        strategy: Strategy,
+        sim: SimConfig,
+    ) -> StrategyOutcome {
+        let profiled = self.profile_workload(workload);
+        let plan = profiled.allocate(strategy)?;
+        let mut provisioned = Provisioned::provision(&plan, &profiled.workload.catalog, 0.0);
+        let report = profiled.simulation(&plan).run(sim);
+        let (billed, instance_bills) = provisioned.settle(sim.duration_s);
+        Ok(RunOutcome {
+            strategy,
+            plan,
+            report,
+            billed,
+            instances: provisioned.instances,
+            instance_bills,
+        })
+    }
+
     /// Allocate + provision + simulate one scenario under one strategy.
     pub fn run_scenario(
         &self,
@@ -81,34 +265,7 @@ impl Coordinator {
         strategy: Strategy,
         sim: SimConfig,
     ) -> StrategyOutcome {
-        let mgr = ResourceManager::new(scenario.catalog.clone(), self);
-        let plan = mgr.allocate(&scenario.streams, strategy)?;
-
-        // Provision simulated instances + billing.
-        let mut billing = BillingMeter::new();
-        for (i, inst) in plan.instances.iter().enumerate() {
-            let itype = scenario
-                .catalog
-                .get(&inst.type_name)
-                .expect("plan types come from the catalog")
-                .clone();
-            let mut sim_inst = SimInstance::new(InstanceId(i as u32), itype, 0.0);
-            billing.on_provision(&sim_inst);
-            sim_inst.mark_running();
-        }
-
-        // Execute the frame loops.
-        let layout = scenario.catalog.layout();
-        let mut simulation = Simulation::from_plan(
-            &plan,
-            &scenario.streams,
-            layout,
-            |i| self.profile_for(&scenario.streams[i]),
-            &scenario.catalog,
-        );
-        let report = simulation.run(sim);
-        let billed = billing.total_cost(sim.duration_s);
-        Ok(RunOutcome { strategy, plan, report, billed })
+        self.run_workload(Workload::from(scenario.clone()), strategy, sim)
     }
 
     /// Run all three strategies on a scenario — one Table 6 block.
@@ -124,7 +281,7 @@ impl Coordinator {
     }
 }
 
-impl crate::manager::ProfileSource for Coordinator {
+impl ProfileSource for Coordinator {
     fn profile_for(&self, spec: &StreamSpec) -> Option<ResourceProfile> {
         Some(Coordinator::profile_for(self, spec))
     }
@@ -182,10 +339,11 @@ pub fn render_table6_block(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::InstanceState;
     use crate::config::paper_scenario;
 
     fn quick_sim() -> SimConfig {
-        SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 32 }
+        SimConfig::for_duration(60.0)
     }
 
     #[test]
@@ -261,6 +419,81 @@ mod tests {
             .unwrap();
         // One c4.2xlarge for <=1h -> one billed hour.
         assert_eq!(run.billed, Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn provisioned_instances_are_retained_and_billed_per_instance() {
+        // Scenario 3 / ST2: 11 g2.2xlarge — each must survive the run
+        // with a terminated lifecycle and one billed hour at $0.650.
+        let c = Coordinator::new();
+        let scenario = paper_scenario(3).unwrap();
+        let run = c
+            .run_scenario(&scenario, Strategy::St2, quick_sim())
+            .unwrap();
+        assert_eq!(run.instances.len(), 11);
+        assert_eq!(run.instance_bills.len(), 11);
+        for inst in &run.instances {
+            assert_eq!(inst.state, InstanceState::Terminated);
+            assert_eq!(inst.terminated_at, Some(60.0));
+            assert!((inst.billable_seconds(1e9) - 60.0).abs() < 1e-9);
+        }
+        for bill in &run.instance_bills {
+            assert_eq!(bill.hours, 1);
+            assert_eq!(bill.cost, Dollars::from_f64(0.650));
+        }
+        let total: Dollars = run.instance_bills.iter().map(|b| b.cost).sum();
+        assert_eq!(total, run.billed);
+        assert_eq!(run.billed, Dollars::from_f64(7.150));
+    }
+
+    #[test]
+    fn pipeline_stages_compose_like_run_workload() {
+        // Driving the stages by hand must equal the composed facade.
+        let c = Coordinator::new();
+        let workload = Workload::paper(2).unwrap();
+        let profiled = c.profile_workload(workload.clone());
+        let plan = profiled.allocate(Strategy::St3).unwrap();
+        let mut provisioned =
+            Provisioned::provision(&plan, &profiled.workload.catalog, 0.0);
+        let report = profiled.simulation(&plan).run(quick_sim());
+        let (billed, bills) = provisioned.settle(60.0);
+
+        let composed = c
+            .run_workload(workload.clone(), Strategy::St3, quick_sim())
+            .unwrap();
+        assert_eq!(composed.plan.hourly_cost, plan.hourly_cost);
+        assert_eq!(composed.billed, billed);
+        assert_eq!(composed.instance_bills.len(), bills.len());
+        assert_eq!(composed.report.frames_completed, report.frames_completed);
+        assert_eq!(
+            composed.report.overall_performance(),
+            report.overall_performance()
+        );
+    }
+
+    #[test]
+    fn workload_profile_store_overrides_coordinator() {
+        // A workload-attached store takes precedence over calibration.
+        let c = Coordinator::new();
+        let mut store = ProfileStore::new();
+        let mut p = c.calibration.profile(Program::Zf, VGA);
+        p.cpu_work_cpu_mode = 1.0; // much cheaper than calibrated 7.12
+        store.insert(p);
+        let workload = Workload::new(
+            "override",
+            crate::streams::StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.5),
+            crate::cloud::Catalog::paper_experiments(),
+        )
+        .with_profiles(store);
+        let profiled = c.profile_workload(workload);
+        assert_eq!(profiled.profile(0).cpu_work_cpu_mode, 1.0);
+        // And the coordinator's calibration path is untouched.
+        let plain = c.profile_workload(Workload::new(
+            "plain",
+            crate::streams::StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.5),
+            crate::cloud::Catalog::paper_experiments(),
+        ));
+        assert!((plain.profile(0).cpu_work_cpu_mode - 7.12).abs() < 1e-9);
     }
 
     #[test]

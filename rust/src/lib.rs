@@ -13,19 +13,40 @@
 //!   lifecycle + hourly billing, and calibrated CPU/GPU device models.
 //! * [`streams`] — simulated network cameras producing frames at desired
 //!   rates and sizes.
+//! * [`workload`] — the first-class [`workload::Workload`] unit the
+//!   pipeline consumes (streams + catalog + optional profiles) and the
+//!   [`workload::FleetSpec`] synthetic-fleet generator that scales the
+//!   scenario space beyond the paper's Table 5.
 //! * [`profiler`] — the paper's test-run subsystem: measure a program on
 //!   CPU (really, via PJRT) and on GPU (via the calibrated device model),
 //!   fit the linear utilization-vs-fps resource model.
 //! * [`manager`] — the contribution: formulate allocation as MVBP under
 //!   strategies ST1/ST2/ST3 and emit an allocation plan.
-//! * [`sched`] — per-instance frame-loop schedulers over a discrete-event
-//!   simulation clock (plus a real-time tokio mode used by the examples).
+//! * [`sched`] — plan execution on a simulated timeline behind the
+//!   [`sched::SimEngine`] facade: the default **event-driven**
+//!   discrete-event engine and the fixed-step fluid baseline it is
+//!   cross-validated against.
 //! * [`runtime`] — PJRT CPU runtime loading the AOT HLO artifacts
-//!   produced by `python/compile/aot.py`.
-//! * [`coordinator`] — end-to-end orchestration: profile → allocate →
-//!   provision → run → report.
+//!   produced by `python/compile/aot.py` (behind the `pjrt` feature;
+//!   a stub otherwise).
+//! * [`coordinator`] — end-to-end orchestration as composable stages:
+//!   profile → allocate → provision → simulate → bill.
 //!
 //! Python is build-time only; the request path is entirely in this crate.
+//!
+//! ## Performance model: ticks vs events
+//!
+//! The fixed-step engine costs `O(duration/dt x (streams + devices))` —
+//! at `dt = 10 ms` that is 12,000 full passes over the fleet for a
+//! two-minute run whether anything happens or not.  The event engine
+//! costs `O(events x streams-per-instance x log events)` where `events
+//! ≈ Σ fps x duration` arrivals plus as many completions, and each
+//! event touches only the affected instance.  Fleets spread work over
+//! many instances, so simulation cost scales with offered load rather
+//! than with wall-clock resolution; at 1,000 streams the event engine
+//! is well over an order of magnitude faster (see
+//! `benches/engine_compare.rs`) while being *exact* instead of
+//! tick-quantized.
 
 pub mod cloud;
 pub mod config;
@@ -40,5 +61,6 @@ pub mod runtime;
 pub mod sched;
 pub mod streams;
 pub mod types;
+pub mod workload;
 
 pub use types::{Dollars, FrameSize, ResourceVec};

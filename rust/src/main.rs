@@ -15,10 +15,11 @@ use camcloud::manager::Strategy;
 use camcloud::profiler::store::ProfileStore;
 use camcloud::reports;
 use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
-use camcloud::sched::SimConfig;
+use camcloud::sched::{SimConfig, SimEngine};
 use camcloud::streams::{Camera, Frame};
 use camcloud::types::{Program, VGA};
 use camcloud::util::cli::Args;
+use camcloud::workload::FleetSpec;
 
 fn main() {
     let args = match Args::from_env() {
@@ -58,8 +59,11 @@ fn print_help() {
          \u{20}                              estimate resource requirements via test runs\n\
          \u{20}  allocate --scenario N --strategy st1|st2|st3 [--profiles FILE]\n\
          \u{20}  allocate --config FILE ...  allocate a custom JSON workload\n\
-         \u{20}  run --scenario N [--strategy stX] [--duration S]\n\
+         \u{20}  allocate --streams N ...    allocate a synthetic N-camera fleet\n\
+         \u{20}  run --scenario N [--strategy stX] [--duration S] [--engine event|fixed]\n\
          \u{20}                              allocate + simulate + performance/cost report\n\
+         \u{20}  run --streams N [--seed S] ...\n\
+         \u{20}                              same pipeline on a synthetic N-camera fleet\n\
          \u{20}  report --all|--table2|--table3|--table5|--table6|--fig5|--fig6\n\
          \u{20}                              regenerate the paper's tables and figures\n\
          \u{20}  whatif --scenario N [--strategy stX]\n\
@@ -84,10 +88,28 @@ fn load_scenario(args: &Args) -> Result<Scenario, String> {
         return Scenario::load(std::path::Path::new(path))
             .map_err(|e| format!("loading scenario {path}: {e}"));
     }
+    // Synthetic-fleet path: `--streams N [--seed S]` generates a seeded
+    // N-camera workload instead of loading a scenario.
+    if let Some(n) = args.u32_opt("streams")? {
+        if n == 0 {
+            return Err("--streams expects at least 1".into());
+        }
+        let seed = args.u32_opt("seed")?.map(u64::from).unwrap_or(7);
+        return Ok(FleetSpec::new(n).seed(seed).build().to_scenario());
+    }
     let n = args
         .u32_opt("scenario")?
-        .ok_or("need --scenario N or --config FILE")?;
+        .ok_or("need --scenario N, --streams N, or --config FILE")?;
     paper_scenario(n).map_err(|e| e.to_string())
+}
+
+fn sim_config(args: &Args, default_duration: f64) -> Result<SimConfig, String> {
+    let duration = args.f64_opt("duration")?.unwrap_or(default_duration);
+    let engine: SimEngine = match args.opt("engine") {
+        Some(s) => s.parse()?,
+        None => SimEngine::default(),
+    };
+    Ok(SimConfig::for_duration(duration).with_engine(engine))
 }
 
 fn cmd_catalog() -> i32 {
@@ -198,8 +220,14 @@ fn cmd_run(args: &Args) -> i32 {
             return 1;
         }
     };
-    let duration = args.f64_opt("duration").unwrap_or(None).unwrap_or(120.0);
-    let sim = SimConfig { duration_s: duration, dt: 0.01, queue_cap: 32 };
+    let sim = match sim_config(args, 120.0) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let duration = sim.duration_s;
     match args.opt("strategy") {
         Some(s) => {
             let strategy: Strategy = match s.parse() {
@@ -375,7 +403,9 @@ fn cmd_whatif(args: &Args) -> i32 {
         );
         for p in &curve {
             match p.cost {
-                Some(c) => println!("  x{:<5} {:>10}  ({} instance(s))", p.x, c.to_string(), p.instances),
+                Some(c) => {
+                    println!("  x{:<5} {:>10}  ({} instance(s))", p.x, c.to_string(), p.instances)
+                }
                 None => println!("  x{:<5} {:>10}", p.x, "FAIL"),
             }
         }

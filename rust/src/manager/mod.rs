@@ -26,29 +26,43 @@ use crate::packing::{self, BinType, Item, MvbpProblem};
 use crate::profiler::{ExecChoice, ResourceProfile};
 use crate::streams::StreamSpec;
 use crate::types::DimLayout;
-use thiserror::Error;
 
 /// Allocation failure modes.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AllocationError {
     /// Some streams cannot be analyzed at their desired rate under this
     /// strategy at all (Table 6's "Fail" row: ZF at 8 FPS under ST1).
-    #[error("streams not satisfiable under {strategy}: {stream_ids:?}")]
     Infeasible {
         strategy: Strategy,
         stream_ids: Vec<String>,
     },
     /// No profile available for (program, frame size).
-    #[error("no resource profile for {0}")]
     MissingProfile(String),
     /// The catalog for this strategy is empty.
-    #[error("strategy {0} leaves no instance types in the catalog")]
     EmptyCatalog(Strategy),
     /// The solver could not pack the items (should not happen once
     /// per-item feasibility holds, but surfaced rather than panicking).
-    #[error("packing failed: {0}")]
     SolverFailed(String),
 }
+
+impl std::fmt::Display for AllocationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocationError::Infeasible { strategy, stream_ids } => {
+                write!(f, "streams not satisfiable under {strategy}: {stream_ids:?}")
+            }
+            AllocationError::MissingProfile(variant) => {
+                write!(f, "no resource profile for {variant}")
+            }
+            AllocationError::EmptyCatalog(strategy) => {
+                write!(f, "strategy {strategy} leaves no instance types in the catalog")
+            }
+            AllocationError::SolverFailed(reason) => write!(f, "packing failed: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for AllocationError {}
 
 /// Source of resource profiles for the manager.
 pub trait ProfileSource {

@@ -39,6 +39,12 @@ pub fn overall_performance(streams: &[StreamPerf]) -> f64 {
 }
 
 /// Time-weighted utilization accumulator for one resource dimension.
+///
+/// Engine-agnostic by construction: the fixed-step engine records a
+/// sample every `dt` tick, while the event-driven engine records one
+/// sample per *span between events* (rates are constant in between, so
+/// the integral is exact).  Zero-length spans are ignored so coincident
+/// events cannot pollute the peak.
 #[derive(Clone, Debug, Default)]
 pub struct UtilizationMeter {
     weighted_sum: f64,
@@ -53,6 +59,9 @@ impl UtilizationMeter {
 
     /// Record `utilization` (0..=1+) holding for `dt` seconds.
     pub fn record(&mut self, utilization: f64, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
         self.weighted_sum += utilization * dt;
         self.total_time += dt;
         if utilization > self.peak {
@@ -111,6 +120,18 @@ mod tests {
         assert!((m.mean() - 0.75).abs() < 1e-12);
         assert_eq!(m.peak(), 1.0);
         assert_eq!(UtilizationMeter::new().mean(), 0.0);
+    }
+
+    #[test]
+    fn utilization_meter_ignores_empty_spans() {
+        // Coincident events produce zero-length spans; they must not
+        // perturb the mean or the peak.
+        let mut m = UtilizationMeter::new();
+        m.record(0.5, 10.0);
+        m.record(100.0, 0.0);
+        m.record(1.0, -1.0);
+        assert!((m.mean() - 0.5).abs() < 1e-12);
+        assert_eq!(m.peak(), 0.5);
     }
 
     #[test]

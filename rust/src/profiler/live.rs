@@ -11,7 +11,7 @@ use super::ResourceProfile;
 use crate::runtime::ModelRuntime;
 use crate::streams::Frame;
 use crate::types::{FrameSize, Program};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Process CPU time (user + system) in seconds, from `/proc/self/stat`.
 ///
@@ -124,7 +124,7 @@ impl<'r> TestRunner<'r> {
             samples.push((fps, fps * r.core_sec_per_frame));
             let _ = run; // baseline kept for symmetry
         }
-        LinearFit::fit(&samples).ok_or_else(|| anyhow::anyhow!("not enough samples"))
+        LinearFit::fit(&samples).ok_or_else(|| crate::anyhow!("not enough samples"))
     }
 }
 

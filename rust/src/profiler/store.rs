@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 /// JSON-backed store of resource profiles keyed by (program, frame size).
-#[derive(Default, Debug)]
+#[derive(Clone, Default, Debug)]
 pub struct ProfileStore {
     profiles: BTreeMap<String, ResourceProfile>,
 }
@@ -40,9 +40,9 @@ impl ResourceProfile {
     }
 
     /// Parse from a JSON object.
-    pub fn from_json(v: &Json) -> anyhow::Result<ResourceProfile> {
+    pub fn from_json(v: &Json) -> crate::util::error::Result<ResourceProfile> {
         Ok(ResourceProfile {
-            program: v.str_field("program")?.parse().map_err(anyhow::Error::msg)?,
+            program: v.str_field("program")?.parse().map_err(crate::util::error::Error::msg)?,
             frame_size: FrameSize::new(
                 v.u64_field("frame_h")? as u32,
                 v.u64_field("frame_w")? as u32,
@@ -86,7 +86,7 @@ impl ProfileStore {
         self.profiles.values()
     }
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &Path) -> crate::util::error::Result<()> {
         let obj = Json::obj(
             self.profiles
                 .iter()
@@ -96,12 +96,12 @@ impl ProfileStore {
         Ok(())
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<ProfileStore> {
+    pub fn load(path: &Path) -> crate::util::error::Result<ProfileStore> {
         let text = std::fs::read_to_string(path)?;
         let v = Json::parse(&text)?;
         let map = v
             .as_obj()
-            .ok_or_else(|| anyhow::anyhow!("profile store root must be an object"))?;
+            .ok_or_else(|| crate::anyhow!("profile store root must be an object"))?;
         let mut store = ProfileStore::new();
         for profile in map.values() {
             store.insert(ResourceProfile::from_json(profile)?);

@@ -172,6 +172,27 @@ pub fn single_instance_run(
     choice: ExecChoice,
     duration_s: f64,
 ) -> crate::sched::SimReport {
+    single_instance_run_with(
+        coordinator,
+        program,
+        fps,
+        n,
+        choice,
+        SimConfig::for_duration(duration_s),
+    )
+}
+
+/// [`single_instance_run`] under an explicit [`SimConfig`] (engine
+/// selection included) — the equivalence tests drive both engines
+/// through this.
+pub fn single_instance_run_with(
+    coordinator: &Coordinator,
+    program: Program,
+    fps: f64,
+    n: u32,
+    choice: ExecChoice,
+    config: SimConfig,
+) -> crate::sched::SimReport {
     let catalog = Catalog::paper_experiments();
     let streams = StreamSpec::replicate(0, n, VGA, program, fps);
     let layout = catalog.layout();
@@ -198,14 +219,9 @@ pub fn single_instance_run(
         }],
         hourly_cost: itype.hourly_cost,
     };
-    let mut sim = Simulation::from_plan(
-        &plan,
-        &streams,
-        layout,
-        |i| coordinator.profile_for(&streams[i]),
-        &catalog,
-    );
-    sim.run(SimConfig { duration_s, dt: 0.01, queue_cap: 32 })
+    let profiles: Vec<_> = streams.iter().map(|s| coordinator.profile_for(s)).collect();
+    let mut sim = Simulation::from_plan(&plan, &streams, layout, &profiles, &catalog);
+    sim.run(config)
 }
 
 /// Render fig5 rows as a table.
@@ -254,7 +270,7 @@ pub fn table6(coordinator: &Coordinator, scenario_number: u32, duration_s: f64) 
     let scenario = paper_scenario(scenario_number).unwrap();
     let outcomes = coordinator.compare_strategies(
         &scenario,
-        SimConfig { duration_s, dt: 0.01, queue_cap: 32 },
+        SimConfig::for_duration(duration_s),
     );
     render_table6_block(&scenario, &outcomes)
 }
@@ -263,7 +279,7 @@ pub fn table6(coordinator: &Coordinator, scenario_number: u32, duration_s: f64) 
 pub fn table6_custom(coordinator: &Coordinator, scenario: &Scenario, duration_s: f64) -> Table {
     let outcomes = coordinator.compare_strategies(
         scenario,
-        SimConfig { duration_s, dt: 0.01, queue_cap: 32 },
+        SimConfig::for_duration(duration_s),
     );
     render_table6_block(scenario, &outcomes)
 }

@@ -1,7 +1,7 @@
 //! Artifact manifest (`artifacts/meta.json`), written by the AOT step.
 
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{Context, Result};
 use std::path::Path;
 
 /// One AOT-compiled model variant.
@@ -51,7 +51,7 @@ fn u32_arr(v: &Json, key: &str) -> Result<Vec<u32>> {
         .map(|x| {
             x.as_u64()
                 .map(|n| n as u32)
-                .ok_or_else(|| anyhow::anyhow!("{key}: non-integer element"))
+                .ok_or_else(|| crate::anyhow!("{key}: non-integer element"))
         })
         .collect()
 }
@@ -97,7 +97,7 @@ impl Manifest {
                 .map(|c| {
                     c.as_str()
                         .map(str::to_string)
-                        .ok_or_else(|| anyhow::anyhow!("classes: non-string element"))
+                        .ok_or_else(|| crate::anyhow!("classes: non-string element"))
                 })
                 .collect::<Result<Vec<_>>>()?,
             num_anchors: v.u64_field("num_anchors")? as u32,

@@ -1,7 +1,7 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them.
 //!
 //! Wraps the `xla` crate (PJRT C API, CPU plugin): parse
-//! `artifacts/*.hlo.txt` with [`xla::HloModuleProto::from_text_file`],
+//! `artifacts/*.hlo.txt` with `xla::HloModuleProto::from_text_file`,
 //! compile once per model variant, and serve inference from the Layer-3
 //! hot path.  Python never runs here — the artifacts are self-contained
 //! (weights baked as constants).
@@ -9,6 +9,14 @@
 //! HLO *text* is the interchange format: jax >= 0.5 emits protos with
 //! 64-bit instruction ids that this XLA build rejects; the text parser
 //! reassigns ids (see `python/compile/aot.py`).
+//!
+//! The `xla` crate is the crate's single external dependency and must
+//! be vendored, so the real runtime is gated behind the **`pjrt`**
+//! feature.  Without it a stub [`ModelRuntime`] with the same API keeps
+//! the whole pipeline compiling; `load` reports the missing feature and
+//! callers (CLI `--live`, live examples, live benches) surface that
+//! error or skip.  Everything downstream of profiles — allocation,
+//! simulation, billing — is pure Rust and unaffected.
 
 pub mod detections;
 pub mod manifest;
@@ -16,25 +24,7 @@ pub mod manifest;
 pub use detections::{Detection, Detections};
 pub use manifest::{KernelEntry, Manifest, ModelEntry};
 
-use crate::streams::Frame;
-use crate::types::FrameSize;
-use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
-
-/// Compiled-model runtime over the PJRT CPU client.
-///
-/// Executables are compiled lazily per variant and cached.  The type is
-/// deliberately `!Send` (PJRT handles are thread-affine in the C API
-/// wrapper); the coordinator owns it on a dedicated thread.
-pub struct ModelRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    artifacts_dir: PathBuf,
-    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
+use std::path::PathBuf;
 
 /// Timing of one inference call.
 #[derive(Clone, Copy, Debug)]
@@ -43,162 +33,260 @@ pub struct InferStats {
     pub wall_seconds: f64,
 }
 
-impl ModelRuntime {
-    /// Open the artifacts directory (reads `meta.json`, creates the PJRT
-    /// CPU client; compiles nothing yet).
-    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<ModelRuntime> {
-        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&artifacts_dir.join("meta.json"))
-            .context("loading artifacts manifest (run `make artifacts`?)")?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(ModelRuntime {
-            client,
-            manifest,
-            artifacts_dir,
-            executables: RefCell::new(HashMap::new()),
-        })
+#[cfg(feature = "pjrt")]
+mod pjrt_runtime {
+    use super::{InferStats, Manifest};
+    use crate::streams::Frame;
+    use crate::types::FrameSize;
+    use crate::util::error::{anyhow, ensure, Context, Result};
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::time::Instant;
+
+    /// Compiled-model runtime over the PJRT CPU client.
+    ///
+    /// Executables are compiled lazily per variant and cached.  The type
+    /// is deliberately `!Send` (PJRT handles are thread-affine in the C
+    /// API wrapper); the coordinator owns it on a dedicated thread.
+    pub struct ModelRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        artifacts_dir: PathBuf,
+        executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (and cache) the executable for `variant`.
-    pub fn prepare(&self, variant: &str) -> Result<()> {
-        if self.executables.borrow().contains_key(variant) {
-            return Ok(());
+    impl ModelRuntime {
+        /// Open the artifacts directory (reads `meta.json`, creates the
+        /// PJRT CPU client; compiles nothing yet).
+        pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+            let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&artifacts_dir.join("meta.json"))
+                .context("loading artifacts manifest (run `make artifacts`?)")?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(ModelRuntime {
+                client,
+                manifest,
+                artifacts_dir,
+                executables: RefCell::new(HashMap::new()),
+            })
         }
-        let entry = self
-            .manifest
-            .model(variant)
-            .map(|m| m.hlo.clone())
-            .or_else(|| self.manifest.kernel(variant).map(|k| k.hlo.clone()))
-            .ok_or_else(|| anyhow!("unknown artifact variant {variant:?}"))?;
-        let path = self.artifacts_dir.join(entry);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {variant}: {e:?}"))?;
-        self.executables.borrow_mut().insert(variant.to_string(), exe);
-        Ok(())
-    }
 
-    /// Run one frame through a model variant; returns the raw `[36, 9]`
-    /// head output plus timing.
-    pub fn infer_raw(&self, variant: &str, frame: &Frame) -> Result<(Vec<f32>, InferStats)> {
-        let entry = self
-            .manifest
-            .model(variant)
-            .ok_or_else(|| anyhow!("unknown model variant {variant:?}"))?;
-        let expect = FrameSize::new(entry.frame_h, entry.frame_w);
-        if frame.size != expect {
-            return Err(anyhow!(
-                "variant {variant} wants {expect} frames, got {}",
-                frame.size
-            ));
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let out_len: usize = entry.output_shape.iter().product::<u32>() as usize;
-        let shape = [1usize, entry.frame_h as usize, entry.frame_w as usize, 3];
-        self.prepare(variant)?;
 
-        let start = Instant::now();
-        // Single host->device copy (§Perf, L3 iteration 3): building a
-        // Literal and reshaping it copies the 3.7 MB frame twice; a
-        // device buffer straight from the host slice copies once.
-        let input = self
-            .client
-            .buffer_from_host_buffer(&frame.data, &shape, None)
-            .map_err(|e| anyhow!("uploading frame: {e:?}"))?;
-        let exes = self.executables.borrow();
-        let exe = exes.get(variant).expect("prepared above");
-        let result = exe
-            .execute_b::<xla::PjRtBuffer>(&[input])
-            .map_err(|e| anyhow!("executing {variant}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
-        let wall = start.elapsed().as_secs_f64();
-
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("unwrapping tuple: {e:?}"))?;
-        let values = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("reading output: {e:?}"))?;
-        if values.len() != out_len {
-            return Err(anyhow!(
-                "output length {} != expected {out_len}",
-                values.len()
-            ));
+        /// Compile (and cache) the executable for `variant`.
+        pub fn prepare(&self, variant: &str) -> Result<()> {
+            if self.executables.borrow().contains_key(variant) {
+                return Ok(());
+            }
+            let entry = self
+                .manifest
+                .model(variant)
+                .map(|m| m.hlo.clone())
+                .or_else(|| self.manifest.kernel(variant).map(|k| k.hlo.clone()))
+                .ok_or_else(|| anyhow!("unknown artifact variant {variant:?}"))?;
+            let path = self.artifacts_dir.join(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {variant}: {e:?}"))?;
+            self.executables.borrow_mut().insert(variant.to_string(), exe);
+            Ok(())
         }
-        Ok((values, InferStats { wall_seconds: wall }))
-    }
 
-    /// Run one frame and decode detections.
-    pub fn infer(&self, variant: &str, frame: &Frame) -> Result<(Detections, InferStats)> {
-        let (raw, stats) = self.infer_raw(variant, frame)?;
-        let dets = Detections::from_head_output(
-            &raw,
-            self.manifest.num_anchors as usize,
-            self.manifest.head_out as usize,
-            &self.manifest.classes,
-        );
-        Ok((dets, stats))
-    }
+        /// Run one frame through a model variant; returns the raw
+        /// `[36, 9]` head output plus timing.
+        pub fn infer_raw(&self, variant: &str, frame: &Frame) -> Result<(Vec<f32>, InferStats)> {
+            let entry = self
+                .manifest
+                .model(variant)
+                .ok_or_else(|| anyhow!("unknown model variant {variant:?}"))?;
+            let expect = FrameSize::new(entry.frame_h, entry.frame_w);
+            if frame.size != expect {
+                return Err(anyhow!(
+                    "variant {variant} wants {expect} frames, got {}",
+                    frame.size
+                ));
+            }
+            let out_len: usize = entry.output_shape.iter().product::<u32>() as usize;
+            let shape = [1usize, entry.frame_h as usize, entry.frame_w as usize, 3];
+            self.prepare(variant)?;
 
-    /// Execute the bare Layer-1 kernel artifact (microbenchmarks).
-    pub fn run_kernel(
-        &self,
-        name: &str,
-        x: &[f32],
-        w: &[f32],
-        b: &[f32],
-    ) -> Result<(Vec<f32>, InferStats)> {
-        let entry = self
-            .manifest
-            .kernel(name)
-            .ok_or_else(|| anyhow!("unknown kernel {name:?}"))?
-            .clone();
-        self.prepare(name)?;
-        let (m, k, n) = (entry.m as usize, entry.k as usize, entry.n as usize);
-        anyhow::ensure!(x.len() == m * k, "x length mismatch");
-        anyhow::ensure!(w.len() == k * n, "w length mismatch");
-        anyhow::ensure!(b.len() == n, "b length mismatch");
+            let start = Instant::now();
+            // Single host->device copy (§Perf, L3 iteration 3): building a
+            // Literal and reshaping it copies the 3.7 MB frame twice; a
+            // device buffer straight from the host slice copies once.
+            let input = self
+                .client
+                .buffer_from_host_buffer(&frame.data, &shape, None)
+                .map_err(|e| anyhow!("uploading frame: {e:?}"))?;
+            let exes = self.executables.borrow();
+            let exe = exes.get(variant).expect("prepared above");
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&[input])
+                .map_err(|e| anyhow!("executing {variant}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+            let wall = start.elapsed().as_secs_f64();
 
-        let start = Instant::now();
-        let xs = self
-            .client
-            .buffer_from_host_buffer(x, &[m, k], None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let ws = self
-            .client
-            .buffer_from_host_buffer(w, &[k, n], None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let bs = self
-            .client
-            .buffer_from_host_buffer(b, &[n], None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let exes = self.executables.borrow();
-        let exe = exes.get(name).expect("prepared above");
-        let result = exe
-            .execute_b::<xla::PjRtBuffer>(&[xs, ws, bs])
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let wall = start.elapsed().as_secs_f64();
-        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
-        let values = out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        Ok((values, InferStats { wall_seconds: wall }))
-    }
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("unwrapping tuple: {e:?}"))?;
+            let values = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("reading output: {e:?}"))?;
+            if values.len() != out_len {
+                return Err(anyhow!(
+                    "output length {} != expected {out_len}",
+                    values.len()
+                ));
+            }
+            Ok((values, InferStats { wall_seconds: wall }))
+        }
 
-    /// Artifacts directory this runtime reads from.
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.artifacts_dir
+        /// Run one frame and decode detections.
+        pub fn infer(
+            &self,
+            variant: &str,
+            frame: &Frame,
+        ) -> Result<(super::Detections, InferStats)> {
+            let (raw, stats) = self.infer_raw(variant, frame)?;
+            let dets = super::Detections::from_head_output(
+                &raw,
+                self.manifest.num_anchors as usize,
+                self.manifest.head_out as usize,
+                &self.manifest.classes,
+            );
+            Ok((dets, stats))
+        }
+
+        /// Execute the bare Layer-1 kernel artifact (microbenchmarks).
+        pub fn run_kernel(
+            &self,
+            name: &str,
+            x: &[f32],
+            w: &[f32],
+            b: &[f32],
+        ) -> Result<(Vec<f32>, InferStats)> {
+            let entry = self
+                .manifest
+                .kernel(name)
+                .ok_or_else(|| anyhow!("unknown kernel {name:?}"))?
+                .clone();
+            self.prepare(name)?;
+            let (m, k, n) = (entry.m as usize, entry.k as usize, entry.n as usize);
+            ensure!(x.len() == m * k, "x length mismatch");
+            ensure!(w.len() == k * n, "w length mismatch");
+            ensure!(b.len() == n, "b length mismatch");
+
+            let start = Instant::now();
+            let xs = self
+                .client
+                .buffer_from_host_buffer(x, &[m, k], None)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let ws = self
+                .client
+                .buffer_from_host_buffer(w, &[k, n], None)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let bs = self
+                .client
+                .buffer_from_host_buffer(b, &[n], None)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let exes = self.executables.borrow();
+            let exe = exes.get(name).expect("prepared above");
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&[xs, ws, bs])
+                .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let wall = start.elapsed().as_secs_f64();
+            let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+            let values = out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            Ok((values, InferStats { wall_seconds: wall }))
+        }
+
+        /// Artifacts directory this runtime reads from.
+        pub fn artifacts_dir(&self) -> &Path {
+            &self.artifacts_dir
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_runtime::ModelRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_runtime {
+    use super::{InferStats, Manifest};
+    use crate::streams::Frame;
+    use crate::util::error::{anyhow, Result};
+    use std::path::Path;
+
+    /// Uninhabited stand-in for the PJRT runtime when the crate is
+    /// built without the `pjrt` feature.  [`ModelRuntime::load`] always
+    /// errors, so the accessor methods can never actually be reached —
+    /// but they keep every caller compiling against one API.
+    pub enum ModelRuntime {}
+
+    fn unavailable() -> crate::util::error::Error {
+        anyhow!(
+            "camcloud was built without the `pjrt` feature; to run live \
+             inference, vendor the `xla` crate, add it as an optional \
+             dependency wired to the `pjrt` feature (see rust/Cargo.toml), \
+             and rebuild with `--features pjrt`"
+        )
+    }
+
+    impl ModelRuntime {
+        pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+            let _ = artifacts_dir.as_ref();
+            Err(unavailable())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            match *self {}
+        }
+
+        pub fn prepare(&self, _variant: &str) -> Result<()> {
+            match *self {}
+        }
+
+        pub fn infer_raw(&self, _variant: &str, _frame: &Frame) -> Result<(Vec<f32>, InferStats)> {
+            match *self {}
+        }
+
+        pub fn infer(
+            &self,
+            _variant: &str,
+            _frame: &Frame,
+        ) -> Result<(super::Detections, InferStats)> {
+            match *self {}
+        }
+
+        pub fn run_kernel(
+            &self,
+            _name: &str,
+            _x: &[f32],
+            _w: &[f32],
+            _b: &[f32],
+        ) -> Result<(Vec<f32>, InferStats)> {
+            match *self {}
+        }
+
+        pub fn artifacts_dir(&self) -> &Path {
+            match *self {}
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_runtime::ModelRuntime;
 
 /// Locate the repo's artifacts directory from the `CAMCLOUD_ARTIFACTS`
 /// environment variable or by walking up from the current directory
@@ -216,5 +304,16 @@ pub fn default_artifacts_dir() -> PathBuf {
         if !dir.pop() {
             return PathBuf::from("artifacts");
         }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::ModelRuntime;
+
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = ModelRuntime::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,481 @@
+//! Event-driven discrete-event simulation engine.
+//!
+//! Executes the same fluid processor-sharing model as the fixed-step
+//! engine, but only does work when the system actually changes:
+//!
+//! * **frame arrival** — a stream's next frame joins its queue (or is
+//!   dropped at the cap);
+//! * **service completion** — the head frame of some stream finishes
+//!   both device legs and leaves;
+//! * the final flush at `duration_s`.
+//!
+//! Between events every service rate is constant, so each instance
+//! advances lazily: work and utilization meters are integrated over the
+//! elapsed span only when one of *its* streams has an event.  Rates are
+//! re-solved (water-filling per device) for the affected instance
+//! alone, and a per-instance generation counter invalidates stale
+//! completion wake-ups in the heap.
+//!
+//! Cost is O(events x streams-per-instance x log events) instead of the
+//! fixed-step engine's O(duration/dt x total streams): at fleet scale
+//! (1,000+ streams spread over hundreds of instances) that is orders of
+//! magnitude less work, and the result is *exact* rather than
+//! tick-quantized.
+
+use super::sim::{water_fill_into, SimConfig, SimReport, Simulation};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Work below this is considered finished (float-residue clamp).
+const WORK_EPS: f64 = 1e-12;
+/// Completion wake-ups are scheduled at least this far ahead so event
+/// time strictly advances even when float rounding leaves sub-ulp
+/// residues on a leg.
+const MIN_DT: f64 = 1e-9;
+
+/// One frame in flight (event engine).
+struct EvJob {
+    remaining_cpu: f64,
+    remaining_gpu: f64,
+}
+
+enum EventKind {
+    /// Next frame of `stream` arrives.
+    Arrival { stream: usize },
+    /// Wake-up to harvest completions on `instance`; stale when the
+    /// instance's rates changed since it was scheduled.
+    Completion { instance: usize, generation: u64 },
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .expect("event times are never NaN")
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Mutable engine state, split from the borrowed `Simulation` topology.
+struct EngineState {
+    queues: Vec<VecDeque<EvJob>>,
+    rate_cpu: Vec<f64>,
+    rate_gpu: Vec<f64>,
+    completed: Vec<u64>,
+    dropped: u64,
+    /// Current total allocated rate per device (for utilization).
+    used: Vec<f64>,
+    /// Per-instance lazy-advance clock.
+    last_update: Vec<f64>,
+    /// Per-instance rate generation (invalidates stale wake-ups).
+    generation: Vec<u64>,
+    /// Scratch buffers so the per-event hot path never allocates.
+    demand_scratch: Vec<(usize, f64)>,
+    rates_scratch: Vec<f64>,
+    open_scratch: Vec<usize>,
+}
+
+/// Static topology lookups precomputed from the `Simulation`.
+struct Topology {
+    /// CPU device index per stream.
+    cpu_dev: Vec<usize>,
+    /// GPU device index per stream (GPU-mode streams only).
+    gpu_dev: Vec<Option<usize>>,
+    /// Inter-arrival period per stream (`1/fps`; infinity when idle).
+    period: Vec<f64>,
+    /// Streams hosted per instance.
+    streams_of: Vec<Vec<usize>>,
+    /// Devices per instance.
+    devices_of: Vec<Vec<usize>>,
+    /// Owning instance per stream.
+    instance_of: Vec<usize>,
+}
+
+impl Topology {
+    fn build(sim: &Simulation) -> Topology {
+        let n_instances = sim
+            .device_index
+            .keys()
+            .map(|(inst, _)| inst + 1)
+            .max()
+            .unwrap_or(0);
+        let mut cpu_dev = Vec::with_capacity(sim.streams.len());
+        let mut gpu_dev = Vec::with_capacity(sim.streams.len());
+        let mut period = Vec::with_capacity(sim.streams.len());
+        let mut streams_of = vec![Vec::new(); n_instances];
+        let mut instance_of = Vec::with_capacity(sim.streams.len());
+        for (s, exec) in sim.streams.iter().enumerate() {
+            cpu_dev.push(sim.device_index[&(exec.instance, 0)]);
+            gpu_dev.push(exec.gpu_index.map(|g| sim.device_index[&(exec.instance, 1 + g)]));
+            period.push(if exec.desired_fps > 0.0 {
+                1.0 / exec.desired_fps
+            } else {
+                f64::INFINITY
+            });
+            streams_of[exec.instance].push(s);
+            instance_of.push(exec.instance);
+        }
+        let mut devices_of = vec![Vec::new(); n_instances];
+        for (&(inst, _slot), &dev) in &sim.device_index {
+            devices_of[inst].push(dev);
+        }
+        Topology { cpu_dev, gpu_dev, period, streams_of, devices_of, instance_of }
+    }
+}
+
+/// Run `sim` under the event-driven engine.
+pub(crate) fn run_event(sim: &mut Simulation, config: SimConfig) -> SimReport {
+    let n_streams = sim.streams.len();
+    let topo = Topology::build(sim);
+    let n_instances = topo.streams_of.len();
+    let mut state = EngineState {
+        queues: (0..n_streams).map(|_| VecDeque::new()).collect(),
+        rate_cpu: vec![0.0; n_streams],
+        rate_gpu: vec![0.0; n_streams],
+        completed: vec![0u64; n_streams],
+        dropped: 0,
+        used: vec![0.0; sim.devices.len()],
+        last_update: vec![0.0; n_instances],
+        generation: vec![0u64; n_instances],
+        demand_scratch: Vec::new(),
+        rates_scratch: Vec::new(),
+        open_scratch: Vec::new(),
+    };
+
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut push = |heap: &mut BinaryHeap<Reverse<Event>>, time: f64, kind: EventKind| {
+        heap.push(Reverse(Event { time, seq, kind }));
+        seq += 1;
+    };
+
+    for (s, exec) in sim.streams.iter().enumerate() {
+        if exec.desired_fps > 0.0 && config.duration_s > 0.0 {
+            push(&mut heap, 0.0, EventKind::Arrival { stream: s });
+        }
+    }
+
+    while let Some(Reverse(event)) = heap.pop() {
+        match event.kind {
+            EventKind::Arrival { stream } => {
+                let inst = topo.instance_of[stream];
+                advance(sim, &topo, &mut state, inst, event.time);
+                let harvested = harvest(&topo, &mut state, inst);
+                // Enqueue the frame (or drop at the cap) and schedule the
+                // stream's next arrival inside the horizon.
+                let was_empty = state.queues[stream].is_empty();
+                let mut enqueued = false;
+                if state.queues[stream].len() >= config.queue_cap {
+                    state.dropped += 1;
+                } else {
+                    let exec = &sim.streams[stream];
+                    state.queues[stream].push_back(EvJob {
+                        remaining_cpu: exec.cpu_work,
+                        remaining_gpu: exec.gpu_work,
+                    });
+                    enqueued = true;
+                }
+                let next = event.time + topo.period[stream];
+                if next < config.duration_s {
+                    push(&mut heap, next, EventKind::Arrival { stream });
+                }
+                // Rates only change when some head frame changed: a frame
+                // queued behind a busy head (or dropped) leaves every
+                // service rate — and the pending wake-up — valid.
+                if harvested || (was_empty && enqueued) {
+                    recompute(sim, &topo, &mut state, inst, event.time, config.duration_s, |t, k| {
+                        push(&mut heap, t, k)
+                    });
+                }
+            }
+            EventKind::Completion { instance, generation } => {
+                if generation != state.generation[instance] {
+                    continue; // stale wake-up: rates changed since scheduling
+                }
+                advance(sim, &topo, &mut state, instance, event.time);
+                harvest(&topo, &mut state, instance);
+                recompute(sim, &topo, &mut state, instance, event.time, config.duration_s, |t, k| {
+                    push(&mut heap, t, k)
+                });
+            }
+        }
+    }
+
+    // Final flush: integrate meters/work up to the horizon and harvest
+    // frames finishing exactly at the end (the fixed-step engine counts
+    // completions through its last tick too).
+    for inst in 0..n_instances {
+        advance(sim, &topo, &mut state, inst, config.duration_s);
+        harvest(&topo, &mut state, inst);
+    }
+
+    sim.report(&state.completed, state.dropped, config.duration_s)
+}
+
+/// Integrate the instance's meters and in-flight work from its last
+/// update to `now` (rates are constant over that span).
+fn advance(sim: &mut Simulation, topo: &Topology, state: &mut EngineState, inst: usize, now: f64) {
+    let dt = now - state.last_update[inst];
+    if dt <= 0.0 {
+        return;
+    }
+    state.last_update[inst] = now;
+    for &dev in &topo.devices_of[inst] {
+        let device = &mut sim.devices[dev];
+        let util = if device.capacity > 0.0 {
+            state.used[dev] / device.capacity
+        } else {
+            0.0
+        };
+        device.meter.record(util, dt);
+    }
+    for &s in &topo.streams_of[inst] {
+        if let Some(job) = state.queues[s].front_mut() {
+            if state.rate_cpu[s] > 0.0 {
+                let left = job.remaining_cpu - state.rate_cpu[s] * dt;
+                job.remaining_cpu = if left <= WORK_EPS { 0.0 } else { left };
+            }
+            if state.rate_gpu[s] > 0.0 {
+                let left = job.remaining_gpu - state.rate_gpu[s] * dt;
+                job.remaining_gpu = if left <= WORK_EPS { 0.0 } else { left };
+            }
+        }
+    }
+}
+
+/// Pop completed head frames on the instance's streams; reports
+/// whether any head changed (rates must be re-solved then).
+fn harvest(topo: &Topology, state: &mut EngineState, inst: usize) -> bool {
+    let mut any = false;
+    for &s in &topo.streams_of[inst] {
+        while let Some(job) = state.queues[s].front() {
+            if job.remaining_cpu <= WORK_EPS && job.remaining_gpu <= WORK_EPS {
+                state.queues[s].pop_front();
+                state.completed[s] += 1;
+                any = true;
+            } else {
+                break;
+            }
+        }
+    }
+    any
+}
+
+/// Re-solve the instance's processor-sharing rates (water-filling per
+/// device over the head frame of each stream) and schedule the next
+/// completion wake-up.
+fn recompute(
+    sim: &Simulation,
+    topo: &Topology,
+    state: &mut EngineState,
+    inst: usize,
+    now: f64,
+    horizon: f64,
+    mut push: impl FnMut(f64, EventKind),
+) {
+    state.generation[inst] += 1;
+
+    // Collect active legs per device of this instance (scratch-buffered:
+    // this runs once per head-frame change, so it must not allocate).
+    for &s in &topo.streams_of[inst] {
+        state.rate_cpu[s] = 0.0;
+        state.rate_gpu[s] = 0.0;
+    }
+    for &dev in &topo.devices_of[inst] {
+        state.used[dev] = 0.0;
+        state.demand_scratch.clear();
+        for &s in &topo.streams_of[inst] {
+            let Some(job) = state.queues[s].front() else {
+                continue;
+            };
+            let exec = &sim.streams[s];
+            if topo.cpu_dev[s] == dev && job.remaining_cpu > WORK_EPS {
+                state.demand_scratch.push((s, exec.cpu_parallelism));
+            } else if topo.gpu_dev[s] == Some(dev) && job.remaining_gpu > WORK_EPS {
+                state.demand_scratch.push((s, exec.gpu_parallelism));
+            }
+        }
+        if state.demand_scratch.is_empty() {
+            continue;
+        }
+        water_fill_into(
+            sim.devices[dev].capacity,
+            &state.demand_scratch,
+            &mut state.rates_scratch,
+            &mut state.open_scratch,
+        );
+        for (&(s, _cap), &rate) in state.demand_scratch.iter().zip(&state.rates_scratch) {
+            if topo.cpu_dev[s] == dev {
+                state.rate_cpu[s] = rate;
+            } else {
+                state.rate_gpu[s] = rate;
+            }
+            state.used[dev] += rate;
+        }
+    }
+
+    // Earliest leg completion among head frames at the new rates.
+    let mut tmin = f64::INFINITY;
+    for &s in &topo.streams_of[inst] {
+        if let Some(job) = state.queues[s].front() {
+            if job.remaining_cpu > WORK_EPS && state.rate_cpu[s] > 0.0 {
+                tmin = tmin.min(job.remaining_cpu / state.rate_cpu[s]);
+            }
+            if job.remaining_gpu > WORK_EPS && state.rate_gpu[s] > 0.0 {
+                tmin = tmin.min(job.remaining_gpu / state.rate_gpu[s]);
+            }
+        }
+    }
+    if tmin.is_finite() {
+        let at = now + tmin.max(MIN_DT);
+        if at <= horizon {
+            push(at, EventKind::Completion { instance: inst, generation: state.generation[inst] });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::calibration::Calibration;
+    use crate::sched::SimEngine;
+    use crate::streams::StreamSpec;
+    use crate::types::{Program, VGA};
+    use std::collections::BTreeMap;
+
+    /// One ZF stream at 0.25 FPS on a private 8-core CPU device: 30
+    /// arrivals in 120 s, each served in exactly 7.12/3.9872 ≈ 1.7857 s,
+    /// so every frame completes and utilization is analytic.
+    fn solo_sim() -> Simulation {
+        let cal = Calibration::paper();
+        let spec = &StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.25)[0];
+        let mut sim = Simulation {
+            devices: Vec::new(),
+            device_index: BTreeMap::new(),
+            device_names: Vec::new(),
+            streams: Vec::new(),
+        };
+        sim.add_device(0, 0, "cpu", 8.0);
+        let p = cal.profile(Program::Zf, VGA);
+        sim.add_stream(
+            0,
+            spec,
+            &p,
+            crate::profiler::ExecChoice::Cpu,
+            crate::types::DimLayout::new(0),
+        );
+        sim
+    }
+
+    #[test]
+    fn solo_stream_completes_every_frame_exactly() {
+        let mut sim = solo_sim();
+        let report = sim.run(SimConfig::for_duration(120.0));
+        // Arrivals at 0, 4, ..., 116 -> 30 frames, all served.
+        assert_eq!(report.frames_completed, 30);
+        assert_eq!(report.frames_dropped, 0);
+        assert!((report.overall_performance() - 1.0).abs() < 1e-9);
+        // Busy 30 * 1.7857 s at 3.9872/8 cores utilization.
+        let (mean, peak) = report.device_utilization[&(0, "cpu".to_string())];
+        let busy = 30.0 * (7.12 / (7.12 * 0.56)) / 120.0;
+        let expect = busy * (7.12 * 0.56) / 8.0;
+        assert!((mean - expect).abs() < 1e-6, "mean {mean} vs {expect}");
+        assert!((peak - (7.12 * 0.56) / 8.0).abs() < 1e-9, "peak {peak}");
+    }
+
+    #[test]
+    fn event_count_scales_with_arrivals_not_duration() {
+        // A low-rate stream over a long horizon must stay exact: the
+        // event engine has no dt to accumulate error against.
+        let mut sim = solo_sim();
+        let report = sim.run(SimConfig::for_duration(1200.0));
+        assert_eq!(report.frames_completed, 300);
+        assert!((report.overall_performance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturated_stream_drops_beyond_queue_cap() {
+        // ZF desired 2 FPS on a 2-core device: service takes
+        // 7.12/2 = 3.56 s per frame vs a 0.5 s arrival period, so the
+        // queue (cap 4) fills and the tail is dropped.
+        let cal = Calibration::paper();
+        let spec = &StreamSpec::replicate(0, 1, VGA, Program::Zf, 2.0)[0];
+        let mut sim = Simulation {
+            devices: Vec::new(),
+            device_index: BTreeMap::new(),
+            device_names: Vec::new(),
+            streams: Vec::new(),
+        };
+        sim.add_device(0, 0, "cpu", 2.0);
+        let p = cal.profile(Program::Zf, VGA);
+        sim.add_stream(
+            0,
+            spec,
+            &p,
+            crate::profiler::ExecChoice::Cpu,
+            crate::types::DimLayout::new(0),
+        );
+        let config = SimConfig {
+            duration_s: 60.0,
+            queue_cap: 4,
+            ..SimConfig::default()
+        };
+        let report = sim.run(config);
+        // Throughput is capacity-bound: 60 s / 3.56 s = 16 completions.
+        assert_eq!(report.frames_completed, 16);
+        // 120 arrivals, 16 served, 4 still queued -> 100 dropped.
+        assert_eq!(report.frames_dropped, 100);
+        assert!(report.overall_performance() < 0.15);
+        let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
+        assert!(mean > 0.99, "device saturated, got {mean}");
+    }
+
+    #[test]
+    fn zero_fps_stream_is_inert() {
+        let cal = Calibration::paper();
+        let spec = StreamSpec::new(
+            crate::streams::Camera::new(0, VGA),
+            Program::Zf,
+            0.0,
+        );
+        let mut sim = Simulation {
+            devices: Vec::new(),
+            device_index: BTreeMap::new(),
+            device_names: Vec::new(),
+            streams: Vec::new(),
+        };
+        sim.add_device(0, 0, "cpu", 8.0);
+        let p = cal.profile(Program::Zf, VGA);
+        sim.add_stream(
+            0,
+            &spec,
+            &p,
+            crate::profiler::ExecChoice::Cpu,
+            crate::types::DimLayout::new(0),
+        );
+        let report = sim.run(SimConfig::for_duration(10.0).with_engine(SimEngine::Event));
+        assert_eq!(report.frames_completed, 0);
+        assert_eq!(report.frames_dropped, 0);
+        assert_eq!(report.overall_performance(), 1.0); // vacuous target
+    }
+}

@@ -9,11 +9,25 @@
 //! degrades throughput gracefully — reproducing the performance
 //! behaviour of the paper's Figs. 5–6.
 //!
-//! The engine is a deterministic fixed-step simulation (`dt` default
-//! 10 ms).  Real inference (PJRT) is exercised by the coordinator's
-//! live mode instead; here the latencies come from the profiles, which
-//! the live test runs calibrate.
+//! Two engines execute that model behind the [`SimConfig`] /
+//! [`SimReport`] facade, selected by [`SimEngine`]:
+//!
+//! * [`event`] — the default **event-driven discrete-event engine**:
+//!   a priority queue of frame-arrival and service-completion events,
+//!   processor-sharing rates re-solved only when an instance's state
+//!   changes, utilization meters integrated over exact event spans.
+//!   Cost scales with how much *happens* (arrivals + completions), not
+//!   with the simulated duration — the fleet-scale path.
+//! * [`sim`]'s fixed-step engine — the original fluid engine advancing
+//!   a global `dt` clock (10 ms default).  O(duration/dt x streams),
+//!   kept as the independently-simple baseline; the two engines agree
+//!   within 1% on the paper scenarios (see `tests/engine_equivalence`).
+//!
+//! Real inference (PJRT) is exercised by the coordinator's live mode
+//! instead; here the latencies come from the profiles, which the live
+//! test runs calibrate.
 
+pub mod event;
 pub mod sim;
 
-pub use sim::{SimConfig, SimReport, Simulation};
+pub use sim::{SimConfig, SimEngine, SimReport, Simulation};

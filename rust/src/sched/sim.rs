@@ -1,4 +1,13 @@
-//! The fixed-step fluid simulation engine.
+//! Simulation facade ([`SimConfig`] / [`SimReport`] / [`Simulation`])
+//! plus the fixed-step *fluid* reference engine.
+//!
+//! Two engines execute the same model (see [`super::event`] for the
+//! default event-driven one); [`SimEngine`] selects between them and
+//! [`Simulation::run`] dispatches.  The fixed-step engine advances a
+//! global clock in `dt` increments and re-solves the processor-sharing
+//! allocation every tick — O(duration/dt x streams) regardless of how
+//! much actually happens — and is kept as the independently-simple
+//! cross-validation baseline for the event engine.
 
 use crate::manager::AllocationPlan;
 use crate::metrics::{overall_performance, StreamPerf, UtilizationMeter};
@@ -7,55 +16,106 @@ use crate::streams::StreamSpec;
 use crate::types::DimLayout;
 use std::collections::BTreeMap;
 
+/// Which simulation engine executes the run.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SimEngine {
+    /// Event-driven discrete-event engine (the default): work only at
+    /// frame arrivals, service completions, and queue drops.
+    #[default]
+    Event,
+    /// Fixed-step fluid engine (`dt` ticks) — the reference baseline.
+    FixedStep,
+}
+
+impl std::str::FromStr for SimEngine {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "event" | "event-driven" => Ok(SimEngine::Event),
+            "fixed" | "fixed-step" | "step" => Ok(SimEngine::FixedStep),
+            other => Err(format!("unknown engine {other:?} (expected event or fixed)")),
+        }
+    }
+}
+
+impl std::fmt::Display for SimEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimEngine::Event => "event",
+            SimEngine::FixedStep => "fixed",
+        })
+    }
+}
+
 /// Simulation parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
     /// Simulated duration in seconds.
     pub duration_s: f64,
-    /// Time step (seconds).  10 ms resolves the fastest latencies the
-    /// calibrated profiles produce.
+    /// Time step (seconds) of the fixed-step engine.  10 ms resolves the
+    /// fastest latencies the calibrated profiles produce.  The event
+    /// engine ignores it.
     pub dt: f64,
     /// Per-stream job-queue cap; frames arriving beyond it are dropped
     /// (a real ingest pipeline drops frames under backpressure too).
     pub queue_cap: usize,
+    /// Engine selection (default: event-driven).
+    pub engine: SimEngine,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { duration_s: 120.0, dt: 0.01, queue_cap: 32 }
+        SimConfig {
+            duration_s: 120.0,
+            dt: 0.01,
+            queue_cap: 32,
+            engine: SimEngine::default(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Default config over a custom duration.
+    pub fn for_duration(duration_s: f64) -> SimConfig {
+        SimConfig { duration_s, ..SimConfig::default() }
+    }
+
+    /// Same config under a different engine.
+    pub fn with_engine(self, engine: SimEngine) -> SimConfig {
+        SimConfig { engine, ..self }
     }
 }
 
 /// One frame in flight.
 #[derive(Clone, Debug)]
-struct Job {
-    stream: usize,
+pub(crate) struct Job {
+    pub(crate) stream: usize,
     /// Remaining work per device slot (same indexing as `DeviceSlot`).
-    remaining_cpu: f64,
-    remaining_gpu: f64,
+    pub(crate) remaining_cpu: f64,
+    pub(crate) remaining_gpu: f64,
 }
 
 /// A fluid-capacity device on an instance.
 #[derive(Clone, Debug)]
-struct Device {
+pub(crate) struct Device {
     /// Capacity in core-seconds per second.
-    capacity: f64,
-    meter: UtilizationMeter,
+    pub(crate) capacity: f64,
+    pub(crate) meter: UtilizationMeter,
 }
 
 /// Per-stream static execution parameters derived from profile+choice.
 #[derive(Clone, Debug)]
-struct StreamExec {
-    instance: usize,
+pub(crate) struct StreamExec {
+    pub(crate) instance: usize,
     /// Device index of the GPU used (instance-local), if GPU mode.
-    gpu_index: Option<usize>,
-    desired_fps: f64,
-    cpu_work: f64,
-    gpu_work: f64,
+    pub(crate) gpu_index: Option<usize>,
+    pub(crate) desired_fps: f64,
+    pub(crate) cpu_work: f64,
+    pub(crate) gpu_work: f64,
     /// Max draw rates (cores) reproducing the solo latency.
-    cpu_parallelism: f64,
-    gpu_parallelism: f64,
-    id: String,
+    pub(crate) cpu_parallelism: f64,
+    pub(crate) gpu_parallelism: f64,
+    pub(crate) id: String,
 }
 
 /// Simulation outcome.
@@ -86,26 +146,32 @@ impl SimReport {
 
 /// The simulation: instances with devices, streams with assignments.
 pub struct Simulation {
-    devices: Vec<Device>,
+    pub(crate) devices: Vec<Device>,
     /// `(instance, slot)` -> device index in `devices`; slot 0 = CPU,
     /// slot 1+g = GPU g.
-    device_index: BTreeMap<(usize, usize), usize>,
-    device_names: Vec<(usize, String)>,
-    streams: Vec<StreamExec>,
+    pub(crate) device_index: BTreeMap<(usize, usize), usize>,
+    pub(crate) device_names: Vec<(usize, String)>,
+    pub(crate) streams: Vec<StreamExec>,
 }
 
 impl Simulation {
     /// Build a simulation from an allocation plan.
     ///
-    /// `resolve_profile` maps a stream index to its resource profile
-    /// (the same source the manager used).
+    /// `profiles[i]` is the resource profile of stream `i` (the same
+    /// source the manager used) — the pipeline resolves profiles once
+    /// and hands the slice through rather than threading closures.
     pub fn from_plan(
         plan: &AllocationPlan,
         specs: &[StreamSpec],
         layout: DimLayout,
-        resolve_profile: impl Fn(usize) -> ResourceProfile,
+        profiles: &[ResourceProfile],
         catalog: &crate::cloud::Catalog,
     ) -> Simulation {
+        assert_eq!(
+            specs.len(),
+            profiles.len(),
+            "one profile per stream spec"
+        );
         let mut sim = Simulation {
             devices: Vec::new(),
             device_index: BTreeMap::new(),
@@ -121,22 +187,22 @@ impl Simulation {
                 sim.add_device(inst_idx, 1 + g, &format!("gpu{g}"), gpu.cores);
             }
             for assign in &inst.streams {
-                let profile = resolve_profile(assign.stream_index);
+                let profile = &profiles[assign.stream_index];
                 let spec = &specs[assign.stream_index];
-                sim.add_stream(inst_idx, spec, &profile, assign.choice, layout);
+                sim.add_stream(inst_idx, spec, profile, assign.choice, layout);
             }
         }
         sim
     }
 
-    fn add_device(&mut self, instance: usize, slot: usize, name: &str, capacity: f64) {
+    pub(crate) fn add_device(&mut self, instance: usize, slot: usize, name: &str, capacity: f64) {
         let idx = self.devices.len();
         self.devices.push(Device { capacity, meter: UtilizationMeter::new() });
         self.device_index.insert((instance, slot), idx);
         self.device_names.push((instance, name.to_string()));
     }
 
-    fn add_stream(
+    pub(crate) fn add_stream(
         &mut self,
         instance: usize,
         spec: &StreamSpec,
@@ -170,8 +236,16 @@ impl Simulation {
         self.streams.push(exec);
     }
 
-    /// Run the simulation.
+    /// Run the simulation with the engine selected by `config.engine`.
     pub fn run(&mut self, config: SimConfig) -> SimReport {
+        match config.engine {
+            SimEngine::Event => super::event::run_event(self, config),
+            SimEngine::FixedStep => self.run_fixed(config),
+        }
+    }
+
+    /// The fixed-step fluid engine.
+    pub fn run_fixed(&mut self, config: SimConfig) -> SimReport {
         let steps = (config.duration_s / config.dt).round() as u64;
         let mut queues: Vec<Vec<Job>> = vec![Vec::new(); self.streams.len()];
         let mut next_arrival: Vec<f64> = self
@@ -264,6 +338,12 @@ impl Simulation {
             }
         }
 
+        self.report(&completed, dropped, config.duration_s)
+    }
+
+    /// Assemble the [`SimReport`] from final engine state (shared by
+    /// both engines so the facade stays identical).
+    pub(crate) fn report(&self, completed: &[u64], dropped: u64, duration_s: f64) -> SimReport {
         let streams = self
             .streams
             .iter()
@@ -271,7 +351,7 @@ impl Simulation {
             .map(|(s, exec)| StreamPerf {
                 stream_id: exec.id.clone(),
                 desired_fps: exec.desired_fps,
-                achieved_fps: completed[s] as f64 / config.duration_s,
+                achieved_fps: completed[s] as f64 / duration_s,
             })
             .collect();
         let device_utilization = self
@@ -290,24 +370,44 @@ impl Simulation {
             device_utilization,
             frames_completed: completed.iter().sum(),
             frames_dropped: dropped,
-            duration_s: config.duration_s,
+            duration_s,
         }
     }
 }
 
 /// Water-filling: split `capacity` among demands with per-demand caps.
 /// Returns the rate granted to each demand.
-fn water_fill(capacity: f64, demands: &[(usize, f64)]) -> Vec<f64> {
-    let mut rates = vec![0.0f64; demands.len()];
+pub(crate) fn water_fill(capacity: f64, demands: &[(usize, f64)]) -> Vec<f64> {
+    let mut rates = Vec::new();
+    let mut open = Vec::new();
+    water_fill_into(capacity, demands, &mut rates, &mut open);
+    rates
+}
+
+/// Allocation-free [`water_fill`]: writes the granted rates into
+/// `rates` using `open` as scratch — the event engine calls this on
+/// every rate re-solve, so the hot path must not allocate.
+pub(crate) fn water_fill_into(
+    capacity: f64,
+    demands: &[(usize, f64)],
+    rates: &mut Vec<f64>,
+    open: &mut Vec<usize>,
+) {
+    rates.clear();
+    rates.resize(demands.len(), 0.0);
+    open.clear();
+    open.extend(0..demands.len());
     let mut remaining = capacity;
-    let mut open: Vec<usize> = (0..demands.len()).collect();
     // Iteratively give each open demand an equal share, capping at its
     // parallelism; repeat with the leftover.
     while !open.is_empty() && remaining > 1e-12 {
         let share = remaining / open.len() as f64;
-        let mut next_open = Vec::with_capacity(open.len());
+        let mut kept = 0;
         let mut leftover = 0.0;
-        for &i in &open {
+        let mut idx = 0;
+        while idx < open.len() {
+            let i = open[idx];
+            idx += 1;
             let cap = demands[i].1;
             let want = cap - rates[i];
             if want <= share {
@@ -315,17 +415,17 @@ fn water_fill(capacity: f64, demands: &[(usize, f64)]) -> Vec<f64> {
                 leftover += share - want;
             } else {
                 rates[i] += share;
-                next_open.push(i);
+                open[kept] = i;
+                kept += 1;
             }
         }
-        if next_open.len() == open.len() {
+        if kept == open.len() {
             // Nobody hit their cap: allocation is final.
             break;
         }
-        open = next_open;
+        open.truncate(kept);
         remaining = leftover;
     }
-    rates
 }
 
 #[cfg(test)]
@@ -337,24 +437,25 @@ mod tests {
     use crate::streams::StreamSpec;
     use crate::types::{Program, VGA};
 
+    const BOTH_ENGINES: [SimEngine; 2] = [SimEngine::Event, SimEngine::FixedStep];
+
     fn simulate(
         streams: Vec<StreamSpec>,
         strategy: Strategy,
         duration: f64,
+        engine: SimEngine,
     ) -> (SimReport, crate::manager::AllocationPlan) {
         let cal = Calibration::paper();
         let catalog = Catalog::paper_experiments();
         let mgr = ResourceManager::new(catalog.clone(), &cal);
         let plan = mgr.allocate(&streams, strategy).unwrap();
         let layout = catalog.layout();
-        let mut sim = Simulation::from_plan(
-            &plan,
-            &streams,
-            layout,
-            |i| cal.profile(streams[i].program, streams[i].camera.frame_size),
-            &catalog,
-        );
-        let report = sim.run(SimConfig { duration_s: duration, dt: 0.01, queue_cap: 32 });
+        let profiles: Vec<_> = streams
+            .iter()
+            .map(|s| cal.profile(s.program, s.camera.frame_size))
+            .collect();
+        let mut sim = Simulation::from_plan(&plan, &streams, layout, &profiles, &catalog);
+        let report = sim.run(SimConfig::for_duration(duration).with_engine(engine));
         (report, plan)
     }
 
@@ -370,33 +471,47 @@ mod tests {
     }
 
     #[test]
+    fn engine_strings_round_trip() {
+        assert_eq!("event".parse::<SimEngine>().unwrap(), SimEngine::Event);
+        assert_eq!("fixed".parse::<SimEngine>().unwrap(), SimEngine::FixedStep);
+        assert_eq!("fixed-step".parse::<SimEngine>().unwrap(), SimEngine::FixedStep);
+        assert!("fluid".parse::<SimEngine>().is_err());
+        assert_eq!(SimEngine::Event.to_string(), "event");
+        assert_eq!(SimEngine::default(), SimEngine::Event);
+    }
+
+    #[test]
     fn underloaded_instance_meets_rates() {
         // Scenario 2 on one c4.2xlarge: must hit ~100% performance.
-        let mut streams = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.20);
-        streams.extend(StreamSpec::replicate(10, 1, VGA, Program::Zf, 0.50));
-        let (report, _) = simulate(streams, Strategy::St3, 120.0);
-        assert!(
-            report.overall_performance() > 0.9,
-            "performance {}",
-            report.overall_performance()
-        );
-        assert_eq!(report.frames_dropped, 0);
-        // CPU utilization ~ 6.712/8 = 84%.
-        let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
-        assert!((mean - 0.839).abs() < 0.05, "cpu util {mean}");
+        for engine in BOTH_ENGINES {
+            let mut streams = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.20);
+            streams.extend(StreamSpec::replicate(10, 1, VGA, Program::Zf, 0.50));
+            let (report, _) = simulate(streams, Strategy::St3, 120.0, engine);
+            assert!(
+                report.overall_performance() > 0.9,
+                "{engine}: performance {}",
+                report.overall_performance()
+            );
+            assert_eq!(report.frames_dropped, 0, "{engine}");
+            // CPU utilization ~ 6.712/8 = 84%.
+            let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
+            assert!((mean - 0.839).abs() < 0.05, "{engine}: cpu util {mean}");
+        }
     }
 
     #[test]
     fn gpu_mode_uses_both_devices() {
-        let streams = StreamSpec::replicate(0, 4, VGA, Program::Zf, 2.0);
-        let (report, plan) = simulate(streams, Strategy::St2, 60.0);
-        assert_eq!(plan.instances[0].type_name, "g2.2xlarge");
-        let cpu = report.device_utilization[&(0, "cpu".to_string())];
-        let gpu = report.device_utilization[&(0, "gpu0".to_string())];
-        // 4 streams x 2 fps: cpu 8*0.88/8 = 88%... wait: 4*2*0.88 = 7.04/8.
-        assert!(cpu.0 > 0.5, "cpu util {}", cpu.0);
-        assert!(gpu.0 > 0.2, "gpu util {}", gpu.0);
-        assert!(report.overall_performance() > 0.9);
+        for engine in BOTH_ENGINES {
+            let streams = StreamSpec::replicate(0, 4, VGA, Program::Zf, 2.0);
+            let (report, plan) = simulate(streams, Strategy::St2, 60.0, engine);
+            assert_eq!(plan.instances[0].type_name, "g2.2xlarge");
+            let cpu = report.device_utilization[&(0, "cpu".to_string())];
+            let gpu = report.device_utilization[&(0, "gpu0".to_string())];
+            // 4 streams x 2 fps x 0.88 core-s = 7.04 of 8 cores.
+            assert!(cpu.0 > 0.5, "{engine}: cpu util {}", cpu.0);
+            assert!(gpu.0 > 0.2, "{engine}: gpu util {}", gpu.0);
+            assert!(report.overall_performance() > 0.9, "{engine}");
+        }
     }
 
     #[test]
@@ -405,60 +520,72 @@ mod tests {
         // hand-built over-subscribed workload on ST2 GPU instance:
         // 3 VGG streams at 3 FPS each = 9 fps total vs max 3.61 per GPU
         // — but the manager would refuse; build sim manually instead.
-        let cal = Calibration::paper();
-        let catalog = Catalog::paper_experiments();
-        let streams = StreamSpec::replicate(0, 3, VGA, Program::Vgg16, 3.0);
-        // Manager would give 3 instances; cram them onto one by hand.
-        let mut sim = Simulation {
-            devices: Vec::new(),
-            device_index: BTreeMap::new(),
-            device_names: Vec::new(),
-            streams: Vec::new(),
-        };
-        sim.add_device(0, 0, "cpu", 8.0);
-        sim.add_device(0, 1, "gpu0", 1536.0);
-        let layout = catalog.layout();
-        for spec in &streams {
-            let p = cal.profile(spec.program, spec.camera.frame_size);
-            sim.add_stream(0, spec, &p, ExecChoice::Gpu(0), layout);
+        for engine in BOTH_ENGINES {
+            let cal = Calibration::paper();
+            let catalog = Catalog::paper_experiments();
+            let streams = StreamSpec::replicate(0, 3, VGA, Program::Vgg16, 3.0);
+            // Manager would give 3 instances; cram them onto one by hand.
+            let mut sim = Simulation {
+                devices: Vec::new(),
+                device_index: BTreeMap::new(),
+                device_names: Vec::new(),
+                streams: Vec::new(),
+            };
+            sim.add_device(0, 0, "cpu", 8.0);
+            sim.add_device(0, 1, "gpu0", 1536.0);
+            let layout = catalog.layout();
+            for spec in &streams {
+                let p = cal.profile(spec.program, spec.camera.frame_size);
+                sim.add_stream(0, spec, &p, ExecChoice::Gpu(0), layout);
+            }
+            let config = SimConfig {
+                duration_s: 60.0,
+                queue_cap: 8,
+                engine,
+                ..SimConfig::default()
+            };
+            let report = sim.run(config);
+            // Offered load: GPU 3 x 3 x 353.28 = 3179 > 1536 gpu-cores AND
+            // CPU residual 3 x 3 x 2.12 = 19.1 > 8 cores.  The CPU residual
+            // is the binding leg (paper Fig. 5: "performance starts to drop
+            // ... after the CPU resources get overutilized").
+            assert!(report.overall_performance() < 0.7, "{engine}");
+            assert!(report.frames_dropped > 0, "{engine}");
+            let cpu = report.device_utilization[&(0, "cpu".to_string())];
+            assert!(cpu.0 > 0.95, "{engine}: cpu should saturate, got {}", cpu.0);
+            let gpu = report.device_utilization[&(0, "gpu0".to_string())];
+            assert!(gpu.0 > 0.7, "{engine}: gpu should be busy, got {}", gpu.0);
         }
-        let report = sim.run(SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 8 });
-        // Offered load: GPU 3 x 3 x 353.28 = 3179 > 1536 gpu-cores AND
-        // CPU residual 3 x 3 x 2.12 = 19.1 > 8 cores.  The CPU residual
-        // is the binding leg (paper Fig. 5: "performance starts to drop
-        // ... after the CPU resources get overutilized").
-        assert!(report.overall_performance() < 0.7);
-        assert!(report.frames_dropped > 0);
-        let cpu = report.device_utilization[&(0, "cpu".to_string())];
-        assert!(cpu.0 > 0.95, "cpu should saturate, got {}", cpu.0);
-        let gpu = report.device_utilization[&(0, "gpu0".to_string())];
-        assert!(gpu.0 > 0.7, "gpu should be busy, got {}", gpu.0);
     }
 
     #[test]
     fn solo_latency_matches_profile() {
         // One ZF stream on CPU at a low rate: every frame must complete
         // within ~1/0.56 s, performance 100%.
-        let streams = StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.25);
-        let (report, _) = simulate(streams, Strategy::St1, 120.0);
-        assert!(report.overall_performance() > 0.95);
-        // Utilization: 0.25 * 7.12 / 8 = 22.25%.
-        let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
-        assert!((mean - 0.2225).abs() < 0.03, "cpu util {mean}");
+        for engine in BOTH_ENGINES {
+            let streams = StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.25);
+            let (report, _) = simulate(streams, Strategy::St1, 120.0, engine);
+            assert!(report.overall_performance() > 0.95, "{engine}");
+            // Utilization: 0.25 * 7.12 / 8 = 22.25%.
+            let (mean, _) = report.device_utilization[&(0, "cpu".to_string())];
+            assert!((mean - 0.2225).abs() < 0.03, "{engine}: cpu util {mean}");
+        }
     }
 
     #[test]
     fn utilization_linear_in_stream_count() {
         // Fig. 6 shape: utilization grows ~linearly with cameras.
-        let mut utils = Vec::new();
-        for n in [1u32, 2, 3] {
-            let streams = StreamSpec::replicate(0, n, VGA, Program::Vgg16, 1.0);
-            let (report, _) = simulate(streams, Strategy::St2, 60.0);
-            utils.push(report.device_utilization[&(0, "cpu".to_string())].0);
+        for engine in BOTH_ENGINES {
+            let mut utils = Vec::new();
+            for n in [1u32, 2, 3] {
+                let streams = StreamSpec::replicate(0, n, VGA, Program::Vgg16, 1.0);
+                let (report, _) = simulate(streams, Strategy::St2, 60.0, engine);
+                utils.push(report.device_utilization[&(0, "cpu".to_string())].0);
+            }
+            let r21 = utils[1] / utils[0];
+            let r32 = utils[2] / utils[1];
+            assert!((r21 - 2.0).abs() < 0.2, "{engine}: ratio {r21}");
+            assert!((r32 - 1.5).abs() < 0.15, "{engine}: ratio {r32}");
         }
-        let r21 = utils[1] / utils[0];
-        let r32 = utils[2] / utils[1];
-        assert!((r21 - 2.0).abs() < 0.2, "ratio {r21}");
-        assert!((r32 - 1.5).abs() < 0.15, "ratio {r32}");
     }
 }

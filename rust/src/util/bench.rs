@@ -69,7 +69,13 @@ impl Bench {
     }
 
     /// Measure `f` for `samples` timed runs after `warmup` untimed runs.
-    pub fn measure<F: FnMut()>(&mut self, name: &str, warmup: usize, samples: usize, mut f: F) -> &Measurement {
+    pub fn measure<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        samples: usize,
+        mut f: F,
+    ) -> &Measurement {
         for _ in 0..warmup {
             f();
         }

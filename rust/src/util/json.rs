@@ -20,12 +20,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {message}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub message: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],
@@ -53,9 +60,9 @@ impl Json {
     }
 
     /// `get` that errors with the key name — manifest-style field access.
-    pub fn field(&self, key: &str) -> anyhow::Result<&Json> {
+    pub fn field(&self, key: &str) -> crate::util::error::Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing field {key:?}"))
+            .ok_or_else(|| crate::anyhow!("missing field {key:?}"))
     }
 
     pub fn as_f64(&self) -> Option<f64> {
@@ -101,28 +108,28 @@ impl Json {
     }
 
     /// Typed field accessors used by manifest/config loaders.
-    pub fn f64_field(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn f64_field(&self, key: &str) -> crate::util::error::Result<f64> {
         self.field(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} is not a number"))
+            .ok_or_else(|| crate::anyhow!("field {key:?} is not a number"))
     }
 
-    pub fn u64_field(&self, key: &str) -> anyhow::Result<u64> {
+    pub fn u64_field(&self, key: &str) -> crate::util::error::Result<u64> {
         self.field(key)?
             .as_u64()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} is not a non-negative integer"))
+            .ok_or_else(|| crate::anyhow!("field {key:?} is not a non-negative integer"))
     }
 
-    pub fn str_field(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn str_field(&self, key: &str) -> crate::util::error::Result<&str> {
         self.field(key)?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} is not a string"))
+            .ok_or_else(|| crate::anyhow!("field {key:?} is not a string"))
     }
 
-    pub fn arr_field(&self, key: &str) -> anyhow::Result<&[Json]> {
+    pub fn arr_field(&self, key: &str) -> crate::util::error::Result<&[Json]> {
         self.field(key)?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("field {key:?} is not an array"))
+            .ok_or_else(|| crate::anyhow!("field {key:?} is not an array"))
     }
 
     // ----- parsing ------------------------------------------------------

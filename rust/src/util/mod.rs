@@ -1,10 +1,11 @@
 //! In-tree utility substrates.
 //!
-//! The offline build environment vendors only `xla`, `anyhow`,
-//! `thiserror` and `log`, so the small libraries a crate like this
-//! would normally pull from crates.io are implemented here instead
-//! (DESIGN.md §Substitutions):
+//! The build environment is offline (the optional `xla` crate behind
+//! the `pjrt` feature is the single external dependency), so the small
+//! libraries a crate like this would normally pull from crates.io are
+//! implemented here instead (DESIGN.md §Substitutions):
 //!
+//! * [`error`] — message-chain error type + macros (`anyhow` substitute);
 //! * [`json`] — JSON parser/serializer (manifest, profiles, reports);
 //! * [`rng`] — SplitMix64/xoshiro PRNG (workload generators);
 //! * [`cli`] — argument parsing for the `camcloud` binary;
@@ -14,6 +15,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,235 @@
+//! First-class workload abstraction and synthetic fleet generation.
+//!
+//! A [`Workload`] is what the coordinator's pipeline consumes: the
+//! stream specs, the catalog they price against, and (optionally) a
+//! workload-specific profile store that overrides the coordinator's
+//! source.  The paper's three scenarios, JSON configs, and synthetic
+//! fleets all become `Workload`s and flow through one
+//! profile → allocate → provision → simulate → bill path.
+//!
+//! [`FleetSpec`] opens the scenario space beyond the paper's Table 5:
+//! it synthesizes parameterized fleets — N cameras with a seeded mix of
+//! programs, frame rates, and frame sizes — so fleet-scale runs
+//! (hundreds to thousands of streams) are one builder expression away.
+
+use crate::cloud::Catalog;
+use crate::config::Scenario;
+use crate::profiler::store::ProfileStore;
+use crate::streams::{Camera, StreamSpec};
+use crate::types::{FrameSize, Program, VGA};
+use crate::util::rng::Rng;
+
+/// A named workload: streams + catalog + optional measured profiles.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub streams: Vec<StreamSpec>,
+    pub catalog: Catalog,
+    /// Workload-specific measured profiles; when set they take
+    /// precedence over the coordinator's profile source.
+    pub profiles: Option<ProfileStore>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, streams: Vec<StreamSpec>, catalog: Catalog) -> Workload {
+        Workload {
+            name: name.into(),
+            streams,
+            catalog,
+            profiles: None,
+        }
+    }
+
+    /// One of the paper's Table 5 scenarios as a workload.
+    pub fn paper(number: u32) -> crate::util::error::Result<Workload> {
+        Ok(crate::config::paper_scenario(number)?.into())
+    }
+
+    /// Attach measured profiles that override the coordinator's source.
+    pub fn with_profiles(mut self, profiles: ProfileStore) -> Workload {
+        self.profiles = Some(profiles);
+        self
+    }
+
+    /// View as a [`Scenario`] (reporting paths still speak scenario).
+    pub fn to_scenario(&self) -> Scenario {
+        Scenario {
+            name: self.name.clone(),
+            streams: self.streams.clone(),
+            catalog: self.catalog.clone(),
+        }
+    }
+}
+
+impl From<Scenario> for Workload {
+    fn from(s: Scenario) -> Workload {
+        Workload {
+            name: s.name,
+            streams: s.streams,
+            catalog: s.catalog,
+            profiles: None,
+        }
+    }
+}
+
+/// Parameterized synthetic fleet: N cameras with a seeded mix of
+/// programs, rates, and frame sizes.
+///
+/// Defaults are chosen so the fleet is *allocatable* under every
+/// strategy that admits GPUs: rates stay below the calibrated
+/// `max_fps_gpu` of each program at VGA (3.61 / 9.15), mirroring the
+/// mixed scenarios of the paper while scaling to thousands of streams.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Number of cameras (one stream each).
+    pub cameras: u32,
+    pub seed: u64,
+    /// Fraction of streams running the heavier VGG-16 program.
+    pub vgg_fraction: f64,
+    /// Desired-rate range (fps) for VGG-16 streams.
+    pub vgg_fps: (f64, f64),
+    /// Desired-rate range (fps) for ZF streams.
+    pub zf_fps: (f64, f64),
+    /// Frame sizes to draw from (uniformly).
+    pub frame_sizes: Vec<FrameSize>,
+    pub catalog: Catalog,
+}
+
+impl FleetSpec {
+    pub fn new(cameras: u32) -> FleetSpec {
+        FleetSpec {
+            cameras,
+            seed: 7,
+            vgg_fraction: 0.5,
+            vgg_fps: (0.05, 3.0),
+            zf_fps: (0.1, 8.0),
+            frame_sizes: vec![VGA],
+            catalog: Catalog::paper_experiments(),
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> FleetSpec {
+        self.seed = seed;
+        self
+    }
+
+    pub fn vgg_fraction(mut self, fraction: f64) -> FleetSpec {
+        self.vgg_fraction = fraction;
+        self
+    }
+
+    pub fn vgg_fps(mut self, lo: f64, hi: f64) -> FleetSpec {
+        self.vgg_fps = (lo, hi);
+        self
+    }
+
+    pub fn zf_fps(mut self, lo: f64, hi: f64) -> FleetSpec {
+        self.zf_fps = (lo, hi);
+        self
+    }
+
+    pub fn frame_sizes(mut self, sizes: &[FrameSize]) -> FleetSpec {
+        self.frame_sizes = sizes.to_vec();
+        self
+    }
+
+    pub fn catalog(mut self, catalog: Catalog) -> FleetSpec {
+        self.catalog = catalog;
+        self
+    }
+
+    /// Synthesize the fleet (deterministic per seed).
+    pub fn build(&self) -> Workload {
+        assert!(!self.frame_sizes.is_empty(), "fleet needs frame sizes");
+        let mut rng = Rng::new(self.seed);
+        let streams = (0..self.cameras)
+            .map(|i| {
+                let program = if rng.bool(self.vgg_fraction) {
+                    Program::Vgg16
+                } else {
+                    Program::Zf
+                };
+                let (lo, hi) = match program {
+                    Program::Vgg16 => self.vgg_fps,
+                    Program::Zf => self.zf_fps,
+                };
+                let fps = rng.range_f64(lo, hi);
+                let size = *rng.choose(&self.frame_sizes);
+                StreamSpec::new(Camera::new(i, size), program, fps)
+            })
+            .collect();
+        Workload::new(
+            format!("fleet-{}-{}", self.seed, self.cameras),
+            streams,
+            self.catalog.clone(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::manager::Strategy;
+
+    #[test]
+    fn fleet_is_deterministic_per_seed() {
+        let a = FleetSpec::new(50).seed(11).build();
+        let b = FleetSpec::new(50).seed(11).build();
+        assert_eq!(a.streams.len(), 50);
+        assert_eq!(a.name, "fleet-11-50");
+        for (x, y) in a.streams.iter().zip(&b.streams) {
+            assert_eq!(x.desired_fps, y.desired_fps);
+            assert_eq!(x.program, y.program);
+            assert_eq!(x.camera.id, y.camera.id);
+        }
+        let c = FleetSpec::new(50).seed(12).build();
+        assert!(a
+            .streams
+            .iter()
+            .zip(&c.streams)
+            .any(|(x, y)| x.desired_fps != y.desired_fps));
+    }
+
+    #[test]
+    fn fleet_mix_parameters_apply() {
+        let all_vgg = FleetSpec::new(30).vgg_fraction(1.0).build();
+        assert!(all_vgg.streams.iter().all(|s| s.program == Program::Vgg16));
+        let all_zf = FleetSpec::new(30).vgg_fraction(0.0).zf_fps(2.0, 4.0).build();
+        assert!(all_zf
+            .streams
+            .iter()
+            .all(|s| s.program == Program::Zf && (2.0..4.0).contains(&s.desired_fps)));
+        let sizes = [FrameSize::new(192, 256)];
+        let small = FleetSpec::new(5).frame_sizes(&sizes).build();
+        assert!(small.streams.iter().all(|s| s.camera.frame_size == sizes[0]));
+    }
+
+    #[test]
+    fn default_fleet_is_allocatable_under_st3() {
+        // The generator's default ranges stay below the GPU latency
+        // caps, so ST3 must always find a plan.
+        for seed in [1u64, 2, 3] {
+            let fleet = FleetSpec::new(60).seed(seed).build();
+            let c = Coordinator::new();
+            let profiled = c.profile_workload(fleet);
+            let plan = profiled.allocate(Strategy::St3).unwrap();
+            assert!(!plan.instances.is_empty());
+            let placed: usize = plan.instances.iter().map(|i| i.streams.len()).sum();
+            assert_eq!(placed, 60);
+        }
+    }
+
+    #[test]
+    fn workload_round_trips_scenario() {
+        let scenario = crate::config::paper_scenario(1).unwrap();
+        let w: Workload = scenario.clone().into();
+        assert_eq!(w.name, "scenario-1");
+        assert_eq!(w.streams.len(), scenario.streams.len());
+        let back = w.to_scenario();
+        assert_eq!(back.name, scenario.name);
+        assert_eq!(back.catalog.types.len(), scenario.catalog.types.len());
+        assert!(Workload::paper(2).unwrap().profiles.is_none());
+        assert!(Workload::paper(9).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Cross-validation of the two simulation engines.
+//!
+//! The event-driven engine is the serving default; the fixed-step fluid
+//! engine is the independently-simple baseline.  They execute the same
+//! processor-sharing model, so on every workload they must agree:
+//!
+//! * overall performance within 1% (the fixed-step engine quantizes
+//!   completions to 10 ms ticks and discards sub-tick service residue,
+//!   so it reads slightly low under load — never more than ~1%);
+//! * the same saturation verdict, with drop counts within a few frames
+//!   of each other;
+//! * device utilization means within 2% absolute.
+
+use camcloud::config::paper_scenario;
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::Strategy;
+use camcloud::profiler::ExecChoice;
+use camcloud::reports::single_instance_run_with;
+use camcloud::sched::{SimConfig, SimEngine, SimReport};
+use camcloud::types::Program;
+use camcloud::workload::{FleetSpec, Workload};
+
+fn run_both(workload: &Workload, strategy: Strategy, duration: f64) -> (SimReport, SimReport) {
+    let c = Coordinator::new();
+    let profiled = c.profile_workload(workload.clone());
+    let plan = profiled.allocate(strategy).expect("workload allocates");
+    let event = profiled
+        .simulation(&plan)
+        .run(SimConfig::for_duration(duration));
+    let fixed = profiled
+        .simulation(&plan)
+        .run(SimConfig::for_duration(duration).with_engine(SimEngine::FixedStep));
+    (event, fixed)
+}
+
+fn assert_reports_agree(label: &str, event: &SimReport, fixed: &SimReport) {
+    let pe = event.overall_performance();
+    let pf = fixed.overall_performance();
+    assert!(
+        (pe - pf).abs() <= 0.01,
+        "{label}: overall performance diverges: event {pe} vs fixed {pf}"
+    );
+    // Same saturation verdict...
+    assert_eq!(
+        event.frames_dropped > 0,
+        fixed.frames_dropped > 0,
+        "{label}: drop verdicts diverge: event {} vs fixed {}",
+        event.frames_dropped,
+        fixed.frames_dropped
+    );
+    // ...and near-identical drop counts (boundary frames may land on
+    // either side of a 10 ms tick).
+    let slack = 5 + (fixed.frames_dropped / 50);
+    assert!(
+        event.frames_dropped.abs_diff(fixed.frames_dropped) <= slack,
+        "{label}: drop counts diverge: event {} vs fixed {}",
+        event.frames_dropped,
+        fixed.frames_dropped
+    );
+    // Utilization means per device within 2% absolute.
+    for (device, (mean_e, _)) in &event.device_utilization {
+        let (mean_f, _) = fixed.device_utilization[device];
+        assert!(
+            (mean_e - mean_f).abs() <= 0.02,
+            "{label}: {device:?} utilization diverges: event {mean_e} vs fixed {mean_f}"
+        );
+    }
+}
+
+#[test]
+fn engines_agree_on_all_paper_scenarios() {
+    for n in 1..=3u32 {
+        let workload: Workload = paper_scenario(n).unwrap().into();
+        for strategy in Strategy::ALL {
+            if n == 3 && strategy == Strategy::St1 {
+                continue; // Table 6 "Fail": nothing to simulate
+            }
+            let (event, fixed) = run_both(&workload, strategy, 60.0);
+            assert_reports_agree(&format!("scenario {n} {strategy}"), &event, &fixed);
+            // Paper target: all successful allocations deliver >= 90%.
+            assert!(event.overall_performance() >= 0.9, "scenario {n} {strategy}");
+            assert_eq!(event.frames_dropped, 0, "scenario {n} {strategy}");
+        }
+    }
+}
+
+#[test]
+fn engines_agree_on_seeded_synthetic_fleet() {
+    // A 40-stream seeded fleet mixes programs and rates across several
+    // instances — wide enough that single-stream boundary wobble cannot
+    // hide a real divergence.
+    let fleet = FleetSpec::new(40).seed(1234).build();
+    let (event, fixed) = run_both(&fleet, Strategy::St3, 120.0);
+    assert_reports_agree("fleet-1234-40", &event, &fixed);
+    assert!(event.overall_performance() >= 0.9);
+}
+
+#[test]
+fn engines_agree_at_saturation() {
+    // 6 VGG-16 streams at 2 FPS on one g2.2xlarge (the Fig. 6 endpoint):
+    // the CPU residual saturates, throughput is capacity-bound, and the
+    // 32-deep queues overflow — both engines must degrade identically.
+    let c = Coordinator::new();
+    let mut reports = Vec::new();
+    for engine in [SimEngine::Event, SimEngine::FixedStep] {
+        reports.push(single_instance_run_with(
+            &c,
+            Program::Vgg16,
+            2.0,
+            6,
+            ExecChoice::Gpu(0),
+            SimConfig::for_duration(120.0).with_engine(engine),
+        ));
+    }
+    let (event, fixed) = (&reports[0], &reports[1]);
+    assert_reports_agree("fig6 saturation", event, fixed);
+    assert!(event.frames_dropped > 0, "saturated instance must drop");
+    assert!(event.overall_performance() < 0.8);
+    let cpu = event.device_utilization[&(0, "cpu".to_string())];
+    assert!(cpu.0 > 0.95, "CPU must saturate, got {}", cpu.0);
+}
+
+#[test]
+fn event_engine_is_exact_where_fixed_step_quantizes() {
+    // Underloaded single stream: the event engine completes exactly
+    // floor-of-horizon frames with zero drops; the fixed-step engine
+    // must land within one frame of it.
+    let workload: Workload = paper_scenario(2).unwrap().into();
+    let (event, fixed) = run_both(&workload, Strategy::St3, 60.0);
+    assert_eq!(event.frames_dropped, 0);
+    assert_eq!(fixed.frames_dropped, 0);
+    assert!(event.frames_completed.abs_diff(fixed.frames_completed) <= 1);
+    assert!((event.overall_performance() - 1.0).abs() < 1e-9);
+}

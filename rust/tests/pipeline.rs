@@ -20,7 +20,7 @@ use camcloud::util::proptest::{check, Config};
 #[test]
 fn full_pipeline_reproduces_table6() {
     let c = Coordinator::new();
-    let sim = SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 32 };
+    let sim = SimConfig::for_duration(60.0);
 
     // (scenario, st1 cost, st2 cost, st3 cost) — Table 6; None = Fail.
     let expected: [(u32, Option<f64>, f64, f64); 3] = [
@@ -88,7 +88,7 @@ fn mixed_frame_sizes_allocate_and_run() {
         .run_scenario(
             &scenario,
             Strategy::St3,
-            SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 32 },
+            SimConfig::for_duration(60.0),
         )
         .unwrap();
     assert!(run.report.overall_performance() > 0.9);
@@ -152,7 +152,7 @@ fn multi_gpu_instances_pack_across_gpus() {
         .run_scenario(
             &scenario,
             Strategy::St3,
-            SimConfig { duration_s: 60.0, dt: 0.01, queue_cap: 32 },
+            SimConfig::for_duration(60.0),
         )
         .unwrap();
     assert!(
@@ -319,7 +319,11 @@ fn prop_allocation_respects_headroom() {
     check(
         "headroom",
         Config { cases: 25, seed: 0xEF },
-        |rng| Scenario::random(rng.next_u64(), rng.range_u64(2, 14) as u32, Catalog::paper_experiments()),
+        |rng| {
+            let seed = rng.next_u64();
+            let n = rng.range_u64(2, 14) as u32;
+            Scenario::random(seed, n, Catalog::paper_experiments())
+        },
         |scenario| {
             let mgr = ResourceManager::new(scenario.catalog.clone(), &c);
             match mgr.allocate(&scenario.streams, Strategy::St3) {
@@ -350,7 +354,11 @@ fn prop_st3_never_costlier_than_st1_or_st2() {
     check(
         "st3-dominates",
         Config { cases: 25, seed: 0x1234 },
-        |rng| Scenario::random(rng.next_u64(), rng.range_u64(2, 12) as u32, Catalog::paper_experiments()),
+        |rng| {
+            let seed = rng.next_u64();
+            let n = rng.range_u64(2, 12) as u32;
+            Scenario::random(seed, n, Catalog::paper_experiments())
+        },
         |scenario| {
             let mgr = ResourceManager::new(scenario.catalog.clone(), &c);
             let st3 = match mgr.allocate(&scenario.streams, Strategy::St3) {
