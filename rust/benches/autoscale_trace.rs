@@ -1,0 +1,84 @@
+//! Bench: autoscaling overhead at fleet scale.
+//!
+//! The autoscale runner adds planning work on top of simulation: a
+//! fresh MVBP solve per epoch, a repack-feasibility solve, and the
+//! transition/hysteresis bookkeeping.  This bench isolates that
+//! per-epoch planning cost on fleets of 100 / 500 / 1,000 cameras and
+//! gates it: at 1,000 streams the full planning step (fresh solve +
+//! repack + transition + gate) must stay under 250 ms p50 — autoscaling
+//! must never dominate a simulated epoch.
+//!
+//! A short end-to-end churn-trace run is timed alongside so the
+//! planning share of a whole run is visible in the JSON record.
+
+use camcloud::coordinator::{AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::manager::{
+    plan_transition, repack_onto, worth_reallocating, ResourceManager, Strategy,
+};
+use camcloud::util::bench::Bench;
+use camcloud::workload::trace::WorkloadTrace;
+use camcloud::workload::FleetSpec;
+
+fn main() {
+    let mut bench = Bench::new("autoscale_trace");
+    let coordinator = Coordinator::new();
+
+    for &n in &[100u32, 500, 1_000] {
+        // Two adjacent demand levels of one fleet: the planning step of
+        // an epoch transition from `low` (already provisioned) to `high`.
+        let low = FleetSpec::new(n).seed(42).build();
+        let high = FleetSpec::new(n + n / 2).seed(42).build();
+        let profiled_low = coordinator.profile_workload(low);
+        let profiled_high = coordinator.profile_workload(high.clone());
+        let current = profiled_low
+            .allocate(Strategy::St3)
+            .expect("default fleet allocates");
+        bench.record(&format!("fleet_instances@{n}"), current.instances.len() as f64);
+
+        let planning = bench
+            .measure(&format!("epoch_planning_{n}streams"), 2, 8, || {
+                let fresh = profiled_high
+                    .allocate(Strategy::St3)
+                    .expect("scaled fleet allocates");
+                let mgr = ResourceManager::new(high.catalog.clone(), &profiled_high);
+                let serving = repack_onto(&mgr, &current, &high.streams, Strategy::St3)
+                    .expect("repack classifies feasibility");
+                let realloc = plan_transition(&current, &fresh);
+                let go = worth_reallocating(&realloc, &current, serving.is_some(), 4.0, 0.5);
+                std::hint::black_box((fresh, serving, realloc, go));
+            })
+            .p50();
+        if n == 1_000 {
+            assert!(
+                planning < 0.250,
+                "per-epoch planning at 1,000 streams must stay under 250 ms, got {planning:.3} s"
+            );
+        }
+    }
+
+    // End-to-end: a short churn trace (4 x 120 s epochs around 200
+    // cameras) through the reactive policy, planning + simulation.
+    let pool = FleetSpec::new(300).seed(7).build();
+    let mut trace = WorkloadTrace::new("bench-churn", pool.catalog.clone());
+    for (i, &count) in [200usize, 300, 240, 160].iter().enumerate() {
+        trace = trace.epoch(
+            format!("e{i}-n{count}"),
+            120.0,
+            pool.streams[..count].to_vec(),
+        );
+    }
+    let runner = AutoscaleRunner::new(&coordinator);
+    let mut billed = 0.0;
+    let e2e = bench
+        .measure("reactive_churn_4x120s_300cams", 1, 5, || {
+            let out = runner
+                .run(&trace, ScalePolicy::Reactive)
+                .expect("churn trace runs");
+            billed = out.total_billed.as_f64();
+            std::hint::black_box(out);
+        })
+        .p50();
+    bench.record("reactive_total_billed", billed);
+    bench.record("e2e_p50_s", e2e);
+    bench.finish();
+}

@@ -3,6 +3,31 @@
 //! Implements the pay-as-you-go model the paper relies on (§1): each
 //! instance bills its hourly cost for every *started* hour between
 //! provisioning and termination (classic EC2 semantics).
+//!
+//! # Started-hour semantics across reallocation epochs
+//!
+//! The meter is the reason churn has a real price in the autoscaling
+//! subsystem (`workload::trace` + `coordinator::autoscale`):
+//!
+//! * provisioning an instance immediately bills its first hour, even if
+//!   it is terminated seconds later — flapping between fleets is never
+//!   free;
+//! * an instance *kept* across consecutive epochs accumulates one
+//!   continuous span, so `ceil` rounding is paid once at termination
+//!   rather than once per epoch — keeping a fleet for two half-hour
+//!   epochs costs one hour, while terminating and re-provisioning at
+//!   the epoch boundary costs two;
+//! * terminating mid-hour wastes the remainder of the started hour,
+//!   which is exactly the waste the
+//!   [`worth_reallocating`](crate::manager::realloc::worth_reallocating)
+//!   hysteresis gate weighs against horizon savings.
+//!
+//! One meter therefore spans a whole trace run: records open at each
+//! provision, close at each terminate, and [`BillingMeter::total_cost`]
+//! prices the union at settlement.  [`BillingMeter::hourly_rate`] is the
+//! *run-rate* view — the combined hourly cost of instances running at an
+//! instant — and is well-defined mid-simulation even for records whose
+//! termination has already been written with a later timestamp.
 
 use super::catalog::InstanceType;
 use super::instance::{InstanceId, SimInstance};
@@ -65,11 +90,14 @@ impl BillingMeter {
             .collect()
     }
 
-    /// Combined hourly run-rate of instances still running at `now`.
+    /// Combined hourly run-rate of instances running at `now`: started
+    /// at or before `now` and not terminated until strictly after it.
+    /// A record whose `end` is already written with a *later* timestamp
+    /// still counts — mid-simulation queries must see it running.
     pub fn hourly_rate(&self, now: f64) -> Dollars {
         self.records
             .values()
-            .filter(|(_, start, end)| *start <= now && end.is_none())
+            .filter(|(_, start, end)| *start <= now && end.map_or(true, |e| e > now))
             .map(|(itype, _, _)| itype.hourly_cost)
             .sum()
     }
@@ -129,5 +157,22 @@ mod tests {
         m.on_terminate(InstanceId(1), 20.0);
         assert_eq!(m.hourly_rate(30.0), Dollars::from_f64(0.650));
         assert_eq!(m.instance_count(), 2);
+    }
+
+    #[test]
+    fn hourly_rate_counts_instances_terminating_later() {
+        // Regression: a record whose end is already written must still
+        // count toward the run-rate at times *before* that end.  The
+        // pre-fix filter (`end.is_none()`) excluded it, under-reporting
+        // mid-simulation run-rate queries.
+        let (mut m, _) = meter_with(1, "c4.2xlarge", 0.0);
+        m.on_terminate(InstanceId(1), 20.0);
+        assert_eq!(m.hourly_rate(10.0), Dollars::from_f64(0.419));
+        // At the termination instant and after it, the instance is gone.
+        assert_eq!(m.hourly_rate(20.0), Dollars::ZERO);
+        assert_eq!(m.hourly_rate(25.0), Dollars::ZERO);
+        // Not-yet-started instances never count.
+        let (m2, _) = meter_with(2, "g2.2xlarge", 50.0);
+        assert_eq!(m2.hourly_rate(10.0), Dollars::ZERO);
     }
 }

@@ -43,6 +43,68 @@ pub fn paper_scenario(number: u32) -> Result<Scenario> {
     })
 }
 
+/// Parse a `"catalog": ["c4.2xlarge", ...]` field (the full Table 1
+/// catalog when absent).  Shared by scenario and trace configs.
+pub(crate) fn catalog_from_json(v: &Json) -> Result<Catalog> {
+    match v.get("catalog") {
+        None => Ok(Catalog::aws_table1()),
+        Some(c) => {
+            let names: Vec<&str> = c
+                .as_arr()
+                .ok_or_else(|| anyhow!("catalog must be an array of type names"))?
+                .iter()
+                .map(|x| x.as_str().ok_or_else(|| anyhow!("catalog entries are strings")))
+                .collect::<Result<Vec<_>>>()?;
+            let cat = Catalog::aws_table1().subset(&names);
+            if cat.types.len() != names.len() {
+                return Err(anyhow!("unknown instance type in catalog {names:?}"));
+            }
+            Ok(cat)
+        }
+    }
+}
+
+/// Parse config stream rows (`{"program", "fps", "cameras", "frame_h",
+/// "frame_w"}`) into expanded stream specs.  Shared by scenario and
+/// trace-epoch configs.
+pub(crate) fn stream_rows_from_json(rows: &[Json]) -> Result<Vec<StreamSpec>> {
+    let mut streams = Vec::new();
+    let mut next_camera = 0u32;
+    for row in rows {
+        let program: Program = row
+            .str_field("program")?
+            .parse()
+            .map_err(crate::util::error::Error::msg)?;
+        let fps = row.f64_field("fps")?;
+        if fps <= 0.0 {
+            return Err(anyhow!("fps must be positive"));
+        }
+        let cameras = row.get("cameras").and_then(Json::as_u64).unwrap_or(1) as u32;
+        let h = row.get("frame_h").and_then(Json::as_u64).unwrap_or(VGA.h as u64) as u32;
+        let w = row.get("frame_w").and_then(Json::as_u64).unwrap_or(VGA.w as u64) as u32;
+        streams.extend(StreamSpec::replicate(
+            next_camera,
+            cameras,
+            FrameSize::new(h, w),
+            program,
+            fps,
+        ));
+        next_camera += cameras.max(1) * 100;
+    }
+    Ok(streams)
+}
+
+/// Serialize one stream spec back to the config row shape.
+pub(crate) fn stream_to_json(s: &StreamSpec) -> Json {
+    Json::obj(vec![
+        ("program".to_string(), Json::Str(s.program.name().to_string())),
+        ("fps".to_string(), Json::Num(s.desired_fps)),
+        ("cameras".to_string(), Json::Num(1.0)),
+        ("frame_h".to_string(), Json::Num(s.camera.frame_size.h as f64)),
+        ("frame_w".to_string(), Json::Num(s.camera.frame_size.w as f64)),
+    ])
+}
+
 impl Scenario {
     /// Parse a scenario from a JSON config:
     ///
@@ -58,45 +120,8 @@ impl Scenario {
     /// ```
     pub fn from_json(v: &Json) -> Result<Scenario> {
         let name = v.str_field("name")?.to_string();
-        let catalog = match v.get("catalog") {
-            None => Catalog::aws_table1(),
-            Some(c) => {
-                let names: Vec<&str> = c
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("catalog must be an array of type names"))?
-                    .iter()
-                    .map(|x| x.as_str().ok_or_else(|| anyhow!("catalog entries are strings")))
-                    .collect::<Result<Vec<_>>>()?;
-                let cat = Catalog::aws_table1().subset(&names);
-                if cat.types.len() != names.len() {
-                    return Err(anyhow!("unknown instance type in catalog {names:?}"));
-                }
-                cat
-            }
-        };
-        let mut streams = Vec::new();
-        let mut next_camera = 0u32;
-        for row in v.arr_field("streams")? {
-            let program: Program = row
-                .str_field("program")?
-                .parse()
-                .map_err(crate::util::error::Error::msg)?;
-            let fps = row.f64_field("fps")?;
-            if fps <= 0.0 {
-                return Err(anyhow!("fps must be positive"));
-            }
-            let cameras = row.get("cameras").and_then(Json::as_u64).unwrap_or(1) as u32;
-            let h = row.get("frame_h").and_then(Json::as_u64).unwrap_or(VGA.h as u64) as u32;
-            let w = row.get("frame_w").and_then(Json::as_u64).unwrap_or(VGA.w as u64) as u32;
-            streams.extend(StreamSpec::replicate(
-                next_camera,
-                cameras,
-                FrameSize::new(h, w),
-                program,
-                fps,
-            ));
-            next_camera += cameras.max(1) * 100;
-        }
+        let catalog = catalog_from_json(v)?;
+        let streams = stream_rows_from_json(v.arr_field("streams")?)?;
         if streams.is_empty() {
             return Err(anyhow!("scenario has no streams"));
         }
@@ -110,19 +135,7 @@ impl Scenario {
 
     /// Serialize back to the config JSON shape (one row per stream).
     pub fn to_json(&self) -> Json {
-        let streams: Vec<Json> = self
-            .streams
-            .iter()
-            .map(|s| {
-                Json::obj(vec![
-                    ("program".to_string(), Json::Str(s.program.name().to_string())),
-                    ("fps".to_string(), Json::Num(s.desired_fps)),
-                    ("cameras".to_string(), Json::Num(1.0)),
-                    ("frame_h".to_string(), Json::Num(s.camera.frame_size.h as f64)),
-                    ("frame_w".to_string(), Json::Num(s.camera.frame_size.w as f64)),
-                ])
-            })
-            .collect();
+        let streams: Vec<Json> = self.streams.iter().map(stream_to_json).collect();
         Json::obj(vec![
             ("name".to_string(), Json::Str(self.name.clone())),
             (

@@ -21,6 +21,15 @@
 //! [`Coordinator::run_scenario`] is the scenario-flavored facade the
 //! reports and examples use.  Paper scenarios and synthetic fleets go
 //! through the same path.
+//!
+//! The [`autoscale`] submodule lifts the pipeline into the time
+//! dimension: an [`autoscale::AutoscaleRunner`] re-plans per epoch of a
+//! demand trace, carries the provisioned fleet across epochs, and
+//! compares provisioning policies under started-hour billing.
+
+pub mod autoscale;
+
+pub use autoscale::{AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, ScalePolicy};
 
 use crate::cloud::{BillingMeter, Catalog, InstanceId, SimInstance};
 use crate::config::Scenario;

@@ -14,9 +14,11 @@
 //! * [`streams`] — simulated network cameras producing frames at desired
 //!   rates and sizes.
 //! * [`workload`] — the first-class [`workload::Workload`] unit the
-//!   pipeline consumes (streams + catalog + optional profiles) and the
+//!   pipeline consumes (streams + catalog + optional profiles), the
 //!   [`workload::FleetSpec`] synthetic-fleet generator that scales the
-//!   scenario space beyond the paper's Table 5.
+//!   scenario space beyond the paper's Table 5, and
+//!   [`workload::trace`] demand timelines (diurnal curves, emergency
+//!   bursts, camera churn) for the autoscaling subsystem.
 //! * [`profiler`] — the paper's test-run subsystem: measure a program on
 //!   CPU (really, via PJRT) and on GPU (via the calibrated device model),
 //!   fit the linear utilization-vs-fps resource model.
@@ -30,7 +32,11 @@
 //!   produced by `python/compile/aot.py` (behind the `pjrt` feature;
 //!   a stub otherwise).
 //! * [`coordinator`] — end-to-end orchestration as composable stages:
-//!   profile → allocate → provision → simulate → bill.
+//!   profile → allocate → provision → simulate → bill; the
+//!   [`coordinator::autoscale`] runner repeats those stages per epoch
+//!   of a demand trace with hysteresis-gated fleet transitions and
+//!   compares provisioning policies (static-peak / static-mean /
+//!   oracle / reactive) under started-hour billing.
 //!
 //! Python is build-time only; the request path is entirely in this crate.
 //!

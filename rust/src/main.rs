@@ -5,12 +5,13 @@
 //! camcloud profile [--live] [...]        run test runs, save profiles
 //! camcloud allocate --scenario N ...     print an allocation plan
 //! camcloud run --scenario N ...          allocate + simulate + report
+//! camcloud trace --trace emergency ...   online autoscaling over a demand trace
 //! camcloud report --all | --table2 ...   regenerate paper tables/figures
 //! camcloud infer --program vgg16 ...     real PJRT inference on frames
 //! ```
 
 use camcloud::config::{paper_scenario, Scenario};
-use camcloud::coordinator::Coordinator;
+use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
 use camcloud::manager::Strategy;
 use camcloud::profiler::store::ProfileStore;
 use camcloud::reports;
@@ -19,6 +20,7 @@ use camcloud::sched::{SimConfig, SimEngine};
 use camcloud::streams::{Camera, Frame};
 use camcloud::types::{Program, VGA};
 use camcloud::util::cli::Args;
+use camcloud::workload::trace::WorkloadTrace;
 use camcloud::workload::FleetSpec;
 
 fn main() {
@@ -34,6 +36,7 @@ fn main() {
         Some("profile") => cmd_profile(&args),
         Some("allocate") => cmd_allocate(&args),
         Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
         Some("report") => cmd_report(&args),
         Some("whatif") => cmd_whatif(&args),
         Some("infer") => cmd_infer(&args),
@@ -64,6 +67,12 @@ fn print_help() {
          \u{20}                              allocate + simulate + performance/cost report\n\
          \u{20}  run --streams N [--seed S] ...\n\
          \u{20}                              same pipeline on a synthetic N-camera fleet\n\
+         \u{20}  trace --trace emergency|diurnal|churn|FILE [--policy NAME|all]\n\
+         \u{20}        [--strategy stX] [--seed S] [--cameras N] [--epochs N]\n\
+         \u{20}        [--horizon H] [--engine event|fixed] [--out FILE]\n\
+         \u{20}                              online autoscaling over a demand trace:\n\
+         \u{20}                              per-epoch re-solve + hysteresis, policies\n\
+         \u{20}                              static-peak/static-mean/oracle/reactive\n\
          \u{20}  report --all|--table2|--table3|--table5|--table6|--fig5|--fig6\n\
          \u{20}                              regenerate the paper's tables and figures\n\
          \u{20}  whatif --scenario N [--strategy stX]\n\
@@ -266,6 +275,84 @@ fn cmd_run(args: &Args) -> i32 {
     }
 }
 
+fn cmd_trace(args: &Args) -> i32 {
+    match run_trace_cmd(args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn run_trace_cmd(args: &Args) -> Result<i32, String> {
+    let seed = args.u32_opt("seed")?.map(u64::from).unwrap_or(7);
+    let cameras = args.u32_opt("cameras")?;
+    let epochs = args.u32_opt("epochs")?;
+    let spec = args
+        .opt("trace")
+        .ok_or("need --trace <emergency|diurnal|churn|FILE>")?;
+    // Builtin names defer to `WorkloadTrace::builtin` (one source of
+    // defaults); explicit --cameras/--epochs override its generators.
+    let trace = match (spec, cameras, epochs) {
+        ("diurnal", Some(n), _) => WorkloadTrace::diurnal(n, seed),
+        ("churn", n, e) if n.is_some() || e.is_some() => WorkloadTrace::camera_churn(
+            n.unwrap_or(WorkloadTrace::CHURN_CAMERAS),
+            e.map(|e| e as usize).unwrap_or(WorkloadTrace::CHURN_EPOCHS),
+            seed,
+        ),
+        ("emergency" | "emergency-burst" | "diurnal" | "churn", _, _) => {
+            WorkloadTrace::builtin(spec, seed).map_err(|e| e.to_string())?
+        }
+        (path, _, _) => WorkloadTrace::load(std::path::Path::new(path))
+            .map_err(|e| format!("loading trace {path}: {e:#}"))?,
+    };
+    if let Some(out) = args.opt("out") {
+        trace
+            .save(std::path::Path::new(out))
+            .map_err(|e| format!("saving trace {out}: {e:#}"))?;
+        println!(
+            "saved trace {:?} ({} epochs, {:.0}s) to {out}",
+            trace.name,
+            trace.epochs.len(),
+            trace.total_duration_s()
+        );
+    }
+    let strategy: Strategy = args.opt_or("strategy", "st3").parse()?;
+    let engine: SimEngine = match args.opt("engine") {
+        Some(s) => s.parse()?,
+        None => SimEngine::default(),
+    };
+    let horizon_hours = args.f64_opt("horizon")?;
+    let coordinator = coordinator_with_profiles(args)?;
+    let config = AutoscaleConfig {
+        strategy,
+        sim: SimConfig::default().with_engine(engine),
+        horizon_hours,
+    };
+    let runner = AutoscaleRunner::new(&coordinator).with_config(config);
+    let policies: Vec<ScalePolicy> = match args.opt_or("policy", "all") {
+        "all" => ScalePolicy::ALL.to_vec(),
+        p => vec![p.parse()?],
+    };
+    println!(
+        "trace {:?}: {} epochs over {:.1} h, strategy {strategy}, engine {engine}\n",
+        trace.name,
+        trace.epochs.len(),
+        trace.total_duration_s() / 3600.0
+    );
+    let outcomes = runner.compare(&trace, &policies);
+    for (policy, outcome) in &outcomes {
+        match outcome {
+            Ok(o) => println!("{}", reports::trace_epochs_table(o).render()),
+            Err(e) => println!("--- {policy}: FAIL: {e:#} ---\n"),
+        }
+    }
+    print!("{}", reports::trace_policy_table(&trace.name, &outcomes).render());
+    let failed = outcomes.iter().any(|(_, o)| o.is_err());
+    Ok(if failed { 1 } else { 0 })
+}
+
 fn cmd_report(args: &Args) -> i32 {
     let coordinator = match coordinator_with_profiles(args) {
         Ok(c) => c,
@@ -395,12 +482,18 @@ fn cmd_whatif(args: &Args) -> i32 {
     let multipliers = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
     for strategy in strategies {
         println!("--- {strategy}: cost vs frame-rate multiplier ---");
-        let curve = camcloud::manager::whatif::sweep_rate_multiplier(
+        let curve = match camcloud::manager::whatif::sweep_rate_multiplier(
             &mgr,
             &scenario.streams,
             strategy,
             &multipliers,
-        );
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
         for p in &curve {
             match p.cost {
                 Some(c) => {
@@ -409,14 +502,19 @@ fn cmd_whatif(args: &Args) -> i32 {
                 None => println!("  x{:<5} {:>10}", p.x, "FAIL"),
             }
         }
-        if let Some(cliff) = camcloud::manager::whatif::feasibility_cliff(
+        match camcloud::manager::whatif::feasibility_cliff(
             &mgr,
             &scenario.streams,
             strategy,
             0.25,
             16.0,
         ) {
-            println!("  feasibility cliff at x{cliff:.2}");
+            Ok(Some(cliff)) => println!("  feasibility cliff at x{cliff:.2}"),
+            Ok(None) => {}
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
         }
     }
     0

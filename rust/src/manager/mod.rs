@@ -18,7 +18,10 @@ pub mod strategy;
 pub mod whatif;
 
 pub use plan::{AllocationPlan, PlannedInstance, StreamAssignment};
-pub use realloc::{plan_transition, worth_reallocating, Reallocation, TransitionAction};
+pub use realloc::{
+    assign_best_effort, plan_transition, repack_onto, worth_reallocating, Reallocation,
+    TransitionAction,
+};
 pub use strategy::Strategy;
 
 use crate::cloud::Catalog;

@@ -16,9 +16,20 @@
 //! Because bins of one type are interchangeable, matching by type
 //! count is optimal for any transition-cost function that is monotone
 //! in the number of provision/terminate actions.
+//!
+//! Three policy primitives complete the picture for an autoscaler:
+//! [`worth_reallocating`] is the hysteresis gate (feasibility first,
+//! then horizon savings vs churn waste), [`repack_onto`] answers "can
+//! the fleet I already pay for serve the new workload?", and
+//! [`assign_best_effort`] degrades gracefully when a fixed fleet is
+//! genuinely under-provisioned.
 
-use super::plan::AllocationPlan;
-use crate::types::Dollars;
+use super::plan::{AllocationPlan, PlannedInstance, StreamAssignment};
+use super::{AllocationError, ResourceManager, Strategy};
+use crate::cloud::Catalog;
+use crate::profiler::{ExecChoice, ResourceProfile};
+use crate::streams::StreamSpec;
+use crate::types::{Dollars, ResourceVec};
 use std::collections::BTreeMap;
 
 /// One step of a fleet transition.
@@ -87,23 +98,36 @@ pub fn plan_transition(current: &AllocationPlan, target: &AllocationPlan) -> Rea
 
 /// Hysteresis policy: is a reallocation *worth it*?
 ///
-/// Terminating mid-hour wastes the remainder of a billed hour, so a
-/// cheaper target plan only pays off if the saving over the planning
-/// horizon exceeds the churn waste.  `wasted_fraction` is the mean
-/// unused fraction of the current billing hour (0.5 if unknown).
+/// The first question is feasibility, not cost: `current_serves_new`
+/// says whether the currently provisioned fleet can still serve the
+/// *new* workload (see [`repack_onto`]).  If it cannot, the manager
+/// must move regardless of churn cost — performance is at stake.  A
+/// cost delta is no proxy for this: a changed workload whose optimal
+/// target plan is cost-equal or cheaper can still be unservable by the
+/// current fleet (e.g. a rate increase that crosses the CPU latency
+/// ceiling while the optimal GPU plan costs less than the old CPU
+/// fleet).
+///
+/// Only when the current fleet *does* serve the new workload is the
+/// move discretionary, and then terminating mid-hour wastes the
+/// remainder of a billed hour: a cheaper target pays off only if the
+/// saving over the planning horizon exceeds the churn waste.
+/// `wasted_fraction` is the mean unused fraction of the current billing
+/// hour (0.5 if unknown).
 pub fn worth_reallocating(
     realloc: &Reallocation,
     current: &AllocationPlan,
+    current_serves_new: bool,
     horizon_hours: f64,
     wasted_fraction: f64,
 ) -> bool {
     if realloc.provisioned == 0 && realloc.terminated == 0 {
         return false; // same fleet, nothing to do
     }
-    if realloc.hourly_delta > Dollars::ZERO {
-        return true; // workload grew: must scale up regardless of cost
+    if !current_serves_new {
+        return true; // current fleet cannot serve the new workload
     }
-    // Scale-down: compare horizon savings vs wasted billed time.
+    // Discretionary move: compare horizon savings vs wasted billed time.
     let saving = -realloc.hourly_delta.as_f64() * horizon_hours;
     let mut waste_per_terminated: BTreeMap<&str, f64> = BTreeMap::new();
     for inst in &current.instances {
@@ -122,6 +146,150 @@ pub fn worth_reallocating(
         })
         .sum();
     saving > waste
+}
+
+/// Can the currently provisioned fleet serve `streams` *without any
+/// provisioning*?  Solves the MVBP restricted to the fleet's instance
+/// types and accepts the solution only if its per-type bin counts fit
+/// within the fleet — the feasibility signal [`worth_reallocating`]
+/// gates on, and the serving plan an autoscaler simulates when
+/// hysteresis keeps the fleet.
+///
+/// `Ok(None)` means the fleet genuinely cannot serve the workload
+/// ([`AllocationError::Infeasible`], or more bins needed than are
+/// running).  Structural errors (missing profile, solver failure) are
+/// *not* infeasibility and propagate — the same distinction the what-if
+/// sweeps draw.
+pub fn repack_onto(
+    manager: &ResourceManager<'_>,
+    current: &AllocationPlan,
+    streams: &[StreamSpec],
+    strategy: Strategy,
+) -> Result<Option<AllocationPlan>, AllocationError> {
+    let have = current.counts_by_type();
+    if have.is_empty() {
+        return Ok(None); // an empty fleet serves nothing
+    }
+    let names: Vec<&str> = have.keys().map(String::as_str).collect();
+    let restricted = ResourceManager {
+        catalog: manager.catalog.subset(&names),
+        profiles: manager.profiles,
+        headroom: manager.headroom,
+        exact_cutoff: manager.exact_cutoff,
+    };
+    let plan = match restricted.allocate(streams, strategy) {
+        Ok(plan) => plan,
+        Err(AllocationError::Infeasible { .. }) => return Ok(None),
+        // A fleet of only GPU (or only CPU) types is legitimately
+        // unservable under a strategy that excludes them all.
+        Err(AllocationError::EmptyCatalog(_)) => return Ok(None),
+        Err(other) => return Err(other),
+    };
+    let fits = plan
+        .counts_by_type()
+        .iter()
+        .all(|(t, n)| have.get(t).copied().unwrap_or(0) >= *n);
+    Ok(fits.then_some(plan))
+}
+
+/// Best-effort placement of `streams` onto a *fixed* fleet that a
+/// capacity-clean packing cannot serve (an under-provisioned static
+/// fleet during a burst): each stream goes to the (instance, device)
+/// pair minimizing the post-assignment load ratio, overcommitting the
+/// instance if it must — throughput then degrades in simulation rather
+/// than the stream being refused outright.  Streams with no
+/// latency-sustainable device anywhere in the fleet are returned as
+/// unserved indices.
+///
+/// `profiles[i]` is the resolved profile of `streams[i]`; capacities
+/// are rebuilt from `catalog` under its full layout so fleets planned
+/// under a strategy-narrowed layout compose with GPU-bearing catalogs.
+pub fn assign_best_effort(
+    fleet: &AllocationPlan,
+    streams: &[StreamSpec],
+    profiles: &[ResourceProfile],
+    strategy: Strategy,
+    catalog: &Catalog,
+    headroom: f64,
+) -> (AllocationPlan, Vec<usize>) {
+    assert_eq!(streams.len(), profiles.len(), "one profile per stream");
+    let layout = catalog.layout();
+    let capacities: Vec<ResourceVec> = fleet
+        .instances
+        .iter()
+        .map(|inst| {
+            catalog
+                .get(&inst.type_name)
+                .expect("fleet types come from the catalog")
+                .capability(layout)
+                .scale(headroom)
+        })
+        .collect();
+    let gpu_counts: Vec<usize> = fleet
+        .instances
+        .iter()
+        .map(|inst| catalog.get(&inst.type_name).map_or(0, |t| t.gpus.len()))
+        .collect();
+    let mut loads: Vec<ResourceVec> = fleet
+        .instances
+        .iter()
+        .map(|_| ResourceVec::zeros(layout.dims()))
+        .collect();
+    let mut assigned: Vec<Vec<StreamAssignment>> =
+        fleet.instances.iter().map(|_| Vec::new()).collect();
+    let mut unserved = Vec::new();
+    for (s_idx, spec) in streams.iter().enumerate() {
+        let profile = &profiles[s_idx];
+        let mut best: Option<(usize, ExecChoice, f64)> = None;
+        for i_idx in 0..fleet.instances.len() {
+            let choices =
+                std::iter::once(ExecChoice::Cpu).chain((0..gpu_counts[i_idx]).map(ExecChoice::Gpu));
+            for choice in choices {
+                if !strategy.allows_choice(choice)
+                    || !profile.sustains(choice, spec.desired_fps)
+                {
+                    continue;
+                }
+                let req = profile.requirement(spec.desired_fps, choice, layout);
+                let ratio = loads[i_idx].add(&req).max_ratio(&capacities[i_idx]);
+                if best.map_or(true, |(_, _, r)| ratio < r) {
+                    best = Some((i_idx, choice, ratio));
+                }
+            }
+        }
+        match best {
+            Some((i_idx, choice, _)) => {
+                let requirement = profile.requirement(spec.desired_fps, choice, layout);
+                loads[i_idx].add_assign(&requirement);
+                assigned[i_idx].push(StreamAssignment {
+                    stream_index: s_idx,
+                    stream_id: spec.id(),
+                    choice,
+                    requirement,
+                });
+            }
+            None => unserved.push(s_idx),
+        }
+    }
+    let instances: Vec<PlannedInstance> = fleet
+        .instances
+        .iter()
+        .zip(capacities)
+        .zip(assigned)
+        .map(|((inst, capacity), streams)| PlannedInstance {
+            type_name: inst.type_name.clone(),
+            hourly_cost: inst.hourly_cost,
+            capacity,
+            streams,
+        })
+        .collect();
+    let plan = AllocationPlan {
+        strategy,
+        solver: fleet.solver,
+        instances,
+        hourly_cost: fleet.hourly_cost,
+    };
+    (plan, unserved)
 }
 
 #[cfg(test)]
@@ -149,7 +317,7 @@ mod tests {
         assert_eq!(r.terminated, 0);
         assert!(r.kept > 0);
         assert_eq!(r.hourly_delta, Dollars::ZERO);
-        assert!(!worth_reallocating(&r, &plan, 12.0, 0.5));
+        assert!(!worth_reallocating(&r, &plan, true, 12.0, 0.5));
     }
 
     #[test]
@@ -160,9 +328,10 @@ mod tests {
         let r = plan_transition(&small, &big);
         assert!(r.provisioned > 0 || r.hourly_delta > Dollars::ZERO);
         assert_eq!(r.terminated + r.kept, small.instances.len() as u32);
-        // Scale-up is always worth it (performance at stake).
+        // Scale-up is always worth it: the small fleet cannot serve the
+        // emergency workload (performance at stake).
         if r.provisioned + r.terminated > 0 {
-            assert!(worth_reallocating(&r, &small, 1.0, 0.9));
+            assert!(worth_reallocating(&r, &small, false, 1.0, 0.9));
         }
     }
 
@@ -173,10 +342,135 @@ mod tests {
         let r = plan_transition(&big, &small);
         assert!(r.terminated > 0);
         assert!(r.hourly_delta < Dollars::ZERO);
-        // Worth it over a long horizon...
-        assert!(worth_reallocating(&r, &big, 24.0, 0.5));
+        // The big fleet still serves the small workload, so the move is
+        // discretionary: worth it over a long horizon...
+        assert!(worth_reallocating(&r, &big, true, 24.0, 0.5));
         // ...but not for the last sliver of an almost-over emergency.
-        assert!(!worth_reallocating(&r, &big, 0.01, 0.99));
+        assert!(!worth_reallocating(&r, &big, true, 0.01, 0.99));
+    }
+
+    #[test]
+    fn infeasible_current_fleet_forces_reallocation_even_when_cheaper() {
+        let c = Coordinator::new();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        // Current fleet: CPU-only (ST1) for scenario-1-like demand —
+        // four c4.2xlarge at $1.676/h.
+        let mut old_streams = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.25);
+        old_streams.extend(StreamSpec::replicate(10, 3, VGA, Program::Zf, 0.55));
+        let current = mgr.allocate(&old_streams, Strategy::St1).unwrap();
+        assert_eq!(current.hourly_cost, Dollars::from_f64(1.676));
+        // New workload: ZF at 2 FPS is CPU-unsustainable (max 0.56 FPS),
+        // and its optimal plan — one g2.2xlarge at $0.650/h — is
+        // *cheaper* than the current fleet.
+        let new_streams = StreamSpec::replicate(0, 3, VGA, Program::Zf, 2.0);
+        let target = mgr.allocate(&new_streams, Strategy::St3).unwrap();
+        assert!(target.hourly_cost < current.hourly_cost);
+        let serves = repack_onto(&mgr, &current, &new_streams, Strategy::St3).unwrap();
+        assert!(serves.is_none(), "a CPU-only fleet cannot serve ZF at 2 FPS");
+        let r = plan_transition(&current, &target);
+        // Regression: the pre-fix gate used `hourly_delta > 0` as a
+        // proxy for "workload grew"; with a cheaper target it fell into
+        // the savings-vs-waste comparison and, over a short horizon,
+        // refused to move a fleet that cannot serve the workload at
+        // all.  Feasibility decides first now.
+        assert!(worth_reallocating(&r, &current, false, 0.01, 0.99));
+        // The same transition *is* suppressible when the fleet can
+        // still serve (hypothetical flag): short horizon, high waste.
+        assert!(!worth_reallocating(&r, &current, true, 0.01, 0.99));
+    }
+
+    #[test]
+    fn repack_serves_shrunken_workload_without_churn() {
+        let c = Coordinator::new();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        // Emergency fleet: 10 ZF @ 1.0 FPS -> two g2.2xlarge.
+        let big = mgr
+            .allocate(
+                &StreamSpec::replicate(0, 10, VGA, Program::Zf, 1.0),
+                Strategy::St3,
+            )
+            .unwrap();
+        // Back to normal ops: the GPU fleet serves it on its own CPUs.
+        let small_streams = StreamSpec::replicate(0, 3, VGA, Program::Zf, 0.2);
+        let serving = repack_onto(&mgr, &big, &small_streams, Strategy::St3)
+            .unwrap()
+            .unwrap();
+        let have = big.counts_by_type();
+        for (t, n) in serving.counts_by_type() {
+            assert!(have.get(&t).copied().unwrap_or(0) >= n, "{t}: {n}");
+        }
+        let placed: usize = serving.instances.iter().map(|i| i.streams.len()).sum();
+        assert_eq!(placed, 3);
+        // And the reverse direction is impossible without provisioning.
+        let small = mgr.allocate(&small_streams, Strategy::St3).unwrap();
+        let burst = StreamSpec::replicate(0, 10, VGA, Program::Zf, 1.0);
+        assert!(repack_onto(&mgr, &small, &burst, Strategy::St3)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn repack_propagates_structural_errors() {
+        // MissingProfile is a configuration error, not "cannot serve":
+        // it must not silently force a reallocation.
+        struct NoProfiles;
+        impl crate::manager::ProfileSource for NoProfiles {
+            fn profile_for(&self, _: &StreamSpec) -> Option<ResourceProfile> {
+                None
+            }
+        }
+        let c = Coordinator::new();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
+        let streams = StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.2);
+        let fleet = mgr.allocate(&streams, Strategy::St3).unwrap();
+        let bad = ResourceManager::new(Catalog::paper_experiments(), &NoProfiles);
+        assert!(matches!(
+            repack_onto(&bad, &fleet, &streams, Strategy::St3),
+            Err(AllocationError::MissingProfile(_))
+        ));
+    }
+
+    #[test]
+    fn best_effort_overcommits_rather_than_refusing() {
+        let c = Coordinator::new();
+        let catalog = Catalog::paper_experiments();
+        let mgr = ResourceManager::new(catalog.clone(), &c);
+        // Fleet: one c4.2xlarge (planned for a single light stream).
+        let fleet = mgr
+            .allocate(
+                &StreamSpec::replicate(0, 1, VGA, Program::Zf, 0.5),
+                Strategy::St1,
+            )
+            .unwrap();
+        assert_eq!(fleet.instances.len(), 1);
+        // Burst: six such streams need 6 x 3.56 = 21.4 cores vs 7.2
+        // usable — a clean packing refuses, best-effort overcommits.
+        let streams = StreamSpec::replicate(0, 6, VGA, Program::Zf, 0.5);
+        let profiles: Vec<ResourceProfile> =
+            streams.iter().map(|s| c.profile_for(s)).collect();
+        assert!(repack_onto(&mgr, &fleet, &streams, Strategy::St3)
+            .unwrap()
+            .is_none());
+        let (plan, unserved) =
+            assign_best_effort(&fleet, &streams, &profiles, Strategy::St3, &catalog, 0.9);
+        assert!(unserved.is_empty());
+        let placed: usize = plan.instances.iter().map(|i| i.streams.len()).sum();
+        assert_eq!(placed, 6);
+        let max_util = plan.instances[0]
+            .utilization()
+            .0
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b));
+        assert!(max_util > 1.0, "overcommit expected, got {max_util}");
+        // A stream with no latency-sustainable device anywhere in the
+        // fleet is unserved: ZF at 2 FPS needs a GPU, the fleet has none.
+        let fast = StreamSpec::replicate(0, 1, VGA, Program::Zf, 2.0);
+        let fast_profiles: Vec<ResourceProfile> =
+            fast.iter().map(|s| c.profile_for(s)).collect();
+        let (plan2, unserved2) =
+            assign_best_effort(&fleet, &fast, &fast_profiles, Strategy::St3, &catalog, 0.9);
+        assert_eq!(unserved2, vec![0]);
+        assert!(plan2.instances.iter().all(|i| i.streams.is_empty()));
     }
 
     #[test]

@@ -19,40 +19,53 @@ pub struct CostPoint {
     pub instances: usize,
 }
 
+/// Classify one allocation attempt for a sweep: a plan, a genuine
+/// rate-infeasibility, or a *structural* error (missing profile, empty
+/// catalog, solver failure) that must abort the sweep instead of being
+/// misreported as an infeasible point.
+fn sweep_point(
+    manager: &ResourceManager<'_>,
+    streams: &[StreamSpec],
+    strategy: Strategy,
+    x: f64,
+) -> Result<CostPoint, AllocationError> {
+    match manager.allocate(streams, strategy) {
+        Ok(plan) => Ok(CostPoint {
+            x,
+            cost: Some(plan.hourly_cost),
+            instances: plan.instances.len(),
+        }),
+        Err(AllocationError::Infeasible { .. }) => Ok(CostPoint { x, cost: None, instances: 0 }),
+        Err(other) => Err(other),
+    }
+}
+
+fn scaled(base: &[StreamSpec], mult: f64) -> Vec<StreamSpec> {
+    base.iter()
+        .map(|s| {
+            let mut s2 = s.clone();
+            s2.desired_fps *= mult;
+            s2
+        })
+        .collect()
+}
+
 /// Sweep a frame-rate multiplier over a base workload.
 ///
 /// Every stream's desired fps is scaled by each multiplier; the curve
 /// shows where rates become infeasible for a strategy (e.g. ST1 hits
 /// the CPU's max achievable rate — the paper's scenario 3 cliff).
+/// Only [`AllocationError::Infeasible`] becomes a `cost: None` point;
+/// any other error propagates.
 pub fn sweep_rate_multiplier(
     manager: &ResourceManager<'_>,
     base: &[StreamSpec],
     strategy: Strategy,
     multipliers: &[f64],
-) -> Vec<CostPoint> {
+) -> Result<Vec<CostPoint>, AllocationError> {
     multipliers
         .iter()
-        .map(|&mult| {
-            let streams: Vec<StreamSpec> = base
-                .iter()
-                .map(|s| {
-                    let mut s2 = s.clone();
-                    s2.desired_fps *= mult;
-                    s2
-                })
-                .collect();
-            match manager.allocate(&streams, strategy) {
-                Ok(plan) => CostPoint {
-                    x: mult,
-                    cost: Some(plan.hourly_cost),
-                    instances: plan.instances.len(),
-                },
-                Err(AllocationError::Infeasible { .. }) => {
-                    CostPoint { x: mult, cost: None, instances: 0 }
-                }
-                Err(_) => CostPoint { x: mult, cost: None, instances: 0 },
-            }
-        })
+        .map(|&mult| sweep_point(manager, &scaled(base, mult), strategy, mult))
         .collect()
 }
 
@@ -62,7 +75,7 @@ pub fn sweep_stream_count(
     template: &StreamSpec,
     strategy: Strategy,
     counts: &[u32],
-) -> Vec<CostPoint> {
+) -> Result<Vec<CostPoint>, AllocationError> {
     counts
         .iter()
         .map(|&n| {
@@ -73,54 +86,47 @@ pub fn sweep_stream_count(
                 template.program,
                 template.desired_fps,
             );
-            match manager.allocate(&streams, strategy) {
-                Ok(plan) => CostPoint {
-                    x: n as f64,
-                    cost: Some(plan.hourly_cost),
-                    instances: plan.instances.len(),
-                },
-                Err(_) => CostPoint { x: n as f64, cost: None, instances: 0 },
-            }
+            sweep_point(manager, &streams, strategy, n as f64)
         })
         .collect()
 }
 
 /// The rate multiplier at which a strategy first fails (binary search
-/// over a bracket), or None if it never fails in the bracket.
+/// over a bracket), or `Ok(None)` if it never fails in the bracket.
+///
+/// Only [`AllocationError::Infeasible`] counts as the cliff; structural
+/// errors (missing profile, empty catalog) propagate instead of being
+/// reported as a bogus cliff at `lo`.
 pub fn feasibility_cliff(
     manager: &ResourceManager<'_>,
     base: &[StreamSpec],
     strategy: Strategy,
     lo: f64,
     hi: f64,
-) -> Option<f64> {
-    let feasible = |mult: f64| {
-        let streams: Vec<StreamSpec> = base
-            .iter()
-            .map(|s| {
-                let mut s2 = s.clone();
-                s2.desired_fps *= mult;
-                s2
-            })
-            .collect();
-        manager.allocate(&streams, strategy).is_ok()
+) -> Result<Option<f64>, AllocationError> {
+    let feasible = |mult: f64| -> Result<bool, AllocationError> {
+        match manager.allocate(&scaled(base, mult), strategy) {
+            Ok(_) => Ok(true),
+            Err(AllocationError::Infeasible { .. }) => Ok(false),
+            Err(other) => Err(other),
+        }
     };
-    if feasible(hi) {
-        return None;
+    if feasible(hi)? {
+        return Ok(None);
     }
-    if !feasible(lo) {
-        return Some(lo);
+    if !feasible(lo)? {
+        return Ok(Some(lo));
     }
     let (mut lo, mut hi) = (lo, hi);
     for _ in 0..40 {
         let mid = 0.5 * (lo + hi);
-        if feasible(mid) {
+        if feasible(mid)? {
             lo = mid;
         } else {
             hi = mid;
         }
     }
-    Some(hi)
+    Ok(Some(hi))
 }
 
 #[cfg(test)]
@@ -141,7 +147,8 @@ mod tests {
     fn cost_is_monotone_in_rate() {
         let (c, base) = fixture();
         let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
-        let curve = sweep_rate_multiplier(&mgr, &base, Strategy::St3, &[1.0, 5.0, 20.0, 40.0]);
+        let curve = sweep_rate_multiplier(&mgr, &base, Strategy::St3, &[1.0, 5.0, 20.0, 40.0])
+            .unwrap();
         let costs: Vec<f64> = curve.iter().map(|p| p.cost.unwrap().as_f64()).collect();
         for w in costs.windows(2) {
             assert!(w[1] >= w[0] - 1e-9, "costs {costs:?}");
@@ -153,17 +160,21 @@ mod tests {
         // ZF base at 0.2 fps; CPU max is 0.56 -> cliff multiplier ~2.8.
         let (c, base) = fixture();
         let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
-        let cliff = feasibility_cliff(&mgr, &base, Strategy::St1, 1.0, 10.0).unwrap();
+        let cliff = feasibility_cliff(&mgr, &base, Strategy::St1, 1.0, 10.0)
+            .unwrap()
+            .unwrap();
         assert!((cliff - 2.8).abs() < 0.05, "cliff {cliff}");
         // ST3 survives the same bracket (GPU path).
-        assert!(feasibility_cliff(&mgr, &base, Strategy::St3, 1.0, 10.0).is_none());
+        assert!(feasibility_cliff(&mgr, &base, Strategy::St3, 1.0, 10.0)
+            .unwrap()
+            .is_none());
     }
 
     #[test]
     fn stream_count_sweep_scales_instances() {
         let (c, base) = fixture();
         let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
-        let curve = sweep_stream_count(&mgr, &base[0], Strategy::St1, &[1, 4, 16]);
+        let curve = sweep_stream_count(&mgr, &base[0], Strategy::St1, &[1, 4, 16]).unwrap();
         assert!(curve.iter().all(|p| p.cost.is_some()));
         assert!(curve[2].instances >= curve[0].instances);
     }
@@ -172,8 +183,43 @@ mod tests {
     fn infeasible_points_reported_not_panicked() {
         let (c, base) = fixture();
         let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
-        let curve = sweep_rate_multiplier(&mgr, &base, Strategy::St1, &[1.0, 100.0]);
+        let curve = sweep_rate_multiplier(&mgr, &base, Strategy::St1, &[1.0, 100.0]).unwrap();
         assert!(curve[0].cost.is_some());
         assert!(curve[1].cost.is_none());
+    }
+
+    #[test]
+    fn structural_errors_propagate_instead_of_reporting_a_cliff() {
+        // Regression: a profile-less manager fails every allocation with
+        // MissingProfile.  Pre-fix, feasibility_cliff conflated that with
+        // rate-infeasibility and reported a bogus cliff at `lo`, and the
+        // sweeps silently rendered every point as infeasible.
+        struct NoProfiles;
+        impl crate::manager::ProfileSource for NoProfiles {
+            fn profile_for(&self, _: &StreamSpec) -> Option<crate::profiler::ResourceProfile> {
+                None
+            }
+        }
+        let (_, base) = fixture();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &NoProfiles);
+        assert!(matches!(
+            feasibility_cliff(&mgr, &base, Strategy::St1, 1.0, 10.0),
+            Err(AllocationError::MissingProfile(_))
+        ));
+        assert!(matches!(
+            sweep_rate_multiplier(&mgr, &base, Strategy::St1, &[1.0, 2.0]),
+            Err(AllocationError::MissingProfile(_))
+        ));
+        assert!(matches!(
+            sweep_stream_count(&mgr, &base[0], Strategy::St1, &[1, 2]),
+            Err(AllocationError::MissingProfile(_))
+        ));
+        // An empty catalog for the strategy is structural too.
+        let c = Coordinator::new();
+        let gpu_only = ResourceManager::new(Catalog::paper_experiments().gpu_only(), &c);
+        assert!(matches!(
+            feasibility_cliff(&gpu_only, &base, Strategy::St1, 1.0, 10.0),
+            Err(AllocationError::EmptyCatalog(Strategy::St1))
+        ));
     }
 }

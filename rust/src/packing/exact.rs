@@ -94,7 +94,9 @@ impl BranchAndBound {
                 .map(|c| c.max_ratio(&roomiest))
                 .fold(f64::INFINITY, f64::min)
         };
-        order.sort_by(|&a, &b| hardness(b).partial_cmp(&hardness(a)).unwrap());
+        // total_cmp for the same reason as `Decreasing::order`: never
+        // panic mid-sort, even on inputs validate would reject.
+        order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
 
         let dim_efficiency: Vec<f64> = (0..problem.dims)
             .map(|d| {

@@ -62,6 +62,9 @@ impl MvbpProblem {
                     self.dims
                 ));
             }
+            if bt.capacity.0.iter().any(|c| !c.is_finite()) {
+                return Err(format!("bin type {} has non-finite capacity", bt.name));
+            }
             if bt.capacity.0.iter().any(|c| *c < 0.0) {
                 return Err(format!("bin type {} has negative capacity", bt.name));
             }
@@ -78,6 +81,12 @@ impl MvbpProblem {
                         c,
                         choice.dims(),
                         self.dims
+                    ));
+                }
+                if choice.0.iter().any(|v| !v.is_finite()) {
+                    return Err(format!(
+                        "item {} choice {} has a non-finite requirement",
+                        item.id, c
                     ));
                 }
                 if choice.0.iter().any(|v| *v < 0.0) {
@@ -250,6 +259,23 @@ mod tests {
         let mut p = small_problem();
         p.items[0].choices[0] = ResourceVec::from_slice(&[-1.0, 0.0]);
         assert!(p.validate().unwrap_err().contains("negative"));
+    }
+
+    #[test]
+    fn validate_catches_non_finite() {
+        // Regression: NaN requirements used to flow through validation
+        // (NaN < 0.0 is false) and into the solvers' float sorts.
+        let mut p = small_problem();
+        p.items[1].choices[0] = ResourceVec::from_slice(&[f64::NAN, 1.0]);
+        assert!(p.validate().unwrap_err().contains("non-finite"));
+
+        let mut q = small_problem();
+        q.items[0].choices[0] = ResourceVec::from_slice(&[f64::INFINITY, 1.0]);
+        assert!(q.validate().unwrap_err().contains("non-finite"));
+
+        let mut r = small_problem();
+        r.bin_types[0].capacity = ResourceVec::from_slice(&[f64::NAN, 4.0]);
+        assert!(r.validate().unwrap_err().contains("non-finite capacity"));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use crate::cloud::Catalog;
 use crate::config::{paper_scenario, Scenario};
-use crate::coordinator::{render_table6_block, Coordinator};
+use crate::coordinator::{render_table6_block, AutoscaleOutcome, Coordinator, ScalePolicy};
 use crate::manager::AllocationPlan;
 use crate::metrics::{table::rate, Table};
 use crate::profiler::{ExecChoice, ResourceProfile};
@@ -284,6 +284,78 @@ pub fn table6_custom(coordinator: &Coordinator, scenario: &Scenario, duration_s:
     render_table6_block(scenario, &outcomes)
 }
 
+/// Policy-comparison table for one trace (`camcloud trace --policy all`).
+/// Savings are relative to the costliest successful policy, mirroring
+/// how Table 6 reports strategy savings.
+pub fn trace_policy_table(
+    trace_name: &str,
+    outcomes: &[(ScalePolicy, crate::util::error::Result<AutoscaleOutcome>)],
+) -> Table {
+    let mut t = Table::new(&format!("Trace {trace_name} — provisioning policy comparison"))
+        .header(&[
+            "Policy", "Billed", "Savings", "Perf", "Peak Fleet", "Reallocs",
+        ]);
+    let max_billed = outcomes
+        .iter()
+        .filter_map(|(_, o)| o.as_ref().ok())
+        .map(|o| o.total_billed)
+        .max()
+        .unwrap_or(crate::types::Dollars::ZERO);
+    for (policy, outcome) in outcomes {
+        match outcome {
+            Ok(o) => {
+                t.row(&[
+                    policy.to_string(),
+                    o.total_billed.to_string(),
+                    format!("{:.0}%", o.total_billed.savings_vs(max_billed)),
+                    format!("{:.0}%", o.mean_performance * 100.0),
+                    o.peak_fleet.to_string(),
+                    o.reallocations.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[
+                    policy.to_string(),
+                    "Fail".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{e}"),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Per-epoch breakdown of one policy run.
+pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
+    let mut t = Table::new(&format!(
+        "{} on {} ({}) — per-epoch timeline",
+        outcome.policy, outcome.trace_name, outcome.strategy
+    ))
+    .header(&[
+        "Epoch", "Start", "Streams", "Fleet", "+prov/-term", "$/h", "Perf", "Unserved",
+    ]);
+    for e in &outcome.epochs {
+        t.row(&[
+            e.label.clone(),
+            format!("{:.0}s", e.start_s),
+            e.streams.to_string(),
+            e.fleet_size.to_string(),
+            if e.reallocated {
+                format!("+{}/-{}", e.provisioned, e.terminated)
+            } else {
+                "kept".into()
+            },
+            e.hourly_rate.to_string(),
+            format!("{:.0}%", e.performance * 100.0),
+            if e.unserved > 0 { e.unserved.to_string() } else { "-".into() },
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,5 +430,30 @@ mod tests {
             let s = table6(&c, n, 30.0).render();
             assert!(s.contains("ST3"), "scenario {n}: {s}");
         }
+    }
+
+    #[test]
+    fn trace_tables_render_policies_and_epochs() {
+        use crate::coordinator::AutoscaleRunner;
+        use crate::workload::trace::WorkloadTrace;
+        let c = Coordinator::new();
+        let runner = AutoscaleRunner::new(&c);
+        let trace = WorkloadTrace::emergency_burst(7);
+        let outcomes = runner.compare(&trace, &ScalePolicy::ALL);
+        let rendered = trace_policy_table(&trace.name, &outcomes).render();
+        assert!(rendered.contains("reactive+hysteresis"));
+        assert!(rendered.contains("static-peak"));
+        assert!(rendered.contains("oracle"));
+        assert!(rendered.contains("$2.976"));
+        assert!(rendered.contains("$5.200"));
+        let reactive = outcomes
+            .iter()
+            .find(|(p, _)| *p == ScalePolicy::Reactive)
+            .and_then(|(_, o)| o.as_ref().ok())
+            .unwrap();
+        let epochs = trace_epochs_table(reactive).render();
+        assert!(epochs.contains("emergency"));
+        assert!(epochs.contains("+2/-1"));
+        assert!(epochs.contains("$1.300"));
     }
 }

@@ -22,7 +22,9 @@ impl Measurement {
 
     fn percentile(&self, p: f64) -> f64 {
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp sorts NaN samples to the end instead of panicking —
+        // a wild measurement must not abort a whole bench suite.
+        sorted.sort_by(f64::total_cmp);
         let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
         sorted[idx]
     }
@@ -157,6 +159,18 @@ mod tests {
         assert_eq!(m.p50(), 3.0);
         assert_eq!(m.min(), 1.0);
         assert_eq!(m.p95(), 100.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: partial_cmp().unwrap() panicked on NaN samples;
+        // total_cmp sorts them after every finite value instead.
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![2.0, f64::NAN, 1.0],
+        };
+        assert_eq!(m.p50(), 2.0);
+        assert!(m.p95().is_nan());
     }
 
     #[test]

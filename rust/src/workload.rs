@@ -11,6 +11,13 @@
 //! it synthesizes parameterized fleets — N cameras with a seeded mix of
 //! programs, frame rates, and frame sizes — so fleet-scale runs
 //! (hundreds to thousands of streams) are one builder expression away.
+//!
+//! The [`trace`] submodule lifts workloads into the time dimension:
+//! a [`trace::WorkloadTrace`] is a sequence of demand epochs (diurnal
+//! curves, emergency bursts, camera churn) that the autoscaling runner
+//! in `coordinator::autoscale` re-plans across.
+
+pub mod trace;
 
 use crate::cloud::Catalog;
 use crate::config::Scenario;

@@ -1,0 +1,425 @@
+//! Demand timelines: a workload that *changes over time*.
+//!
+//! The paper's motivating scenario (§1) is bursty demand — "the
+//! analysis is needed occasionally (e.g., during emergencies)" — which
+//! a single static [`Workload`](super::Workload) cannot express.  A
+//! [`WorkloadTrace`] is an ordered sequence of [`Epoch`]s, each holding
+//! the stream set in force for a duration; the autoscaling runner
+//! (`coordinator::autoscale`) re-plans at every epoch boundary and
+//! carries the provisioned fleet across them under started-hour
+//! billing, so churn has the same price it has on a real cloud bill
+//! (see the module docs of [`cloud::billing`](crate::cloud::billing)).
+//!
+//! Three composable builtin generators cover the demand shapes of the
+//! related provisioning literature (crowdsourced live streaming,
+//! on-demand video cost minimization):
+//!
+//! * [`WorkloadTrace::emergency_burst`] — quiet monitoring, a
+//!   high-rate emergency burst, recovery (the paper's Houston-flood
+//!   motivation, Fig. 1d);
+//! * [`WorkloadTrace::diurnal`] — a 24-hour rate curve over a fixed
+//!   camera fleet (day/night demand);
+//! * [`WorkloadTrace::camera_churn`] — the camera population itself
+//!   grows and shrinks epoch to epoch.
+//!
+//! Traces serialize to JSON (`util::json`) in the same row shape as
+//! scenario configs, so hand-written demand curves load from disk via
+//! [`WorkloadTrace::load`] and builtins can be exported with
+//! [`WorkloadTrace::save`] and edited.
+
+use super::{FleetSpec, Workload};
+use crate::cloud::Catalog;
+use crate::config::{catalog_from_json, stream_rows_from_json, stream_to_json};
+use crate::streams::{Camera, StreamSpec};
+use crate::types::{Program, VGA};
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::path::Path;
+
+/// One epoch of a demand timeline: the streams in force for a span.
+#[derive(Clone, Debug)]
+pub struct Epoch {
+    pub label: String,
+    /// How long this demand holds, in simulated seconds (> 0).
+    pub duration_s: f64,
+    pub streams: Vec<StreamSpec>,
+}
+
+/// A named demand timeline over one catalog.
+#[derive(Clone, Debug)]
+pub struct WorkloadTrace {
+    pub name: String,
+    pub catalog: Catalog,
+    pub epochs: Vec<Epoch>,
+}
+
+impl WorkloadTrace {
+    pub fn new(name: impl Into<String>, catalog: Catalog) -> WorkloadTrace {
+        WorkloadTrace { name: name.into(), catalog, epochs: Vec::new() }
+    }
+
+    /// Append an epoch (builder style).
+    pub fn epoch(
+        mut self,
+        label: impl Into<String>,
+        duration_s: f64,
+        streams: Vec<StreamSpec>,
+    ) -> WorkloadTrace {
+        assert!(duration_s > 0.0, "epoch duration must be positive");
+        self.epochs.push(Epoch { label: label.into(), duration_s, streams });
+        self
+    }
+
+    /// Total simulated duration across all epochs.
+    pub fn total_duration_s(&self) -> f64 {
+        self.epochs.iter().map(|e| e.duration_s).sum()
+    }
+
+    /// Start time (seconds) of epoch `index`.
+    pub fn start_of(&self, index: usize) -> f64 {
+        self.epochs[..index].iter().map(|e| e.duration_s).sum()
+    }
+
+    /// Epoch `index` as a pipeline [`Workload`].
+    pub fn workload(&self, index: usize) -> Workload {
+        let epoch = &self.epochs[index];
+        Workload::new(
+            format!("{}/{}", self.name, epoch.label),
+            epoch.streams.clone(),
+            self.catalog.clone(),
+        )
+    }
+
+    /// Default fleet sizes of the parameterized builtins (shared with
+    /// the CLI so `--trace churn` means the same thing everywhere).
+    pub const DIURNAL_CAMERAS: u32 = 32;
+    pub const CHURN_CAMERAS: u32 = 40;
+    pub const CHURN_EPOCHS: usize = 8;
+
+    /// Resolve a builtin generator by name (the CLI's `--trace` values).
+    pub fn builtin(name: &str, seed: u64) -> Result<WorkloadTrace> {
+        match name {
+            "emergency" | "emergency-burst" => Ok(WorkloadTrace::emergency_burst(seed)),
+            "diurnal" => Ok(WorkloadTrace::diurnal(Self::DIURNAL_CAMERAS, seed)),
+            "churn" => Ok(WorkloadTrace::camera_churn(
+                Self::CHURN_CAMERAS,
+                Self::CHURN_EPOCHS,
+                seed,
+            )),
+            other => Err(anyhow!(
+                "unknown builtin trace {other:?} (expected emergency, diurnal, or churn)"
+            )),
+        }
+    }
+
+    /// The paper's motivating shape: quiet monitoring of a few
+    /// flood-prone intersections, a one-hour emergency burst across the
+    /// whole camera network, then recovery back to quiet.
+    ///
+    /// The seed jitters per-stream rates inside ranges chosen so the
+    /// *plan shape* stays put (normal epochs solve to one CPU instance,
+    /// the burst to two GPU instances on the paper's two-type catalog):
+    /// costs are reproducible per seed while the streams differ.
+    pub fn emergency_burst(seed: u64) -> WorkloadTrace {
+        let mut rng = Rng::new(seed);
+        let normal = |rng: &mut Rng| -> Vec<StreamSpec> {
+            (0..3)
+                .map(|i| {
+                    StreamSpec::new(
+                        Camera::new(i, VGA),
+                        Program::Zf,
+                        rng.range_f64(0.15, 0.25),
+                    )
+                })
+                .collect()
+        };
+        let quiet = normal(&mut rng);
+        let burst: Vec<StreamSpec> = (0..10)
+            .map(|i| {
+                StreamSpec::new(
+                    Camera::new(100 + i, VGA),
+                    Program::Zf,
+                    rng.range_f64(0.9, 1.1),
+                )
+            })
+            .collect();
+        let recovery = normal(&mut rng);
+        WorkloadTrace::new(format!("emergency-{seed}"), Catalog::paper_experiments())
+            .epoch("normal", 5400.0, quiet)
+            .epoch("emergency", 3600.0, burst)
+            .epoch("recovery", 5400.0, recovery)
+    }
+
+    /// A 24-hour diurnal rate curve over a fixed synthetic fleet: every
+    /// stream's desired rate is the fleet baseline scaled by a smooth
+    /// day/night multiplier in `[0.25, 1.0]` (trough at midnight, peak
+    /// mid-afternoon).  Scaling never exceeds the baseline, so every
+    /// epoch stays allocatable wherever the baseline fleet is.
+    pub fn diurnal(cameras: u32, seed: u64) -> WorkloadTrace {
+        let base = FleetSpec::new(cameras).seed(seed).build();
+        let mut trace =
+            WorkloadTrace::new(format!("diurnal-{seed}-{cameras}"), base.catalog.clone());
+        for hour in 0..24u32 {
+            // Peak at 15:00, trough at 03:00.
+            let phase = (hour as f64 - 15.0) / 24.0 * std::f64::consts::TAU;
+            let mult = 0.25 + 0.75 * (0.5 + 0.5 * phase.cos());
+            let streams: Vec<StreamSpec> = base
+                .streams
+                .iter()
+                .map(|s| {
+                    let mut s2 = s.clone();
+                    s2.desired_fps *= mult;
+                    s2
+                })
+                .collect();
+            trace = trace.epoch(format!("h{hour:02}"), 3600.0, streams);
+        }
+        trace
+    }
+
+    /// Camera churn: the population itself walks up and down around
+    /// `cameras` across `epochs` half-hour epochs (between 50% and 200%
+    /// of the base).  Stream identities are stable prefixes of one
+    /// seeded fleet, mirroring cameras joining and leaving a registry.
+    pub fn camera_churn(cameras: u32, epochs: usize, seed: u64) -> WorkloadTrace {
+        assert!(cameras > 0, "churn needs a base camera count");
+        let mut rng = Rng::new(seed ^ 0x5ca1ab1e);
+        let pool = FleetSpec::new(cameras * 2).seed(seed).build();
+        let mut trace =
+            WorkloadTrace::new(format!("churn-{seed}-{cameras}x{epochs}"), pool.catalog.clone());
+        let mut count = cameras as i64;
+        let (lo, hi) = ((cameras as i64 / 2).max(1), cameras as i64 * 2);
+        for e in 0..epochs {
+            let step_cap = (cameras as i64 / 4).max(1);
+            let step = rng.range_u64(0, 2 * step_cap as u64) as i64 - step_cap;
+            count = (count + step).clamp(lo, hi);
+            let streams: Vec<StreamSpec> = pool.streams[..count as usize].to_vec();
+            trace = trace.epoch(format!("e{e:02}-n{count}"), 1800.0, streams);
+        }
+        trace
+    }
+
+    // ----- JSON persistence ---------------------------------------------
+
+    /// Serialize to the trace config shape:
+    ///
+    /// ```json
+    /// {
+    ///   "name": "my-trace",
+    ///   "catalog": ["c4.2xlarge", "g2.2xlarge"],
+    ///   "epochs": [
+    ///     {"label": "normal", "duration_s": 5400,
+    ///      "streams": [{"program": "zf", "fps": 0.2, "cameras": 3}]}
+    ///   ]
+    /// }
+    /// ```
+    pub fn to_json(&self) -> Json {
+        let epochs: Vec<Json> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("label".to_string(), Json::Str(e.label.clone())),
+                    ("duration_s".to_string(), Json::Num(e.duration_s)),
+                    (
+                        "streams".to_string(),
+                        Json::Arr(e.streams.iter().map(stream_to_json).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            (
+                "catalog".to_string(),
+                Json::Arr(
+                    self.catalog
+                        .types
+                        .iter()
+                        .map(|t| Json::Str(t.name.clone()))
+                        .collect(),
+                ),
+            ),
+            ("epochs".to_string(), Json::Arr(epochs)),
+        ])
+    }
+
+    /// Parse the trace config shape (see [`WorkloadTrace::to_json`]).
+    pub fn from_json(v: &Json) -> Result<WorkloadTrace> {
+        let name = v.str_field("name")?.to_string();
+        let catalog = catalog_from_json(v)?;
+        let mut epochs = Vec::new();
+        for (i, row) in v.arr_field("epochs")?.iter().enumerate() {
+            let label = match row.get("label").and_then(Json::as_str) {
+                Some(l) => l.to_string(),
+                None => format!("epoch-{i}"),
+            };
+            let duration_s = row.f64_field("duration_s")?;
+            if duration_s <= 0.0 {
+                return Err(anyhow!("epoch {label:?}: duration_s must be positive"));
+            }
+            let streams = stream_rows_from_json(row.arr_field("streams")?)?;
+            epochs.push(Epoch { label, duration_s, streams });
+        }
+        if epochs.is_empty() {
+            return Err(anyhow!("trace has no epochs"));
+        }
+        Ok(WorkloadTrace { name, catalog, epochs })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<WorkloadTrace> {
+        let text = std::fs::read_to_string(path)?;
+        WorkloadTrace::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emergency_shape_is_stable_per_seed() {
+        let a = WorkloadTrace::emergency_burst(7);
+        let b = WorkloadTrace::emergency_burst(7);
+        assert_eq!(a.epochs.len(), 3);
+        assert_eq!(a.epochs[0].streams.len(), 3);
+        assert_eq!(a.epochs[1].streams.len(), 10);
+        assert_eq!(a.epochs[2].streams.len(), 3);
+        assert_eq!(a.total_duration_s(), 14400.0);
+        assert_eq!(a.start_of(1), 5400.0);
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            for (s, t) in x.streams.iter().zip(&y.streams) {
+                assert_eq!(s.desired_fps, t.desired_fps);
+            }
+        }
+        // Rates stay in the bands that pin the per-epoch plan shapes.
+        assert!(a.epochs[0]
+            .streams
+            .iter()
+            .all(|s| (0.15..0.25).contains(&s.desired_fps)));
+        assert!(a.epochs[1]
+            .streams
+            .iter()
+            .all(|s| (0.9..1.1).contains(&s.desired_fps)));
+        let c = WorkloadTrace::emergency_burst(8);
+        assert!(a.epochs[1]
+            .streams
+            .iter()
+            .zip(&c.epochs[1].streams)
+            .any(|(x, y)| x.desired_fps != y.desired_fps));
+    }
+
+    #[test]
+    fn diurnal_scales_rates_within_baseline() {
+        let t = WorkloadTrace::diurnal(12, 3);
+        assert_eq!(t.epochs.len(), 24);
+        let base = FleetSpec::new(12).seed(3).build();
+        for e in &t.epochs {
+            assert_eq!(e.streams.len(), 12);
+            for (s, b) in e.streams.iter().zip(&base.streams) {
+                assert!(s.desired_fps <= b.desired_fps + 1e-12);
+                assert!(s.desired_fps >= 0.25 * b.desired_fps - 1e-12);
+            }
+        }
+        // Peak hour (15:00) is the unscaled baseline.
+        let peak = &t.epochs[15];
+        for (s, b) in peak.streams.iter().zip(&base.streams) {
+            assert!((s.desired_fps - b.desired_fps).abs() < 1e-12);
+        }
+        // Trough (03:00) is a quarter of it.
+        let trough = &t.epochs[3];
+        for (s, b) in trough.streams.iter().zip(&base.streams) {
+            assert!((s.desired_fps - 0.25 * b.desired_fps).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn churn_walks_population_within_bounds() {
+        let t = WorkloadTrace::camera_churn(40, 8, 11);
+        assert_eq!(t.epochs.len(), 8);
+        let counts: Vec<usize> = t.epochs.iter().map(|e| e.streams.len()).collect();
+        assert!(counts.iter().all(|&n| (20..=80).contains(&n)), "{counts:?}");
+        assert!(counts.windows(2).any(|w| w[0] != w[1]), "{counts:?}");
+        // Stable identity: epoch populations are prefixes of one pool.
+        let pool = FleetSpec::new(80).seed(11).build();
+        for e in &t.epochs {
+            for (s, p) in e.streams.iter().zip(&pool.streams) {
+                assert_eq!(s.camera.id, p.camera.id);
+                assert_eq!(s.desired_fps, p.desired_fps);
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_names_resolve() {
+        assert_eq!(WorkloadTrace::builtin("emergency", 1).unwrap().epochs.len(), 3);
+        assert_eq!(WorkloadTrace::builtin("diurnal", 1).unwrap().epochs.len(), 24);
+        assert_eq!(WorkloadTrace::builtin("churn", 1).unwrap().epochs.len(), 8);
+        assert!(WorkloadTrace::builtin("sinusoid", 1).is_err());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_trace() {
+        let t = WorkloadTrace::emergency_burst(5);
+        let back = WorkloadTrace::from_json(&Json::parse(&t.to_json().to_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.catalog.types.len(), t.catalog.types.len());
+        assert_eq!(back.epochs.len(), t.epochs.len());
+        for (x, y) in t.epochs.iter().zip(&back.epochs) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.duration_s, y.duration_s);
+            assert_eq!(x.streams.len(), y.streams.len());
+            for (s, r) in x.streams.iter().zip(&y.streams) {
+                assert_eq!(s.program, r.program);
+                assert_eq!(s.desired_fps, r.desired_fps);
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_validates() {
+        let no_epochs = r#"{"name":"x","epochs":[]}"#;
+        assert!(WorkloadTrace::from_json(&Json::parse(no_epochs).unwrap()).is_err());
+        let bad_duration = r#"{"name":"x","epochs":[
+            {"label":"a","duration_s":0,"streams":[{"program":"zf","fps":1}]}]}"#;
+        assert!(WorkloadTrace::from_json(&Json::parse(bad_duration).unwrap()).is_err());
+        let bad_fps = r#"{"name":"x","epochs":[
+            {"label":"a","duration_s":60,"streams":[{"program":"zf","fps":-1}]}]}"#;
+        assert!(WorkloadTrace::from_json(&Json::parse(bad_fps).unwrap()).is_err());
+        // Default label and catalog apply.
+        let minimal = r#"{"name":"x","epochs":[
+            {"duration_s":60,"streams":[{"program":"zf","fps":1}]}]}"#;
+        let t = WorkloadTrace::from_json(&Json::parse(minimal).unwrap()).unwrap();
+        assert_eq!(t.epochs[0].label, "epoch-0");
+        assert_eq!(t.catalog.types.len(), 4);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("camcloud-trace-{}.json", std::process::id()));
+        let t = WorkloadTrace::camera_churn(10, 4, 2);
+        t.save(&path).unwrap();
+        let back = WorkloadTrace::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.epochs.len(), 4);
+        assert!(WorkloadTrace::load(Path::new("/nonexistent/t.json")).is_err());
+    }
+
+    #[test]
+    fn epoch_workload_view() {
+        let t = WorkloadTrace::emergency_burst(9);
+        let w = t.workload(1);
+        assert_eq!(w.streams.len(), 10);
+        assert!(w.name.ends_with("/emergency"));
+        assert_eq!(w.catalog.types.len(), 2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Integration tests for the trace-driven autoscaling subsystem: the
+//! acceptance gate for the policy-comparison claims and the CLI
+//! reproducibility contract.
+
+use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::manager::Strategy;
+use camcloud::sched::{SimConfig, SimEngine};
+use camcloud::workload::trace::WorkloadTrace;
+
+/// The headline claim on the built-in emergency-burst trace: the
+/// reactive+hysteresis policy bills strictly less than static-peak
+/// provisioning while staying at or above the oracle lower bound, and
+/// holds the paper's >= 90% performance target throughout.
+#[test]
+fn emergency_burst_reactive_beats_static_peak_within_oracle_bound() {
+    let c = Coordinator::new();
+    let runner = AutoscaleRunner::new(&c);
+    let trace = WorkloadTrace::emergency_burst(7);
+
+    let reactive = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+    let static_peak = runner.run(&trace, ScalePolicy::StaticPeak).unwrap();
+    let oracle = runner.run(&trace, ScalePolicy::Oracle).unwrap();
+
+    assert!(
+        reactive.total_billed < static_peak.total_billed,
+        "reactive {} must bill strictly below static-peak {}",
+        reactive.total_billed,
+        static_peak.total_billed
+    );
+    assert!(
+        reactive.total_billed >= oracle.total_billed,
+        "reactive {} must stay within the oracle lower bound {}",
+        reactive.total_billed,
+        oracle.total_billed
+    );
+    assert!(
+        reactive.mean_performance >= 0.9,
+        "reactive performance {}",
+        reactive.mean_performance
+    );
+    // The savings are substantial, not marginal: the held burst fleet
+    // costs 4 started hours of two GPU instances, the reactive fleet
+    // follows the demand curve.
+    assert!(
+        reactive.total_billed.savings_vs(static_peak.total_billed) > 40.0,
+        "savings {:.0}%",
+        reactive.total_billed.savings_vs(static_peak.total_billed)
+    );
+}
+
+/// Every seed reproduces the same plan shapes (the burst generator's
+/// rate bands pin them), so the cost ordering is seed-independent and
+/// any fixed `--seed` on the CLI reproduces the comparison exactly.
+#[test]
+fn emergency_costs_are_deterministic_and_seed_stable() {
+    let c = Coordinator::new();
+    let runner = AutoscaleRunner::new(&c);
+    for seed in [1u64, 7, 13, 99] {
+        let trace = WorkloadTrace::emergency_burst(seed);
+        let a = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        let b = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        assert_eq!(a.total_billed, b.total_billed, "seed {seed}");
+        assert_eq!(a.reallocations, b.reallocations, "seed {seed}");
+        // The band-pinned plan shapes make the totals seed-invariant:
+        // 2h c4 + 1h of two g2 + 2h c4.
+        assert_eq!(
+            a.total_billed,
+            camcloud::types::Dollars::from_f64(2.976),
+            "seed {seed}"
+        );
+        let oracle = runner.run(&trace, ScalePolicy::Oracle).unwrap();
+        let peak = runner.run(&trace, ScalePolicy::StaticPeak).unwrap();
+        assert!(oracle.total_billed <= a.total_billed, "seed {seed}");
+        assert!(a.total_billed < peak.total_billed, "seed {seed}");
+    }
+}
+
+/// The comparison holds on both engines (event is the default; the
+/// fixed-step baseline must agree on the cost ordering since billing is
+/// driven by the planner, not the engine).
+#[test]
+fn policy_ordering_holds_on_both_engines() {
+    let c = Coordinator::new();
+    let trace = WorkloadTrace::emergency_burst(3);
+    for engine in [SimEngine::Event, SimEngine::FixedStep] {
+        let config = AutoscaleConfig {
+            strategy: Strategy::St3,
+            sim: SimConfig::default().with_engine(engine),
+            horizon_hours: None,
+        };
+        let runner = AutoscaleRunner::new(&c).with_config(config);
+        let reactive = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        let peak = runner.run(&trace, ScalePolicy::StaticPeak).unwrap();
+        let oracle = runner.run(&trace, ScalePolicy::Oracle).unwrap();
+        assert!(
+            reactive.total_billed < peak.total_billed,
+            "{engine}: {} vs {}",
+            reactive.total_billed,
+            peak.total_billed
+        );
+        assert!(reactive.total_billed >= oracle.total_billed, "{engine}");
+        assert!(reactive.mean_performance >= 0.9, "{engine}");
+    }
+}
+
+/// Camera churn end to end: the reactive policy tracks the walking
+/// population and never under-serves, and every serving policy stays
+/// within the oracle lower bound.
+#[test]
+fn churn_trace_reactive_tracks_population() {
+    let c = Coordinator::new();
+    let runner = AutoscaleRunner::new(&c);
+    let trace = WorkloadTrace::camera_churn(10, 4, 5);
+    let reactive = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+    assert_eq!(reactive.epochs.len(), 4);
+    for e in &reactive.epochs {
+        assert_eq!(e.unserved, 0, "epoch {}", e.label);
+        assert!(e.performance >= 0.9, "epoch {}: {}", e.label, e.performance);
+    }
+    let peak = runner.run(&trace, ScalePolicy::StaticPeak).unwrap();
+    let oracle = runner.run(&trace, ScalePolicy::Oracle).unwrap();
+    // The oracle bound holds for every policy that serves each epoch.
+    // (Whether reactive beats static-peak on an arbitrary churn pattern
+    // depends on the walk; the emergency trace pins that claim.)
+    // peak >= oracle holds unconditionally: the static-peak rate is the
+    // max of the per-epoch optimal rates the oracle integrates.
+    assert!(reactive.total_billed >= oracle.total_billed);
+    assert!(peak.total_billed >= oracle.total_billed);
+}
+
+/// A trace an allocation strategy cannot serve fails loudly (per-epoch
+/// context), rather than producing a bogus comparison.
+#[test]
+fn st1_fails_the_burst_epoch_with_context() {
+    let c = Coordinator::new();
+    let config = AutoscaleConfig {
+        strategy: Strategy::St1,
+        sim: SimConfig::default(),
+        horizon_hours: None,
+    };
+    let runner = AutoscaleRunner::new(&c).with_config(config);
+    let trace = WorkloadTrace::emergency_burst(7);
+    // ZF at ~1 FPS exceeds the CPU's 0.56 FPS ceiling: ST1 cannot
+    // allocate the emergency epoch at all.
+    let err = runner.run(&trace, ScalePolicy::Reactive).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("emergency"), "{msg}");
+}
+
+/// JSON round-trip feeds the same comparison: a saved builtin trace
+/// reloads into identical billing totals.
+#[test]
+fn saved_trace_reproduces_the_run() {
+    let c = Coordinator::new();
+    let runner = AutoscaleRunner::new(&c);
+    let trace = WorkloadTrace::emergency_burst(21);
+    let direct = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+
+    let mut path = std::env::temp_dir();
+    path.push(format!("camcloud-autoscale-{}.json", std::process::id()));
+    trace.save(&path).unwrap();
+    let reloaded = WorkloadTrace::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let replayed = runner.run(&reloaded, ScalePolicy::Reactive).unwrap();
+    assert_eq!(direct.total_billed, replayed.total_billed);
+    assert_eq!(direct.reallocations, replayed.reallocations);
+    assert_eq!(direct.epochs.len(), replayed.epochs.len());
+}

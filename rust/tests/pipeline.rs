@@ -166,38 +166,40 @@ fn multi_gpu_instances_pack_across_gpus() {
 fn reallocation_round_trip_emergency() {
     // normal -> emergency -> normal: transitions are consistent and the
     // hysteresis policy only churns when worth it.
-    use camcloud::manager::{plan_transition, worth_reallocating};
+    use camcloud::manager::{plan_transition, repack_onto, worth_reallocating};
     let c = Coordinator::new();
     let mgr = ResourceManager::new(Catalog::paper_experiments(), &c);
-    let normal = mgr
-        .allocate(
-            &camcloud::streams::StreamSpec::replicate(
-                0, 3, camcloud::types::VGA, camcloud::types::Program::Zf, 0.2,
-            ),
-            Strategy::St3,
-        )
-        .unwrap();
-    let emergency = mgr
-        .allocate(
-            &camcloud::streams::StreamSpec::replicate(
-                0, 12, camcloud::types::VGA, camcloud::types::Program::Zf, 2.0,
-            ),
-            Strategy::St3,
-        )
-        .unwrap();
+    let normal_streams = camcloud::streams::StreamSpec::replicate(
+        0, 3, camcloud::types::VGA, camcloud::types::Program::Zf, 0.2,
+    );
+    let emergency_streams = camcloud::streams::StreamSpec::replicate(
+        0, 12, camcloud::types::VGA, camcloud::types::Program::Zf, 2.0,
+    );
+    let normal = mgr.allocate(&normal_streams, Strategy::St3).unwrap();
+    let emergency = mgr.allocate(&emergency_streams, Strategy::St3).unwrap();
     let up = plan_transition(&normal, &emergency);
     assert!(up.hourly_delta > Dollars::ZERO);
-    assert!(worth_reallocating(&up, &normal, 1.0, 0.5));
+    // The normal fleet cannot serve the emergency rates: reallocation
+    // is forced by feasibility, not by the cost delta.
+    let serves_up = repack_onto(&mgr, &normal, &emergency_streams, Strategy::St3)
+        .unwrap()
+        .is_some();
+    assert!(!serves_up);
+    assert!(worth_reallocating(&up, &normal, serves_up, 1.0, 0.5));
     let down = plan_transition(&emergency, &normal);
     assert_eq!(down.provisioned + down.kept, normal.instances.len() as u32);
     assert_eq!(
         down.hourly_delta,
         normal.hourly_cost - emergency.hourly_cost
     );
-    // Down-scaling with a long horizon is worth it; a 30-second horizon
-    // is not.
-    assert!(worth_reallocating(&down, &emergency, 24.0, 0.5));
-    assert!(!worth_reallocating(&down, &emergency, 0.005, 0.99));
+    // The emergency fleet still serves normal ops, so down-scaling is
+    // discretionary: worth it over a long horizon, not over 30 seconds.
+    let serves_down = repack_onto(&mgr, &emergency, &normal_streams, Strategy::St3)
+        .unwrap()
+        .is_some();
+    assert!(serves_down);
+    assert!(worth_reallocating(&down, &emergency, serves_down, 24.0, 0.5));
+    assert!(!worth_reallocating(&down, &emergency, serves_down, 0.005, 0.99));
 }
 
 // ---------------------------------------------------------------------
