@@ -1,0 +1,125 @@
+//! Bench: solver-stack scaling — the portfolio vs single-threaded BFD,
+//! and warm-start incremental repacking vs cold solving.
+//!
+//! Gates (the PR's acceptance criteria):
+//!
+//! * at 10,000 items the racing `PortfolioSolver` (sharded arms on
+//!   scoped threads) must beat a single-threaded full-scan BFD solve by
+//!   at least 1.5x wall-clock (p50);
+//! * over the `camera_churn` builtin trace, chained warm-start solves
+//!   (`ResourceManager::allocate_warm`) must be faster in total than
+//!   cold solves of the same epochs;
+//! * every solve's reported optimality gap is finite and
+//!   `lower_bound <= cost`.
+//!
+//! 50k items are measured for the scaling record without a speedup
+//! gate (shared-runner noise), but the certificate invariants are still
+//! asserted.
+
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::{AllocationPlan, Strategy};
+use camcloud::packing::{BfdSolver, PortfolioSolver, SolveBudget, Solver};
+use camcloud::util::bench::Bench;
+use camcloud::workload::trace::WorkloadTrace;
+use camcloud::workload::FleetSpec;
+
+fn main() {
+    let mut bench = Bench::new("solver_scaling");
+    let coordinator = Coordinator::new();
+    let budget = SolveBudget::default();
+
+    for &n in &[1_000u32, 10_000, 50_000] {
+        let fleet = FleetSpec::new(n).seed(11).build();
+        let profiled = coordinator.profile_workload(fleet);
+        let mgr = profiled.manager();
+        let built = mgr
+            .build_problem(&profiled.workload.streams, Strategy::St3)
+            .expect("synthetic fleet builds");
+        let problem = &built.problem;
+        let (warmup, samples) = if n >= 10_000 { (1, 5) } else { (2, 8) };
+
+        let bfd = bench
+            .measure(&format!("bfd_single_threaded_{n}"), warmup, samples, || {
+                let out = BfdSolver.solve(problem, &budget).expect("bfd solves");
+                assert!(out.lower_bound <= out.cost, "bfd bound at {n}");
+                std::hint::black_box(out);
+            })
+            .p50();
+
+        let mut gap = f64::NAN;
+        let portfolio = bench
+            .measure(&format!("portfolio_{n}"), warmup, samples, || {
+                let out = PortfolioSolver::default()
+                    .solve(problem, &budget)
+                    .expect("portfolio solves");
+                assert!(out.lower_bound <= out.cost, "portfolio bound at {n}");
+                gap = out.gap();
+                std::hint::black_box(out);
+            })
+            .p50();
+        assert!(gap.is_finite(), "portfolio gap must be finite at {n}");
+        bench.record(&format!("portfolio_gap_{n}"), gap);
+
+        let speedup = bfd / portfolio;
+        bench.record(&format!("portfolio_speedup_{n}"), speedup);
+        if n == 10_000 {
+            assert!(
+                speedup >= 1.5,
+                "portfolio must beat single-threaded BFD by >=1.5x at {n} items, got {speedup:.2}x"
+            );
+        }
+    }
+
+    // Warm-start vs cold over the churn builtin: stable stream ids walk
+    // up and down, so most of each epoch survives into the next — the
+    // warm path re-packs only the delta.
+    let trace = WorkloadTrace::camera_churn(600, 8, 3);
+    let profiled: Vec<_> = (0..trace.epochs.len())
+        .map(|i| coordinator.profile_workload(trace.workload(i)))
+        .collect();
+    let managers: Vec<_> = profiled.iter().map(|pw| pw.manager()).collect();
+
+    let cold = bench
+        .measure("churn_cold_total", 1, 5, || {
+            for (i, mgr) in managers.iter().enumerate() {
+                let plan = mgr
+                    .allocate(&trace.epochs[i].streams, Strategy::St3)
+                    .expect("churn epoch allocates");
+                std::hint::black_box(plan);
+            }
+        })
+        .p50();
+
+    let mut warm_epochs = 0usize;
+    let warm = bench
+        .measure("churn_warm_total", 1, 5, || {
+            let mut previous: Option<AllocationPlan> = None;
+            let mut warmed = 0usize;
+            for (i, mgr) in managers.iter().enumerate() {
+                let plan = match &previous {
+                    None => mgr
+                        .allocate(&trace.epochs[i].streams, Strategy::St3)
+                        .expect("churn epoch allocates"),
+                    Some(prev) => mgr
+                        .allocate_warm(&trace.epochs[i].streams, Strategy::St3, prev)
+                        .expect("churn epoch warm-allocates"),
+                };
+                let gap = plan.gap().expect("solved plans carry a gap");
+                assert!(gap.is_finite(), "warm gap epoch {i}");
+                if plan.solver == camcloud::packing::SolverKind::WarmStart {
+                    warmed += 1;
+                }
+                previous = Some(plan);
+            }
+            warm_epochs = warmed;
+        })
+        .p50();
+    bench.record("churn_epochs", trace.epochs.len() as f64);
+    bench.record("churn_warm_served_epochs", warm_epochs as f64);
+    bench.record("warm_speedup", cold / warm);
+    assert!(
+        warm < cold,
+        "warm-start repacking must beat cold solving on the churn trace: warm {warm:.4}s vs cold {cold:.4}s"
+    );
+    bench.finish();
+}

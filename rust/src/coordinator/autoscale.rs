@@ -28,8 +28,10 @@
 //!   hours up (an under-provisioned fleet can bill less — by dropping
 //!   demand, which its performance metric exposes);
 //! * [`ScalePolicy::Reactive`] — the paper-faithful online policy:
-//!   fresh solve per epoch, hysteresis-gated transitions, fleet carried
-//!   across epochs.
+//!   warm-start solve per epoch (the previous epoch's plan carried in
+//!   [`FleetState`] seeds the next solve so only the stream delta is
+//!   re-packed; a certified-gap drift check falls back to a cold
+//!   solve), hysteresis-gated transitions, fleet carried across epochs.
 
 use super::{Coordinator, ProfiledWorkload};
 use crate::cloud::{BillingMeter, Catalog, InstanceId, InstanceState, SimInstance};
@@ -136,6 +138,15 @@ pub struct EpochOutcome {
     pub unserved: usize,
     pub frames_completed: u64,
     pub frames_dropped: u64,
+    /// Which solver produced the plan served this epoch (warm-start,
+    /// portfolio, exact, ...).
+    pub solver: SolverKind,
+    /// Certified optimality gap of the serving plan vs the full
+    /// catalog.  `None` when the epoch ran on a hand-built best-effort
+    /// placement or on a kept fleet (whose repack is solved against the
+    /// fleet-restricted catalog and therefore carries no full-catalog
+    /// certificate).
+    pub gap: Option<f64>,
 }
 
 /// Result of one policy over one trace.
@@ -155,11 +166,15 @@ pub struct AutoscaleOutcome {
     pub reallocations: usize,
 }
 
-/// The provisioned fleet carried across epochs, plus its meter.
+/// The provisioned fleet carried across epochs, plus its meter.  The
+/// `plan` doubles as the warm-start incumbent: the reactive policy
+/// seeds each epoch's solve with it so only the stream delta is
+/// re-packed (`ResourceManager::allocate_warm`).
 struct FleetState {
     instances: Vec<SimInstance>,
     billing: BillingMeter,
-    /// Shape of the running fleet (per-type counts mirror `instances`).
+    /// Shape of the running fleet (per-type counts mirror `instances`)
+    /// and the incumbent the next epoch's warm solve starts from.
     plan: AllocationPlan,
     next_id: u32,
 }
@@ -186,6 +201,8 @@ impl FleetState {
                 solver: SolverKind::Exact,
                 instances: Vec::new(),
                 hourly_cost: Dollars::ZERO,
+                // An empty fleet is vacuously optimal.
+                lower_bound: Some(Dollars::ZERO),
             },
             next_id: 0,
         }
@@ -323,19 +340,22 @@ impl<'a> AutoscaleRunner<'a> {
             return Err(anyhow!("trace {:?} has no epochs", trace.name));
         }
         let strategy = self.config.strategy;
-        // Stage 1+2 per epoch: resolve profiles once and solve the
-        // epoch-optimal plan.  A trace is runnable under a strategy only
-        // if every epoch is allocatable fresh (static-mean may still
-        // *hold* an under-provisioned fleet later — that is the point).
-        let mut profiled: Vec<ProfiledWorkload> = Vec::with_capacity(trace.epochs.len());
-        let mut fresh: Vec<AllocationPlan> = Vec::with_capacity(trace.epochs.len());
-        for (i, epoch) in trace.epochs.iter().enumerate() {
-            let pw = self.coordinator.profile_workload(trace.workload(i));
-            let plan = pw
-                .allocate(strategy)
-                .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-            profiled.push(pw);
-            fresh.push(plan);
+        // Stage 1 per epoch: resolve profiles once.
+        let profiled: Vec<ProfiledWorkload> = (0..trace.epochs.len())
+            .map(|i| self.coordinator.profile_workload(trace.workload(i)))
+            .collect();
+        // Stage 2: the static and oracle policies need every epoch's
+        // fresh optimal plan up front (peak/mean selection, the oracle
+        // integral).  The reactive policy solves per epoch instead,
+        // warm-started from the incumbent fleet.
+        let mut fresh: Vec<AllocationPlan> = Vec::new();
+        if policy != ScalePolicy::Reactive {
+            for (i, epoch) in trace.epochs.iter().enumerate() {
+                let plan = profiled[i]
+                    .allocate(strategy)
+                    .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+                fresh.push(plan);
+            }
         }
 
         if policy == ScalePolicy::Oracle {
@@ -356,14 +376,26 @@ impl<'a> AutoscaleRunner<'a> {
         let mut now = 0.0;
         for (i, epoch) in trace.epochs.iter().enumerate() {
             let pw = &profiled[i];
+            let mgr = pw.manager();
             let target = match &static_plan {
-                Some(plan) => plan,
-                None => &fresh[i],
+                // A held static fleet re-uses its one plan as the target.
+                Some(plan) => plan.clone(),
+                // Reactive: warm-start from the incumbent fleet (cold
+                // solve on the first epoch or when the incumbent cannot
+                // seed the problem / its quality drifted).
+                None => {
+                    if state.plan.instances.is_empty() {
+                        pw.allocate(strategy)
+                            .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?
+                    } else {
+                        mgr.allocate_warm(&epoch.streams, strategy, &state.plan)
+                            .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?
+                    }
+                }
             };
-            let mgr = ResourceManager::new(trace.catalog.clone(), pw);
             let serving = repack_onto(&mgr, &state.plan, &epoch.streams, strategy)
                 .with_context(|| format!("repacking epoch {:?}", epoch.label))?;
-            let realloc = plan_transition(&state.plan, target);
+            let realloc = plan_transition(&state.plan, &target);
             let do_realloc = match policy {
                 ScalePolicy::Reactive => {
                     let horizon = self
@@ -382,7 +414,7 @@ impl<'a> AutoscaleRunner<'a> {
 
             let changed = realloc.provisioned > 0 || realloc.terminated > 0;
             let (sim_plan, unserved) = if do_realloc {
-                state.apply(&realloc, target, &trace.catalog, now);
+                state.apply(&realloc, &target, &trace.catalog, now);
                 if i > 0 && changed {
                     reallocations += 1;
                 }
@@ -426,6 +458,7 @@ impl<'a> AutoscaleRunner<'a> {
                 churn,
                 state.running_count(),
                 state.billing.hourly_rate(now),
+                &sim_plan,
                 &report,
                 unserved.len(),
             ));
@@ -509,6 +542,7 @@ impl<'a> AutoscaleRunner<'a> {
                 churn,
                 plan.instances.len(),
                 plan.hourly_cost,
+                plan,
                 &report,
                 0,
             ));
@@ -565,6 +599,7 @@ fn epoch_outcome(
     (kept, provisioned, terminated): (u32, u32, u32),
     fleet_size: usize,
     hourly_rate: Dollars,
+    sim_plan: &AllocationPlan,
     report: &SimReport,
     unserved: usize,
 ) -> EpochOutcome {
@@ -590,6 +625,8 @@ fn epoch_outcome(
         unserved,
         frames_completed: report.frames_completed,
         frames_dropped: report.frames_dropped,
+        solver: sim_plan.solver,
+        gap: sim_plan.gap(),
     }
 }
 
@@ -731,6 +768,34 @@ mod tests {
         // One billed hour for each g2: churning would have added a c4
         // hour on top.
         assert_eq!(out.total_billed, Dollars::from_f64(1.300));
+    }
+
+    #[test]
+    fn reactive_epochs_report_warm_start_provenance() {
+        // Stable stream ids under a CPU-only strategy (tight certified
+        // bound): epoch 0 solves cold, epoch 1 must be served by the
+        // warm-start incremental repack, and every solved epoch carries
+        // a finite certified gap.
+        let c = Coordinator::new();
+        let config = AutoscaleConfig {
+            strategy: Strategy::St1,
+            sim: SimConfig::default(),
+            horizon_hours: None,
+        };
+        let runner = AutoscaleRunner::new(&c).with_config(config);
+        let base = StreamSpec::replicate(0, 4, VGA, Program::Zf, 0.5);
+        let mut grown = base.clone();
+        grown.extend(StreamSpec::replicate(100, 2, VGA, Program::Zf, 0.5));
+        let trace = WorkloadTrace::new("grow", Catalog::paper_experiments())
+            .epoch("base", 3600.0, base)
+            .epoch("grow", 3600.0, grown);
+        let out = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        assert_eq!(out.epochs[0].solver, SolverKind::Exact);
+        assert_eq!(out.epochs[1].solver, SolverKind::WarmStart);
+        for e in &out.epochs {
+            let gap = e.gap.expect("solved epochs carry a certified gap");
+            assert!(gap.is_finite() && (0.0..=1.0).contains(&gap), "{gap}");
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub use autoscale::{AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, ScalePol
 use crate::cloud::{BillingMeter, Catalog, InstanceId, SimInstance};
 use crate::config::Scenario;
 use crate::manager::{AllocationError, AllocationPlan, ProfileSource, ResourceManager, Strategy};
+use crate::packing::{SolveBudget, SolverChoice};
 use crate::profiler::calibration::Calibration;
 use crate::profiler::live::TestRunner;
 use crate::profiler::store::ProfileStore;
@@ -77,11 +78,22 @@ pub struct Coordinator {
     pub calibration: Calibration,
     /// Measured profiles (live test runs) override calibration when set.
     pub profiles: Option<ProfileStore>,
+    /// Solver routing for every allocation made through this
+    /// coordinator (the CLI's `--solver`).
+    pub solver: SolverChoice,
+    /// Solve budget handed down with the routing (`--solve-budget-ms`,
+    /// `--exact-cutoff`).
+    pub budget: SolveBudget,
 }
 
 impl Default for Coordinator {
     fn default() -> Self {
-        Coordinator { calibration: Calibration::paper(), profiles: None }
+        Coordinator {
+            calibration: Calibration::paper(),
+            profiles: None,
+            solver: SolverChoice::Auto,
+            budget: SolveBudget::default(),
+        }
     }
 }
 
@@ -98,6 +110,9 @@ pub struct ProfiledWorkload {
     /// materialized once so simulation setup is allocation-cheap even
     /// when called repeatedly (benches build one `Simulation` per run).
     per_stream: Vec<ResourceProfile>,
+    /// Solver routing inherited from the coordinator at profile time.
+    solver: SolverChoice,
+    budget: SolveBudget,
 }
 
 impl ProfiledWorkload {
@@ -111,13 +126,20 @@ impl ProfiledWorkload {
         &self.per_stream
     }
 
+    /// A resource manager over this workload's catalog and profiles,
+    /// carrying the coordinator's solver routing — the one the
+    /// allocation stage and the autoscaler's repack/warm-start calls
+    /// share.
+    pub fn manager(&self) -> ResourceManager<'_> {
+        ResourceManager::with_routing(self.workload.catalog.clone(), self, self.solver, self.budget)
+    }
+
     /// Stage 2: allocate instances for the workload under `strategy`.
     pub fn allocate(
         &self,
         strategy: Strategy,
     ) -> std::result::Result<AllocationPlan, AllocationError> {
-        let mgr = ResourceManager::new(self.workload.catalog.clone(), self);
-        mgr.allocate(&self.workload.streams, strategy)
+        self.manager().allocate(&self.workload.streams, strategy)
     }
 
     /// Stage 4 setup: build the frame-loop simulation for a plan.
@@ -197,6 +219,18 @@ impl Coordinator {
         self
     }
 
+    /// Route every downstream allocation through `solver`.
+    pub fn with_solver(mut self, solver: SolverChoice) -> Coordinator {
+        self.solver = solver;
+        self
+    }
+
+    /// Solve budget handed to every downstream allocation.
+    pub fn with_budget(mut self, budget: SolveBudget) -> Coordinator {
+        self.budget = budget;
+        self
+    }
+
     /// Resolve the profile for one stream spec.
     pub fn profile_for(&self, spec: &StreamSpec) -> ResourceProfile {
         if let Some(store) = &self.profiles {
@@ -242,7 +276,13 @@ impl Coordinator {
             .iter()
             .map(|spec| by_variant[&spec.program.variant(spec.camera.frame_size)].clone())
             .collect();
-        ProfiledWorkload { workload, by_variant, per_stream }
+        ProfiledWorkload {
+            workload,
+            by_variant,
+            per_stream,
+            solver: self.solver,
+            budget: self.budget,
+        }
     }
 
     /// The full pipeline on one workload under one strategy.

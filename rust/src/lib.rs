@@ -6,9 +6,13 @@
 //! The library implements the paper's resource manager and every substrate
 //! it depends on (see `DESIGN.md` for the full inventory):
 //!
-//! * [`packing`] — multiple-choice vector bin packing: exact
-//!   branch-and-bound, an arc-flow (Brandão–Pedroso) bound/1-D solver, and
-//!   first/best-fit heuristics.
+//! * [`packing`] — multiple-choice vector bin packing behind the
+//!   [`packing::Solver`] trait: exact branch-and-bound (deadline- and
+//!   node-bounded, seedable), first/best-fit heuristics over pluggable
+//!   item orderings, a racing [`packing::PortfolioSolver`] on scoped
+//!   threads with sharded arms at scale, and an arc-flow
+//!   (Brandão–Pedroso) machinery whose L2 bound certifies every
+//!   solve's optimality gap.
 //! * [`cloud`] — simulated cloud: the Table-1 EC2 catalog, instance
 //!   lifecycle + hourly billing, and calibrated CPU/GPU device models.
 //! * [`streams`] — simulated network cameras producing frames at desired

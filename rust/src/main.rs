@@ -12,7 +12,8 @@
 
 use camcloud::config::{paper_scenario, Scenario};
 use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
-use camcloud::manager::Strategy;
+use camcloud::manager::{ResourceManager, Strategy};
+use camcloud::packing::{SolveBudget, SolverChoice};
 use camcloud::profiler::store::ProfileStore;
 use camcloud::reports;
 use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
@@ -71,8 +72,10 @@ fn print_help() {
          \u{20}        [--strategy stX] [--seed S] [--cameras N] [--epochs N]\n\
          \u{20}        [--horizon H] [--engine event|fixed] [--out FILE]\n\
          \u{20}                              online autoscaling over a demand trace:\n\
-         \u{20}                              per-epoch re-solve + hysteresis, policies\n\
-         \u{20}                              static-peak/static-mean/oracle/reactive\n\
+         \u{20}                              warm-started per-epoch re-solve + hysteresis,\n\
+         \u{20}                              policies static-peak/static-mean/oracle/reactive\n\
+         \u{20}  (allocate/run/trace/whatif also accept --solver auto|ffd|bfd|exact|portfolio,\n\
+         \u{20}   --solve-budget-ms MS, and --exact-cutoff N for the solver stack)\n\
          \u{20}  report --all|--table2|--table3|--table5|--table6|--fig5|--fig6\n\
          \u{20}                              regenerate the paper's tables and figures\n\
          \u{20}  whatif --scenario N [--strategy stX]\n\
@@ -82,14 +85,39 @@ fn print_help() {
     );
 }
 
+/// `--solver {auto,ffd,bfd,exact,portfolio}` plus the solve-budget
+/// knobs (`--solve-budget-ms`, `--exact-cutoff`), shared by every mode
+/// that allocates.
+fn solver_config(args: &Args) -> Result<(SolverChoice, SolveBudget), String> {
+    let choice: SolverChoice = args.opt_or("solver", "auto").parse()?;
+    let mut budget = SolveBudget::default();
+    if let Some(ms) = args.u32_opt("solve-budget-ms")? {
+        budget.time_ms = u64::from(ms);
+    }
+    if let Some(cutoff) = args.u32_opt("exact-cutoff")? {
+        budget.exact_cutoff = cutoff as usize;
+    }
+    Ok((choice, budget))
+}
+
 fn coordinator_with_profiles(args: &Args) -> Result<Coordinator, String> {
-    let mut c = Coordinator::new();
+    let (solver, budget) = solver_config(args)?;
+    let mut c = Coordinator::new().with_solver(solver).with_budget(budget);
     if let Some(path) = args.opt("profiles") {
         let store = ProfileStore::load(std::path::Path::new(path))
             .map_err(|e| format!("loading profiles {path}: {e}"))?;
         c = c.with_profiles(store);
     }
     Ok(c)
+}
+
+/// A resource manager over `catalog` inheriting the coordinator's
+/// solver routing (allocate/whatif construct managers directly).
+fn manager_for(
+    catalog: camcloud::cloud::Catalog,
+    coordinator: &Coordinator,
+) -> ResourceManager<'_> {
+    ResourceManager::with_routing(catalog, coordinator, coordinator.solver, coordinator.budget)
 }
 
 fn load_scenario(args: &Args) -> Result<Scenario, String> {
@@ -193,17 +221,14 @@ fn cmd_allocate(args: &Args) -> i32 {
             return 1;
         }
     };
-    let strategies: Vec<Strategy> = match args.opt("strategy") {
-        Some(s) => match s.parse() {
-            Ok(st) => vec![st],
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        },
-        None => Strategy::ALL.to_vec(),
+    let strategies = match args.one_or_all("strategy", &Strategy::ALL) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
     };
-    let mgr = camcloud::manager::ResourceManager::new(scenario.catalog.clone(), &coordinator);
+    let mgr = manager_for(scenario.catalog.clone(), &coordinator);
     for strategy in strategies {
         println!("--- {strategy} ---");
         match mgr.allocate(&scenario.streams, strategy) {
@@ -331,10 +356,7 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
         horizon_hours,
     };
     let runner = AutoscaleRunner::new(&coordinator).with_config(config);
-    let policies: Vec<ScalePolicy> = match args.opt_or("policy", "all") {
-        "all" => ScalePolicy::ALL.to_vec(),
-        p => vec![p.parse()?],
-    };
+    let policies = args.one_or_all("policy", &ScalePolicy::ALL)?;
     println!(
         "trace {:?}: {} epochs over {:.1} h, strategy {strategy}, engine {engine}\n",
         trace.name,
@@ -468,17 +490,14 @@ fn cmd_whatif(args: &Args) -> i32 {
             return 1;
         }
     };
-    let strategies: Vec<Strategy> = match args.opt("strategy") {
-        Some(s) => match s.parse() {
-            Ok(st) => vec![st],
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        },
-        None => Strategy::ALL.to_vec(),
+    let strategies = match args.one_or_all("strategy", &Strategy::ALL) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
     };
-    let mgr = camcloud::manager::ResourceManager::new(scenario.catalog.clone(), &coordinator);
+    let mgr = manager_for(scenario.catalog.clone(), &coordinator);
     let multipliers = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
     for strategy in strategies {
         println!("--- {strategy}: cost vs frame-rate multiplier ---");

@@ -7,10 +7,17 @@
 //!    from the linear resource models (§3.1);
 //! 2. formulates a multiple-choice vector bin packing problem whose bins
 //!    are instance types with 90%-headroom capacities (§3.2);
-//! 3. solves it (exact branch-and-bound, BFD fallback at scale) and maps
-//!    the packing back to an [`AllocationPlan`]: which instances to
-//!    provision, which streams on which instance, and which device (CPU
-//!    or GPU *g*) analyzes each stream.
+//! 3. solves it through the pluggable [`packing::Solver`] stack
+//!    (routed by [`SolverChoice`] under a [`SolveBudget`]) and maps
+//!    the certified outcome back to an [`AllocationPlan`]: which
+//!    instances to provision, which streams on which instance, which
+//!    device (CPU or GPU *g*) analyzes each stream — plus the solve's
+//!    certified cost lower bound and optimality gap.
+//!
+//! [`ResourceManager::allocate_warm`] adds warm-start incremental
+//! repacking on top: given the previous epoch's plan, only the delta of
+//! added/removed streams is re-packed, with a certified-gap drift check
+//! that falls back to a cold solve when warm quality decays.
 
 pub mod plan;
 pub mod realloc;
@@ -25,7 +32,7 @@ pub use realloc::{
 pub use strategy::Strategy;
 
 use crate::cloud::Catalog;
-use crate::packing::{self, BinType, Item, MvbpProblem};
+use crate::packing::{BinType, Item, MvbpProblem, SolveBudget, SolverChoice};
 use crate::profiler::{ExecChoice, ResourceProfile};
 use crate::streams::StreamSpec;
 use crate::types::DimLayout;
@@ -90,9 +97,19 @@ pub struct ResourceManager<'p> {
     pub profiles: &'p dyn ProfileSource,
     /// The paper's 90% utilization ceiling.
     pub headroom: f64,
-    /// Max items for the exact solver before falling back to BFD.
-    pub exact_cutoff: usize,
+    /// Which solving strategy allocations route through.
+    pub solver: SolverChoice,
+    /// Time/size budget handed to the solver stack (exact cutoff,
+    /// deadline, node budget, warm-start drift margin).
+    pub budget: SolveBudget,
 }
+
+/// Warm-start acceptance floor: a warm plan whose certified gap stays
+/// within `max(previous_gap, FLOOR) + budget.warm_gap_margin` is
+/// accepted without a cold solve.  The floor keeps near-optimal fleets
+/// from thrashing into cold solves over bound noise; the margin bounds
+/// per-epoch quality drift.
+const WARM_GAP_FLOOR: f64 = 0.10;
 
 /// A built MVBP instance plus the mapping back to streams/choices.
 pub struct BuiltProblem {
@@ -104,12 +121,20 @@ pub struct BuiltProblem {
 
 impl<'p> ResourceManager<'p> {
     pub fn new(catalog: Catalog, profiles: &'p dyn ProfileSource) -> ResourceManager<'p> {
-        ResourceManager {
-            catalog,
-            profiles,
-            headroom: 0.9,
-            exact_cutoff: 24,
-        }
+        ResourceManager::with_routing(catalog, profiles, SolverChoice::Auto, SolveBudget::default())
+    }
+
+    /// Construct with explicit solver routing — the single place the
+    /// coordinator/CLI propagate their `--solver`/budget configuration
+    /// through, so new routing fields cannot silently default on one
+    /// construction path.
+    pub fn with_routing(
+        catalog: Catalog,
+        profiles: &'p dyn ProfileSource,
+        solver: SolverChoice,
+        budget: SolveBudget,
+    ) -> ResourceManager<'p> {
+        ResourceManager { catalog, profiles, headroom: 0.9, solver, budget }
     }
 
     /// Formulate the MVBP instance for `streams` under `strategy`.
@@ -182,6 +207,25 @@ impl<'p> ResourceManager<'p> {
         Ok(BuiltProblem { problem, choice_map, layout })
     }
 
+    /// Solve an already-built problem through the configured solver and
+    /// map the certified outcome back to a plan.
+    fn solve_built(
+        &self,
+        built: &BuiltProblem,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+    ) -> Result<AllocationPlan, AllocationError> {
+        let outcome = self
+            .solver
+            .solve(&built.problem, &self.budget)
+            .ok_or_else(|| AllocationError::SolverFailed("no packing found".into()))?;
+        outcome
+            .solution
+            .validate(&built.problem)
+            .map_err(AllocationError::SolverFailed)?;
+        Ok(AllocationPlan::from_outcome(built, &outcome, streams, strategy))
+    }
+
     /// Full allocation: formulate, solve, and map back to a plan.
     pub fn allocate(
         &self,
@@ -189,14 +233,32 @@ impl<'p> ResourceManager<'p> {
         strategy: Strategy,
     ) -> Result<AllocationPlan, AllocationError> {
         let built = self.build_problem(streams, strategy)?;
-        let (solution, solver) = packing::solve_auto(&built.problem, self.exact_cutoff)
-            .ok_or_else(|| AllocationError::SolverFailed("no packing found".into()))?;
-        solution
-            .validate(&built.problem)
-            .map_err(AllocationError::SolverFailed)?;
-        Ok(AllocationPlan::from_solution(
-            &built, &solution, streams, strategy, solver,
-        ))
+        self.solve_built(&built, streams, strategy)
+    }
+
+    /// Warm-start allocation: seed the packing with `previous` (the
+    /// fleet already provisioned) so only the delta of added/removed
+    /// streams is re-packed — see [`realloc::repack_incremental`] for
+    /// the keep/consolidate/delta mechanics.  The warm plan is accepted
+    /// only while its certified gap stays within the drift threshold of
+    /// the previous plan's; otherwise (or when the incumbent cannot
+    /// seed this problem at all) the manager falls back to a full cold
+    /// solve.
+    pub fn allocate_warm(
+        &self,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+        previous: &AllocationPlan,
+    ) -> Result<AllocationPlan, AllocationError> {
+        let built = self.build_problem(streams, strategy)?;
+        if let Some(outcome) = realloc::repack_incremental(&built, previous) {
+            let threshold =
+                previous.gap().unwrap_or(0.0).max(WARM_GAP_FLOOR) + self.budget.warm_gap_margin;
+            if outcome.gap() <= threshold {
+                return Ok(AllocationPlan::from_outcome(&built, &outcome, streams, strategy));
+            }
+        }
+        self.solve_built(&built, streams, strategy)
     }
 }
 
@@ -291,6 +353,72 @@ mod tests {
             mgr.allocate(&streams, Strategy::St3),
             Err(AllocationError::MissingProfile(_))
         ));
+    }
+
+    #[test]
+    fn warm_allocation_matches_cold_on_unchanged_workload() {
+        // Tight-bound CPU workload: the certified gap is 0, so the warm
+        // path is accepted and must reproduce the cold cost exactly.
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let streams = StreamSpec::replicate(0, 4, VGA, crate::types::Program::Zf, 0.5);
+        let cold = mgr.allocate(&streams, Strategy::St1).unwrap();
+        assert_eq!(cold.hourly_cost, Dollars::from_f64(0.838));
+        let warm = mgr.allocate_warm(&streams, Strategy::St1, &cold).unwrap();
+        assert_eq!(warm.hourly_cost, cold.hourly_cost);
+        assert_eq!(warm.counts_by_type(), cold.counts_by_type());
+        assert_eq!(warm.solver, crate::packing::SolverKind::WarmStart);
+        assert_eq!(warm.gap(), Some(0.0));
+    }
+
+    #[test]
+    fn warm_allocation_packs_only_the_delta_on_growth() {
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let four = StreamSpec::replicate(0, 4, VGA, crate::types::Program::Zf, 0.5);
+        let previous = mgr.allocate(&four, Strategy::St1).unwrap();
+        let mut six = four.clone();
+        six.extend(StreamSpec::replicate(100, 2, VGA, crate::types::Program::Zf, 0.5));
+        let warm = mgr.allocate_warm(&six, Strategy::St1, &previous).unwrap();
+        let cold = mgr.allocate(&six, Strategy::St1).unwrap();
+        // Three bins either way (the instance is gap-0), and the warm
+        // result never trails the cold one on this tight instance.
+        assert_eq!(warm.hourly_cost, cold.hourly_cost);
+        assert_eq!(warm.instances.len(), 3);
+        assert!(warm.gap().unwrap().is_finite());
+    }
+
+    #[test]
+    fn warm_allocation_recovers_the_optimum_after_total_churn() {
+        // Previous fleet: two GPU instances for a burst.  New workload:
+        // three quiet streams with entirely new ids — consolidation
+        // dissolves the stale GPU bins and the result must match the
+        // cold optimum (one CPU instance), not fossilize the old fleet.
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let burst = StreamSpec::replicate(0, 10, VGA, crate::types::Program::Zf, 1.0);
+        let previous = mgr.allocate(&burst, Strategy::St3).unwrap();
+        let quiet = StreamSpec::replicate(100, 3, VGA, crate::types::Program::Zf, 0.2);
+        let warm = mgr.allocate_warm(&quiet, Strategy::St3, &previous).unwrap();
+        let cold = mgr.allocate(&quiet, Strategy::St3).unwrap();
+        assert_eq!(warm.hourly_cost, cold.hourly_cost);
+        assert_eq!(warm.hourly_cost, Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn warm_allocation_falls_back_when_the_certified_gap_drifts() {
+        // Mixed CPU/GPU demand (scenario 1) makes the per-dimension
+        // certified bound loose: the warm incumbent's gap exceeds the
+        // drift threshold over the proven-optimal previous plan, so the
+        // manager re-solves cold instead of trusting the warm packing.
+        let cal = Calibration::paper();
+        let mgr = manager(&cal);
+        let streams = streams_scenario1();
+        let cold = mgr.allocate(&streams, Strategy::St3).unwrap();
+        assert_eq!(cold.gap(), Some(0.0), "paper-scale solve is proven optimal");
+        let warm = mgr.allocate_warm(&streams, Strategy::St3, &cold).unwrap();
+        assert_eq!(warm.solver, crate::packing::SolverKind::Exact);
+        assert_eq!(warm.hourly_cost, cold.hourly_cost);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use super::strategy::Strategy;
 use super::BuiltProblem;
-use crate::packing::{Solution, SolverKind};
+use crate::packing::{Solution, SolveOutcome, SolverKind};
 use crate::profiler::ExecChoice;
 use crate::streams::StreamSpec;
 use crate::types::{Dollars, ResourceVec};
@@ -64,10 +64,36 @@ pub struct AllocationPlan {
     pub solver: SolverKind,
     pub instances: Vec<PlannedInstance>,
     pub hourly_cost: Dollars,
+    /// Certified cost lower bound from the solve that produced this
+    /// plan (`None` for hand-built placements such as best-effort
+    /// overflow or single-instance characterization runs).
+    pub lower_bound: Option<Dollars>,
 }
 
 impl AllocationPlan {
-    /// Map a packing solution back into provisioning decisions.
+    /// Certified optimality gap `(hourly_cost - lower_bound) /
+    /// hourly_cost`, finite and in `[0, 1]` whenever the plan carries a
+    /// bound (same formula as [`SolveOutcome::gap`]).
+    pub fn gap(&self) -> Option<f64> {
+        let lb = self.lower_bound?;
+        Some(crate::packing::solver::certified_gap(self.hourly_cost, lb))
+    }
+
+    /// Map a certified solve outcome back into provisioning decisions.
+    pub fn from_outcome(
+        built: &BuiltProblem,
+        outcome: &SolveOutcome,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+    ) -> AllocationPlan {
+        let mut plan =
+            AllocationPlan::from_solution(built, &outcome.solution, streams, strategy, outcome.solver);
+        plan.lower_bound = Some(outcome.lower_bound.min(plan.hourly_cost));
+        plan
+    }
+
+    /// Map a bare packing solution back into provisioning decisions
+    /// (no certificate attached — prefer [`AllocationPlan::from_outcome`]).
     pub fn from_solution(
         built: &BuiltProblem,
         solution: &Solution,
@@ -95,7 +121,7 @@ impl AllocationPlan {
             });
         }
         let hourly_cost = instances.iter().map(|i| i.hourly_cost).sum();
-        AllocationPlan { strategy, solver, instances, hourly_cost }
+        AllocationPlan { strategy, solver, instances, hourly_cost, lower_bound: None }
     }
 
     /// `(non_gpu, gpu)` instance counts — Table 6's "Instances" columns.
@@ -123,10 +149,15 @@ impl AllocationPlan {
 
     /// Human-readable summary for CLI output.
     pub fn summary(&self) -> String {
+        let gap = match self.gap() {
+            Some(g) => format!("{:.1}%", g * 100.0),
+            None => "-".to_string(),
+        };
         let mut out = format!(
-            "strategy {} | solver {} | {} instance(s) | hourly cost {}\n",
+            "strategy {} | solver {} | gap {} | {} instance(s) | hourly cost {}\n",
             self.strategy,
             self.solver,
+            gap,
             self.instances.len(),
             self.hourly_cost
         );
@@ -196,5 +227,15 @@ mod tests {
         assert!(s.contains("c4.2xlarge"));
         assert!(s.contains("CPU"));
         assert!(s.contains("ST3"));
+    }
+
+    #[test]
+    fn solved_plans_carry_a_finite_certified_gap() {
+        let plan = plan_scenario2();
+        let lb = plan.lower_bound.expect("manager solves carry a bound");
+        assert!(lb <= plan.hourly_cost);
+        let gap = plan.gap().unwrap();
+        assert!(gap.is_finite() && (0.0..=1.0).contains(&gap));
+        assert!(plan.summary().contains("gap"));
     }
 }

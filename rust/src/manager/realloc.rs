@@ -17,16 +17,20 @@
 //! count is optimal for any transition-cost function that is monotone
 //! in the number of provision/terminate actions.
 //!
-//! Three policy primitives complete the picture for an autoscaler:
+//! Four policy primitives complete the picture for an autoscaler:
 //! [`worth_reallocating`] is the hysteresis gate (feasibility first,
 //! then horizon savings vs churn waste), [`repack_onto`] answers "can
-//! the fleet I already pay for serve the new workload?", and
+//! the fleet I already pay for serve the new workload?",
+//! [`repack_incremental`] warm-starts the next epoch's packing from the
+//! previous plan so only the stream delta is re-packed, and
 //! [`assign_best_effort`] degrades gracefully when a fixed fleet is
 //! genuinely under-provisioned.
 
 use super::plan::{AllocationPlan, PlannedInstance, StreamAssignment};
-use super::{AllocationError, ResourceManager, Strategy};
+use super::{AllocationError, BuiltProblem, ResourceManager, Strategy};
 use crate::cloud::Catalog;
+use crate::packing::heuristics::{self, Greedy, OpenBin};
+use crate::packing::{certified_lower_bound, Decreasing, SolveOutcome, SolverKind};
 use crate::profiler::{ExecChoice, ResourceProfile};
 use crate::streams::StreamSpec;
 use crate::types::{Dollars, ResourceVec};
@@ -175,9 +179,10 @@ pub fn repack_onto(
         catalog: manager.catalog.subset(&names),
         profiles: manager.profiles,
         headroom: manager.headroom,
-        exact_cutoff: manager.exact_cutoff,
+        solver: manager.solver,
+        budget: manager.budget,
     };
-    let plan = match restricted.allocate(streams, strategy) {
+    let mut plan = match restricted.allocate(streams, strategy) {
         Ok(plan) => plan,
         Err(AllocationError::Infeasible { .. }) => return Ok(None),
         // A fleet of only GPU (or only CPU) types is legitimately
@@ -185,11 +190,134 @@ pub fn repack_onto(
         Err(AllocationError::EmptyCatalog(_)) => return Ok(None),
         Err(other) => return Err(other),
     };
+    // The bound was certified against the fleet-restricted catalog; it
+    // is NOT a valid certificate vs the full catalog (a subset's
+    // cheapest type / best capacity-per-dollar can be worse), so a
+    // kept-fleet epoch must not report a spuriously tight gap.
+    plan.lower_bound = None;
     let fits = plan
         .counts_by_type()
         .iter()
         .all(|(t, n)| have.get(t).copied().unwrap_or(0) >= *n);
     Ok(fits.then_some(plan))
+}
+
+/// Utilization floor below which a seeded bin is dissolved during
+/// incremental repacking: bins left mostly empty by departed streams
+/// rejoin the delta so scale-down actually shrinks the fleet instead of
+/// fossilizing half-empty instances.
+const CONSOLIDATE_BELOW: f64 = 0.5;
+
+fn approx_eq(a: &ResourceVec, b: &ResourceVec) -> bool {
+    a.dims() == b.dims() && a.0.iter().zip(&b.0).all(|(x, y)| (x - y).abs() <= 1e-9)
+}
+
+/// Warm-start packing of `built` seeded from `previous`:
+///
+/// 1. **Keep** — every stream of the previous plan that still exists in
+///    the new problem with an identical requirement vector stays in its
+///    bin under its old choice;
+/// 2. **Consolidate** — kept bins whose remaining load falls below
+///    [`CONSOLIDATE_BELOW`] utilization are dissolved, their streams
+///    rejoining the delta;
+/// 3. **Delta** — remaining items (new streams, changed rates,
+///    consolidated strays) are best-fit into the seeded residuals,
+///    opening cheapest-feasible new bins only when nothing fits.
+///
+/// Returns a certified [`SolveOutcome`] (kind [`SolverKind::WarmStart`])
+/// or `None` when the previous plan cannot seed this problem at all
+/// (unknown bin types, changed layout, packing failure) — the caller
+/// then cold-solves.  The caller also owns the quality gate: accept the
+/// warm outcome only if its certified gap has not drifted past the
+/// previous plan's (see `ResourceManager::allocate_warm`).
+pub(crate) fn repack_incremental(
+    built: &BuiltProblem,
+    previous: &AllocationPlan,
+) -> Option<SolveOutcome> {
+    let problem = &built.problem;
+    if previous.instances.is_empty() {
+        return None;
+    }
+    let index_of: BTreeMap<&str, usize> = problem
+        .items
+        .iter()
+        .enumerate()
+        .map(|(i, it)| (it.id.as_str(), i))
+        .collect();
+    let type_of: BTreeMap<&str, usize> = problem
+        .bin_types
+        .iter()
+        .enumerate()
+        .map(|(t, bt)| (bt.name.as_str(), t))
+        .collect();
+
+    // Stage 1: keep surviving streams in their bins.
+    let mut placed = vec![false; problem.items.len()];
+    let mut seeded: Vec<OpenBin> = Vec::new();
+    for inst in previous.instances.iter() {
+        let &bin_type = type_of.get(inst.type_name.as_str())?;
+        let capacity = &problem.bin_types[bin_type].capacity;
+        let mut residual = capacity.clone();
+        let mut assignments = Vec::new();
+        for s in &inst.streams {
+            let Some(&item) = index_of.get(s.stream_id.as_str()) else { continue };
+            if placed[item] {
+                continue;
+            }
+            let Some(choice) = problem.items[item]
+                .choices
+                .iter()
+                .position(|req| approx_eq(req, &s.requirement))
+            else {
+                continue; // rate/profile changed: re-pack as delta
+            };
+            let req = &problem.items[item].choices[choice];
+            if !req.fits(&residual) {
+                continue; // capacity model changed under us: delta
+            }
+            residual.sub_assign(req);
+            assignments.push((item, choice));
+            placed[item] = true;
+        }
+        if !assignments.is_empty() {
+            seeded.push(OpenBin { bin_type, residual, assignments });
+        }
+    }
+
+    // Stage 2: dissolve bins left under-utilized by departures.
+    let mut open: Vec<OpenBin> = Vec::new();
+    for bin in seeded {
+        let capacity = &problem.bin_types[bin.bin_type].capacity;
+        let mut load = capacity.clone();
+        load.sub_assign(&bin.residual);
+        if load.max_ratio(capacity) < CONSOLIDATE_BELOW {
+            for &(item, _) in &bin.assignments {
+                placed[item] = false;
+            }
+        } else {
+            open.push(bin);
+        }
+    }
+
+    // Stage 3: best-fit the delta (hardest first) into the residuals.
+    let delta: Vec<usize> = Decreasing::order(problem)
+        .into_iter()
+        .filter(|&i| !placed[i])
+        .collect();
+    if !heuristics::pack_into(problem, Greedy::BestFit, &delta, &mut open) {
+        return None;
+    }
+    let solution = heuristics::finish(open);
+    solution.validate(problem).ok()?;
+    let cost = solution.cost(problem);
+    let lower_bound = certified_lower_bound(problem).min(cost);
+    Some(SolveOutcome {
+        solution,
+        solver: SolverKind::WarmStart,
+        cost,
+        lower_bound,
+        proven_optimal: cost == lower_bound,
+    })
 }
 
 /// Best-effort placement of `streams` onto a *fixed* fleet that a
@@ -288,6 +416,8 @@ pub fn assign_best_effort(
         solver: fleet.solver,
         instances,
         hourly_cost: fleet.hourly_cost,
+        // A best-effort overflow placement is not a solve: no bound.
+        lower_bound: None,
     };
     (plan, unserved)
 }
@@ -471,6 +601,64 @@ mod tests {
             assign_best_effort(&fleet, &fast, &fast_profiles, Strategy::St3, &catalog, 0.9);
         assert_eq!(unserved2, vec![0]);
         assert!(plan2.instances.iter().all(|i| i.streams.is_empty()));
+    }
+
+    /// A CPU-only workload whose certified bound is tight (two items of
+    /// 3.56 cores per 7.2-core bin), so warm acceptance is exercised
+    /// deterministically.
+    fn tight_streams(n: u32) -> Vec<StreamSpec> {
+        StreamSpec::replicate(0, n, VGA, Program::Zf, 0.5)
+    }
+
+    fn tight_manager(c: &Coordinator) -> ResourceManager<'_> {
+        ResourceManager::new(Catalog::paper_experiments(), c)
+    }
+
+    #[test]
+    fn incremental_repack_keeps_surviving_streams_in_place() {
+        let c = Coordinator::new();
+        let mgr = tight_manager(&c);
+        let streams = tight_streams(4);
+        let cold = mgr.allocate(&streams, Strategy::St1).unwrap();
+        let built = mgr.build_problem(&streams, Strategy::St1).unwrap();
+        let warm = repack_incremental(&built, &cold).expect("previous plan seeds itself");
+        warm.solution.validate(&built.problem).unwrap();
+        assert_eq!(warm.cost, cold.hourly_cost);
+        assert_eq!(warm.solver, crate::packing::SolverKind::WarmStart);
+        assert!(warm.lower_bound <= warm.cost);
+        assert!(warm.gap().is_finite());
+    }
+
+    #[test]
+    fn incremental_repack_consolidates_on_scale_down() {
+        // Emergency fleet (2 x g2.2xlarge) shrinking to 3 quiet streams:
+        // the GPU bins fall under the consolidation floor, dissolve, and
+        // the delta reopens the cheapest feasible instance instead of
+        // fossilizing the GPU fleet.
+        let c = Coordinator::new();
+        let mgr = tight_manager(&c);
+        let big = mgr
+            .allocate(&StreamSpec::replicate(0, 10, VGA, Program::Zf, 1.0), Strategy::St3)
+            .unwrap();
+        assert!(big.hourly_cost >= Dollars::from_f64(1.300));
+        let quiet = StreamSpec::replicate(100, 3, VGA, Program::Zf, 0.2);
+        let built = mgr.build_problem(&quiet, Strategy::St3).unwrap();
+        let warm = repack_incremental(&built, &big).unwrap();
+        warm.solution.validate(&built.problem).unwrap();
+        // One c4.2xlarge serves the quiet workload: the warm plan must
+        // shrink to it, not hold two GPU instances.
+        assert_eq!(warm.cost, Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn incremental_repack_rejects_unknown_bin_types() {
+        let c = Coordinator::new();
+        let mgr = tight_manager(&c);
+        let streams = tight_streams(2);
+        let mut plan = mgr.allocate(&streams, Strategy::St1).unwrap();
+        plan.instances[0].type_name = "decommissioned.4xlarge".into();
+        let built = mgr.build_problem(&streams, Strategy::St1).unwrap();
+        assert!(repack_incremental(&built, &plan).is_none());
     }
 
     #[test]

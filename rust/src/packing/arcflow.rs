@@ -61,6 +61,26 @@ pub fn discretize(weights: &[f64], capacity: f64, grid: u32) -> (Vec<u32>, u32) 
     (w, grid)
 }
 
+/// Discretize in the *relaxation* direction: weights round **down** and
+/// the capacity maps exactly onto the grid, so every packing valid in
+/// the original stays valid on the grid.  This is the rounding a lower
+/// bound needs — the opposite of [`discretize`], whose restriction
+/// direction serves exact solving.  Weights above capacity clamp to the
+/// full grid (such items cannot fit anyway; the clamp keeps the bound
+/// finite instead of overflowing the grid).
+pub fn discretize_relaxed(weights: &[f64], capacity: f64, grid: u32) -> (Vec<u32>, u32) {
+    debug_assert!(grid > 0);
+    let cap = capacity.max(0.0);
+    let w = weights
+        .iter()
+        .map(|&x| {
+            let frac = if cap > 0.0 { (x / cap).clamp(0.0, 1.0) } else { 1.0 };
+            ((frac * grid as f64) + 1e-9).floor() as u32
+        })
+        .collect();
+    (w, grid)
+}
+
 impl ArcFlowGraph {
     /// Build the graph for `weights` (grid units) into bins of `capacity`.
     ///
@@ -153,40 +173,42 @@ impl ArcFlowGraph {
 
 /// Martello-Toth L2 lower bound on the number of unit-cost bins needed
 /// for 1-D weights (grid units).  Strictly dominates ceil(sum/cap).
+///
+/// Evaluated in `O(n log n)` via sorted weights + prefix sums (one
+/// binary search per distinct threshold) — this runs on every certified
+/// solve, so the naive `O(thresholds x n)` scan would dominate large
+/// heuristic solves.
 pub fn l2_lower_bound(weights: &[u32], capacity: u32) -> u32 {
     if capacity == 0 {
         return if weights.iter().any(|&w| w > 0) { u32::MAX } else { 0 };
     }
-    let mut best: u32 = {
-        let total: u64 = weights.iter().map(|&w| w as u64).sum();
-        total.div_ceil(capacity as u64) as u32
-    };
-    let mut thresholds: Vec<u32> = weights
-        .iter()
-        .copied()
-        .filter(|&w| w <= capacity / 2)
-        .collect();
-    thresholds.push(0);
-    thresholds.sort_unstable();
+    let mut sorted: Vec<u32> = weights.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    let mut prefix = vec![0u64; n + 1];
+    for (i, &w) in sorted.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + w as u64;
+    }
+    let mut best = prefix[n].div_ceil(capacity as u64) as u32;
+    let half = capacity / 2;
+    // First index with weight > x / >= x respectively.
+    let above = |x: u32| sorted.partition_point(|&w| w <= x);
+    let at_or_above = |x: u32| sorted.partition_point(|&w| w < x);
+    let i_half = above(half);
+    let mut thresholds = vec![0u32];
+    thresholds.extend(sorted.iter().copied().filter(|&w| w <= half));
     thresholds.dedup();
     for k in thresholds {
         // Large items (> cap - k) each need their own bin; medium items
         // (cap/2 < w <= cap - k) pair with at most the small leftovers.
-        let n1 = weights.iter().filter(|&&w| w > capacity - k).count() as u32;
-        let n2 = weights
-            .iter()
-            .filter(|&&w| w > capacity / 2 && w <= capacity - k)
-            .count() as u32;
-        let s_small: u64 = weights
-            .iter()
-            .filter(|&&w| w >= k && w <= capacity / 2)
-            .map(|&w| w as u64)
-            .sum();
-        let cap2: u64 = weights
-            .iter()
-            .filter(|&&w| w > capacity / 2 && w <= capacity - k)
-            .map(|&w| (capacity - w) as u64)
-            .sum();
+        // k <= cap/2 guarantees cap - k >= cap/2, so i_ck >= i_half.
+        let i_ck = above(capacity - k);
+        let n1 = (n - i_ck) as u32;
+        let n2 = (i_ck - i_half) as u32;
+        let s_small = prefix[i_half] - prefix[at_or_above(k)];
+        let med_cnt = (i_ck - i_half) as u64;
+        let med_sum = prefix[i_ck] - prefix[i_half];
+        let cap2 = med_cnt * capacity as u64 - med_sum;
         let extra = s_small.saturating_sub(cap2).div_ceil(capacity as u64) as u32;
         best = best.max(n1 + n2 + extra);
     }
@@ -249,6 +271,19 @@ mod tests {
     }
 
     #[test]
+    fn discretize_relaxed_rounds_down_and_clamps() {
+        let (w, cap) = discretize_relaxed(&[0.333, 0.5, 1.7], 1.0, 100);
+        assert_eq!(cap, 100);
+        // Weights floor (33, not 34); over-capacity clamps to the grid.
+        assert_eq!(w, vec![33, 50, 100]);
+        // Relaxed never exceeds the restriction-direction rounding, so a
+        // bound on the relaxed grid is a bound on the original.
+        let (up, _) = discretize(&[0.333, 0.5], 1.0, 100);
+        let (down, _) = discretize_relaxed(&[0.333, 0.5], 1.0, 100);
+        assert!(down.iter().zip(&up).all(|(d, u)| d <= u));
+    }
+
+    #[test]
     fn graph_counts_small_example() {
         // weights 3,3,2 cap 5: states {0,3,5(=3+2),2} ...
         let g = ArcFlowGraph::build(&[3, 3, 2], 5);
@@ -285,6 +320,54 @@ mod tests {
     fn l2_zero_capacity() {
         assert_eq!(l2_lower_bound(&[1], 0), u32::MAX);
         assert_eq!(l2_lower_bound(&[], 0), 0);
+    }
+
+    /// The prefix-sum evaluation must agree with the definitional
+    /// per-threshold scan on random inputs.
+    #[test]
+    fn l2_prefix_sum_matches_naive_reference() {
+        fn naive(weights: &[u32], capacity: u32) -> u32 {
+            let total: u64 = weights.iter().map(|&w| w as u64).sum();
+            let mut best = total.div_ceil(capacity as u64) as u32;
+            let mut thresholds: Vec<u32> =
+                weights.iter().copied().filter(|&w| w <= capacity / 2).collect();
+            thresholds.push(0);
+            thresholds.sort_unstable();
+            thresholds.dedup();
+            for k in thresholds {
+                let n1 = weights.iter().filter(|&&w| w > capacity - k).count() as u32;
+                let n2 = weights
+                    .iter()
+                    .filter(|&&w| w > capacity / 2 && w <= capacity - k)
+                    .count() as u32;
+                let s_small: u64 = weights
+                    .iter()
+                    .filter(|&&w| w >= k && w <= capacity / 2)
+                    .map(|&w| w as u64)
+                    .sum();
+                let cap2: u64 = weights
+                    .iter()
+                    .filter(|&&w| w > capacity / 2 && w <= capacity - k)
+                    .map(|&w| (capacity - w) as u64)
+                    .sum();
+                let extra = s_small.saturating_sub(cap2).div_ceil(capacity as u64) as u32;
+                best = best.max(n1 + n2 + extra);
+            }
+            best
+        }
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for case in 0..300 {
+            let cap = 1 + rng.below(64) as u32;
+            let n = rng.below(24) as usize;
+            let weights: Vec<u32> =
+                (0..n).map(|_| 1 + rng.below(cap as u64) as u32).collect();
+            assert_eq!(
+                l2_lower_bound(&weights, cap),
+                naive(&weights, cap),
+                "case {case}: weights {weights:?} cap {cap}"
+            );
+        }
     }
 
     #[test]

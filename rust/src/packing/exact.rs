@@ -3,14 +3,18 @@
 //! Depth-first search over items (sorted hardest-first), branching on
 //! "place item in an existing open bin" and "open a new bin of each
 //! type", under each requirement choice.  Pruned by a per-dimension
-//! cost lower bound and seeded with the best-fit-decreasing incumbent.
+//! cost lower bound and seeded with an incumbent — best-fit-decreasing
+//! by default, or any solution the caller already holds (the portfolio
+//! seeds its racing winner via [`BranchAndBound::solve_seeded`]).
 //! Proven optimal at paper scale (validated against brute force in the
-//! property tests); above the node budget it degrades gracefully to the
-//! best incumbent and reports `proven_optimal = false`.
+//! property tests); past the node budget or wall-clock deadline it
+//! degrades gracefully to the best incumbent and reports
+//! `proven_optimal = false`.
 
 use super::heuristics::solve_best_fit;
 use super::problem::{MvbpProblem, PackedBin, Solution};
 use crate::types::{Dollars, ResourceVec};
+use std::time::Instant;
 
 /// Result of an exact solve, with optimality metadata.
 #[derive(Clone, Debug)]
@@ -20,16 +24,26 @@ pub struct ExactResult {
     pub nodes_explored: u64,
 }
 
-/// Branch-and-bound solver with a configurable node budget.
+/// Branch-and-bound solver with a configurable node budget and an
+/// optional wall-clock deadline.
 pub struct BranchAndBound {
     pub node_budget: u64,
+    /// Abandon the proof (keep the incumbent) once this instant passes.
+    /// Checked every [`DEADLINE_CHECK_MASK`]+1 nodes, so the overrun is
+    /// bounded by one check interval.  The node budget remains the
+    /// deterministic cap; the deadline is the safety net for instances
+    /// whose nodes are individually expensive.
+    pub deadline: Option<Instant>,
 }
+
+/// Deadline polling interval mask (checked when `nodes & MASK == 0`).
+const DEADLINE_CHECK_MASK: u64 = 0xFFF;
 
 impl Default for BranchAndBound {
     fn default() -> Self {
         // Generous for paper-scale instances (<=30 items, <=4 types):
         // those need well under 1e5 nodes.
-        BranchAndBound { node_budget: 5_000_000 }
+        BranchAndBound { node_budget: 5_000_000, deadline: None }
     }
 }
 
@@ -53,14 +67,28 @@ struct SearchCtx<'p> {
     best: Option<Solution>,
     nodes: u64,
     node_budget: u64,
+    deadline: Option<Instant>,
     exhausted: bool,
 }
 
 impl BranchAndBound {
-    /// Solve to proven optimality (within the node budget).
+    /// Solve to proven optimality (within the node budget), seeding the
+    /// search with a fresh best-fit-decreasing incumbent.
     ///
     /// Returns `None` iff some item fits in no bin under any choice.
     pub fn solve(&self, problem: &MvbpProblem) -> Option<ExactResult> {
+        self.solve_seeded(problem, solve_best_fit(problem))
+    }
+
+    /// Like [`BranchAndBound::solve`] but seeded with a caller-supplied
+    /// incumbent (e.g. the portfolio's racing winner), skipping the
+    /// internal BFD pass.  An invalid or absent incumbent degrades to an
+    /// unseeded search.
+    pub fn solve_seeded(
+        &self,
+        problem: &MvbpProblem,
+        incumbent: Option<Solution>,
+    ) -> Option<ExactResult> {
         problem.validate().ok()?;
         if !problem.infeasible_items().is_empty() {
             return None;
@@ -137,8 +165,9 @@ impl BranchAndBound {
             suffix_demand[k] = suffix_demand[k + 1].add(&min_req[order[k]]);
         }
 
-        // Incumbent from BFD (may not exist for pathological instances).
-        let incumbent = solve_best_fit(problem);
+        // Incumbent (may not exist for pathological instances); an
+        // invalid seed is discarded rather than poisoning the bound.
+        let incumbent = incumbent.filter(|s| s.validate(problem).is_ok());
         let best_cost = incumbent
             .as_ref()
             .map(|s| s.cost(problem))
@@ -153,6 +182,7 @@ impl BranchAndBound {
             best: incumbent,
             nodes: 0,
             node_budget: self.node_budget,
+            deadline: self.deadline,
             exhausted: false,
         };
         let mut open: Vec<OpenBin> = Vec::new();
@@ -191,6 +221,14 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
     if ctx.nodes > ctx.node_budget {
         ctx.exhausted = true;
         return;
+    }
+    if ctx.nodes & DEADLINE_CHECK_MASK == 0 {
+        if let Some(deadline) = ctx.deadline {
+            if Instant::now() >= deadline {
+                ctx.exhausted = true;
+                return;
+            }
+        }
     }
     if k == ctx.order.len() {
         if cost < ctx.best_cost {
@@ -387,9 +425,42 @@ mod tests {
     #[test]
     fn node_budget_degrades_gracefully() {
         let p = small_problem();
-        let r = BranchAndBound { node_budget: 1 }.solve(&p).unwrap();
+        let r = BranchAndBound { node_budget: 1, ..Default::default() }
+            .solve(&p)
+            .unwrap();
         // Budget hit: still returns the BFD incumbent, flagged non-optimal.
         r.solution.validate(&p).unwrap();
         assert!(!r.proven_optimal);
+    }
+
+    #[test]
+    fn expired_deadline_degrades_to_the_incumbent() {
+        // A deadline already in the past: the first polled check aborts
+        // the proof, but the seeded incumbent still comes back valid.
+        let p = small_problem();
+        let bb = BranchAndBound {
+            node_budget: u64::MAX,
+            deadline: Some(Instant::now() - std::time::Duration::from_millis(1)),
+        };
+        let r = bb.solve(&p).unwrap();
+        r.solution.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn seeded_incumbent_is_used_and_invalid_seeds_are_discarded() {
+        let p = small_problem();
+        let good = crate::packing::solve_first_fit(&p).unwrap();
+        let r = BranchAndBound::default()
+            .solve_seeded(&p, Some(good.clone()))
+            .unwrap();
+        assert!(r.proven_optimal);
+        assert!(r.solution.cost(&p) <= good.cost(&p));
+
+        // An empty (invalid: items unpacked) seed must not be trusted.
+        let r2 = BranchAndBound::default()
+            .solve_seeded(&p, Some(Solution::default()))
+            .unwrap();
+        assert!(r2.proven_optimal);
+        assert_eq!(r2.solution.cost(&p), r.solution.cost(&p));
     }
 }

@@ -1,21 +1,53 @@
-//! Greedy MVBP heuristics: first-fit-decreasing and best-fit-decreasing.
+//! Greedy MVBP heuristics: first-fit and best-fit over pluggable item
+//! orderings.
 //!
-//! These are the ablation baselines (DESIGN.md, Ablation A) and the
-//! fallback path for instances above the exact solver's size cutoff.
-//! Both respect the multiple-choice structure by trying every
-//! (bin, choice) / (type, choice) combination and picking greedily.
+//! These are the ablation baselines (DESIGN.md, Ablation A), the
+//! portfolio solver's racing arms, and the incremental-repack placement
+//! engine.  All entry points respect the multiple-choice structure by
+//! trying every (bin, choice) / (type, choice) combination and picking
+//! greedily.  The core machinery — [`pack_into`] over a pre-seeded set
+//! of open bins — is shared with `packing::solver` (sharded arms) and
+//! `manager::realloc` (warm-start delta placement).
 
 use super::problem::{MvbpProblem, PackedBin, Solution};
 use crate::types::ResourceVec;
 
-/// Item preorder used by both heuristics.
-pub struct Decreasing;
+/// Which greedy placement rule to run (shared by the solo heuristics
+/// and the portfolio arms).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Greedy {
+    /// Place into the first open bin where any choice fits.
+    FirstFit,
+    /// Place into the (bin, choice) pair leaving the least headroom.
+    BestFit,
+}
 
-impl Decreasing {
-    /// Items sorted by decreasing best-case fullness (same measure as the
-    /// exact solver's ordering, so ablations isolate the *search*, not the
-    /// ordering).
-    pub fn order(problem: &MvbpProblem) -> Vec<usize> {
+/// Item preorders the heuristics can run under.  Different orderings
+/// find different packings on the same instance, which is exactly what
+/// the portfolio solver races.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ItemOrder {
+    /// Decreasing best-case fullness (the classic hardest-first order,
+    /// same measure as the exact solver's ordering).
+    HardestFirst,
+    /// Decreasing total normalized demand (big-volume items first);
+    /// favors multi-dimension hogs that `HardestFirst`'s max-ratio
+    /// measure can underrate.
+    SumDecreasing,
+    /// Fewest requirement choices first (most constrained items while
+    /// bins are still empty), ties broken hardest-first.
+    FewestChoices,
+}
+
+impl ItemOrder {
+    pub const ALL: [ItemOrder; 3] = [
+        ItemOrder::HardestFirst,
+        ItemOrder::SumDecreasing,
+        ItemOrder::FewestChoices,
+    ];
+
+    /// Item indices of `problem` sorted under this ordering.
+    pub fn order(self, problem: &MvbpProblem) -> Vec<usize> {
         let roomiest = ResourceVec(
             (0..problem.dims)
                 .map(|d| {
@@ -27,7 +59,6 @@ impl Decreasing {
                 })
                 .collect(),
         );
-        let mut order: Vec<usize> = (0..problem.items.len()).collect();
         let hardness = |i: usize| -> f64 {
             problem.items[i]
                 .choices
@@ -35,21 +66,65 @@ impl Decreasing {
                 .map(|c| c.max_ratio(&roomiest))
                 .fold(f64::INFINITY, f64::min)
         };
-        // total_cmp: NaN-bearing inputs (caught by `validate`, but this
-        // must not panic when called directly) sort deterministically
-        // instead of aborting mid-sort.
-        order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
+        let volume = |i: usize| -> f64 {
+            problem.items[i]
+                .choices
+                .iter()
+                .map(|c| {
+                    c.0.iter()
+                        .zip(&roomiest.0)
+                        .map(|(v, r)| if *r > 0.0 { v / r } else { 0.0 })
+                        .sum::<f64>()
+                })
+                .fold(f64::INFINITY, f64::min)
+        };
+        let mut order: Vec<usize> = (0..problem.items.len()).collect();
+        // total_cmp everywhere: NaN-bearing inputs (caught by `validate`,
+        // but this must not panic when called directly) sort
+        // deterministically instead of aborting mid-sort.
+        match self {
+            ItemOrder::HardestFirst => {
+                order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
+            }
+            ItemOrder::SumDecreasing => {
+                order.sort_by(|&a, &b| volume(b).total_cmp(&volume(a)));
+            }
+            ItemOrder::FewestChoices => {
+                order.sort_by(|&a, &b| {
+                    let na = problem.items[a].choices.len();
+                    let nb = problem.items[b].choices.len();
+                    na.cmp(&nb)
+                        .then_with(|| hardness(b).total_cmp(&hardness(a)))
+                });
+            }
+        }
         order
     }
 }
 
-struct OpenBin {
-    bin_type: usize,
-    residual: ResourceVec,
-    assignments: Vec<(usize, usize)>,
+/// The classic hardest-first preorder (kept as the named entry point the
+/// ablations and exact solver reference).
+pub struct Decreasing;
+
+impl Decreasing {
+    /// Items sorted by decreasing best-case fullness (same measure as the
+    /// exact solver's ordering, so ablations isolate the *search*, not the
+    /// ordering).
+    pub fn order(problem: &MvbpProblem) -> Vec<usize> {
+        ItemOrder::HardestFirst.order(problem)
+    }
 }
 
-fn finish(open: Vec<OpenBin>) -> Solution {
+/// An open bin mid-placement.  `pub(crate)` so the portfolio solver and
+/// the warm-start repacker can seed [`pack_into`] with partially filled
+/// bins.
+pub(crate) struct OpenBin {
+    pub(crate) bin_type: usize,
+    pub(crate) residual: ResourceVec,
+    pub(crate) assignments: Vec<(usize, usize)>,
+}
+
+pub(crate) fn finish(open: Vec<OpenBin>) -> Solution {
     Solution {
         bins: open
             .into_iter()
@@ -97,67 +172,94 @@ fn open_new_bin(
     true
 }
 
-/// First-fit-decreasing: place each item into the first open bin where
-/// any choice fits (choices tried in order — CPU first, matching the
-/// paper's "prefer the cheap path" intuition); otherwise open the
-/// cheapest feasible new bin.
-pub fn solve_first_fit(problem: &MvbpProblem) -> Option<Solution> {
-    problem.validate().ok()?;
-    let mut open: Vec<OpenBin> = Vec::new();
-    for &item in &Decreasing::order(problem) {
-        let mut placed = false;
-        'bins: for bin in open.iter_mut() {
-            for (c, req) in problem.items[item].choices.iter().enumerate() {
-                if req.fits(&bin.residual) {
-                    bin.residual.sub_assign(req);
-                    bin.assignments.push((item, c));
-                    placed = true;
-                    break 'bins;
+/// Place `items` (indices into `problem.items`, in the order given)
+/// into `open` bins under the `greedy` rule, opening the cheapest
+/// feasible new bin when nothing fits.  `open` may be pre-seeded with
+/// partially filled bins — the warm-start repacker and the portfolio's
+/// sharded arms rely on that.  Returns `false` iff some item fits in no
+/// open bin and no new bin admits it; `open` then holds a partial
+/// placement the caller must discard.
+///
+/// Does *not* validate `problem` — public wrappers and the portfolio do
+/// that once per solve, not once per shard.
+pub(crate) fn pack_into(
+    problem: &MvbpProblem,
+    greedy: Greedy,
+    items: &[usize],
+    open: &mut Vec<OpenBin>,
+) -> bool {
+    for &item in items {
+        let placed = match greedy {
+            Greedy::FirstFit => {
+                // First open bin where any choice fits (choices tried in
+                // order — CPU first, matching the paper's "prefer the
+                // cheap path" intuition).
+                let mut placed = false;
+                'bins: for bin in open.iter_mut() {
+                    for (c, req) in problem.items[item].choices.iter().enumerate() {
+                        if req.fits(&bin.residual) {
+                            bin.residual.sub_assign(req);
+                            bin.assignments.push((item, c));
+                            placed = true;
+                            break 'bins;
+                        }
+                    }
+                }
+                placed
+            }
+            Greedy::BestFit => {
+                // (bin, choice) pair leaving the least residual headroom.
+                let mut best: Option<(usize, usize, f64)> = None;
+                for (b, bin) in open.iter().enumerate() {
+                    for (c, req) in problem.items[item].choices.iter().enumerate() {
+                        if req.fits(&bin.residual) {
+                            let mut post = bin.residual.clone();
+                            post.sub_assign(req);
+                            let cap = &problem.bin_types[bin.bin_type].capacity;
+                            let slack = post.max_ratio(cap);
+                            if best.map_or(true, |(_, _, bs)| slack < bs) {
+                                best = Some((b, c, slack));
+                            }
+                        }
+                    }
+                }
+                match best {
+                    Some((b, c, _)) => {
+                        let req = problem.items[item].choices[c].clone();
+                        open[b].residual.sub_assign(&req);
+                        open[b].assignments.push((item, c));
+                        true
+                    }
+                    None => false,
                 }
             }
-        }
-        if !placed && !open_new_bin(problem, item, &mut open) {
-            return None;
+        };
+        if !placed && !open_new_bin(problem, item, open) {
+            return false;
         }
     }
-    Some(finish(open))
+    true
+}
+
+/// One full greedy pass under an explicit rule and ordering.
+pub fn solve_greedy(problem: &MvbpProblem, greedy: Greedy, order: ItemOrder) -> Option<Solution> {
+    problem.validate().ok()?;
+    let items = order.order(problem);
+    let mut open: Vec<OpenBin> = Vec::new();
+    pack_into(problem, greedy, &items, &mut open).then(|| finish(open))
+}
+
+/// First-fit-decreasing: place each item into the first open bin where
+/// any choice fits; otherwise open the cheapest feasible new bin.
+pub fn solve_first_fit(problem: &MvbpProblem) -> Option<Solution> {
+    solve_greedy(problem, Greedy::FirstFit, ItemOrder::HardestFirst)
 }
 
 /// Best-fit-decreasing: place each item into the (bin, choice) pair that
 /// leaves the least residual headroom; otherwise open the cheapest
 /// feasible new bin.
 pub fn solve_best_fit(problem: &MvbpProblem) -> Option<Solution> {
-    problem.validate().ok()?;
-    let mut open: Vec<OpenBin> = Vec::new();
-    for &item in &Decreasing::order(problem) {
-        let mut best: Option<(usize, usize, f64)> = None; // (bin, choice, post-fit slack)
-        for (b, bin) in open.iter().enumerate() {
-            for (c, req) in problem.items[item].choices.iter().enumerate() {
-                if req.fits(&bin.residual) {
-                    let mut post = bin.residual.clone();
-                    post.sub_assign(req);
-                    let cap = &problem.bin_types[bin.bin_type].capacity;
-                    let slack = post.max_ratio(cap);
-                    if best.map_or(true, |(_, _, bs)| slack < bs) {
-                        best = Some((b, c, slack));
-                    }
-                }
-            }
-        }
-        match best {
-            Some((b, c, _)) => {
-                let req = problem.items[item].choices[c].clone();
-                open[b].residual.sub_assign(&req);
-                open[b].assignments.push((item, c));
-            }
-            None => {
-                if !open_new_bin(problem, item, &mut open) {
-                    return None;
-                }
-            }
-        }
-    }
-    Some(finish(open))
+    solve_greedy(problem, Greedy::BestFit, ItemOrder::HardestFirst)
 }
 
 #[cfg(test)]
@@ -325,5 +427,47 @@ mod tests {
         let order = Decreasing::order(&p);
         // item "a" needs 3.0 with no alternative; "b" can shrink to 1.0.
         assert!(order.iter().position(|&i| i == 0) < order.iter().position(|&i| i == 1));
+    }
+
+    #[test]
+    fn every_ordering_is_a_permutation_and_packs_clean() {
+        let p = small_problem();
+        for order in ItemOrder::ALL {
+            let idx = order.order(&p);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2], "{order:?} must permute all items");
+            for greedy in [Greedy::FirstFit, Greedy::BestFit] {
+                let s = solve_greedy(&p, greedy, order).unwrap();
+                s.validate(&p).unwrap_or_else(|e| panic!("{greedy:?}/{order:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fewest_choices_orders_constrained_items_first() {
+        let p = small_problem();
+        let order = ItemOrder::FewestChoices.order(&p);
+        // "b" is the only two-choice item; both single-choice items
+        // ("a", "c") must precede it.
+        assert_eq!(order[2], 1);
+    }
+
+    #[test]
+    fn pack_into_respects_preseeded_bins() {
+        // Seed one small bin holding item 0; packing the rest must not
+        // disturb it and must account for its residual.
+        let p = small_problem();
+        let mut residual = p.bin_types[0].capacity.clone();
+        residual.sub_assign(&p.items[0].choices[0]);
+        let mut open = vec![OpenBin {
+            bin_type: 0,
+            residual,
+            assignments: vec![(0, 0)],
+        }];
+        assert!(pack_into(&p, Greedy::BestFit, &[1, 2], &mut open));
+        let s = finish(open);
+        s.validate(&p).unwrap();
+        assert_eq!(s.bins[0].assignments[0], (0, 0));
     }
 }

@@ -8,24 +8,42 @@
 //! total cost of opened bins is minimal and no bin is over capacity in
 //! any dimension.
 //!
-//! The paper solves this with the exact arc-flow method of Brandão &
-//! Pedroso (VPSolver).  This crate provides:
+//! The solving stack is organized around the [`Solver`] trait
+//! (`packing::solver`): every strategy takes an [`MvbpProblem`] and a
+//! [`SolveBudget`] and returns a [`SolveOutcome`] that carries the
+//! solution **plus** a certified cost lower bound and the resulting
+//! optimality gap, so allocations self-certify instead of handing back
+//! blind answers.  The layers, bottom up:
 //!
-//! * [`exact`] — an exact branch-and-bound solver (the default; proven
-//!   optimal at paper scale and validated against brute force),
-//! * [`arcflow`] — the arc-flow graph construction with the compression
-//!   step, used as an exact 1-D solver and as a lower bound,
-//! * [`heuristics`] — first-fit-decreasing / best-fit-decreasing
-//!   baselines (ablation A, and the fallback above the exact-size cutoff).
+//! * [`problem`] — the instance/solution types with full validation;
+//! * [`heuristics`] — first-fit / best-fit under pluggable item
+//!   orderings ([`ItemOrder`]), built on a shared placement engine that
+//!   also powers sharded portfolio arms and warm-start delta repacking;
+//! * [`exact`] — branch-and-bound, node- and deadline-bounded, seedable
+//!   with any incumbent ([`BranchAndBound::solve_seeded`]);
+//! * [`arcflow`] — the arc-flow machinery (Brandão & Pedroso): graph
+//!   construction with compression (Ablation B), the Martello-Toth L2
+//!   bound the certified gap is built from, and a 1-D exact oracle;
+//! * [`solver`] — the trait, the per-strategy implementations
+//!   ([`FfdSolver`], [`BfdSolver`], [`ExactSolver`]), the
+//!   [`PortfolioSolver`] that races orderings on `std::thread::scope`
+//!   threads and polishes with a seeded exact arm, and
+//!   [`SolverChoice`] — the budget-based routing that replaced the old
+//!   `solve_auto` item-count cliff.
 
 pub mod arcflow;
 pub mod exact;
 pub mod heuristics;
 pub mod problem;
+pub mod solver;
 
-pub use exact::{solve_exact, BranchAndBound};
-pub use heuristics::{solve_best_fit, solve_first_fit, Decreasing};
+pub use exact::{solve_exact, BranchAndBound, ExactResult};
+pub use heuristics::{solve_best_fit, solve_first_fit, solve_greedy, Decreasing, Greedy, ItemOrder};
 pub use problem::{BinType, Item, MvbpProblem, PackedBin, Solution};
+pub use solver::{
+    certified_gap, certified_lower_bound, BfdSolver, ExactSolver, FfdSolver, PortfolioSolver,
+    SolveBudget, SolveOutcome, Solver, SolverChoice,
+};
 
 /// Which solver produced a solution (reports / ablations).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -34,6 +52,10 @@ pub enum SolverKind {
     FirstFit,
     BestFit,
     ArcFlow1D,
+    /// The racing portfolio (whichever arm won).
+    Portfolio,
+    /// Warm-start incremental repack seeded from a previous plan.
+    WarmStart,
 }
 
 impl std::fmt::Display for SolverKind {
@@ -43,18 +65,9 @@ impl std::fmt::Display for SolverKind {
             SolverKind::FirstFit => "ffd",
             SolverKind::BestFit => "bfd",
             SolverKind::ArcFlow1D => "arcflow-1d",
+            SolverKind::Portfolio => "portfolio",
+            SolverKind::WarmStart => "warm-start",
         };
         f.write_str(s)
-    }
-}
-
-/// Solve with the exact solver, falling back to best-fit-decreasing when
-/// the instance exceeds `exact_cutoff` items (the manager's default path).
-pub fn solve_auto(problem: &MvbpProblem, exact_cutoff: usize) -> Option<(Solution, SolverKind)> {
-    if problem.items.len() <= exact_cutoff {
-        // Exact search seeded with the BFD incumbent.
-        solve_exact(problem).map(|s| (s, SolverKind::Exact))
-    } else {
-        solve_best_fit(problem).map(|s| (s, SolverKind::BestFit))
     }
 }

@@ -1,0 +1,728 @@
+//! The first-class solver layer: a [`Solver`] trait every MVBP strategy
+//! implements, a [`PortfolioSolver`] that races strategies on scoped
+//! threads, and the certified lower bound every outcome carries.
+//!
+//! Three ideas compose here:
+//!
+//! 1. **Trait, not free functions.**  [`Solver::solve`] takes a
+//!    problem and a [`SolveBudget`] and returns a [`SolveOutcome`]
+//!    carrying the solution *plus* a certified cost lower bound and the
+//!    resulting optimality gap — every allocation self-certifies
+//!    instead of handing back a blind answer.
+//! 2. **Portfolio racing.**  [`PortfolioSolver`] runs first-fit and
+//!    best-fit under several item orderings concurrently on
+//!    `std::thread::scope` threads (zero external deps), then polishes
+//!    the winner with a deadline-bounded exact search seeded with the
+//!    racing incumbent.  Above [`PortfolioSolver::full_arm_cutoff`]
+//!    items the full-scan arms switch to *sharded* arms: the ordered
+//!    item list is split into chunks packed independently and
+//!    concatenated, trading a few percent of packing quality for a
+//!    quadratic reduction in bin-scan work (each shard scans only its
+//!    own bins).
+//! 3. **Budget-based selection.**  [`SolverChoice::Auto`] replaces the
+//!    old `solve_auto` cliff: small instances get the exact solver
+//!    (deadline-bounded, so the budget — not an item count alone —
+//!    decides how much proof is affordable), larger ones the portfolio,
+//!    whose own exact arm keeps polishing mid-size instances instead of
+//!    falling off a heuristic cliff.
+//!
+//! The lower bound is the arc-flow L2 bound
+//! ([`arcflow::l2_lower_bound`]) evaluated on each dimension's relaxed
+//! 1-D projection (weights rounded *down*, see
+//! [`arcflow::discretize_relaxed`]), priced at the cheapest bin type,
+//! maxed with the capacity-per-dollar bound — the max over dimensions
+//! of both is a valid cost bound for the multi-dimensional
+//! multiple-choice problem because any feasible packing must cover
+//! every dimension's relaxed demand.
+
+use super::arcflow;
+use super::exact::BranchAndBound;
+use super::heuristics::{self, Greedy, ItemOrder};
+use super::problem::{MvbpProblem, Solution};
+use super::SolverKind;
+use crate::types::Dollars;
+use std::time::{Duration, Instant};
+
+/// Resource limits a solve may spend, replacing the old hard-coded
+/// `exact_cutoff` field with an explicit, CLI-settable budget.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveBudget {
+    /// Wall-clock deadline in milliseconds for deadline-bounded solvers
+    /// (`0` = no deadline).  Determinism note: results are reproducible
+    /// whenever solves finish within the node budget before the
+    /// deadline fires, which holds for paper-scale instances by a wide
+    /// margin.
+    pub time_ms: u64,
+    /// Item count at or below which [`SolverChoice::Auto`] runs the
+    /// exact solver directly (the portfolio takes over above it).
+    pub exact_cutoff: usize,
+    /// Node budget for branch-and-bound (the deterministic cap).
+    pub node_budget: u64,
+    /// Warm-start acceptance: how far a warm-started plan's certified
+    /// gap may drift above the previous plan's before the manager falls
+    /// back to a cold solve (see `ResourceManager::allocate_warm`).
+    pub warm_gap_margin: f64,
+}
+
+impl Default for SolveBudget {
+    fn default() -> Self {
+        SolveBudget {
+            // Generous: the node budget is the deterministic cap; the
+            // deadline only rescues instances whose nodes are
+            // individually expensive.
+            time_ms: 10_000,
+            exact_cutoff: 24,
+            node_budget: 5_000_000,
+            warm_gap_margin: 0.05,
+        }
+    }
+}
+
+impl SolveBudget {
+    /// The wall-clock deadline counted from now (`None` if disabled).
+    pub fn deadline(&self) -> Option<Instant> {
+        (self.time_ms > 0).then(|| Instant::now() + Duration::from_millis(self.time_ms))
+    }
+}
+
+/// A solution plus its certificate: what the packing costs, the best
+/// proven cost lower bound, and whether optimality was proven.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    pub solution: Solution,
+    /// Which solver (or portfolio) produced the solution.
+    pub solver: SolverKind,
+    pub cost: Dollars,
+    /// Certified cost lower bound (`lower_bound <= cost` always).
+    pub lower_bound: Dollars,
+    pub proven_optimal: bool,
+}
+
+/// Relative certified optimality gap `(cost - lower_bound) / cost`, in
+/// `[0, 1]` and always finite (`0` for a zero-cost packing).  The one
+/// formula shared by [`SolveOutcome::gap`] and `AllocationPlan::gap`,
+/// so the gap the warm-start drift gate compares is the gap the reports
+/// print.
+pub fn certified_gap(cost: Dollars, lower_bound: Dollars) -> f64 {
+    if cost.0 <= 0 {
+        return 0.0;
+    }
+    (cost.0 - lower_bound.0).max(0) as f64 / cost.0 as f64
+}
+
+impl SolveOutcome {
+    /// Relative optimality gap — see [`certified_gap`].
+    pub fn gap(&self) -> f64 {
+        certified_gap(self.cost, self.lower_bound)
+    }
+}
+
+/// A pluggable MVBP solving strategy.
+///
+/// `solve` returns `None` when the instance is invalid or genuinely
+/// unpackable (some item fits in no bin under any choice); otherwise
+/// the outcome's solution is validate-clean and its `lower_bound` is a
+/// proven bound on any feasible packing's cost.
+pub trait Solver: Sync {
+    fn name(&self) -> &'static str;
+    fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome>;
+}
+
+/// Certified cost lower bound for an MVBP instance: for each dimension,
+/// the max of the arc-flow L2 bin bound (relaxed grid, priced at the
+/// cheapest type) and the capacity-per-dollar bound; the max over
+/// dimensions.  Valid because every feasible packing covers each
+/// dimension's relaxed demand (items counted at their cheapest choice),
+/// every opened bin costs at least the cheapest type, and every dollar
+/// buys at most the best capacity-per-dollar in each dimension.
+pub fn certified_lower_bound(problem: &MvbpProblem) -> Dollars {
+    if problem.items.is_empty() || problem.bin_types.is_empty() {
+        return Dollars::ZERO;
+    }
+    const GRID: u32 = 4096;
+    let min_cost = problem
+        .bin_types
+        .iter()
+        .map(|bt| bt.cost)
+        .min()
+        .unwrap_or(Dollars::ZERO);
+    let mut best = Dollars::ZERO;
+    for d in 0..problem.dims {
+        let roomiest = problem
+            .bin_types
+            .iter()
+            .map(|bt| bt.capacity[d])
+            .fold(0.0f64, f64::max);
+        if roomiest <= 0.0 {
+            continue;
+        }
+        // Relaxed per-item demand: the cheapest choice in this dimension.
+        let weights: Vec<f64> = problem
+            .items
+            .iter()
+            .map(|it| {
+                let w = it
+                    .choices
+                    .iter()
+                    .map(|c| c[d])
+                    .fold(f64::INFINITY, f64::min);
+                if w.is_finite() {
+                    w.max(0.0)
+                } else {
+                    0.0 // no choices: validate rejects; bound stays safe
+                }
+            })
+            .collect();
+        let (grid_w, grid_cap) = arcflow::discretize_relaxed(&weights, roomiest, GRID);
+        let bins = arcflow::l2_lower_bound(&grid_w, grid_cap);
+        if bins != u32::MAX {
+            let l2_cost = min_cost * bins;
+            if l2_cost > best {
+                best = l2_cost;
+            }
+        }
+        // Capacity-per-dollar: cost >= demand / max_t(cap_t / cost_t).
+        let efficiency = problem
+            .bin_types
+            .iter()
+            .map(|bt| {
+                let cost = bt.cost.as_f64();
+                if cost > 0.0 {
+                    bt.capacity[d] / cost
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .fold(0.0f64, f64::max);
+        let demand: f64 = weights.iter().sum();
+        if efficiency.is_finite() && efficiency > 0.0 && demand > 0.0 {
+            // Floor: never round a float bound *up* past the true bound.
+            let eff_cost = Dollars(((demand / efficiency) * 1e6).floor() as i64);
+            if eff_cost > best {
+                best = eff_cost;
+            }
+        }
+    }
+    best
+}
+
+fn outcome_for(
+    problem: &MvbpProblem,
+    solution: Solution,
+    solver: SolverKind,
+    proven_optimal: bool,
+) -> SolveOutcome {
+    let cost = solution.cost(problem);
+    let lower_bound = if proven_optimal {
+        cost
+    } else {
+        // Clamp: the bound is valid by construction, but `cost` is the
+        // invariant reports and tests lean on.
+        certified_lower_bound(problem).min(cost)
+    };
+    let proven_optimal = proven_optimal || lower_bound == cost;
+    SolveOutcome { solution, solver, cost, lower_bound, proven_optimal }
+}
+
+/// First-fit-decreasing behind the trait.
+pub struct FfdSolver;
+
+impl Solver for FfdSolver {
+    fn name(&self) -> &'static str {
+        "ffd"
+    }
+
+    fn solve(&self, problem: &MvbpProblem, _budget: &SolveBudget) -> Option<SolveOutcome> {
+        let solution = heuristics::solve_first_fit(problem)?;
+        Some(outcome_for(problem, solution, SolverKind::FirstFit, false))
+    }
+}
+
+/// Best-fit-decreasing behind the trait.
+pub struct BfdSolver;
+
+impl Solver for BfdSolver {
+    fn name(&self) -> &'static str {
+        "bfd"
+    }
+
+    fn solve(&self, problem: &MvbpProblem, _budget: &SolveBudget) -> Option<SolveOutcome> {
+        let solution = heuristics::solve_best_fit(problem)?;
+        Some(outcome_for(problem, solution, SolverKind::BestFit, false))
+    }
+}
+
+/// Branch-and-bound behind the trait, bounded by the budget's node
+/// count and wall-clock deadline.
+pub struct ExactSolver;
+
+impl Solver for ExactSolver {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        let bb = BranchAndBound { node_budget: budget.node_budget, deadline: budget.deadline() };
+        let result = bb.solve(problem)?;
+        Some(outcome_for(
+            problem,
+            result.solution,
+            SolverKind::Exact,
+            result.proven_optimal,
+        ))
+    }
+}
+
+/// Node cap of the portfolio's exact polish arm: enough to prove
+/// optimality on paper-scale instances, small enough that the arm's
+/// cost stays deterministic and bounded at mid scale.
+const EXACT_ARM_NODE_CAP: u64 = 200_000;
+
+/// Races FFD/BFD under every [`ItemOrder`] on scoped threads, then
+/// polishes the cheapest validate-clean result with a deadline-bounded
+/// exact search seeded with that incumbent; returns the cheapest
+/// validate-clean solution overall.
+///
+/// At or below `full_arm_cutoff` items every arm packs the full
+/// instance, so the portfolio can never return a costlier solution
+/// than plain FFD or BFD (they are arms).  Above the cutoff the arms
+/// shard: the ordered item list is chunked, each chunk packed into its
+/// own bins, and the chunks concatenated — each shard scans only its
+/// own open bins, cutting the quadratic bin-scan cost by the shard
+/// count squared at the price of at most one underfilled bin per shard.
+pub struct PortfolioSolver {
+    /// Largest instance the full-scan arms handle before sharding.
+    pub full_arm_cutoff: usize,
+    /// Items per shard in sharded mode.
+    pub shard_size: usize,
+}
+
+impl Default for PortfolioSolver {
+    fn default() -> Self {
+        PortfolioSolver { full_arm_cutoff: 1024, shard_size: 1024 }
+    }
+}
+
+impl PortfolioSolver {
+    /// The exact polish arm runs only on instances a bounded search can
+    /// still improve within budget: a small multiple of the auto
+    /// cutoff.
+    fn exact_arm_limit(budget: &SolveBudget) -> usize {
+        budget.exact_cutoff.saturating_mul(4)
+    }
+}
+
+/// Run every task (one greedy pass over one item slice) across a small
+/// scoped worker pool; returns one optional solution per task, in task
+/// order.  Workers claim tasks from an atomic cursor, so thread count
+/// never changes *which* solutions exist — only how fast they arrive.
+///
+/// An expired `deadline` sheds every task of arm > 0 at claim time:
+/// the first arm always completes, so a tight `--solve-budget-ms`
+/// degrades the portfolio to a single-arm solve instead of no solve.
+/// (Which extra arms finish under a fired deadline is wall-clock-
+/// dependent; the default budget is far above any solve the tests or
+/// paper scale run, so results stay deterministic in practice.)
+fn run_tasks(
+    problem: &MvbpProblem,
+    tasks: &[(usize, Greedy, &[usize])],
+    deadline: Option<Instant>,
+) -> Vec<Option<Solution>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 16)
+        .min(tasks.len());
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Solution>>> = tasks.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let (arm, greedy, items) = tasks[i];
+                if arm != 0 {
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            continue; // shed: slot stays None, arm incomplete
+                        }
+                    }
+                }
+                let mut open = Vec::new();
+                let solution = heuristics::pack_into(problem, greedy, items, &mut open)
+                    .then(|| heuristics::finish(open));
+                *slots[i].lock().expect("portfolio slot") = solution;
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().expect("portfolio slot"))
+        .collect()
+}
+
+impl Solver for PortfolioSolver {
+    fn name(&self) -> &'static str {
+        "portfolio"
+    }
+
+    fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        problem.validate().ok()?;
+        let n = problem.items.len();
+        if n == 0 {
+            return Some(outcome_for(problem, Solution::default(), SolverKind::Portfolio, true));
+        }
+        let deadline = budget.deadline();
+        let sharded = n > self.full_arm_cutoff;
+        // Sharded mode drops the FewestChoices ordering: constrained-
+        // first placement matters while bins are few, and two orderings
+        // halve the total scan work at scale.
+        let order_pool: &[ItemOrder] = if sharded {
+            &[ItemOrder::HardestFirst, ItemOrder::SumDecreasing]
+        } else {
+            &ItemOrder::ALL
+        };
+        let orders: Vec<Vec<usize>> = order_pool.iter().map(|o| o.order(problem)).collect();
+        let arms: Vec<(Greedy, usize)> = [Greedy::FirstFit, Greedy::BestFit]
+            .iter()
+            .flat_map(|&g| (0..orders.len()).map(move |o| (g, o)))
+            .collect();
+
+        let shard = if sharded { self.shard_size.max(1) } else { n };
+        let mut tasks: Vec<(usize, Greedy, &[usize])> = Vec::new();
+        for (a, &(greedy, o)) in arms.iter().enumerate() {
+            for chunk in orders[o].chunks(shard) {
+                tasks.push((a, greedy, chunk));
+            }
+        }
+        let results = run_tasks(problem, &tasks, deadline);
+
+        // Reassemble each arm's shards and keep the cheapest clean
+        // packing.  Arm iteration order (not thread timing) breaks
+        // ties, so the winner is deterministic.
+        let mut best: Option<(Solution, Dollars)> = None;
+        for a in 0..arms.len() {
+            let mut bins = Vec::new();
+            let mut complete = true;
+            for (task, result) in tasks.iter().zip(&results) {
+                if task.0 != a {
+                    continue;
+                }
+                match result {
+                    Some(s) => bins.extend(s.bins.iter().cloned()),
+                    None => {
+                        complete = false;
+                        break;
+                    }
+                }
+            }
+            if !complete {
+                continue;
+            }
+            let candidate = Solution { bins };
+            if candidate.validate(problem).is_err() {
+                continue;
+            }
+            let cost = candidate.cost(problem);
+            if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
+                best = Some((candidate, cost));
+            }
+        }
+
+        // Exact polish: seeded with the racing winner, bounded by the
+        // remaining deadline and a deterministic node cap.
+        let mut proven = false;
+        if n <= Self::exact_arm_limit(budget) {
+            let bb = BranchAndBound {
+                node_budget: budget.node_budget.min(EXACT_ARM_NODE_CAP),
+                deadline,
+            };
+            let incumbent = best.as_ref().map(|(s, _)| s.clone());
+            if let Some(result) = bb.solve_seeded(problem, incumbent) {
+                if result.solution.validate(problem).is_ok() {
+                    let cost = result.solution.cost(problem);
+                    if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
+                        best = Some((result.solution, cost));
+                    }
+                    proven = result.proven_optimal;
+                }
+            }
+        }
+
+        best.map(|(solution, _)| outcome_for(problem, solution, SolverKind::Portfolio, proven))
+    }
+}
+
+/// Which solver the manager routes an allocation through — the CLI's
+/// `--solver` values.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SolverChoice {
+    /// Budget-based selection: exact at or below the budget's
+    /// `exact_cutoff` items, the portfolio above it.
+    #[default]
+    Auto,
+    Ffd,
+    Bfd,
+    Exact,
+    Portfolio,
+}
+
+impl SolverChoice {
+    pub const ALL: [SolverChoice; 5] = [
+        SolverChoice::Auto,
+        SolverChoice::Ffd,
+        SolverChoice::Bfd,
+        SolverChoice::Exact,
+        SolverChoice::Portfolio,
+    ];
+
+    /// Solve `problem` under this routing.
+    pub fn solve(self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        match self {
+            SolverChoice::Auto => {
+                if problem.items.len() <= budget.exact_cutoff {
+                    ExactSolver.solve(problem, budget)
+                } else {
+                    PortfolioSolver::default().solve(problem, budget)
+                }
+            }
+            SolverChoice::Ffd => FfdSolver.solve(problem, budget),
+            SolverChoice::Bfd => BfdSolver.solve(problem, budget),
+            SolverChoice::Exact => ExactSolver.solve(problem, budget),
+            SolverChoice::Portfolio => PortfolioSolver::default().solve(problem, budget),
+        }
+    }
+}
+
+impl std::fmt::Display for SolverChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SolverChoice::Auto => "auto",
+            SolverChoice::Ffd => "ffd",
+            SolverChoice::Bfd => "bfd",
+            SolverChoice::Exact => "exact",
+            SolverChoice::Portfolio => "portfolio",
+        })
+    }
+}
+
+impl std::str::FromStr for SolverChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(SolverChoice::Auto),
+            "ffd" | "first-fit" => Ok(SolverChoice::Ffd),
+            "bfd" | "best-fit" => Ok(SolverChoice::Bfd),
+            "exact" | "bb" | "exact-bb" => Ok(SolverChoice::Exact),
+            "portfolio" => Ok(SolverChoice::Portfolio),
+            other => Err(format!(
+                "unknown solver {other:?} (expected auto, ffd, bfd, exact, or portfolio)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::problem::test_fixtures::small_problem;
+    use crate::packing::problem::{BinType, Item};
+    use crate::types::ResourceVec;
+
+    fn all_solvers() -> Vec<Box<dyn Solver>> {
+        vec![
+            Box::new(FfdSolver),
+            Box::new(BfdSolver),
+            Box::new(ExactSolver),
+            Box::new(PortfolioSolver::default()),
+        ]
+    }
+
+    #[test]
+    fn every_solver_certifies_the_small_problem() {
+        let p = small_problem();
+        let budget = SolveBudget::default();
+        for solver in all_solvers() {
+            let out = solver
+                .solve(&p, &budget)
+                .unwrap_or_else(|| panic!("{} must solve", solver.name()));
+            out.solution
+                .validate(&p)
+                .unwrap_or_else(|e| panic!("{}: {e}", solver.name()));
+            assert!(
+                out.lower_bound <= out.cost,
+                "{}: bound {} > cost {}",
+                solver.name(),
+                out.lower_bound,
+                out.cost
+            );
+            assert!(out.gap().is_finite() && (0.0..=1.0).contains(&out.gap()));
+        }
+    }
+
+    #[test]
+    fn exact_solver_proves_and_closes_the_gap() {
+        let p = small_problem();
+        let out = ExactSolver.solve(&p, &SolveBudget::default()).unwrap();
+        assert!(out.proven_optimal);
+        assert_eq!(out.lower_bound, out.cost);
+        assert_eq!(out.gap(), 0.0);
+        assert_eq!(out.cost, Dollars::from_f64(1.8));
+    }
+
+    #[test]
+    fn portfolio_never_trails_its_own_arms() {
+        let p = small_problem();
+        let budget = SolveBudget::default();
+        let ffd = FfdSolver.solve(&p, &budget).unwrap();
+        let bfd = BfdSolver.solve(&p, &budget).unwrap();
+        let portfolio = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        assert!(portfolio.cost <= ffd.cost.min(bfd.cost));
+        assert_eq!(portfolio.solver, SolverKind::Portfolio);
+    }
+
+    #[test]
+    fn sharded_mode_still_packs_clean() {
+        // Force sharding on a 12-item instance: shards of 3 items each
+        // open their own bins; the concatenation must still validate
+        // and stay within the certified bound.
+        let p = MvbpProblem {
+            dims: 1,
+            bin_types: vec![BinType {
+                name: "b".into(),
+                cost: Dollars::from_f64(1.0),
+                capacity: ResourceVec::from_slice(&[10.0]),
+            }],
+            items: (0..12)
+                .map(|i| Item {
+                    id: format!("i{i}"),
+                    choices: vec![ResourceVec::from_slice(&[3.0 + (i % 3) as f64])],
+                })
+                .collect(),
+        };
+        let sharded = PortfolioSolver { full_arm_cutoff: 4, shard_size: 3 };
+        let out = sharded.solve(&p, &SolveBudget::default()).unwrap();
+        out.solution.validate(&p).unwrap();
+        assert!(out.lower_bound <= out.cost);
+        assert!(out.gap().is_finite());
+    }
+
+    #[test]
+    fn run_tasks_sheds_only_later_arms_on_expired_deadline() {
+        let p = small_problem();
+        let order = ItemOrder::HardestFirst.order(&p);
+        let tasks: Vec<(usize, Greedy, &[usize])> = vec![
+            (0, Greedy::FirstFit, order.as_slice()),
+            (1, Greedy::BestFit, order.as_slice()),
+        ];
+        let expired = Some(Instant::now() - std::time::Duration::from_millis(10));
+        let results = run_tasks(&p, &tasks, expired);
+        assert!(results[0].is_some(), "the first arm must always complete");
+        assert!(results[1].is_none(), "later arms shed once the deadline passes");
+    }
+
+    #[test]
+    fn tight_deadline_degrades_to_fewer_arms_not_failure() {
+        // A 1 ms budget can shed every arm but the first; the portfolio
+        // must still return a valid certified solution.
+        let p = small_problem();
+        let budget = SolveBudget { time_ms: 1, ..Default::default() };
+        let out = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        out.solution.validate(&p).unwrap();
+        assert!(out.lower_bound <= out.cost);
+        assert!(out.gap().is_finite());
+    }
+
+    #[test]
+    fn portfolio_is_deterministic() {
+        let p = small_problem();
+        let budget = SolveBudget::default();
+        let a = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        let b = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.lower_bound, b.lower_bound);
+    }
+
+    #[test]
+    fn infeasible_item_fails_every_solver() {
+        let mut p = small_problem();
+        p.items.push(Item {
+            id: "huge".into(),
+            choices: vec![ResourceVec::from_slice(&[100.0, 0.0])],
+        });
+        let budget = SolveBudget::default();
+        for solver in all_solvers() {
+            assert!(solver.solve(&p, &budget).is_none(), "{}", solver.name());
+        }
+    }
+
+    #[test]
+    fn empty_problem_is_a_zero_cost_certificate() {
+        let p = MvbpProblem {
+            dims: 1,
+            bin_types: vec![BinType {
+                name: "b".into(),
+                cost: Dollars::from_f64(1.0),
+                capacity: ResourceVec::from_slice(&[1.0]),
+            }],
+            items: vec![],
+        };
+        let out = PortfolioSolver::default().solve(&p, &SolveBudget::default()).unwrap();
+        assert_eq!(out.cost, Dollars::ZERO);
+        assert_eq!(out.lower_bound, Dollars::ZERO);
+        assert!(out.proven_optimal);
+        assert_eq!(certified_lower_bound(&p), Dollars::ZERO);
+    }
+
+    #[test]
+    fn lower_bound_dominates_naive_and_respects_optimum() {
+        // Three items of 6 into cap-10 bins of cost $1: the optimum is
+        // 3 bins (L2 sees it); the naive sum bound would say 2.
+        let p = MvbpProblem {
+            dims: 1,
+            bin_types: vec![BinType {
+                name: "b".into(),
+                cost: Dollars::from_f64(1.0),
+                capacity: ResourceVec::from_slice(&[10.0]),
+            }],
+            items: (0..3)
+                .map(|i| Item {
+                    id: format!("i{i}"),
+                    choices: vec![ResourceVec::from_slice(&[6.0])],
+                })
+                .collect(),
+        };
+        let lb = certified_lower_bound(&p);
+        assert_eq!(lb, Dollars::from_f64(3.0));
+        let out = ExactSolver.solve(&p, &SolveBudget::default()).unwrap();
+        assert_eq!(out.cost, Dollars::from_f64(3.0));
+        assert!(lb <= out.cost);
+    }
+
+    #[test]
+    fn auto_routes_by_budget_cutoff() {
+        let p = small_problem(); // 3 items
+        let tight = SolveBudget { exact_cutoff: 2, ..Default::default() };
+        let roomy = SolveBudget { exact_cutoff: 24, ..Default::default() };
+        // Above the cutoff: portfolio; at/below: exact.  Both must agree
+        // on the optimum here (the portfolio's exact arm closes it).
+        let via_portfolio = SolverChoice::Auto.solve(&p, &tight).unwrap();
+        let via_exact = SolverChoice::Auto.solve(&p, &roomy).unwrap();
+        assert_eq!(via_portfolio.solver, SolverKind::Portfolio);
+        assert_eq!(via_exact.solver, SolverKind::Exact);
+        assert_eq!(via_portfolio.cost, via_exact.cost);
+    }
+
+    #[test]
+    fn solver_choice_parse_round_trip() {
+        for c in SolverChoice::ALL {
+            assert_eq!(c.to_string().parse::<SolverChoice>().unwrap(), c);
+        }
+        assert_eq!("best-fit".parse::<SolverChoice>().unwrap(), SolverChoice::Bfd);
+        assert!("simplex".parse::<SolverChoice>().is_err());
+    }
+}

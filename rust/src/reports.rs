@@ -218,6 +218,8 @@ pub fn single_instance_run_with(
                 .collect(),
         }],
         hourly_cost: itype.hourly_cost,
+        // Hand-built single-instance characterization, not a solve.
+        lower_bound: None,
     };
     let profiles: Vec<_> = streams.iter().map(|s| coordinator.profile_for(s)).collect();
     let mut sim = Simulation::from_plan(&plan, &streams, layout, &profiles, &catalog);
@@ -328,14 +330,16 @@ pub fn trace_policy_table(
     t
 }
 
-/// Per-epoch breakdown of one policy run.
+/// Per-epoch breakdown of one policy run, including which solver
+/// produced each epoch's serving plan and its certified optimality gap.
 pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
     let mut t = Table::new(&format!(
         "{} on {} ({}) — per-epoch timeline",
         outcome.policy, outcome.trace_name, outcome.strategy
     ))
     .header(&[
-        "Epoch", "Start", "Streams", "Fleet", "+prov/-term", "$/h", "Perf", "Unserved",
+        "Epoch", "Start", "Streams", "Fleet", "+prov/-term", "$/h", "Perf", "Unserved", "Solver",
+        "Gap",
     ]);
     for e in &outcome.epochs {
         t.row(&[
@@ -351,6 +355,11 @@ pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
             e.hourly_rate.to_string(),
             format!("{:.0}%", e.performance * 100.0),
             if e.unserved > 0 { e.unserved.to_string() } else { "-".into() },
+            e.solver.to_string(),
+            match e.gap {
+                Some(g) => format!("{:.1}%", g * 100.0),
+                None => "-".into(),
+            },
         ]);
     }
     t
@@ -455,5 +464,9 @@ mod tests {
         assert!(epochs.contains("emergency"));
         assert!(epochs.contains("+2/-1"));
         assert!(epochs.contains("$1.300"));
+        // Solver provenance and certified gap columns.
+        assert!(epochs.contains("Solver"));
+        assert!(epochs.contains("Gap"));
+        assert!(epochs.contains("%"));
     }
 }

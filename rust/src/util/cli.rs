@@ -85,6 +85,20 @@ impl Args {
         }
     }
 
+    /// Parse `--key` as one value of `T`, expanding a missing flag or
+    /// the literal `all` to the full `all` slice — the shared
+    /// "`--strategy st3 | all`" / "`--policy reactive | all`" grammar
+    /// every subcommand uses.
+    pub fn one_or_all<T>(&self, key: &str, all: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone + std::str::FromStr<Err = String>,
+    {
+        match self.opt(key) {
+            None | Some("all") => Ok(all.to_vec()),
+            Some(v) => v.parse::<T>().map(|t| vec![t]),
+        }
+    }
+
     /// Reject unknown flags against a spec (catches typos).
     pub fn validate(&self, spec: &Spec) -> Result<(), String> {
         for key in self.options.keys() {
@@ -163,6 +177,23 @@ mod tests {
         let a = parse("report --table2 --json");
         assert!(a.has("table2"));
         assert!(a.has("json"));
+    }
+
+    #[test]
+    fn one_or_all_expands_missing_and_all() {
+        #[derive(Clone, PartialEq, Debug)]
+        struct Flag(u32);
+        impl std::str::FromStr for Flag {
+            type Err = String;
+            fn from_str(s: &str) -> Result<Self, String> {
+                s.parse::<u32>().map(Flag).map_err(|_| format!("bad flag {s:?}"))
+            }
+        }
+        const ALL: [Flag; 2] = [Flag(1), Flag(2)];
+        assert_eq!(parse("x").one_or_all("f", &ALL).unwrap(), ALL.to_vec());
+        assert_eq!(parse("x --f all").one_or_all("f", &ALL).unwrap(), ALL.to_vec());
+        assert_eq!(parse("x --f 2").one_or_all("f", &ALL).unwrap(), vec![Flag(2)]);
+        assert!(parse("x --f nope").one_or_all("f", &ALL).is_err());
     }
 
     #[test]

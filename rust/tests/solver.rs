@@ -1,0 +1,156 @@
+//! Property tests for the solver-trait stack: the portfolio's
+//! dominance over its own arms, and the certified lower bound / gap
+//! invariants on every random instance (the PR's acceptance criteria).
+
+use camcloud::packing::{
+    certified_lower_bound, BfdSolver, BinType, ExactSolver, FfdSolver, Item, MvbpProblem,
+    PortfolioSolver, SolveBudget, Solver, SolverChoice,
+};
+use camcloud::types::{Dollars, ResourceVec};
+use camcloud::util::proptest::{check, Config};
+use camcloud::util::rng::Rng;
+
+/// Bounded budget for the property runs: the invariants must hold on
+/// *degraded* outcomes too (node budget hit, proof abandoned), and the
+/// suite stays fast in debug builds.
+fn test_budget() -> SolveBudget {
+    SolveBudget { node_budget: 40_000, time_ms: 2_000, ..Default::default() }
+}
+
+/// Random feasible MVBP instance: 1-3 bin types, 2 dims, 2-24 items
+/// with 1-3 choices each.  Min capacity strictly exceeds the max
+/// requirement so every item fits an empty bin and all solvers succeed.
+fn random_instance(rng: &mut Rng) -> MvbpProblem {
+    let dims = 2;
+    let n_types = 1 + rng.below(3) as usize;
+    let bin_types: Vec<BinType> = (0..n_types)
+        .map(|t| BinType {
+            name: format!("t{t}"),
+            cost: Dollars::from_f64(rng.range_f64(0.3, 3.0)),
+            capacity: ResourceVec((0..dims).map(|_| rng.range_f64(5.0, 14.0)).collect()),
+        })
+        .collect();
+    let n_items = 2 + rng.below(23) as usize;
+    let items: Vec<Item> = (0..n_items)
+        .map(|i| {
+            let n_choices = 1 + rng.below(3) as usize;
+            Item {
+                id: format!("i{i}"),
+                choices: (0..n_choices)
+                    .map(|_| ResourceVec((0..dims).map(|_| rng.range_f64(0.3, 4.5)).collect()))
+                    .collect(),
+            }
+        })
+        .collect();
+    MvbpProblem { dims, bin_types, items }
+}
+
+/// The portfolio races FFD and BFD as arms (full-scan at these sizes),
+/// so it can never return a costlier solution than either alone.
+#[test]
+fn portfolio_never_costlier_than_ffd_or_bfd() {
+    let budget = test_budget();
+    check(
+        "portfolio-dominates-arms",
+        Config { cases: 48, ..Default::default() },
+        random_instance,
+        |p| {
+            let ffd = FfdSolver
+                .solve(p, &budget)
+                .ok_or("ffd must solve a feasible instance")?;
+            let bfd = BfdSolver
+                .solve(p, &budget)
+                .ok_or("bfd must solve a feasible instance")?;
+            let portfolio = PortfolioSolver::default()
+                .solve(p, &budget)
+                .ok_or("portfolio must solve a feasible instance")?;
+            portfolio
+                .solution
+                .validate(p)
+                .map_err(|e| format!("portfolio invalid: {e}"))?;
+            let best_arm = ffd.cost.min(bfd.cost);
+            if portfolio.cost > best_arm {
+                return Err(format!(
+                    "portfolio {} costlier than best solo arm {}",
+                    portfolio.cost, best_arm
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every solver's reported `lower_bound <= cost` with a finite gap in
+/// `[0, 1]`, and a proven-optimal outcome closes its gap entirely.
+#[test]
+fn lower_bound_never_exceeds_cost_on_random_instances() {
+    let budget = test_budget();
+    check(
+        "certified-bound-validity",
+        Config { cases: 48, ..Default::default() },
+        random_instance,
+        |p| {
+            let solvers: Vec<(&str, Box<dyn Solver>)> = vec![
+                ("ffd", Box::new(FfdSolver)),
+                ("bfd", Box::new(BfdSolver)),
+                ("exact", Box::new(ExactSolver)),
+                ("portfolio", Box::new(PortfolioSolver::default())),
+            ];
+            for (name, solver) in solvers {
+                let out = solver
+                    .solve(p, &budget)
+                    .ok_or_else(|| format!("{name} must solve a feasible instance"))?;
+                out.solution
+                    .validate(p)
+                    .map_err(|e| format!("{name} invalid: {e}"))?;
+                if out.lower_bound > out.cost {
+                    return Err(format!(
+                        "{name}: bound {} > cost {}",
+                        out.lower_bound, out.cost
+                    ));
+                }
+                let gap = out.gap();
+                if !gap.is_finite() || !(0.0..=1.0).contains(&gap) {
+                    return Err(format!("{name}: bad gap {gap}"));
+                }
+                if out.proven_optimal && gap != 0.0 {
+                    return Err(format!("{name}: proven optimal but gap {gap}"));
+                }
+            }
+            // The standalone bound is itself a bound on the exact cost.
+            let lb = certified_lower_bound(p);
+            let exact = ExactSolver
+                .solve(p, &budget)
+                .ok_or("exact must solve a feasible instance")?;
+            if lb > exact.cost {
+                return Err(format!("bound {lb} exceeds exact optimum {}", exact.cost));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Auto routing honors the budget's cutoff and both routes certify.
+#[test]
+fn auto_selection_certifies_on_both_sides_of_the_cutoff() {
+    check(
+        "auto-routing",
+        Config { cases: 24, ..Default::default() },
+        random_instance,
+        |p| {
+            for cutoff in [0usize, 1_000] {
+                let budget = SolveBudget { exact_cutoff: cutoff, ..test_budget() };
+                let out = SolverChoice::Auto
+                    .solve(p, &budget)
+                    .ok_or("auto must solve a feasible instance")?;
+                out.solution
+                    .validate(p)
+                    .map_err(|e| format!("auto/{cutoff}: {e}"))?;
+                if out.lower_bound > out.cost {
+                    return Err(format!("auto/{cutoff}: bound above cost"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
