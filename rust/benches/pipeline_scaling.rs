@@ -1,0 +1,79 @@
+//! Bench: pipelined epoch execution + sharded simulation vs the
+//! sequential path.
+//!
+//! Gate (the PR's acceptance criterion): on a 1,000-stream × 12-epoch
+//! diurnal trace, the reactive policy under `--pipeline on` with
+//! sharded simulation (`sim_threads = 0`, i.e. all cores) must finish
+//! at least 1.5x faster end-to-end than the fully sequential path
+//! (`sim_threads = 1`, `--pipeline off`).  Both paths must produce
+//! identical outcomes — parallel execution is an implementation
+//! detail, never a result change.
+
+use camcloud::coordinator::{AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::sched::{Parallelism, SimConfig};
+use camcloud::util::bench::Bench;
+use camcloud::workload::trace::WorkloadTrace;
+
+fn main() {
+    let mut bench = Bench::new("pipeline_scaling");
+    let coordinator = Coordinator::new();
+
+    // 1k streams x 12 epochs of the diurnal curve.  Quarter-hour epochs
+    // keep one sample tractable while event-simulation work still
+    // dominates each epoch by a wide margin.
+    let mut trace = WorkloadTrace::diurnal(1_000, 11);
+    trace.epochs.truncate(12);
+    for epoch in &mut trace.epochs {
+        epoch.duration_s = 900.0;
+    }
+    bench.record("streams", 1_000.0);
+    bench.record("epochs", trace.epochs.len() as f64);
+
+    let run_with = |parallelism: Parallelism| -> AutoscaleOutcome {
+        let config = AutoscaleConfig {
+            sim: SimConfig::default().with_parallelism(parallelism),
+            ..AutoscaleConfig::default()
+        };
+        AutoscaleRunner::new(&coordinator)
+            .with_config(config)
+            .run(&trace, ScalePolicy::Reactive)
+            .expect("diurnal reactive run")
+    };
+
+    let sequential = bench
+        .measure("sequential_1k_x12", 1, 3, || {
+            std::hint::black_box(run_with(Parallelism::sequential()));
+        })
+        .p50();
+    let pipelined = bench
+        .measure("pipelined_sharded_1k_x12", 1, 3, || {
+            std::hint::black_box(run_with(Parallelism::default()));
+        })
+        .p50();
+
+    let speedup = sequential / pipelined;
+    bench.record("pipeline_speedup", speedup);
+    bench.record(
+        "sim_threads_effective",
+        Parallelism::default().effective_sim_threads() as f64,
+    );
+
+    // Equivalence: the two paths must agree epoch for epoch.
+    let a = run_with(Parallelism::sequential());
+    let b = run_with(Parallelism::default());
+    assert_eq!(a.total_billed, b.total_billed, "parallelism changed billing");
+    assert_eq!(a.reallocations, b.reallocations, "parallelism changed decisions");
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.hourly_rate, y.hourly_rate, "epoch {}", x.label);
+        assert_eq!(x.fleet_size, y.fleet_size, "epoch {}", x.label);
+        assert_eq!(x.performance, y.performance, "epoch {}", x.label);
+    }
+
+    assert!(
+        speedup >= 1.5,
+        "pipelined+sharded execution must be >=1.5x vs sequential at 1k streams x 12 epochs, \
+         got {speedup:.2}x"
+    );
+    bench.finish();
+}

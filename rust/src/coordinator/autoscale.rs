@@ -1,16 +1,54 @@
-//! Online autoscaling over a demand trace.
+//! Online autoscaling over a demand trace, executed as a staged epoch
+//! pipeline.
 //!
 //! [`AutoscaleRunner`] turns the static profile → allocate → provision
 //! → simulate → bill pipeline into the *dynamic* resource manager the
-//! paper motivates (§1): per [`Epoch`](crate::workload::trace::Epoch)
-//! of a [`WorkloadTrace`] it re-solves the MVBP for the epoch's
-//! streams, computes the fleet transition with
-//! [`plan_transition`](crate::manager::plan_transition), gates it with
-//! the feasibility-first [`worth_reallocating`] hysteresis, applies the
-//! surviving actions to a fleet of [`SimInstance`]s carried *across*
-//! epochs (so started-hour billing prices churn honestly — see
-//! [`cloud::billing`](crate::cloud::billing)), and simulates the epoch
-//! on the event engine.
+//! paper motivates (§1).  Every epoch of a
+//! [`WorkloadTrace`](crate::workload::trace::WorkloadTrace) flows
+//! through four explicit stages (see [`super::pipeline`] for the
+//! executor and the full stage contract):
+//!
+//! 1. **plan** ([`PlanStage`]) — solve the epoch's *target* plan
+//!    (cold, or warm-started from the incumbent via
+//!    `ResourceManager::allocate_warm` with periodic cold refresh) and
+//!    derive a *serving* plan answering "can the fleet I already pay
+//!    for serve this epoch?".  Pure in `(epoch, seed)`, so it can run
+//!    speculatively on a worker thread;
+//! 2. **actuate** ([`ActuateStage`]) — gate the transition with the
+//!    feasibility-first [`worth_reallocating`] hysteresis and apply
+//!    the surviving terminate/provision actions to the
+//!    [`SimInstance`] fleet carried *across* epochs (started-hour
+//!    billing prices churn honestly — see
+//!    [`cloud::billing`](crate::cloud::billing));
+//! 3. **simulate** ([`SimulateStage`]) — execute the serving plan on
+//!    the sharded event engine (`--sim-threads`);
+//! 4. **bill** ([`BillStage`]) — fold the simulated epoch into the
+//!    outcome rows.
+//!
+//! The executor overlaps epoch `i+1`'s plan with epoch `i`'s
+//! simulation (`--pipeline on`, the default): planning needs only the
+//! epoch's demand plus the incumbent snapshot actuation emits, and a
+//! speculative plan is invalidated and recomputed if the incumbent
+//! changed underneath it.  Pipelining and simulation sharding never
+//! change results — `--pipeline on|off` and any `--sim-threads` value
+//! produce identical policy tables (see `tests/parallel.rs`).
+//!
+//! **Serving-plan reuse.**  The hysteresis gate needs to know whether
+//! the current fleet can serve the new workload.  When the epoch's
+//! target plan already fits within the incumbent's per-type instance
+//! counts — the common case under warm-started churn — it *is* such a
+//! plan and no extra solve runs; only when it does not fit does the
+//! stage fall back to the restricted [`repack_onto`] solve (the cold
+//! path).
+//!
+//! **Warm/cold provenance.**  Reactive epochs record a [`SolveMode`]:
+//! warm-start accepted, cold solve, or a forced
+//! [`SolveMode::ColdRefresh`] (every
+//! [`AutoscaleConfig::cold_refresh_every`] consecutive warm epochs, or
+//! when the warm plan's certified gap drifts more than
+//! [`AutoscaleConfig::cold_refresh_drift`] above the last cold
+//! solve's) so warm-start ratcheting is bounded *and visible* in the
+//! per-epoch report.
 //!
 //! Four [`ScalePolicy`]s make the cost/performance trade-off
 //! measurable:
@@ -28,16 +66,15 @@
 //!   hours up (an under-provisioned fleet can bill less — by dropping
 //!   demand, which its performance metric exposes);
 //! * [`ScalePolicy::Reactive`] — the paper-faithful online policy:
-//!   warm-start solve per epoch (the previous epoch's plan carried in
-//!   [`FleetState`] seeds the next solve so only the stream delta is
-//!   re-packed; a certified-gap drift check falls back to a cold
-//!   solve), hysteresis-gated transitions, fleet carried across epochs.
+//!   warm-start solve per epoch with cold refresh, hysteresis-gated
+//!   transitions, fleet carried across epochs.
 
+use super::pipeline::{EpochConsumer, PipelineExecutor};
 use super::{Coordinator, ProfiledWorkload};
 use crate::cloud::{BillingMeter, Catalog, InstanceId, InstanceState, SimInstance};
 use crate::manager::{
     assign_best_effort, plan_transition, repack_onto, worth_reallocating, AllocationPlan,
-    Reallocation, ResourceManager, Strategy, TransitionAction,
+    Reallocation, Strategy, TransitionAction,
 };
 use crate::packing::SolverKind;
 use crate::sched::{SimConfig, SimReport};
@@ -93,16 +130,50 @@ impl std::str::FromStr for ScalePolicy {
     }
 }
 
+/// How an epoch's target plan was produced — the Warm/Cold column of
+/// the per-epoch report, making warm-start ratcheting visible.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SolveMode {
+    /// Warm-start incremental repack accepted.
+    Warm,
+    /// Cold solve: first epoch, static/oracle pre-solve, or the warm
+    /// path declining on its own quality gate.
+    Cold,
+    /// Cold solve *forced* by the periodic refresh or the cumulative
+    /// gap-drift gate.
+    ColdRefresh,
+}
+
+impl std::fmt::Display for SolveMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SolveMode::Warm => "warm",
+            SolveMode::Cold => "cold",
+            SolveMode::ColdRefresh => "refresh",
+        })
+    }
+}
+
 /// Autoscaling knobs shared by every policy run.
 #[derive(Clone, Copy, Debug)]
 pub struct AutoscaleConfig {
     pub strategy: Strategy,
     /// Per-epoch simulation template; `duration_s` is overridden by
-    /// each epoch's duration.
+    /// each epoch's duration.  Its [`Parallelism`](crate::sched::Parallelism)
+    /// also drives the epoch pipeline (`--pipeline`) and simulation
+    /// sharding (`--sim-threads`).
     pub sim: SimConfig,
     /// Hysteresis planning horizon in hours; `None` = the remaining
     /// trace duration at each decision point.
     pub horizon_hours: Option<f64>,
+    /// Force a cold solve after this many consecutive warm-served
+    /// epochs (0 disables the periodic refresh).
+    pub cold_refresh_every: usize,
+    /// Force a cold solve when a warm plan's certified gap exceeds the
+    /// last cold solve's by more than this (cumulative-drift anchor;
+    /// the per-epoch `warm_gap_margin` gate in `allocate_warm` only
+    /// bounds drift *per step* and can ratchet).
+    pub cold_refresh_drift: f64,
 }
 
 impl Default for AutoscaleConfig {
@@ -111,6 +182,8 @@ impl Default for AutoscaleConfig {
             strategy: Strategy::St3,
             sim: SimConfig::default(),
             horizon_hours: None,
+            cold_refresh_every: 8,
+            cold_refresh_drift: 0.15,
         }
     }
 }
@@ -143,10 +216,13 @@ pub struct EpochOutcome {
     pub solver: SolverKind,
     /// Certified optimality gap of the serving plan vs the full
     /// catalog.  `None` when the epoch ran on a hand-built best-effort
-    /// placement or on a kept fleet (whose repack is solved against the
-    /// fleet-restricted catalog and therefore carries no full-catalog
-    /// certificate).
+    /// placement or on a restricted kept-fleet repack (whose solve runs
+    /// against the fleet-restricted catalog and therefore carries no
+    /// full-catalog certificate); kept epochs served by a fitting
+    /// full-catalog plan keep that plan's certificate.
     pub gap: Option<f64>,
+    /// Warm/cold provenance of the epoch's target plan.
+    pub mode: SolveMode,
 }
 
 /// Result of one policy over one trace.
@@ -305,6 +381,435 @@ impl FleetState {
     }
 }
 
+/// Does `plan` fit within `fleet`'s per-type instance counts — i.e. is
+/// it executable on the fleet without provisioning anything?
+fn fits_within(plan: &AllocationPlan, fleet: &AllocationPlan) -> bool {
+    if fleet.instances.is_empty() {
+        return plan.instances.is_empty();
+    }
+    let have = fleet.counts_by_type();
+    plan.counts_by_type()
+        .iter()
+        .all(|(t, n)| have.get(t).copied().unwrap_or(0) >= *n)
+}
+
+/// Planning context snapshot: emitted by [`ActuateStage`], consumed —
+/// possibly on a pipeline worker — by [`PlanStage`].  Compared by value
+/// to validate speculative plans (see [`super::pipeline`]); the
+/// derived equality is a *full structural* comparison — the incumbent's
+/// stream assignments feed `allocate_warm`, so a seed that differs only
+/// in assignments must still invalidate the speculation.
+#[derive(Clone, PartialEq)]
+pub(crate) struct PlanSeed {
+    /// Incumbent plan: the fleet shape carried across epochs (the
+    /// previous epoch's fresh plan for the oracle).
+    incumbent: AllocationPlan,
+    /// Consecutive warm-served epochs since the last cold solve.
+    warm_streak: usize,
+    /// Certified gap of the last cold solve — the drift anchor.
+    cold_gap: Option<f64>,
+}
+
+/// Output of the plan stage for one epoch.
+pub(crate) struct PlannedEpoch {
+    index: usize,
+    /// The plan the policy *wants* this epoch (warm/cold solve, held
+    /// static plan, or the oracle's fresh optimum).
+    target: AllocationPlan,
+    /// A plan serving the epoch on the incumbent fleet without any
+    /// provisioning, when one exists — the hysteresis feasibility
+    /// signal *and* the plan simulated when the gate keeps the fleet.
+    serving: Option<AllocationPlan>,
+    mode: SolveMode,
+}
+
+/// Stage 1 — **plan**.  Pure in `(epoch index, seed)`: reads only the
+/// trace, the resolved profiles, and the pre-solved static plans, so
+/// the pipeline executor can run it speculatively on a worker thread.
+struct PlanStage<'a> {
+    policy: ScalePolicy,
+    config: &'a AutoscaleConfig,
+    trace: &'a WorkloadTrace,
+    profiled: &'a [ProfiledWorkload],
+    /// Held plan of the static policies.
+    static_plan: Option<AllocationPlan>,
+    /// Fresh per-epoch optimal plans (static policies only — used both
+    /// for peak/mean selection and as serving candidates).
+    fresh: Vec<AllocationPlan>,
+}
+
+impl PlanStage<'_> {
+    fn plan(&self, i: usize, seed: &PlanSeed) -> Result<PlannedEpoch> {
+        match self.policy {
+            ScalePolicy::Oracle => {
+                let epoch = &self.trace.epochs[i];
+                let target = self.profiled[i]
+                    .allocate(self.config.strategy)
+                    .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+                Ok(PlannedEpoch { index: i, target, serving: None, mode: SolveMode::Cold })
+            }
+            ScalePolicy::StaticPeak | ScalePolicy::StaticMean => {
+                let held = self
+                    .static_plan
+                    .as_ref()
+                    .expect("static policies pre-solve their held plan")
+                    .clone();
+                // The incumbent is the held fleet from epoch 0 onward;
+                // the epoch's fresh optimum doubles as the serving
+                // candidate.
+                let serving = self.serving_plan(i, &held, Some(&self.fresh[i]))?;
+                Ok(PlannedEpoch { index: i, target: held, serving, mode: SolveMode::Cold })
+            }
+            ScalePolicy::Reactive => self.plan_reactive(i, seed),
+        }
+    }
+
+    /// Warm-start solve with periodic/drift-gated cold refresh.
+    fn plan_reactive(&self, i: usize, seed: &PlanSeed) -> Result<PlannedEpoch> {
+        let epoch = &self.trace.epochs[i];
+        let pw = &self.profiled[i];
+        let strategy = self.config.strategy;
+        let (target, mode) = if seed.incumbent.instances.is_empty() {
+            let plan = pw
+                .allocate(strategy)
+                .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+            (plan, SolveMode::Cold)
+        } else if self.config.cold_refresh_every > 0
+            && seed.warm_streak >= self.config.cold_refresh_every
+        {
+            let plan = pw
+                .allocate(strategy)
+                .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+            (plan, SolveMode::ColdRefresh)
+        } else {
+            let plan = pw
+                .manager()
+                .allocate_warm(&epoch.streams, strategy, &seed.incumbent)
+                .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+            if plan.solver == SolverKind::WarmStart {
+                // Cumulative-drift gate: warm quality is measured
+                // against the last *cold* solve, not just the previous
+                // epoch, so per-step margins cannot ratchet unbounded.
+                let drifted = match (plan.gap(), seed.cold_gap) {
+                    (Some(gap), Some(anchor)) => gap - anchor > self.config.cold_refresh_drift,
+                    _ => false,
+                };
+                if drifted {
+                    let cold = pw
+                        .allocate(strategy)
+                        .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+                    (cold, SolveMode::ColdRefresh)
+                } else {
+                    (plan, SolveMode::Warm)
+                }
+            } else {
+                // allocate_warm already fell back to a cold solve on
+                // its own per-step quality gate.
+                (plan, SolveMode::Cold)
+            }
+        };
+        let serving = self.serving_plan(i, &seed.incumbent, Some(&target))?;
+        Ok(PlannedEpoch { index: i, target, serving, mode })
+    }
+
+    /// Can `fleet` serve epoch `i` without provisioning?  When
+    /// `candidate` (a full-catalog plan for exactly this epoch) fits
+    /// within the fleet's per-type counts it *is* a serving plan and —
+    /// unlike the restricted re-solve — keeps its full-catalog
+    /// certificate; only otherwise does the restricted [`repack_onto`]
+    /// solve run.
+    fn serving_plan(
+        &self,
+        i: usize,
+        fleet: &AllocationPlan,
+        candidate: Option<&AllocationPlan>,
+    ) -> Result<Option<AllocationPlan>> {
+        if let Some(candidate) = candidate {
+            if fits_within(candidate, fleet) {
+                return Ok(Some(candidate.clone()));
+            }
+        }
+        let epoch = &self.trace.epochs[i];
+        let pw = &self.profiled[i];
+        repack_onto(&pw.manager(), fleet, &epoch.streams, self.config.strategy)
+            .with_context(|| format!("repacking epoch {:?}", epoch.label))
+    }
+}
+
+/// What actuation hands to simulation for one epoch.
+struct SimJob {
+    index: usize,
+    start_s: f64,
+    sim_plan: AllocationPlan,
+    unserved: usize,
+    reallocated: bool,
+    /// `(kept, provisioned, terminated)`.
+    churn: (u32, u32, u32),
+    fleet_size: usize,
+    hourly_rate: Dollars,
+    mode: SolveMode,
+}
+
+/// Stage 2 — **actuate**: the only stage that mutates shared state.
+/// Gates the planned transition, applies it to the carried fleet, and
+/// emits the [`PlanSeed`] the next epoch's plan stage starts from.
+struct ActuateStage<'a> {
+    policy: ScalePolicy,
+    config: &'a AutoscaleConfig,
+    total_s: f64,
+    now: f64,
+    state: FleetState,
+    peak_fleet: usize,
+    reallocations: usize,
+    /// Oracle accumulator (pro-rated; no fleet is provisioned).
+    oracle_billed: f64,
+    warm_streak: usize,
+    cold_gap: Option<f64>,
+}
+
+impl ActuateStage<'_> {
+    fn seed(&self, incumbent: AllocationPlan) -> PlanSeed {
+        PlanSeed { incumbent, warm_streak: self.warm_streak, cold_gap: self.cold_gap }
+    }
+
+    fn apply(
+        &mut self,
+        trace: &WorkloadTrace,
+        profiled: &[ProfiledWorkload],
+        planned: PlannedEpoch,
+    ) -> (SimJob, PlanSeed) {
+        let mode = planned.mode;
+        let target_gap = planned.target.gap();
+        let (job, incumbent) = if self.policy == ScalePolicy::Oracle {
+            self.apply_oracle(trace, planned)
+        } else {
+            self.apply_fleet(trace, profiled, planned)
+        };
+        match mode {
+            SolveMode::Warm => self.warm_streak += 1,
+            SolveMode::Cold | SolveMode::ColdRefresh => {
+                self.warm_streak = 0;
+                self.cold_gap = target_gap;
+            }
+        }
+        let seed = self.seed(incumbent);
+        (job, seed)
+    }
+
+    fn apply_fleet(
+        &mut self,
+        trace: &WorkloadTrace,
+        profiled: &[ProfiledWorkload],
+        planned: PlannedEpoch,
+    ) -> (SimJob, AllocationPlan) {
+        let PlannedEpoch { index: i, target, serving, mode } = planned;
+        let epoch = &trace.epochs[i];
+        let realloc = plan_transition(&self.state.plan, &target);
+        let do_realloc = match self.policy {
+            ScalePolicy::Reactive => {
+                let horizon = self
+                    .config
+                    .horizon_hours
+                    .unwrap_or(((self.total_s - self.now) / 3600.0).max(1e-9));
+                let wasted = self.state.mean_wasted_if(&realloc, self.now);
+                // Feasibility-first hysteresis; if the gate keeps the
+                // fleet it must actually be able to serve.
+                worth_reallocating(&realloc, &self.state.plan, serving.is_some(), horizon, wasted)
+                    || serving.is_none()
+            }
+            // Static policies provision once and never move again.
+            _ => i == 0,
+        };
+
+        let changed = realloc.provisioned > 0 || realloc.terminated > 0;
+        let (sim_plan, unserved) = if do_realloc {
+            self.state.apply(&realloc, &target, &trace.catalog, self.now);
+            if i > 0 && changed {
+                self.reallocations += 1;
+            }
+            match self.policy {
+                // A held static fleet still needs the epoch's streams
+                // mapped onto it; the plan stage judged serving against
+                // exactly this fleet.
+                ScalePolicy::StaticPeak | ScalePolicy::StaticMean => match serving {
+                    Some(plan) => (plan, Vec::new()),
+                    None => self.best_effort(trace, profiled, i),
+                },
+                _ => (target, Vec::new()),
+            }
+        } else if let Some(plan) = serving {
+            (plan, Vec::new())
+        } else {
+            // Fleet kept but unable to serve cleanly: degrade rather
+            // than refuse.
+            self.best_effort(trace, profiled, i)
+        };
+
+        self.peak_fleet = self.peak_fleet.max(self.state.running_count());
+        // A declined transition is no churn: the fleet was kept.
+        let churn = if do_realloc {
+            (realloc.kept, realloc.provisioned, realloc.terminated)
+        } else {
+            (self.state.running_count() as u32, 0, 0)
+        };
+        let job = SimJob {
+            index: i,
+            start_s: self.now,
+            sim_plan,
+            unserved: unserved.len(),
+            reallocated: do_realloc && changed,
+            churn,
+            fleet_size: self.state.running_count(),
+            hourly_rate: self.state.billing.hourly_rate(self.now),
+            mode,
+        };
+        self.now += epoch.duration_s;
+        (job, self.state.plan.clone())
+    }
+
+    /// The churn-free lower bound: each epoch billed at its optimal
+    /// plan's hourly rate, pro-rated to the exact epoch duration.
+    /// Churn is accounted like the online policies account it — the
+    /// type-matched transition from the previous epoch's plan — so the
+    /// comparison table reads one metric across policies.
+    fn apply_oracle(
+        &mut self,
+        trace: &WorkloadTrace,
+        planned: PlannedEpoch,
+    ) -> (SimJob, AllocationPlan) {
+        let PlannedEpoch { index: i, target: plan, mode, .. } = planned;
+        let epoch = &trace.epochs[i];
+        self.oracle_billed += plan.hourly_cost.as_f64() * epoch.duration_s / 3600.0;
+        self.peak_fleet = self.peak_fleet.max(plan.instances.len());
+        let (churn, changed) = if i == 0 {
+            ((0, plan.instances.len() as u32, 0), true)
+        } else {
+            let r = plan_transition(&self.state.plan, &plan);
+            (
+                (r.kept, r.provisioned, r.terminated),
+                r.provisioned > 0 || r.terminated > 0,
+            )
+        };
+        if i > 0 && changed {
+            self.reallocations += 1;
+        }
+        let job = SimJob {
+            index: i,
+            start_s: self.now,
+            sim_plan: plan.clone(),
+            unserved: 0,
+            reallocated: changed,
+            churn,
+            fleet_size: plan.instances.len(),
+            hourly_rate: plan.hourly_cost,
+            mode,
+        };
+        self.state.plan = plan;
+        self.now += epoch.duration_s;
+        (job, self.state.plan.clone())
+    }
+
+    /// Best-effort placement of an epoch a fixed fleet cannot serve
+    /// cleanly.
+    fn best_effort(
+        &self,
+        trace: &WorkloadTrace,
+        profiled: &[ProfiledWorkload],
+        i: usize,
+    ) -> (AllocationPlan, Vec<usize>) {
+        let pw = &profiled[i];
+        assign_best_effort(
+            &self.state.plan,
+            &trace.epochs[i].streams,
+            pw.per_stream(),
+            self.config.strategy,
+            &trace.catalog,
+            pw.manager().headroom,
+        )
+    }
+}
+
+/// Stage 3 — **simulate**: execute the epoch's serving plan on the
+/// (sharded) engine selected by the sim config; `duration_s` comes
+/// from the epoch.
+struct SimulateStage {
+    sim: SimConfig,
+}
+
+impl SimulateStage {
+    fn run(&self, trace: &WorkloadTrace, profiled: &[ProfiledWorkload], job: &SimJob) -> SimReport {
+        let epoch = &trace.epochs[job.index];
+        profiled[job.index]
+            .simulation(&job.sim_plan)
+            .run(SimConfig { duration_s: epoch.duration_s, ..self.sim })
+    }
+}
+
+/// Stage 4 — **bill**: fold the simulated epoch into the outcome rows.
+struct BillStage {
+    epochs: Vec<EpochOutcome>,
+}
+
+impl BillStage {
+    fn record(&mut self, trace: &WorkloadTrace, job: SimJob, report: &SimReport) {
+        let epoch = &trace.epochs[job.index];
+        let total = epoch.streams.len();
+        let served_perf: f64 = report
+            .streams
+            .iter()
+            .map(crate::metrics::StreamPerf::performance)
+            .sum();
+        let performance = if total == 0 { 1.0 } else { served_perf / total as f64 };
+        let (kept, provisioned, terminated) = job.churn;
+        self.epochs.push(EpochOutcome {
+            label: epoch.label.clone(),
+            start_s: job.start_s,
+            duration_s: epoch.duration_s,
+            streams: total,
+            reallocated: job.reallocated,
+            kept,
+            provisioned,
+            terminated,
+            fleet_size: job.fleet_size,
+            hourly_rate: job.hourly_rate,
+            performance,
+            unserved: job.unserved,
+            frames_completed: report.frames_completed,
+            frames_dropped: report.frames_dropped,
+            solver: job.sim_plan.solver,
+            gap: job.sim_plan.gap(),
+            mode: job.mode,
+        });
+    }
+}
+
+/// The composed consumer the pipeline executor drives: actuate →
+/// simulate → bill, with the plan stage running (speculatively) on the
+/// executor's worker.
+struct EpochDriver<'a> {
+    trace: &'a WorkloadTrace,
+    profiled: &'a [ProfiledWorkload],
+    actuate: ActuateStage<'a>,
+    simulate: SimulateStage,
+    bill: BillStage,
+}
+
+impl EpochConsumer for EpochDriver<'_> {
+    type Seed = PlanSeed;
+    type Planned = PlannedEpoch;
+    type Carry = SimJob;
+
+    fn actuate(&mut self, planned: PlannedEpoch) -> Result<(SimJob, PlanSeed)> {
+        Ok(self.actuate.apply(self.trace, self.profiled, planned))
+    }
+
+    fn finish(&mut self, job: SimJob) -> Result<()> {
+        let report = self.simulate.run(self.trace, self.profiled, &job);
+        self.bill.record(self.trace, job, &report);
+        Ok(())
+    }
+}
+
 /// Drives [`ScalePolicy`] runs over a [`WorkloadTrace`].
 pub struct AutoscaleRunner<'a> {
     pub coordinator: &'a Coordinator,
@@ -334,229 +839,86 @@ impl<'a> AutoscaleRunner<'a> {
             .collect()
     }
 
-    /// Run one policy over the trace.
+    /// Run one policy over the trace through the staged epoch pipeline.
     pub fn run(&self, trace: &WorkloadTrace, policy: ScalePolicy) -> Result<AutoscaleOutcome> {
         if trace.epochs.is_empty() {
             return Err(anyhow!("trace {:?} has no epochs", trace.name));
         }
         let strategy = self.config.strategy;
-        // Stage 1 per epoch: resolve profiles once.
+        // Resolve profiles once per epoch up front (stage-0 of the
+        // static pipeline; shared by every stage).
         let profiled: Vec<ProfiledWorkload> = (0..trace.epochs.len())
             .map(|i| self.coordinator.profile_workload(trace.workload(i)))
             .collect();
-        // Stage 2: the static and oracle policies need every epoch's
-        // fresh optimal plan up front (peak/mean selection, the oracle
-        // integral).  The reactive policy solves per epoch instead,
-        // warm-started from the incumbent fleet.
-        let mut fresh: Vec<AllocationPlan> = Vec::new();
-        if policy != ScalePolicy::Reactive {
-            for (i, epoch) in trace.epochs.iter().enumerate() {
-                let plan = profiled[i]
-                    .allocate(strategy)
-                    .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-                fresh.push(plan);
+        // The static policies need every epoch's fresh optimal plan up
+        // front (peak/mean selection).  Oracle and reactive solve per
+        // epoch inside the plan stage, overlapped by the executor.
+        let (static_plan, fresh) = match policy {
+            ScalePolicy::StaticPeak | ScalePolicy::StaticMean => {
+                let mut fresh = Vec::with_capacity(trace.epochs.len());
+                for (i, epoch) in trace.epochs.iter().enumerate() {
+                    let plan = profiled[i]
+                        .allocate(strategy)
+                        .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+                    fresh.push(plan);
+                }
+                let held = match policy {
+                    ScalePolicy::StaticPeak => pick_peak(&fresh),
+                    _ => pick_mean(trace, &fresh),
+                };
+                (Some(held), fresh)
             }
-        }
-
-        if policy == ScalePolicy::Oracle {
-            return Ok(self.run_oracle(trace, &profiled, &fresh));
-        }
-
-        let static_plan = match policy {
-            ScalePolicy::StaticPeak => Some(pick_peak(&fresh)),
-            ScalePolicy::StaticMean => Some(pick_mean(trace, &fresh)),
-            _ => None,
+            _ => (None, Vec::new()),
         };
 
-        let total_s = trace.total_duration_s();
-        let mut state = FleetState::new(strategy);
-        let mut epochs = Vec::with_capacity(trace.epochs.len());
-        let mut peak_fleet = 0usize;
-        let mut reallocations = 0usize;
-        let mut now = 0.0;
-        for (i, epoch) in trace.epochs.iter().enumerate() {
-            let pw = &profiled[i];
-            let mgr = pw.manager();
-            let target = match &static_plan {
-                // A held static fleet re-uses its one plan as the target.
-                Some(plan) => plan.clone(),
-                // Reactive: warm-start from the incumbent fleet (cold
-                // solve on the first epoch or when the incumbent cannot
-                // seed the problem / its quality drifted).
-                None => {
-                    if state.plan.instances.is_empty() {
-                        pw.allocate(strategy)
-                            .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?
-                    } else {
-                        mgr.allocate_warm(&epoch.streams, strategy, &state.plan)
-                            .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?
-                    }
-                }
-            };
-            let serving = repack_onto(&mgr, &state.plan, &epoch.streams, strategy)
-                .with_context(|| format!("repacking epoch {:?}", epoch.label))?;
-            let realloc = plan_transition(&state.plan, &target);
-            let do_realloc = match policy {
-                ScalePolicy::Reactive => {
-                    let horizon = self
-                        .config
-                        .horizon_hours
-                        .unwrap_or(((total_s - now) / 3600.0).max(1e-9));
-                    let wasted = state.mean_wasted_if(&realloc, now);
-                    // Feasibility-first hysteresis; if the gate keeps
-                    // the fleet it must actually be able to serve.
-                    worth_reallocating(&realloc, &state.plan, serving.is_some(), horizon, wasted)
-                        || serving.is_none()
-                }
-                // Static policies provision once and never move again.
-                _ => i == 0,
-            };
+        let stage = PlanStage {
+            policy,
+            config: &self.config,
+            trace,
+            profiled: &profiled,
+            static_plan,
+            fresh,
+        };
+        let mut driver = EpochDriver {
+            trace,
+            profiled: &profiled,
+            actuate: ActuateStage {
+                policy,
+                config: &self.config,
+                total_s: trace.total_duration_s(),
+                now: 0.0,
+                state: FleetState::new(strategy),
+                peak_fleet: 0,
+                reallocations: 0,
+                oracle_billed: 0.0,
+                warm_streak: 0,
+                cold_gap: None,
+            },
+            simulate: SimulateStage { sim: self.config.sim },
+            bill: BillStage { epochs: Vec::with_capacity(trace.epochs.len()) },
+        };
+        let initial = driver.actuate.seed(driver.actuate.state.plan.clone());
+        PipelineExecutor { pipeline: self.config.sim.parallelism.pipeline }.execute(
+            trace.epochs.len(),
+            initial,
+            |i: usize, seed: &PlanSeed| stage.plan(i, seed),
+            &mut driver,
+        )?;
 
-            let changed = realloc.provisioned > 0 || realloc.terminated > 0;
-            let (sim_plan, unserved) = if do_realloc {
-                state.apply(&realloc, &target, &trace.catalog, now);
-                if i > 0 && changed {
-                    reallocations += 1;
-                }
-                match policy {
-                    // A held static fleet still needs the epoch's
-                    // streams mapped onto it.
-                    ScalePolicy::StaticPeak | ScalePolicy::StaticMean => {
-                        self.serve_static(&mgr, &state.plan, pw, epoch)?
-                    }
-                    _ => (target.clone(), Vec::new()),
-                }
-            } else if let Some(plan) = serving {
-                (plan, Vec::new())
-            } else {
-                // Static fleet that cannot serve this epoch cleanly:
-                // degrade rather than refuse.
-                assign_best_effort(
-                    &state.plan,
-                    &epoch.streams,
-                    pw.per_stream(),
-                    strategy,
-                    &trace.catalog,
-                    mgr.headroom,
-                )
-            };
-
-            peak_fleet = peak_fleet.max(state.running_count());
-            let report = pw
-                .simulation(&sim_plan)
-                .run(SimConfig { duration_s: epoch.duration_s, ..self.config.sim });
-            // A declined transition is no churn: the fleet was kept.
-            let churn = if do_realloc {
-                (realloc.kept, realloc.provisioned, realloc.terminated)
-            } else {
-                (state.running_count() as u32, 0, 0)
-            };
-            epochs.push(epoch_outcome(
-                epoch,
-                now,
-                do_realloc && changed,
-                churn,
-                state.running_count(),
-                state.billing.hourly_rate(now),
-                &sim_plan,
-                &report,
-                unserved.len(),
-            ));
-            now += epoch.duration_s;
-        }
-        let total_billed = state.settle(total_s);
+        let total_billed = if policy == ScalePolicy::Oracle {
+            Dollars::from_f64(driver.actuate.oracle_billed)
+        } else {
+            driver.actuate.state.settle(driver.actuate.total_s)
+        };
         Ok(finish_outcome(
             policy,
             trace,
             strategy,
-            epochs,
+            driver.bill.epochs,
             total_billed,
-            peak_fleet,
-            reallocations,
+            driver.actuate.peak_fleet,
+            driver.actuate.reallocations,
         ))
-    }
-
-    /// Map an epoch onto a held static fleet: clean repack if the fleet
-    /// covers it, best-effort overflow otherwise.
-    fn serve_static(
-        &self,
-        mgr: &ResourceManager<'_>,
-        fleet: &AllocationPlan,
-        pw: &ProfiledWorkload,
-        epoch: &crate::workload::trace::Epoch,
-    ) -> Result<(AllocationPlan, Vec<usize>)> {
-        Ok(
-            match repack_onto(mgr, fleet, &epoch.streams, self.config.strategy)
-                .with_context(|| format!("repacking epoch {:?}", epoch.label))?
-            {
-                Some(plan) => (plan, Vec::new()),
-                None => assign_best_effort(
-                    fleet,
-                    &epoch.streams,
-                    pw.per_stream(),
-                    self.config.strategy,
-                    &mgr.catalog,
-                    mgr.headroom,
-                ),
-            },
-        )
-    }
-
-    /// The churn-free lower bound: each epoch billed at its optimal
-    /// plan's hourly rate, pro-rated to the exact epoch duration.
-    fn run_oracle(
-        &self,
-        trace: &WorkloadTrace,
-        profiled: &[ProfiledWorkload],
-        fresh: &[AllocationPlan],
-    ) -> AutoscaleOutcome {
-        let mut epochs = Vec::with_capacity(trace.epochs.len());
-        let mut billed = 0.0f64;
-        let mut peak_fleet = 0usize;
-        let mut reallocations = 0usize;
-        let mut now = 0.0;
-        for (i, epoch) in trace.epochs.iter().enumerate() {
-            let plan = &fresh[i];
-            billed += plan.hourly_cost.as_f64() * epoch.duration_s / 3600.0;
-            peak_fleet = peak_fleet.max(plan.instances.len());
-            let report = profiled[i]
-                .simulation(plan)
-                .run(SimConfig { duration_s: epoch.duration_s, ..self.config.sim });
-            // Churn accounted like the online policies account it — the
-            // type-matched transition from the previous epoch's plan —
-            // so the comparison table reads one metric across policies.
-            let (churn, changed) = if i == 0 {
-                ((0, plan.instances.len() as u32, 0), true)
-            } else {
-                let r = plan_transition(&fresh[i - 1], plan);
-                let changed = r.provisioned > 0 || r.terminated > 0;
-                ((r.kept, r.provisioned, r.terminated), changed)
-            };
-            if i > 0 && changed {
-                reallocations += 1;
-            }
-            epochs.push(epoch_outcome(
-                epoch,
-                now,
-                changed,
-                churn,
-                plan.instances.len(),
-                plan.hourly_cost,
-                plan,
-                &report,
-                0,
-            ));
-            now += epoch.duration_s;
-        }
-        finish_outcome(
-            ScalePolicy::Oracle,
-            trace,
-            self.config.strategy,
-            epochs,
-            Dollars::from_f64(billed),
-            peak_fleet,
-            reallocations,
-        )
     }
 }
 
@@ -589,45 +951,6 @@ fn pick_mean(trace: &WorkloadTrace, fresh: &[AllocationPlan]) -> AllocationPlan 
         })
         .expect("non-empty trace")
         .clone()
-}
-
-#[allow(clippy::too_many_arguments)]
-fn epoch_outcome(
-    epoch: &crate::workload::trace::Epoch,
-    start_s: f64,
-    reallocated: bool,
-    (kept, provisioned, terminated): (u32, u32, u32),
-    fleet_size: usize,
-    hourly_rate: Dollars,
-    sim_plan: &AllocationPlan,
-    report: &SimReport,
-    unserved: usize,
-) -> EpochOutcome {
-    let total = epoch.streams.len();
-    let served_perf: f64 = report
-        .streams
-        .iter()
-        .map(crate::metrics::StreamPerf::performance)
-        .sum();
-    let performance = if total == 0 { 1.0 } else { served_perf / total as f64 };
-    EpochOutcome {
-        label: epoch.label.clone(),
-        start_s,
-        duration_s: epoch.duration_s,
-        streams: total,
-        reallocated,
-        kept,
-        provisioned,
-        terminated,
-        fleet_size,
-        hourly_rate,
-        performance,
-        unserved,
-        frames_completed: report.frames_completed,
-        frames_dropped: report.frames_dropped,
-        solver: sim_plan.solver,
-        gap: sim_plan.gap(),
-    }
 }
 
 fn finish_outcome(
@@ -689,6 +1012,8 @@ mod tests {
         assert_eq!(out.total_billed, Dollars::from_f64(2.976));
         assert!(out.mean_performance >= 0.9, "perf {}", out.mean_performance);
         assert_eq!(out.peak_fleet, 2);
+        // Epoch 0 is by definition a cold solve.
+        assert_eq!(out.epochs[0].mode, SolveMode::Cold);
     }
 
     #[test]
@@ -779,8 +1104,7 @@ mod tests {
         let c = Coordinator::new();
         let config = AutoscaleConfig {
             strategy: Strategy::St1,
-            sim: SimConfig::default(),
-            horizon_hours: None,
+            ..AutoscaleConfig::default()
         };
         let runner = AutoscaleRunner::new(&c).with_config(config);
         let base = StreamSpec::replicate(0, 4, VGA, Program::Zf, 0.5);
@@ -791,11 +1115,79 @@ mod tests {
             .epoch("grow", 3600.0, grown);
         let out = runner.run(&trace, ScalePolicy::Reactive).unwrap();
         assert_eq!(out.epochs[0].solver, SolverKind::Exact);
+        assert_eq!(out.epochs[0].mode, SolveMode::Cold);
         assert_eq!(out.epochs[1].solver, SolverKind::WarmStart);
+        assert_eq!(out.epochs[1].mode, SolveMode::Warm);
         for e in &out.epochs {
             let gap = e.gap.expect("solved epochs carry a certified gap");
             assert!(gap.is_finite() && (0.0..=1.0).contains(&gap), "{gap}");
         }
+    }
+
+    #[test]
+    fn kept_epochs_reuse_the_warm_plan_for_the_feasibility_probe() {
+        // Steady demand with stable stream ids: from epoch 1 on the
+        // warm target fits the incumbent exactly, so the hysteresis
+        // probe reuses it — the kept epoch is served by the WarmStart
+        // plan (full-catalog certificate retained) instead of an extra
+        // repack_onto restricted solve.
+        let c = Coordinator::new();
+        let config = AutoscaleConfig { strategy: Strategy::St1, ..AutoscaleConfig::default() };
+        let runner = AutoscaleRunner::new(&c).with_config(config);
+        let base = StreamSpec::replicate(0, 4, VGA, Program::Zf, 0.5);
+        let trace = WorkloadTrace::new("steady", Catalog::paper_experiments())
+            .epoch("e0", 1800.0, base.clone())
+            .epoch("e1", 1800.0, base.clone())
+            .epoch("e2", 1800.0, base);
+        let out = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        for e in &out.epochs[1..] {
+            assert!(!e.reallocated, "steady epochs must keep the fleet");
+            assert_eq!(e.solver, SolverKind::WarmStart, "epoch {}", e.label);
+            assert_eq!(e.mode, SolveMode::Warm);
+            assert!(e.gap.is_some(), "warm serving plans keep their certificate");
+        }
+        assert_eq!(out.reallocations, 0);
+    }
+
+    #[test]
+    fn cold_refresh_recurs_every_k_warm_epochs() {
+        // Six identical epochs with cold_refresh_every = 2: after two
+        // consecutive warm-served epochs the next one must re-solve
+        // cold (mode `refresh`), then the cycle restarts.
+        let c = Coordinator::new();
+        let config = AutoscaleConfig {
+            strategy: Strategy::St1,
+            cold_refresh_every: 2,
+            ..AutoscaleConfig::default()
+        };
+        let runner = AutoscaleRunner::new(&c).with_config(config);
+        let base = StreamSpec::replicate(0, 4, VGA, Program::Zf, 0.5);
+        let mut trace = WorkloadTrace::new("refresh", Catalog::paper_experiments());
+        for i in 0..6 {
+            trace = trace.epoch(format!("e{i}"), 1800.0, base.clone());
+        }
+        let out = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        let modes: Vec<SolveMode> = out.epochs.iter().map(|e| e.mode).collect();
+        assert_eq!(
+            modes,
+            vec![
+                SolveMode::Cold,
+                SolveMode::Warm,
+                SolveMode::Warm,
+                SolveMode::ColdRefresh,
+                SolveMode::Warm,
+                SolveMode::Warm,
+            ]
+        );
+        // The refresh epoch re-solves cold (exact at this scale) but
+        // the fleet itself never churns.
+        assert_eq!(out.epochs[3].solver, SolverKind::Exact);
+        assert!(out.epochs.iter().skip(1).all(|e| !e.reallocated));
+        // Cost is flat: refreshes change provenance, not the fleet.
+        assert!(out
+            .epochs
+            .iter()
+            .all(|e| e.hourly_rate == out.epochs[0].hourly_rate));
     }
 
     #[test]
@@ -826,5 +1218,32 @@ mod tests {
         assert_eq!("peak".parse::<ScalePolicy>().unwrap(), ScalePolicy::StaticPeak);
         assert_eq!("mean".parse::<ScalePolicy>().unwrap(), ScalePolicy::StaticMean);
         assert!("elastic".parse::<ScalePolicy>().is_err());
+    }
+
+    #[test]
+    fn solve_mode_display_names() {
+        assert_eq!(SolveMode::Warm.to_string(), "warm");
+        assert_eq!(SolveMode::Cold.to_string(), "cold");
+        assert_eq!(SolveMode::ColdRefresh.to_string(), "refresh");
+    }
+
+    #[test]
+    fn fits_within_compares_per_type_counts() {
+        let c = Coordinator::new();
+        let mgr = crate::manager::ResourceManager::new(Catalog::paper_experiments(), &c);
+        let small = mgr
+            .allocate(&StreamSpec::replicate(0, 3, VGA, Program::Zf, 0.2), Strategy::St3)
+            .unwrap();
+        let big = mgr
+            .allocate(&StreamSpec::replicate(0, 10, VGA, Program::Zf, 1.0), Strategy::St3)
+            .unwrap();
+        assert!(fits_within(&small, &small));
+        assert!(!fits_within(&big, &small), "GPU fleet cannot fit in one CPU instance");
+        // An empty plan fits any non-empty fleet; nothing fits an empty
+        // fleet except another empty plan.
+        let empty = FleetState::new(Strategy::St3).plan;
+        assert!(fits_within(&empty, &small));
+        assert!(!fits_within(&small, &empty));
+        assert!(fits_within(&empty, &empty));
     }
 }

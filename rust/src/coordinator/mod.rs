@@ -25,11 +25,17 @@
 //! The [`autoscale`] submodule lifts the pipeline into the time
 //! dimension: an [`autoscale::AutoscaleRunner`] re-plans per epoch of a
 //! demand trace, carries the provisioned fleet across epochs, and
-//! compares provisioning policies under started-hour billing.
+//! compares provisioning policies under started-hour billing.  Its
+//! epochs execute as an explicit plan → actuate → simulate → bill
+//! stage pipeline (the `pipeline` module's executor overlaps epoch
+//! `i+1`'s solve with epoch `i`'s sharded simulation).
 
 pub mod autoscale;
+pub(crate) mod pipeline;
 
-pub use autoscale::{AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, ScalePolicy};
+pub use autoscale::{
+    AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, ScalePolicy, SolveMode,
+};
 
 use crate::cloud::{BillingMeter, Catalog, InstanceId, SimInstance};
 use crate::config::Scenario;

@@ -1,0 +1,208 @@
+//! Deterministic staged epoch pipeline.
+//!
+//! The autoscale runner decomposes every epoch into four stages —
+//! **plan** (solve the epoch's target + serving plans), **actuate**
+//! (gate the transition and mutate the fleet), **simulate** (execute
+//! the serving plan on the sharded engine), **bill** (fold the epoch
+//! into the outcome rows).  The [`PipelineExecutor`] drives them with
+//! one overlap: while epoch `i` simulates on the main thread, epoch
+//! `i+1`'s *plan* stage runs speculatively on a `std::thread::scope`
+//! worker.
+//!
+//! **Stage contract.**  The plan stage must be a *pure function* of
+//! `(epoch index, seed)` — no access to the live fleet state — where
+//! the seed is the snapshot `actuate` emits (incumbent plan + warm-
+//! start bookkeeping).  `actuate` is the only stage that mutates
+//! shared state, and it runs strictly in epoch order on the main
+//! thread.  `finish` (simulate + bill) must not touch anything the
+//! plan stage reads; that independence is exactly what makes the
+//! overlap sound.
+//!
+//! **Speculation + invalidation rule.**  Epoch `i+1` is planned
+//! against the seed produced by actuating epoch `i` — planning needs
+//! only the epoch's demand plus the incumbent plan, both fixed before
+//! simulation starts.  If, by the time the speculative plan is
+//! consumed, the live seed no longer equals the snapshot it was
+//! dispatched with (e.g. a future stage starts feeding simulated
+//! outcomes back into the fleet), the speculation is discarded and the
+//! epoch is re-planned synchronously against the real seed.  Under the
+//! current stages simulation never mutates the seed, so speculation
+//! always validates — the rule is the safety net that keeps the
+//! pipeline correct if that ever changes.
+//!
+//! **Determinism guarantee.**  With `pipeline` off the executor calls
+//! the plan stage synchronously at the top of each iteration; with it
+//! on, the same function runs earlier on a worker with the same
+//! inputs.  Either way every epoch consumes a plan computed from the
+//! identical `(index, seed)` pair, so `--pipeline on|off` produce
+//! identical outcomes, epoch for epoch — *provided the plan stage
+//! itself is deterministic*.  That holds under the solver stack's own
+//! precondition: solves must finish within their node budget before
+//! the wall-clock deadline fires (see `SolveBudget::time_ms`), which
+//! they do by a wide margin at every scale this repo runs.  Under a
+//! deliberately starved `--solve-budget-ms` the portfolio may shed
+//! different arms depending on machine load — pipelined or not — and
+//! no execution mode can promise bit-equal plans.
+
+use crate::util::error::Result;
+
+/// The mutable half of the pipeline: consumes planned epochs strictly
+/// in order.
+pub(crate) trait EpochConsumer {
+    /// Planning context snapshot the *next* epoch's plan stage starts
+    /// from (compared by value for speculation validation; owned data —
+    /// it crosses into the plan worker).
+    type Seed: Clone + PartialEq + Send + 'static;
+    /// Output of the plan stage (owned data — it crosses back from the
+    /// plan worker).
+    type Planned: Send + 'static;
+    /// Data carried from actuation to simulation of the same epoch.
+    type Carry;
+
+    /// Stage 2 — apply the planned transition to live state; returns
+    /// the carry plus the seed epoch `i+1` must be planned from.
+    fn actuate(&mut self, planned: Self::Planned) -> Result<(Self::Carry, Self::Seed)>;
+
+    /// Stages 3–4 — simulate the epoch and bill it.
+    fn finish(&mut self, carry: Self::Carry) -> Result<()>;
+}
+
+/// Drives `n` epochs through plan → actuate → simulate/bill, optionally
+/// overlapping epoch `i+1`'s plan with epoch `i`'s simulation.
+pub(crate) struct PipelineExecutor {
+    /// Overlap on (`--pipeline on`) or strictly sequential (`off`).
+    pub pipeline: bool,
+}
+
+impl PipelineExecutor {
+    pub(crate) fn execute<C, P>(
+        &self,
+        epochs: usize,
+        initial: C::Seed,
+        plan: P,
+        consumer: &mut C,
+    ) -> Result<()>
+    where
+        C: EpochConsumer,
+        P: Fn(usize, &C::Seed) -> Result<C::Planned> + Sync,
+    {
+        let plan = &plan;
+        std::thread::scope(|scope| {
+            let mut seed = initial;
+            let mut speculative: Option<(
+                C::Seed,
+                std::thread::ScopedJoinHandle<'_, Result<C::Planned>>,
+            )> = None;
+            for i in 0..epochs {
+                let planned = match speculative.take() {
+                    Some((basis, worker)) => {
+                        let speculated = worker.join().expect("plan stage panicked");
+                        if basis == seed {
+                            speculated?
+                        } else {
+                            // Invalidation: the incumbent changed after
+                            // the speculative solve was dispatched —
+                            // discard it and re-plan against the real
+                            // seed.
+                            let _ = speculated;
+                            plan(i, &seed)?
+                        }
+                    }
+                    None => plan(i, &seed)?,
+                };
+                let (carry, next) = consumer.actuate(planned)?;
+                seed = next;
+                if self.pipeline && i + 1 < epochs {
+                    let snapshot = seed.clone();
+                    speculative =
+                        Some((seed.clone(), scope.spawn(move || plan(i + 1, &snapshot))));
+                }
+                consumer.finish(carry)?;
+            }
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::anyhow;
+
+    /// Records the order stages run in; seeds count actuated epochs.
+    struct Recorder {
+        log: Vec<String>,
+        fail_finish_at: Option<usize>,
+    }
+
+    impl EpochConsumer for Recorder {
+        type Seed = usize;
+        type Planned = (usize, usize);
+        type Carry = usize;
+
+        fn actuate(&mut self, (i, seed): (usize, usize)) -> Result<(usize, usize)> {
+            self.log.push(format!("actuate {i} from seed {seed}"));
+            Ok((i, i + 1))
+        }
+
+        fn finish(&mut self, i: usize) -> Result<()> {
+            if self.fail_finish_at == Some(i) {
+                return Err(anyhow!("finish {i} failed"));
+            }
+            self.log.push(format!("finish {i}"));
+            Ok(())
+        }
+    }
+
+    fn run(pipeline: bool, epochs: usize, fail_finish_at: Option<usize>) -> (Recorder, Result<()>) {
+        let mut consumer = Recorder { log: Vec::new(), fail_finish_at };
+        let result = PipelineExecutor { pipeline }.execute(
+            epochs,
+            0usize,
+            |i, &seed| Ok((i, seed)),
+            &mut consumer,
+        );
+        (consumer, result)
+    }
+
+    #[test]
+    fn pipelined_and_sequential_consume_identical_seeds() {
+        let (seq, r1) = run(false, 4, None);
+        let (par, r2) = run(true, 4, None);
+        r1.unwrap();
+        r2.unwrap();
+        assert_eq!(seq.log, par.log);
+        // Every epoch was planned from the seed its predecessor's
+        // actuation produced.
+        assert_eq!(seq.log[0], "actuate 0 from seed 0");
+        assert_eq!(seq.log[6], "actuate 3 from seed 3");
+    }
+
+    #[test]
+    fn plan_errors_surface_at_the_failing_epoch() {
+        let mut consumer = Recorder { log: Vec::new(), fail_finish_at: None };
+        let result = PipelineExecutor { pipeline: true }.execute(
+            3,
+            0usize,
+            |i, &seed| {
+                if i == 2 {
+                    Err(anyhow!("epoch {i} unplannable"))
+                } else {
+                    Ok((i, seed))
+                }
+            },
+            &mut consumer,
+        );
+        assert!(result.is_err());
+        // Epochs 0 and 1 completed before the failure propagated.
+        assert_eq!(consumer.log.iter().filter(|l| l.starts_with("finish")).count(), 2);
+    }
+
+    #[test]
+    fn finish_errors_abort_with_speculation_in_flight() {
+        let (consumer, result) = run(true, 4, Some(1));
+        assert!(result.is_err());
+        assert!(consumer.log.contains(&"finish 0".to_string()));
+        assert!(!consumer.log.contains(&"finish 1".to_string()));
+    }
+}

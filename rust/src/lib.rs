@@ -31,16 +31,21 @@
 //! * [`sched`] — plan execution on a simulated timeline behind the
 //!   [`sched::SimEngine`] facade: the default **event-driven**
 //!   discrete-event engine and the fixed-step fluid baseline it is
-//!   cross-validated against.
+//!   cross-validated against, both executed *sharded* across instance
+//!   partitions ([`sched::Parallelism`]) with bit-identical results
+//!   for every thread count.
 //! * [`runtime`] — PJRT CPU runtime loading the AOT HLO artifacts
 //!   produced by `python/compile/aot.py` (behind the `pjrt` feature;
 //!   a stub otherwise).
 //! * [`coordinator`] — end-to-end orchestration as composable stages:
 //!   profile → allocate → provision → simulate → bill; the
 //!   [`coordinator::autoscale`] runner repeats those stages per epoch
-//!   of a demand trace with hysteresis-gated fleet transitions and
-//!   compares provisioning policies (static-peak / static-mean /
-//!   oracle / reactive) under started-hour billing.
+//!   of a demand trace as an explicit plan/actuate/simulate/bill
+//!   pipeline (epoch `i+1`'s solve overlapped with epoch `i`'s
+//!   simulation), with hysteresis-gated fleet transitions, warm-start
+//!   solves with periodic cold refresh, and a policy comparison
+//!   (static-peak / static-mean / oracle / reactive) under
+//!   started-hour billing.
 //!
 //! Python is build-time only; the request path is entirely in this crate.
 //!

@@ -17,7 +17,7 @@ use camcloud::packing::{SolveBudget, SolverChoice};
 use camcloud::profiler::store::ProfileStore;
 use camcloud::reports;
 use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
-use camcloud::sched::{SimConfig, SimEngine};
+use camcloud::sched::{Parallelism, SimConfig, SimEngine};
 use camcloud::streams::{Camera, Frame};
 use camcloud::types::{Program, VGA};
 use camcloud::util::cli::Args;
@@ -76,6 +76,9 @@ fn print_help() {
          \u{20}                              policies static-peak/static-mean/oracle/reactive\n\
          \u{20}  (allocate/run/trace/whatif also accept --solver auto|ffd|bfd|exact|portfolio,\n\
          \u{20}   --solve-budget-ms MS, and --exact-cutoff N for the solver stack)\n\
+         \u{20}  (run/trace also accept --sim-threads N for sharded simulation — 0 = all\n\
+         \u{20}   cores — and --pipeline on|off to overlap epoch solves with simulation;\n\
+         \u{20}   parallel execution changes no results while solves fit the solve budget)\n\
          \u{20}  report --all|--table2|--table3|--table5|--table6|--fig5|--fig6\n\
          \u{20}                              regenerate the paper's tables and figures\n\
          \u{20}  whatif --scenario N [--strategy stX]\n\
@@ -140,13 +143,32 @@ fn load_scenario(args: &Args) -> Result<Scenario, String> {
     paper_scenario(n).map_err(|e| e.to_string())
 }
 
+/// `--sim-threads N` (0 = available parallelism) and `--pipeline
+/// on|off`, shared by every simulating mode.  Parallelism does not
+/// change results: sharded simulation is bit-identical across thread
+/// counts, and the epoch pipeline is deterministic as long as solves
+/// finish within their node budget before the `--solve-budget-ms`
+/// deadline (the solver stack's own reproducibility precondition).
+fn parallelism_config(args: &Args) -> Result<Parallelism, String> {
+    let mut parallelism = Parallelism::default();
+    if let Some(n) = args.u32_opt("sim-threads")? {
+        parallelism.sim_threads = n as usize;
+    }
+    if let Some(pipeline) = args.bool_opt("pipeline")? {
+        parallelism.pipeline = pipeline;
+    }
+    Ok(parallelism)
+}
+
 fn sim_config(args: &Args, default_duration: f64) -> Result<SimConfig, String> {
     let duration = args.f64_opt("duration")?.unwrap_or(default_duration);
     let engine: SimEngine = match args.opt("engine") {
         Some(s) => s.parse()?,
         None => SimEngine::default(),
     };
-    Ok(SimConfig::for_duration(duration).with_engine(engine))
+    Ok(SimConfig::for_duration(duration)
+        .with_engine(engine)
+        .with_parallelism(parallelism_config(args)?))
 }
 
 fn cmd_catalog() -> i32 {
@@ -352,8 +374,11 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
     let coordinator = coordinator_with_profiles(args)?;
     let config = AutoscaleConfig {
         strategy,
-        sim: SimConfig::default().with_engine(engine),
+        sim: SimConfig::default()
+            .with_engine(engine)
+            .with_parallelism(parallelism_config(args)?),
         horizon_hours,
+        ..AutoscaleConfig::default()
     };
     let runner = AutoscaleRunner::new(&coordinator).with_config(config);
     let policies = args.one_or_all("policy", &ScalePolicy::ALL)?;

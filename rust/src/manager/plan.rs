@@ -9,7 +9,7 @@ use crate::types::{Dollars, ResourceVec};
 use std::collections::BTreeMap;
 
 /// One stream placed on an instance.
-#[derive(Clone, Debug)]
+#[derive(Clone, PartialEq, Debug)]
 pub struct StreamAssignment {
     /// Index into the workload's stream list.
     pub stream_index: usize,
@@ -21,7 +21,7 @@ pub struct StreamAssignment {
 }
 
 /// One instance to provision, with its assigned streams.
-#[derive(Clone, Debug)]
+#[derive(Clone, PartialEq, Debug)]
 pub struct PlannedInstance {
     /// Catalog type name (decision A).
     pub type_name: String,
@@ -57,8 +57,11 @@ impl PlannedInstance {
     }
 }
 
-/// The manager's full output.
-#[derive(Clone, Debug)]
+/// The manager's full output.  `PartialEq` is a full structural
+/// comparison (assignments included) — the autoscale pipeline's
+/// speculation-invalidation check relies on it detecting *any*
+/// incumbent change, not just a shape change.
+#[derive(Clone, PartialEq, Debug)]
 pub struct AllocationPlan {
     pub strategy: Strategy,
     pub solver: SolverKind,

@@ -331,7 +331,9 @@ pub fn trace_policy_table(
 }
 
 /// Per-epoch breakdown of one policy run, including which solver
-/// produced each epoch's serving plan and its certified optimality gap.
+/// produced each epoch's serving plan, its warm/cold provenance (so
+/// warm-start ratcheting and forced cold refreshes are visible), and
+/// its certified optimality gap.
 pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
     let mut t = Table::new(&format!(
         "{} on {} ({}) — per-epoch timeline",
@@ -339,7 +341,7 @@ pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
     ))
     .header(&[
         "Epoch", "Start", "Streams", "Fleet", "+prov/-term", "$/h", "Perf", "Unserved", "Solver",
-        "Gap",
+        "Warm", "Gap",
     ]);
     for e in &outcome.epochs {
         t.row(&[
@@ -356,6 +358,7 @@ pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
             format!("{:.0}%", e.performance * 100.0),
             if e.unserved > 0 { e.unserved.to_string() } else { "-".into() },
             e.solver.to_string(),
+            e.mode.to_string(),
             match e.gap {
                 Some(g) => format!("{:.1}%", g * 100.0),
                 None => "-".into(),
@@ -464,8 +467,11 @@ mod tests {
         assert!(epochs.contains("emergency"));
         assert!(epochs.contains("+2/-1"));
         assert!(epochs.contains("$1.300"));
-        // Solver provenance and certified gap columns.
+        // Solver provenance, warm/cold provenance, and certified gap
+        // columns.
         assert!(epochs.contains("Solver"));
+        assert!(epochs.contains("Warm"));
+        assert!(epochs.contains("cold"));
         assert!(epochs.contains("Gap"));
         assert!(epochs.contains("%"));
     }

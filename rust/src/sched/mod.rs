@@ -23,11 +23,23 @@
 //!   kept as the independently-simple baseline; the two engines agree
 //!   within 1% on the paper scenarios (see `tests/engine_equivalence`).
 //!
+//! Either engine executes **sharded** (the `shard` submodule):
+//! instances are independent given the assignments, so
+//! [`Simulation::run`] partitions
+//! them across [`Parallelism::sim_threads`] scoped workers and merges
+//! the per-shard reports in instance-id order.  The merge is
+//! bit-identical to a single-threaded run for every thread count —
+//! each instance's event sequence is a pure function of its own
+//! streams — and the single-worker fallback runs the identical
+//! partition/merge code path, so `--sim-threads 1` is the equivalence
+//! reference, not a separate implementation.
+//!
 //! Real inference (PJRT) is exercised by the coordinator's live mode
 //! instead; here the latencies come from the profiles, which the live
 //! test runs calibrate.
 
 pub mod event;
+mod shard;
 pub mod sim;
 
-pub use sim::{SimConfig, SimEngine, SimReport, Simulation};
+pub use sim::{Parallelism, SimConfig, SimEngine, SimReport, Simulation};

@@ -1,0 +1,228 @@
+//! Sharded simulation execution.
+//!
+//! Instances are *independent* given the stream assignments: every
+//! stream queues on exactly one instance, service rates are re-solved
+//! per instance, and per-instance queues never interact.  A simulation
+//! over N instances therefore splits into contiguous instance
+//! partitions that run concurrently — one sub-[`Simulation`] per shard
+//! on a `std::thread::scope` worker — and the per-shard [`SimReport`]s
+//! merge back in instance-id order.
+//!
+//! **Determinism guarantee.**  The merged report is bit-identical to
+//! the single-threaded run for any `sim_threads` value: each
+//! instance's event sequence (arrival times, water-filled rates,
+//! completion wake-ups, meter integration spans) is a pure function of
+//! its own streams, so which shard hosts it — and in which order the
+//! shards run — cannot change a single float.  The merge scatters
+//! per-stream results back by global stream index and re-bases device
+//! keys by the shard's first instance, so ordering is preserved
+//! exactly.  The single-worker fallback runs the identical
+//! partition/merge code path with one shard covering every instance.
+
+use super::sim::{Device, SimConfig, SimReport, Simulation};
+use crate::metrics::{StreamPerf, UtilizationMeter};
+use std::collections::BTreeMap;
+
+/// One shard: instances `base..end` of the parent simulation, remapped
+/// to local 0-based indices.
+struct Shard {
+    sim: Simulation,
+    /// First parent instance index covered by this shard.
+    base: usize,
+    /// Parent stream index of each local stream.
+    stream_map: Vec<usize>,
+}
+
+/// Number of instances in `sim` (max instance index + 1).
+fn instance_count(sim: &Simulation) -> usize {
+    sim.device_index
+        .keys()
+        .map(|&(inst, _)| inst + 1)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Extract instances `base..end` into a self-contained sub-simulation.
+fn extract(sim: &Simulation, base: usize, end: usize) -> Shard {
+    let mut sub = Simulation {
+        devices: Vec::new(),
+        device_index: BTreeMap::new(),
+        device_names: Vec::new(),
+        streams: Vec::new(),
+    };
+    for (&(inst, slot), &dev) in &sim.device_index {
+        if !(base..end).contains(&inst) {
+            continue;
+        }
+        let idx = sub.devices.len();
+        sub.devices.push(Device {
+            capacity: sim.devices[dev].capacity,
+            meter: UtilizationMeter::new(),
+        });
+        sub.device_index.insert((inst - base, slot), idx);
+        sub.device_names.push((inst - base, sim.device_names[dev].1.clone()));
+    }
+    let mut stream_map = Vec::new();
+    for (s, exec) in sim.streams.iter().enumerate() {
+        if !(base..end).contains(&exec.instance) {
+            continue;
+        }
+        let mut local = exec.clone();
+        local.instance -= base;
+        sub.streams.push(local);
+        stream_map.push(s);
+    }
+    Shard { sim: sub, base, stream_map }
+}
+
+/// Partition, run every shard (concurrently when more than one), and
+/// merge — the body of [`Simulation::run`].
+pub(super) fn run_sharded(sim: &mut Simulation, config: SimConfig) -> SimReport {
+    let n_instances = instance_count(sim);
+    let workers = config.parallelism.effective_sim_threads().max(1);
+    let shard_count = workers.min(n_instances).max(1);
+
+    // Contiguous instance ranges with sizes differing by at most one.
+    let mut shards = Vec::with_capacity(shard_count);
+    let chunk = n_instances / shard_count;
+    let extra = n_instances % shard_count;
+    let mut base = 0usize;
+    for i in 0..shard_count {
+        let end = base + chunk + usize::from(i < extra);
+        shards.push(extract(sim, base, end));
+        base = end;
+    }
+
+    // The calling thread runs the last shard itself instead of idling
+    // in join, so K shards use exactly K threads.
+    let reports: Vec<SimReport> = if shards.len() == 1 {
+        shards.iter_mut().map(|sh| sh.sim.run_engine(config)).collect()
+    } else {
+        let (last, rest) = shards.split_last_mut().expect("at least one shard");
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = rest
+                .iter_mut()
+                .map(|sh| scope.spawn(move || sh.sim.run_engine(config)))
+                .collect();
+            let last_report = last.sim.run_engine(config);
+            let mut reports: Vec<SimReport> = handles
+                .into_iter()
+                .map(|h| h.join().expect("simulation shard panicked"))
+                .collect();
+            reports.push(last_report);
+            reports
+        })
+    };
+
+    merge(sim, config, &shards, reports)
+}
+
+/// Merge per-shard reports back into the parent's stream/device
+/// numbering.
+fn merge(
+    sim: &Simulation,
+    config: SimConfig,
+    shards: &[Shard],
+    reports: Vec<SimReport>,
+) -> SimReport {
+    let mut streams: Vec<Option<StreamPerf>> = (0..sim.streams.len()).map(|_| None).collect();
+    let mut device_utilization = BTreeMap::new();
+    let mut frames_completed = 0u64;
+    let mut frames_dropped = 0u64;
+    for (shard, report) in shards.iter().zip(reports) {
+        frames_completed += report.frames_completed;
+        frames_dropped += report.frames_dropped;
+        for (local, perf) in report.streams.into_iter().enumerate() {
+            streams[shard.stream_map[local]] = Some(perf);
+        }
+        for ((inst, name), util) in report.device_utilization {
+            device_utilization.insert((inst + shard.base, name), util);
+        }
+    }
+    SimReport {
+        streams: streams
+            .into_iter()
+            .map(|p| p.expect("every stream is simulated in exactly one shard"))
+            .collect(),
+        device_utilization,
+        frames_completed,
+        frames_dropped,
+        duration_s: config.duration_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::manager::{ResourceManager, Strategy};
+    use crate::profiler::calibration::Calibration;
+    use crate::sched::Parallelism;
+    use crate::streams::StreamSpec;
+    use crate::types::{Program, VGA};
+
+    fn multi_instance_sim() -> Simulation {
+        // Scenario-1-like demand under ST1 spreads four streams over
+        // four c4.2xlarge instances — enough shards to exercise real
+        // partitioning.
+        let cal = Calibration::paper();
+        let catalog = Catalog::paper_experiments();
+        let mgr = ResourceManager::new(catalog.clone(), &cal);
+        let mut streams = StreamSpec::replicate(0, 1, VGA, Program::Vgg16, 0.25);
+        streams.extend(StreamSpec::replicate(10, 3, VGA, Program::Zf, 0.55));
+        let plan = mgr.allocate(&streams, Strategy::St1).unwrap();
+        assert!(plan.instances.len() >= 2, "need a multi-instance plan");
+        let profiles: Vec<_> = streams
+            .iter()
+            .map(|s| cal.profile(s.program, s.camera.frame_size))
+            .collect();
+        Simulation::from_plan(&plan, &streams, catalog.layout(), &profiles, &catalog)
+    }
+
+    fn run_with_threads(threads: usize) -> SimReport {
+        let config = SimConfig::for_duration(60.0)
+            .with_parallelism(Parallelism { sim_threads: threads, pipeline: true });
+        multi_instance_sim().run(config)
+    }
+
+    #[test]
+    fn shard_counts_clamp_to_instances() {
+        let sim = multi_instance_sim();
+        let n = instance_count(&sim);
+        assert!(n >= 2);
+        // Requesting more workers than instances must still cover every
+        // instance exactly once.
+        let report = run_with_threads(64);
+        assert_eq!(report.streams.len(), sim.streams.len());
+        assert_eq!(report.device_utilization.len(), sim.devices.len());
+    }
+
+    #[test]
+    fn sharded_runs_are_bit_identical_across_thread_counts() {
+        let reference = run_with_threads(1);
+        for threads in [2usize, 3, 8] {
+            let report = run_with_threads(threads);
+            assert_eq!(report.frames_completed, reference.frames_completed);
+            assert_eq!(report.frames_dropped, reference.frames_dropped);
+            assert_eq!(report.streams, reference.streams, "{threads} threads");
+            assert_eq!(
+                report.device_utilization, reference.device_utilization,
+                "{threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_simulation_survives_sharding() {
+        let mut sim = Simulation {
+            devices: Vec::new(),
+            device_index: BTreeMap::new(),
+            device_names: Vec::new(),
+            streams: Vec::new(),
+        };
+        let report = sim.run(SimConfig::for_duration(10.0));
+        assert_eq!(report.frames_completed, 0);
+        assert_eq!(report.frames_dropped, 0);
+        assert!(report.streams.is_empty());
+    }
+}

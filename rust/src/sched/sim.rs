@@ -8,6 +8,15 @@
 //! allocation every tick — O(duration/dt x streams) regardless of how
 //! much actually happens — and is kept as the independently-simple
 //! cross-validation baseline for the event engine.
+//!
+//! Both engines run *sharded* (see the `shard` submodule): instances
+//! are independent given the assignments — per-instance queues never
+//! interact — so [`Simulation::run`] partitions them across
+//! [`Parallelism::sim_threads`] workers and merges the per-shard
+//! reports in instance-id order.  The merged result is bit-identical
+//! to the single-threaded run for any thread count (the single-thread
+//! fallback exercises the same partition/merge code path with one
+//! shard).
 
 use crate::manager::AllocationPlan;
 use crate::metrics::{overall_performance, StreamPerf, UtilizationMeter};
@@ -47,6 +56,52 @@ impl std::fmt::Display for SimEngine {
     }
 }
 
+/// Execution-parallelism knobs, threaded from the CLI
+/// (`--sim-threads N --pipeline on|off`) through
+/// [`SimConfig`]/`AutoscaleConfig` to the engines and the epoch
+/// pipeline.  Parallelism does not change results: sharded simulation
+/// is bit-identical across thread counts unconditionally, and the
+/// epoch pipeline yields identical outcomes whenever the solver stack
+/// is deterministic (its documented precondition: solves finish within
+/// the node budget before the `--solve-budget-ms` deadline fires —
+/// true by a wide margin at every scale this repo runs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Parallelism {
+    /// Worker threads for sharded simulation; `0` (the default) means
+    /// "use available parallelism".  The shard count never exceeds the
+    /// instance count.
+    pub sim_threads: usize,
+    /// Overlap epoch `i+1`'s solve with epoch `i`'s simulation in the
+    /// autoscale runner (`coordinator::pipeline`).
+    pub pipeline: bool,
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism { sim_threads: 0, pipeline: true }
+    }
+}
+
+impl Parallelism {
+    /// Fully sequential execution: one simulation worker, no epoch
+    /// pipelining — the reference the equivalence tests compare against.
+    pub fn sequential() -> Parallelism {
+        Parallelism { sim_threads: 1, pipeline: false }
+    }
+
+    /// Resolved simulation worker count (`sim_threads`, or the
+    /// machine's available parallelism when 0).
+    pub fn effective_sim_threads(&self) -> usize {
+        if self.sim_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.sim_threads
+        }
+    }
+}
+
 /// Simulation parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
@@ -61,6 +116,8 @@ pub struct SimConfig {
     pub queue_cap: usize,
     /// Engine selection (default: event-driven).
     pub engine: SimEngine,
+    /// Sharded-execution knobs (default: available parallelism).
+    pub parallelism: Parallelism,
 }
 
 impl Default for SimConfig {
@@ -70,6 +127,7 @@ impl Default for SimConfig {
             dt: 0.01,
             queue_cap: 32,
             engine: SimEngine::default(),
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -83,6 +141,11 @@ impl SimConfig {
     /// Same config under a different engine.
     pub fn with_engine(self, engine: SimEngine) -> SimConfig {
         SimConfig { engine, ..self }
+    }
+
+    /// Same config under different parallelism knobs.
+    pub fn with_parallelism(self, parallelism: Parallelism) -> SimConfig {
+        SimConfig { parallelism, ..self }
     }
 }
 
@@ -236,8 +299,19 @@ impl Simulation {
         self.streams.push(exec);
     }
 
-    /// Run the simulation with the engine selected by `config.engine`.
+    /// Run the simulation with the engine selected by `config.engine`,
+    /// sharded across `config.parallelism.sim_threads` workers (see the
+    /// `shard` submodule).  Results are bit-identical for every thread
+    /// count: instances are independent, shards are merged in
+    /// instance-id order, and a single worker exercises the identical
+    /// partition/merge code path.
     pub fn run(&mut self, config: SimConfig) -> SimReport {
+        super::shard::run_sharded(self, config)
+    }
+
+    /// Run directly on the selected engine, unsharded — the per-shard
+    /// entry point.
+    pub(crate) fn run_engine(&mut self, config: SimConfig) -> SimReport {
         match config.engine {
             SimEngine::Event => super::event::run_event(self, config),
             SimEngine::FixedStep => self.run_fixed(config),

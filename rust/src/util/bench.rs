@@ -42,6 +42,21 @@ impl Measurement {
     }
 }
 
+/// Peak resident-set size of this process in bytes (Linux `VmHWM`
+/// high-water mark; `None` where `/proc` is unavailable).  The memory
+/// gates in `benches/solver_scaling.rs` use it to fail a bench run
+/// whose solve exceeds its RSS budget.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -171,6 +186,15 @@ mod tests {
         };
         assert_eq!(m.p50(), 2.0);
         assert!(m.p95().is_nan());
+    }
+
+    #[test]
+    fn peak_rss_reads_proc_when_available() {
+        // On Linux the high-water mark exists and is nonzero; elsewhere
+        // the probe degrades to None instead of failing.
+        if let Some(rss) = peak_rss_bytes() {
+            assert!(rss > 0);
+        }
     }
 
     #[test]

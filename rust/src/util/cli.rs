@@ -85,6 +85,19 @@ impl Args {
         }
     }
 
+    /// Parse `--key on|off` (also accepts true/false, yes/no, 1/0) —
+    /// the `--pipeline on|off` grammar.
+    pub fn bool_opt(&self, key: &str) -> Result<Option<bool>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "on" | "true" | "yes" | "1" => Ok(Some(true)),
+                "off" | "false" | "no" | "0" => Ok(Some(false)),
+                other => Err(format!("--{key} expects on or off, got {other:?}")),
+            },
+        }
+    }
+
     /// Parse `--key` as one value of `T`, expanding a missing flag or
     /// the literal `all` to the full `all` slice — the shared
     /// "`--strategy st3 | all`" / "`--policy reactive | all`" grammar
@@ -170,6 +183,16 @@ mod tests {
         assert!(a.f64_opt("fps").is_err());
         assert!(a.u32_opt("fps").is_err());
         assert_eq!(a.f64_opt("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn bool_opt_accepts_on_off_spellings() {
+        assert_eq!(parse("x --pipeline on").bool_opt("pipeline").unwrap(), Some(true));
+        assert_eq!(parse("x --pipeline off").bool_opt("pipeline").unwrap(), Some(false));
+        assert_eq!(parse("x --pipeline TRUE").bool_opt("pipeline").unwrap(), Some(true));
+        assert_eq!(parse("x --pipeline 0").bool_opt("pipeline").unwrap(), Some(false));
+        assert_eq!(parse("x").bool_opt("pipeline").unwrap(), None);
+        assert!(parse("x --pipeline maybe").bool_opt("pipeline").is_err());
     }
 
     #[test]

@@ -86,7 +86,7 @@ fn policy_ordering_holds_on_both_engines() {
         let config = AutoscaleConfig {
             strategy: Strategy::St3,
             sim: SimConfig::default().with_engine(engine),
-            horizon_hours: None,
+            ..AutoscaleConfig::default()
         };
         let runner = AutoscaleRunner::new(&c).with_config(config);
         let reactive = runner.run(&trace, ScalePolicy::Reactive).unwrap();
@@ -135,8 +135,7 @@ fn st1_fails_the_burst_epoch_with_context() {
     let c = Coordinator::new();
     let config = AutoscaleConfig {
         strategy: Strategy::St1,
-        sim: SimConfig::default(),
-        horizon_hours: None,
+        ..AutoscaleConfig::default()
     };
     let runner = AutoscaleRunner::new(&c).with_config(config);
     let trace = WorkloadTrace::emergency_burst(7);

@@ -1,0 +1,152 @@
+//! Determinism of parallel execution: sharded simulation must be
+//! bit-identical across thread counts, and the pipelined epoch
+//! executor must yield exactly the sequential runner's policy tables.
+//!
+//! These are the acceptance gates for the parallel-execution claims:
+//! `--sim-threads N` and `--pipeline on|off` are performance knobs,
+//! never result knobs.
+
+use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::manager::Strategy;
+use camcloud::sched::{Parallelism, SimConfig, SimEngine, SimReport};
+use camcloud::workload::trace::WorkloadTrace;
+use camcloud::workload::{FleetSpec, Workload};
+
+fn assert_reports_identical(label: &str, reference: &SimReport, report: &SimReport) {
+    assert_eq!(
+        report.frames_completed, reference.frames_completed,
+        "{label}: frames completed diverge"
+    );
+    assert_eq!(
+        report.frames_dropped, reference.frames_dropped,
+        "{label}: frames dropped diverge"
+    );
+    assert_eq!(report.streams, reference.streams, "{label}: per-stream results diverge");
+    assert_eq!(
+        report.device_utilization, reference.device_utilization,
+        "{label}: device utilization diverges"
+    );
+}
+
+/// Reports for `sim_threads` in {1, 2, 8} on one workload (profiles
+/// and plan resolved once; only the simulation re-runs).
+fn reports_across_threads(workload: &Workload, engine: SimEngine, duration: f64) -> Vec<SimReport> {
+    let c = Coordinator::new();
+    let profiled = c.profile_workload(workload.clone());
+    let plan = profiled.allocate(Strategy::St3).expect("workload allocates");
+    [1usize, 2, 8]
+        .into_iter()
+        .map(|threads| {
+            let config = SimConfig::for_duration(duration)
+                .with_engine(engine)
+                .with_parallelism(Parallelism { sim_threads: threads, pipeline: true });
+            profiled.simulation(&plan).run(config)
+        })
+        .collect()
+}
+
+/// Sharded simulation is bit-identical across `sim_threads` on every
+/// paper scenario, on both engines.
+#[test]
+fn sharded_simulation_is_deterministic_on_paper_scenarios() {
+    for n in 1..=3u32 {
+        let workload = Workload::paper(n).unwrap();
+        for engine in [SimEngine::Event, SimEngine::FixedStep] {
+            let reports = reports_across_threads(&workload, engine, 60.0);
+            for (i, report) in reports.iter().enumerate().skip(1) {
+                assert_reports_identical(
+                    &format!("scenario {n} / {engine} / variant {i}"),
+                    &reports[0],
+                    report,
+                );
+            }
+        }
+    }
+}
+
+/// Same claim at fleet scale: a seeded 1,000-stream fleet spread over
+/// many instances (the sharding sweet spot).
+#[test]
+fn sharded_simulation_is_deterministic_on_a_1k_fleet() {
+    let fleet = FleetSpec::new(1_000).seed(42).build();
+    let reports = reports_across_threads(&fleet, SimEngine::Event, 60.0);
+    assert_eq!(reports[0].streams.len(), 1_000);
+    for (i, report) in reports.iter().enumerate().skip(1) {
+        assert_reports_identical(&format!("1k fleet / variant {i}"), &reports[0], report);
+    }
+}
+
+fn autoscale_outcome(
+    trace: &WorkloadTrace,
+    policy: ScalePolicy,
+    parallelism: Parallelism,
+) -> camcloud::coordinator::AutoscaleOutcome {
+    let c = Coordinator::new();
+    let config = AutoscaleConfig {
+        sim: SimConfig::default().with_parallelism(parallelism),
+        ..AutoscaleConfig::default()
+    };
+    AutoscaleRunner::new(&c)
+        .with_config(config)
+        .run(trace, policy)
+        .expect("policy runs")
+}
+
+fn assert_outcomes_identical(
+    label: &str,
+    a: &camcloud::coordinator::AutoscaleOutcome,
+    b: &camcloud::coordinator::AutoscaleOutcome,
+) {
+    assert_eq!(a.total_billed, b.total_billed, "{label}: billing diverges");
+    assert_eq!(a.peak_fleet, b.peak_fleet, "{label}: peak fleet diverges");
+    assert_eq!(a.reallocations, b.reallocations, "{label}: reallocations diverge");
+    assert_eq!(a.mean_performance, b.mean_performance, "{label}: performance diverges");
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{label}");
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        let e = format!("{label} epoch {}", x.label);
+        assert_eq!(x.hourly_rate, y.hourly_rate, "{e}: cost diverges");
+        assert_eq!(x.fleet_size, y.fleet_size, "{e}: fleet diverges");
+        assert_eq!(x.reallocated, y.reallocated, "{e}: serving decision diverges");
+        assert_eq!(x.kept, y.kept, "{e}");
+        assert_eq!(x.provisioned, y.provisioned, "{e}");
+        assert_eq!(x.terminated, y.terminated, "{e}");
+        assert_eq!(x.unserved, y.unserved, "{e}");
+        assert_eq!(x.solver, y.solver, "{e}: solver provenance diverges");
+        assert_eq!(x.mode, y.mode, "{e}: warm/cold provenance diverges");
+        assert_eq!(x.gap, y.gap, "{e}: certified gap diverges");
+        assert_eq!(x.performance, y.performance, "{e}: simulated performance diverges");
+        assert_eq!(x.frames_completed, y.frames_completed, "{e}");
+        assert_eq!(x.frames_dropped, y.frames_dropped, "{e}");
+    }
+}
+
+/// `--pipeline on|off` produce identical per-epoch costs and serving
+/// decisions for every policy on the emergency builtin.
+#[test]
+fn pipeline_on_off_agree_for_every_policy_on_emergency() {
+    let trace = WorkloadTrace::builtin("emergency", 7).unwrap();
+    for policy in ScalePolicy::ALL {
+        let sequential = autoscale_outcome(&trace, policy, Parallelism::sequential());
+        let pipelined = autoscale_outcome(&trace, policy, Parallelism::default());
+        assert_outcomes_identical(&format!("emergency/{policy}"), &sequential, &pipelined);
+    }
+}
+
+/// The same equivalence holds on the remaining builtin traces for the
+/// reactive policy (the one the pipeline actually overlaps solves
+/// for), including warm/cold provenance and certified gaps.  The
+/// builtin generators run at reduced fleet sizes so the 24-epoch
+/// diurnal sweep stays fast in debug builds; the epoch structure is
+/// identical to the CLI defaults.
+#[test]
+fn pipeline_on_off_agree_on_diurnal_and_churn() {
+    let traces = [
+        WorkloadTrace::diurnal(12, 7),
+        WorkloadTrace::camera_churn(12, 6, 7),
+    ];
+    for trace in &traces {
+        let sequential = autoscale_outcome(trace, ScalePolicy::Reactive, Parallelism::sequential());
+        let pipelined = autoscale_outcome(trace, ScalePolicy::Reactive, Parallelism::default());
+        assert_outcomes_identical(&trace.name, &sequential, &pipelined);
+    }
+}
