@@ -9,10 +9,13 @@
 //! * [`packing`] — multiple-choice vector bin packing behind the
 //!   [`packing::Solver`] trait: exact branch-and-bound (deadline- and
 //!   node-bounded, seedable), first/best-fit heuristics over pluggable
-//!   item orderings, a racing [`packing::PortfolioSolver`] on scoped
-//!   threads with sharded arms at scale, and an arc-flow
-//!   (Brandão–Pedroso) machinery whose L2 bound certifies every
-//!   solve's optimality gap.
+//!   item orderings on an indexed placement engine (segment tree over
+//!   open-bin residuals), a class-aggregation layer
+//!   ([`packing::aggregate`]) that packs million-stream fleets by
+//!   multiplicity class, a racing [`packing::PortfolioSolver`] on
+//!   scoped threads with aggregated or sharded arms at scale, and an
+//!   arc-flow (Brandão–Pedroso) machinery whose L2 bound certifies
+//!   every solve's optimality gap.
 //! * [`cloud`] — simulated cloud: the Table-1 EC2 catalog, instance
 //!   lifecycle + hourly billing, and calibrated CPU/GPU device models.
 //! * [`streams`] — simulated network cameras producing frames at desired

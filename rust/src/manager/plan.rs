@@ -150,7 +150,18 @@ impl AllocationPlan {
         counts
     }
 
-    /// Human-readable summary for CLI output.
+    /// Instances listed in full before the summary elides the rest —
+    /// fleet-scale plans (the solver stack packs million-stream fleets)
+    /// must not render millions of report lines.
+    const SUMMARY_MAX_INSTANCES: usize = 64;
+    /// Streams listed per instance before eliding.
+    const SUMMARY_MAX_STREAMS: usize = 16;
+
+    /// Human-readable summary for CLI output.  Paper-scale plans print
+    /// in full; fleet-scale plans elide past
+    /// [`Self::SUMMARY_MAX_INSTANCES`] instances /
+    /// [`Self::SUMMARY_MAX_STREAMS`] streams each with `(+N more)`
+    /// markers instead of dumping the whole fleet.
     pub fn summary(&self) -> String {
         let gap = match self.gap() {
             Some(g) => format!("{:.1}%", g * 100.0),
@@ -165,6 +176,13 @@ impl AllocationPlan {
             self.hourly_cost
         );
         for (i, inst) in self.instances.iter().enumerate() {
+            if i == Self::SUMMARY_MAX_INSTANCES {
+                out.push_str(&format!(
+                    "  ... (+{} more instances)\n",
+                    self.instances.len() - i
+                ));
+                break;
+            }
             let util = inst.utilization();
             out.push_str(&format!(
                 "  [{i}] {} ({}): {} stream(s), max util {:.1}%\n",
@@ -173,7 +191,14 @@ impl AllocationPlan {
                 inst.streams.len(),
                 util.0.iter().fold(0.0f64, |a, &b| a.max(b)) * 100.0
             ));
-            for s in &inst.streams {
+            for (j, s) in inst.streams.iter().enumerate() {
+                if j == Self::SUMMARY_MAX_STREAMS {
+                    out.push_str(&format!(
+                        "      ... (+{} more streams)\n",
+                        inst.streams.len() - j
+                    ));
+                    break;
+                }
                 out.push_str(&format!("      {} -> {}\n", s.stream_id, s.choice));
             }
         }
@@ -230,6 +255,41 @@ mod tests {
         assert!(s.contains("c4.2xlarge"));
         assert!(s.contains("CPU"));
         assert!(s.contains("ST3"));
+    }
+
+    #[test]
+    fn summary_elides_fleet_scale_plans() {
+        // 70 instances x 20 streams: the summary must stay bounded and
+        // say what it elided, not render 1400 stream lines.
+        let instances: Vec<PlannedInstance> = (0..70)
+            .map(|i| PlannedInstance {
+                type_name: "c4.2xlarge".into(),
+                hourly_cost: Dollars::from_f64(0.419),
+                capacity: ResourceVec::from_slice(&[7.2, 13.5]),
+                streams: (0..20)
+                    .map(|j| StreamAssignment {
+                        stream_index: i * 20 + j,
+                        stream_id: format!("cam-{i}-{j}"),
+                        choice: ExecChoice::Cpu,
+                        requirement: ResourceVec::from_slice(&[0.1, 0.1]),
+                    })
+                    .collect(),
+            })
+            .collect();
+        let hourly_cost = instances.iter().map(|i| i.hourly_cost).sum();
+        let plan = AllocationPlan {
+            strategy: Strategy::St1,
+            solver: SolverKind::Portfolio,
+            instances,
+            hourly_cost,
+            lower_bound: None,
+        };
+        let s = plan.summary();
+        assert!(s.contains("(+6 more instances)"), "{s}");
+        assert!(s.contains("(+4 more streams)"), "{s}");
+        assert!(s.lines().count() < 64 * 18 + 10, "summary must be bounded");
+        // Small plans still print in full.
+        assert!(!plan_scenario2().summary().contains("more"));
     }
 
     #[test]

@@ -222,7 +222,10 @@ fn approx_eq(a: &ResourceVec, b: &ResourceVec) -> bool {
 ///    rejoining the delta;
 /// 3. **Delta** — remaining items (new streams, changed rates,
 ///    consolidated strays) are best-fit into the seeded residuals,
-///    opening cheapest-feasible new bins only when nothing fits.
+///    opening cheapest-feasible new bins only when nothing fits.  The
+///    delta placement runs on the indexed engine (`packing::index`
+///    via `pack_into`), so a small delta against a large kept fleet
+///    costs near-O(delta × log bins), not a scan of every kept bin.
 ///
 /// Returns a certified [`SolveOutcome`] (kind [`SolverKind::WarmStart`])
 /// or `None` when the previous plan cannot seed this problem at all

@@ -1,0 +1,503 @@
+//! Item-class aggregation: pack multiplicity *classes*, not items.
+//!
+//! The paper's fleets are highly degenerate — thousands of camera
+//! streams collapse into a handful of distinct (program, frame-rate,
+//! device-choice) requirement classes.  Packing every stream as an
+//! individual item costs O(items × bins × choices) scans even with the
+//! residual index; exploiting multiplicity is the standard large-scale
+//! move (cf. the arc-flow formulation in [`super::arcflow`], which also
+//! reasons over patterns rather than items).
+//!
+//! The layer has three steps:
+//!
+//! 1. **Group** ([`group_classes`]): items with bit-identical choice
+//!    lists (same vectors, same order — choice order is semantic: index
+//!    0 is the CPU path) merge into an [`ItemClass`] carrying its
+//!    member item indices.  Canonicalization is exact-bit equality of
+//!    the requirement vectors, which is what identical profile lookups
+//!    produce for identical streams.
+//! 2. **Pack classes with counts** ([`solve_greedy_aggregated`]): the
+//!    greedy heuristics run once per class instead of once per item.  A
+//!    whole *run* of copies is placed into a bin in one step — the run
+//!    length comes from `floor(residual / req)` arithmetic
+//!    ([`copy_bound`]) with the boundary verified against
+//!    [`ResourceVec::fits`] so the count agrees exactly with per-item
+//!    placement — and the open-bin lookup per run goes through the
+//!    [`ResidualIndex`].  The result matches the per-item heuristic's
+//!    packing (same bins, same choices) whenever distinct classes have
+//!    distinct ordering measures; exact measure ties may interleave
+//!    classes differently per-item (cost can then differ either way).
+//! 3. **Expand** ([`expand`]): class-level placements map back to
+//!    per-item assignments (members dealt out in bin order), so
+//!    `Solution`, `AllocationPlan`, certificates, and the warm-start
+//!    repacker are unchanged downstream.
+//!
+//! Aggregation is *bypassed* when it cannot pay: [`aggregation_pays`]
+//! requires at least two items per class on average — an all-distinct
+//! fleet goes through the per-item (sharded) path untouched.
+
+use super::heuristics::{self, Greedy, ItemOrder};
+use super::index::ResidualIndex;
+use super::problem::{MvbpProblem, PackedBin, Solution};
+use crate::types::ResourceVec;
+
+/// One multiplicity class: items whose choice lists are bit-identical.
+#[derive(Clone, Debug)]
+pub struct ItemClass {
+    /// Lowest member item index — carries the class's measures.
+    pub rep: usize,
+    /// All member item indices, ascending.
+    pub members: Vec<u32>,
+}
+
+impl ItemClass {
+    pub fn count(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Group items into multiplicity classes by exact-bit equality of their
+/// choice lists.  Classes come back in first-occurrence order, so the
+/// grouping is deterministic for a given problem (the hash map is only
+/// a membership index — iteration order never matters).
+pub fn group_classes(problem: &MvbpProblem) -> Vec<ItemClass> {
+    group_classes_capped(problem, usize::MAX).expect("uncapped grouping cannot abort")
+}
+
+/// Like [`group_classes`], but abort with `None` as soon as the class
+/// count exceeds `max_classes`.  The class count is monotone over the
+/// scan, so the portfolio's routing gate uses this to stop grouping an
+/// all-distinct million-item fleet after ~`max_classes` items instead
+/// of building (and discarding) a million-entry map.
+pub fn group_classes_capped(
+    problem: &MvbpProblem,
+    max_classes: usize,
+) -> Option<Vec<ItemClass>> {
+    use std::collections::HashMap;
+    let mut by_key: HashMap<Vec<u64>, usize> = HashMap::new();
+    let mut classes: Vec<ItemClass> = Vec::new();
+    for (i, item) in problem.items.iter().enumerate() {
+        let mut key = Vec::with_capacity(1 + item.choices.len() * problem.dims);
+        key.push(item.choices.len() as u64);
+        for choice in &item.choices {
+            for v in &choice.0 {
+                key.push(v.to_bits());
+            }
+        }
+        match by_key.get(&key) {
+            Some(&ci) => classes[ci].members.push(i as u32),
+            None => {
+                if classes.len() == max_classes {
+                    return None;
+                }
+                by_key.insert(key, classes.len());
+                classes.push(ItemClass { rep: i, members: vec![i as u32] });
+            }
+        }
+    }
+    Some(classes)
+}
+
+/// Aggregation pays only when classes actually carry multiplicity: at
+/// least two items per class on average.  Below that the grouping
+/// overhead buys nothing and callers should take the per-item path.
+pub fn aggregation_pays(n_classes: usize, n_items: usize) -> bool {
+    n_items > 0 && n_classes * 2 <= n_items
+}
+
+/// `floor((residual + eps) / req)` per dimension — an estimate of how
+/// many copies of `req` fit into `residual` in one step, under the
+/// shared [`ResourceVec::fits`] tolerance.  Dimensions with zero
+/// requirement impose no bound.
+fn copy_bound(residual: &ResourceVec, req: &ResourceVec) -> u64 {
+    let mut bound = u64::MAX;
+    for (r, q) in residual.0.iter().zip(&req.0) {
+        if *q > 0.0 {
+            let fit = (r + crate::types::FIT_EPS) / q;
+            let fit = if fit >= 0.0 { fit.floor() as u64 } else { 0 };
+            bound = bound.min(fit);
+        }
+    }
+    bound
+}
+
+/// One open bin holding class-level placements.
+struct AggBin {
+    bin_type: usize,
+    residual: ResourceVec,
+    /// `(class, choice, count)` runs in placement order.
+    entries: Vec<(usize, usize, u32)>,
+}
+
+impl AggBin {
+    fn record(&mut self, class: usize, choice: usize, count: u64) {
+        if count == 0 {
+            return;
+        }
+        if let Some(last) = self.entries.last_mut() {
+            if last.0 == class && last.1 == choice {
+                last.2 += count as u32;
+                return;
+            }
+        }
+        self.entries.push((class, choice, count as u32));
+    }
+}
+
+/// Place up to `limit` copies of `req` into `residual`, bulk-subtracting
+/// the provably-safe `floor(residual/req) - 1` copies without per-copy
+/// checks and verifying the boundary copies with [`ResourceVec::fits`]
+/// — so the placed count agrees exactly with per-item placement.
+fn place_run(residual: &mut ResourceVec, req: &ResourceVec, limit: u64) -> u64 {
+    let bulk = copy_bound(residual, req).saturating_sub(1).min(limit);
+    for _ in 0..bulk {
+        residual.sub_assign(req);
+    }
+    let mut placed = bulk;
+    while placed < limit && req.fits(residual) {
+        residual.sub_assign(req);
+        placed += 1;
+    }
+    placed
+}
+
+/// Fill `bin` with copies of class `ci` under first-fit choice order:
+/// walk choices in index order (CPU first), placing the maximal run of
+/// each — exactly what consecutive per-item first-fit placements do,
+/// since a choice that stops fitting never fits again as the residual
+/// shrinks.
+fn fill_first_fit(
+    problem: &MvbpProblem,
+    bin: &mut AggBin,
+    ci: usize,
+    rep: usize,
+    remaining: &mut u64,
+) {
+    for (c, req) in problem.items[rep].choices.iter().enumerate() {
+        if *remaining == 0 {
+            return;
+        }
+        let placed = place_run(&mut bin.residual, req, *remaining);
+        bin.record(ci, c, placed);
+        *remaining -= placed;
+    }
+}
+
+/// Fill `bin` with copies of class `ci` under best-fit scoring: each
+/// copy takes the choice minimizing post-placement headroom *within
+/// this bin*.  Staying inside the bin is sound because placing a copy
+/// only lowers this bin's best slack below every untouched bin's (see
+/// the argument in `solve_classes`), but the winning choice can switch
+/// as the bin fills, so best-fit places copy-by-copy rather than in
+/// floor-arithmetic runs.
+fn fill_best_fit(
+    problem: &MvbpProblem,
+    bin: &mut AggBin,
+    ci: usize,
+    rep: usize,
+    remaining: &mut u64,
+) {
+    let cap = &problem.bin_types[bin.bin_type].capacity;
+    while *remaining > 0 {
+        let mut best: Option<(usize, f64)> = None;
+        for (c, req) in problem.items[rep].choices.iter().enumerate() {
+            if let Some(slack) = heuristics::slack_after(&bin.residual, req, cap) {
+                if best.map_or(true, |(_, bs)| slack < bs) {
+                    best = Some((c, slack));
+                }
+            }
+        }
+        let Some((c, _)) = best else { return };
+        bin.residual.sub_assign(&problem.items[rep].choices[c]);
+        bin.record(ci, c, 1);
+        *remaining -= 1;
+    }
+}
+
+/// Pack `classes` of `problem` under `greedy`/`order` and expand back
+/// to a per-item [`Solution`].  Returns `None` when some class fits no
+/// bin type (the instance is unpackable).
+///
+/// Per-item equivalence: within one class, consecutive per-item
+/// placements always target the same bin until it stops fitting —
+/// already-rejected bins never re-fit (residuals only shrink), and for
+/// best-fit, placing a copy strictly lowers the chosen bin's slack
+/// below every untouched bin's, so the argmin stays inside the bin.
+/// Aggregation turns that run structure into explicit batches.
+pub(crate) fn solve_classes(
+    problem: &MvbpProblem,
+    classes: &[ItemClass],
+    greedy: Greedy,
+    order: ItemOrder,
+) -> Option<Solution> {
+    let mut class_order: Vec<usize> = (0..classes.len()).collect();
+    order.sort_keys(problem, &mut class_order, |&ci| classes[ci].rep);
+
+    let mut open: Vec<AggBin> = Vec::new();
+    let mut index = ResidualIndex::new(problem.dims, &[]);
+    let mut candidates: Vec<usize> = Vec::new();
+    for &ci in &class_order {
+        let rep = classes[ci].rep;
+        let choices = &problem.items[rep].choices;
+        let mut remaining = classes[ci].count() as u64;
+        while remaining > 0 {
+            // Pick the open bin the per-item heuristic would pick.
+            let target = match greedy {
+                Greedy::FirstFit => index.first_fit_any(choices).map(|(b, _)| b),
+                Greedy::BestFit => {
+                    index.may_fit(choices, &mut candidates);
+                    let mut best: Option<(usize, f64)> = None;
+                    for &b in &candidates {
+                        let cap = &problem.bin_types[open[b].bin_type].capacity;
+                        for req in choices.iter() {
+                            if let Some(slack) =
+                                heuristics::slack_after(&open[b].residual, req, cap)
+                            {
+                                if best.map_or(true, |(_, bs)| slack < bs) {
+                                    best = Some((b, slack));
+                                }
+                            }
+                        }
+                    }
+                    best.map(|(b, _)| b)
+                }
+            };
+            let b = match target {
+                Some(b) => b,
+                None => {
+                    // Open the cheapest feasible new bin (same selector
+                    // as the per-item engine) seeded with one copy.
+                    let (t, c) = heuristics::best_new_bin(problem, rep)?;
+                    let mut residual = problem.bin_types[t].capacity.clone();
+                    residual.sub_assign(&choices[c]);
+                    let mut bin = AggBin { bin_type: t, residual, entries: Vec::new() };
+                    bin.record(ci, c, 1);
+                    remaining -= 1;
+                    open.push(bin);
+                    index.push(&open.last().expect("bin just opened").residual);
+                    open.len() - 1
+                }
+            };
+            let before = remaining;
+            match greedy {
+                Greedy::FirstFit => {
+                    fill_first_fit(problem, &mut open[b], ci, rep, &mut remaining)
+                }
+                Greedy::BestFit => {
+                    fill_best_fit(problem, &mut open[b], ci, rep, &mut remaining)
+                }
+            }
+            index.update(b, &open[b].residual);
+            // A fresh bin that admits nothing more for this class still
+            // made progress via its seed copy; an *existing* bin the
+            // index reported must admit at least one copy.
+            debug_assert!(
+                remaining < before || target.is_none() || remaining == 0,
+                "aggregated fill must make progress"
+            );
+            if remaining == before && target.is_some() {
+                // Defensive: should be unreachable (the index's fit test
+                // equals the placement's); avoid a livelock regardless.
+                return None;
+            }
+        }
+    }
+    Some(expand(classes, &open))
+}
+
+/// Expand class-level bins to per-item assignments: each class deals
+/// its members out in ascending order as bins consume them.
+fn expand(classes: &[ItemClass], open: &[AggBin]) -> Solution {
+    let mut cursor = vec![0usize; classes.len()];
+    let mut bins = Vec::with_capacity(open.len());
+    for ab in open {
+        let total: usize = ab.entries.iter().map(|&(_, _, k)| k as usize).sum();
+        let mut assignments = Vec::with_capacity(total);
+        for &(ci, choice, count) in &ab.entries {
+            let start = cursor[ci];
+            cursor[ci] += count as usize;
+            for &member in &classes[ci].members[start..start + count as usize] {
+                assignments.push((member as usize, choice));
+            }
+        }
+        bins.push(PackedBin { bin_type: ab.bin_type, assignments });
+    }
+    Solution { bins }
+}
+
+/// One aggregated greedy pass: group, pack classes, expand.  The
+/// aggregated counterpart of [`heuristics::solve_greedy`] — identical
+/// packing on instances whose distinct classes have distinct ordering
+/// measures (always true away from exact float ties).
+pub fn solve_greedy_aggregated(
+    problem: &MvbpProblem,
+    greedy: Greedy,
+    order: ItemOrder,
+) -> Option<Solution> {
+    problem.validate().ok()?;
+    let classes = group_classes(problem);
+    solve_classes(problem, &classes, greedy, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::problem::test_fixtures::small_problem;
+    use crate::packing::problem::{BinType, Item};
+    use crate::packing::solve_greedy;
+    use crate::types::Dollars;
+
+    /// A high-multiplicity instance: `counts[i]` copies of template `i`.
+    fn replicated(templates: &[Item], counts: &[usize], bin_types: Vec<BinType>) -> MvbpProblem {
+        let mut items = Vec::new();
+        for (t, count) in templates.iter().zip(counts) {
+            for i in 0..*count {
+                items.push(Item {
+                    id: format!("{}-{i}", t.id),
+                    choices: t.choices.clone(),
+                });
+            }
+        }
+        MvbpProblem { dims: bin_types[0].capacity.dims(), bin_types, items }
+    }
+
+    fn fixture() -> MvbpProblem {
+        let base = small_problem();
+        replicated(&base.items, &[7, 5, 9], base.bin_types)
+    }
+
+    #[test]
+    fn grouping_merges_identical_items_only() {
+        let p = fixture();
+        let classes = group_classes(&p);
+        assert_eq!(classes.len(), 3);
+        assert_eq!(
+            classes.iter().map(ItemClass::count).collect::<Vec<_>>(),
+            vec![7, 5, 9]
+        );
+        let total: usize = classes.iter().map(ItemClass::count).sum();
+        assert_eq!(total, p.items.len());
+        // Members ascend and reps are the first member.
+        for class in &classes {
+            assert!(class.members.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(class.rep, class.members[0] as usize);
+        }
+        // All-distinct items never pay for aggregation.
+        let distinct = small_problem();
+        let dc = group_classes(&distinct);
+        assert_eq!(dc.len(), 3);
+        assert!(!aggregation_pays(dc.len(), distinct.items.len()));
+        assert!(aggregation_pays(classes.len(), p.items.len()));
+    }
+
+    #[test]
+    fn capped_grouping_aborts_past_the_class_budget() {
+        // 3 distinct templates: a cap of 2 aborts (routing gate), a cap
+        // at or above the true class count returns the full grouping.
+        let p = fixture();
+        assert!(group_classes_capped(&p, 2).is_none());
+        assert_eq!(group_classes_capped(&p, 3).unwrap().len(), 3);
+        let distinct = small_problem();
+        assert!(group_classes_capped(&distinct, 1).is_none());
+        assert_eq!(group_classes_capped(&distinct, 3).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn aggregated_matches_per_item_on_every_arm() {
+        let p = fixture();
+        for greedy in [Greedy::FirstFit, Greedy::BestFit] {
+            for order in ItemOrder::ALL {
+                let per_item = solve_greedy(&p, greedy, order).unwrap();
+                let agg = solve_greedy_aggregated(&p, greedy, order).unwrap();
+                agg.validate(&p)
+                    .unwrap_or_else(|e| panic!("{greedy:?}/{order:?}: {e}"));
+                assert_eq!(
+                    agg.cost(&p),
+                    per_item.cost(&p),
+                    "{greedy:?}/{order:?}: aggregated cost diverged"
+                );
+                assert_eq!(
+                    agg.bins_per_type(&p),
+                    per_item.bins_per_type(&p),
+                    "{greedy:?}/{order:?}: bin mix diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn copy_bound_and_place_run_agree_with_fits() {
+        let residual = ResourceVec::from_slice(&[10.0, 6.0]);
+        let req = ResourceVec::from_slice(&[3.0, 1.0]);
+        assert_eq!(copy_bound(&residual, &req), 3);
+        let mut r = residual.clone();
+        assert_eq!(place_run(&mut r, &req, 100), 3);
+        assert!(!req.fits(&r));
+        // The limit caps the run.
+        let mut r2 = residual.clone();
+        assert_eq!(place_run(&mut r2, &req, 2), 2);
+        // Zero-requirement dimensions impose no bound.
+        let free = ResourceVec::from_slice(&[0.0, 1.0]);
+        assert_eq!(copy_bound(&residual, &free), 6);
+        // Exact-boundary counts match repeated fits checks (the epsilon
+        // keeps 3 × 2.0 fitting capacity 6.0).
+        let tight = ResourceVec::from_slice(&[6.0, 6.0]);
+        let two = ResourceVec::from_slice(&[2.0, 2.0]);
+        assert_eq!(copy_bound(&tight, &two), 3);
+    }
+
+    #[test]
+    fn infeasible_class_returns_none() {
+        let mut p = fixture();
+        p.items.push(Item {
+            id: "huge-0".into(),
+            choices: vec![ResourceVec::from_slice(&[100.0, 0.0])],
+        });
+        p.items.push(Item {
+            id: "huge-1".into(),
+            choices: vec![ResourceVec::from_slice(&[100.0, 0.0])],
+        });
+        for greedy in [Greedy::FirstFit, Greedy::BestFit] {
+            assert!(solve_greedy_aggregated(&p, greedy, ItemOrder::HardestFirst).is_none());
+        }
+    }
+
+    #[test]
+    fn single_class_fleet_packs_exactly() {
+        // 12 copies of a 3.0-requirement item into cap-10 bins: 3 per
+        // bin, 4 bins — the run arithmetic must not over- or underfill.
+        let p = replicated(
+            &[Item {
+                id: "s".into(),
+                choices: vec![ResourceVec::from_slice(&[3.0])],
+            }],
+            &[12],
+            vec![BinType {
+                name: "b".into(),
+                cost: Dollars::from_f64(1.0),
+                capacity: ResourceVec::from_slice(&[10.0]),
+            }],
+        );
+        for greedy in [Greedy::FirstFit, Greedy::BestFit] {
+            let s = solve_greedy_aggregated(&p, greedy, ItemOrder::HardestFirst).unwrap();
+            s.validate(&p).unwrap();
+            assert_eq!(s.bins.len(), 4, "{greedy:?}: floor(10/3)=3 per bin");
+            assert_eq!(s.cost(&p), Dollars::from_f64(4.0));
+        }
+    }
+
+    #[test]
+    fn expansion_assigns_every_member_once() {
+        let p = fixture();
+        let s = solve_greedy_aggregated(&p, Greedy::BestFit, ItemOrder::SumDecreasing).unwrap();
+        let mut seen = vec![false; p.items.len()];
+        for bin in &s.bins {
+            for &(item, choice) in &bin.assignments {
+                assert!(!seen[item], "item {item} assigned twice");
+                assert!(choice < p.items[item].choices.len());
+                seen[item] = true;
+            }
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+}

@@ -141,9 +141,12 @@ impl ArcFlowGraph {
             }
         }
         // Loss arcs: every node flows to the sink (= capacity label).
+        // (Iterating node_set directly is fine — the loop only inserts
+        // into arc_set, so the former `node_set.clone()` was a needless
+        // allocation per graph build.)
         let sink = capacity;
         node_set.insert(sink);
-        for &n in node_set.clone().iter() {
+        for &n in node_set.iter() {
             if n != sink {
                 arc_set.insert((n, sink, usize::MAX));
             }

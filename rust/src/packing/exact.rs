@@ -252,7 +252,12 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
     }
 
     let item_idx = ctx.order[k];
-    let n_choices = ctx.problem.items[item_idx].choices.len();
+    // Copy the &'p problem reference out of the context so requirement
+    // vectors borrow the problem, not `ctx` — the branch loops used to
+    // clone a heap-backed ResourceVec per (bin, choice) node to appease
+    // the borrow checker.
+    let problem = ctx.problem;
+    let n_choices = problem.items[item_idx].choices.len();
 
     // Branch 1: place into an existing open bin.  Dedupe branches that
     // land in bins with identical (type, residual) — permutation symmetry.
@@ -269,13 +274,13 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
         }
         tried.push((open[b].bin_type, key));
         for c in 0..n_choices {
-            let req = ctx.problem.items[item_idx].choices[c].clone();
+            let req = &problem.items[item_idx].choices[c];
             if req.fits(&open[b].residual) {
-                open[b].residual.sub_assign(&req);
+                open[b].residual.sub_assign(req);
                 open[b].assignments.push((item_idx, c));
                 dfs(ctx, k + 1, cost, open);
                 open[b].assignments.pop();
-                open[b].residual.add_assign(&req);
+                open[b].residual.add_assign(req);
                 if ctx.exhausted {
                     return;
                 }
@@ -284,17 +289,16 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
     }
 
     // Branch 2: open a new bin of each type.
-    for t in 0..ctx.problem.bin_types.len() {
-        let bt = &ctx.problem.bin_types[t];
+    for (t, bt) in problem.bin_types.iter().enumerate() {
         let new_cost = cost + bt.cost;
         if new_cost >= ctx.best_cost {
             continue;
         }
         for c in 0..n_choices {
-            let req = ctx.problem.items[item_idx].choices[c].clone();
+            let req = &problem.items[item_idx].choices[c];
             if req.fits(&bt.capacity) {
                 let mut residual = bt.capacity.clone();
-                residual.sub_assign(&req);
+                residual.sub_assign(req);
                 open.push(OpenBin {
                     bin_type: t,
                     residual,

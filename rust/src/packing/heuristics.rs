@@ -6,9 +6,18 @@
 //! engine.  All entry points respect the multiple-choice structure by
 //! trying every (bin, choice) / (type, choice) combination and picking
 //! greedily.  The core machinery — [`pack_into`] over a pre-seeded set
-//! of open bins — is shared with `packing::solver` (sharded arms) and
+//! of open bins — is shared with `packing::solver` (sharded arms),
+//! `packing::aggregate` (class-aggregated packing), and
 //! `manager::realloc` (warm-start delta placement).
+//!
+//! Placement is driven by the [`super::index::ResidualIndex`]: instead
+//! of scanning every open bin per item, first-fit descends the residual
+//! segment tree to the lowest-index fitting bin and best-fit scores
+//! only the bins the index reports as candidates.  The index makes the
+//! *same* fit decisions as a linear scan (same epsilon, same order), so
+//! solutions are unchanged — only the scan cost drops.
 
+use super::index::ResidualIndex;
 use super::problem::{MvbpProblem, PackedBin, Solution};
 use crate::types::ResourceVec;
 
@@ -39,6 +48,47 @@ pub enum ItemOrder {
     FewestChoices,
 }
 
+/// Per-dimension max capacity over bin types — the normalization both
+/// ordering measures use.  Shared with `packing::aggregate`, which
+/// orders multiplicity *classes* by the same measures.
+pub(crate) fn roomiest_capacity(problem: &MvbpProblem) -> ResourceVec {
+    ResourceVec(
+        (0..problem.dims)
+            .map(|d| {
+                problem
+                    .bin_types
+                    .iter()
+                    .map(|bt| bt.capacity[d])
+                    .fold(0.0, f64::max)
+            })
+            .collect(),
+    )
+}
+
+/// Best-case fullness of item `i`: min over choices of the max capacity
+/// ratio vs the roomiest bin (the classic hardest-first measure).
+pub(crate) fn item_hardness(problem: &MvbpProblem, roomiest: &ResourceVec, i: usize) -> f64 {
+    problem.items[i]
+        .choices
+        .iter()
+        .map(|c| c.max_ratio(roomiest))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Total normalized demand of item `i` (min over choices).
+pub(crate) fn item_volume(problem: &MvbpProblem, roomiest: &ResourceVec, i: usize) -> f64 {
+    problem.items[i]
+        .choices
+        .iter()
+        .map(|c| {
+            c.0.iter()
+                .zip(&roomiest.0)
+                .map(|(v, r)| if *r > 0.0 { v / r } else { 0.0 })
+                .sum::<f64>()
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
 impl ItemOrder {
     pub const ALL: [ItemOrder; 3] = [
         ItemOrder::HardestFirst,
@@ -48,57 +98,43 @@ impl ItemOrder {
 
     /// Item indices of `problem` sorted under this ordering.
     pub fn order(self, problem: &MvbpProblem) -> Vec<usize> {
-        let roomiest = ResourceVec(
-            (0..problem.dims)
-                .map(|d| {
-                    problem
-                        .bin_types
-                        .iter()
-                        .map(|bt| bt.capacity[d])
-                        .fold(0.0, f64::max)
-                })
-                .collect(),
-        );
-        let hardness = |i: usize| -> f64 {
-            problem.items[i]
-                .choices
-                .iter()
-                .map(|c| c.max_ratio(&roomiest))
-                .fold(f64::INFINITY, f64::min)
-        };
-        let volume = |i: usize| -> f64 {
-            problem.items[i]
-                .choices
-                .iter()
-                .map(|c| {
-                    c.0.iter()
-                        .zip(&roomiest.0)
-                        .map(|(v, r)| if *r > 0.0 { v / r } else { 0.0 })
-                        .sum::<f64>()
-                })
-                .fold(f64::INFINITY, f64::min)
-        };
         let mut order: Vec<usize> = (0..problem.items.len()).collect();
+        self.sort_keys(problem, &mut order, |&i| i);
+        order
+    }
+
+    /// Sort arbitrary keys under this ordering, where `item_of` maps a
+    /// key to the item index carrying its measure — `order` sorts items
+    /// directly, `packing::aggregate` sorts classes by representative.
+    /// The sort is stable, so equal-measure keys keep their given order.
+    pub(crate) fn sort_keys<K>(
+        self,
+        problem: &MvbpProblem,
+        keys: &mut [K],
+        item_of: impl Fn(&K) -> usize,
+    ) {
+        let roomiest = roomiest_capacity(problem);
+        let hardness = |k: &K| item_hardness(problem, &roomiest, item_of(k));
+        let volume = |k: &K| item_volume(problem, &roomiest, item_of(k));
         // total_cmp everywhere: NaN-bearing inputs (caught by `validate`,
         // but this must not panic when called directly) sort
         // deterministically instead of aborting mid-sort.
         match self {
             ItemOrder::HardestFirst => {
-                order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
+                keys.sort_by(|a, b| hardness(b).total_cmp(&hardness(a)));
             }
             ItemOrder::SumDecreasing => {
-                order.sort_by(|&a, &b| volume(b).total_cmp(&volume(a)));
+                keys.sort_by(|a, b| volume(b).total_cmp(&volume(a)));
             }
             ItemOrder::FewestChoices => {
-                order.sort_by(|&a, &b| {
-                    let na = problem.items[a].choices.len();
-                    let nb = problem.items[b].choices.len();
+                keys.sort_by(|a, b| {
+                    let na = problem.items[item_of(a)].choices.len();
+                    let nb = problem.items[item_of(b)].choices.len();
                     na.cmp(&nb)
                         .then_with(|| hardness(b).total_cmp(&hardness(a)))
                 });
             }
         }
-        order
     }
 }
 
@@ -136,13 +172,34 @@ pub(crate) fn finish(open: Vec<OpenBin>) -> Solution {
     }
 }
 
-/// Cheapest-per-slack new-bin choice shared by both heuristics: open the
-/// type minimizing cost, breaking ties by tightest fit.
-fn open_new_bin(
-    problem: &MvbpProblem,
-    item: usize,
-    open: &mut Vec<OpenBin>,
-) -> bool {
+/// Post-placement headroom `max_d (residual[d] - req[d]) / cap[d]` if
+/// `req` fits `residual` (same epsilon as [`ResourceVec::fits`]), else
+/// `None` — the best-fit score computed in one pass without
+/// materializing the subtracted vector (this used to clone a
+/// `ResourceVec` per (bin, choice) probe in the hot loop).
+pub(crate) fn slack_after(
+    residual: &ResourceVec,
+    req: &ResourceVec,
+    cap: &ResourceVec,
+) -> Option<f64> {
+    let mut slack = 0.0f64;
+    for ((r, q), c) in residual.0.iter().zip(&req.0).zip(&cap.0) {
+        if *q > r + crate::types::FIT_EPS {
+            return None;
+        }
+        let ratio = if *c > 0.0 { (r - q) / c } else { 0.0 };
+        if ratio > slack {
+            slack = ratio;
+        }
+    }
+    Some(slack)
+}
+
+/// Cheapest new-bin `(type, choice)` for `item` on an *empty* bin:
+/// minimize cost, break ties by tightest fit.  Shared by the per-item
+/// engine and the class-aggregated packer (`packing::aggregate`) so
+/// both open identical bins.
+pub(crate) fn best_new_bin(problem: &MvbpProblem, item: usize) -> Option<(usize, usize)> {
     let mut best: Option<(usize, usize, f64, f64)> = None; // (type, choice, cost, slack)
     for (t, bt) in problem.bin_types.iter().enumerate() {
         for (c, req) in problem.items[item].choices.iter().enumerate() {
@@ -161,7 +218,12 @@ fn open_new_bin(
             }
         }
     }
-    let Some((t, c, _, _)) = best else { return false };
+    best.map(|(t, c, _, _)| (t, c))
+}
+
+/// Open the cheapest feasible new bin for `item` and place it there.
+fn open_new_bin(problem: &MvbpProblem, item: usize, open: &mut Vec<OpenBin>) -> bool {
+    let Some((t, c)) = best_new_bin(problem, item) else { return false };
     let mut residual = problem.bin_types[t].capacity.clone();
     residual.sub_assign(&problem.items[item].choices[c]);
     open.push(OpenBin {
@@ -180,6 +242,12 @@ fn open_new_bin(
 /// open bin and no new bin admits it; `open` then holds a partial
 /// placement the caller must discard.
 ///
+/// Bin lookup goes through a [`ResidualIndex`] built over `open`:
+/// first-fit descends to the lowest-index fitting bin, best-fit scores
+/// only index-reported candidates.  Both produce exactly the solution
+/// the former linear scans did (the index's fit test is the same
+/// comparison in the same order); only the per-item scan cost changes.
+///
 /// Does *not* validate `problem` — public wrappers and the portfolio do
 /// that once per solve, not once per shard.
 pub(crate) fn pack_into(
@@ -188,35 +256,38 @@ pub(crate) fn pack_into(
     items: &[usize],
     open: &mut Vec<OpenBin>,
 ) -> bool {
+    let residuals: Vec<&ResourceVec> = open.iter().map(|b| &b.residual).collect();
+    let mut index = ResidualIndex::new(problem.dims, &residuals);
+    drop(residuals);
+    let mut candidates: Vec<usize> = Vec::new();
     for &item in items {
+        let choices = &problem.items[item].choices;
         let placed = match greedy {
             Greedy::FirstFit => {
                 // First open bin where any choice fits (choices tried in
                 // order — CPU first, matching the paper's "prefer the
                 // cheap path" intuition).
-                let mut placed = false;
-                'bins: for bin in open.iter_mut() {
-                    for (c, req) in problem.items[item].choices.iter().enumerate() {
-                        if req.fits(&bin.residual) {
-                            bin.residual.sub_assign(req);
-                            bin.assignments.push((item, c));
-                            placed = true;
-                            break 'bins;
-                        }
+                match index.first_fit_any(choices) {
+                    Some((b, c)) => {
+                        open[b].residual.sub_assign(&choices[c]);
+                        open[b].assignments.push((item, c));
+                        index.update(b, &open[b].residual);
+                        true
                     }
+                    None => false,
                 }
-                placed
             }
             Greedy::BestFit => {
-                // (bin, choice) pair leaving the least residual headroom.
+                // (bin, choice) pair leaving the least residual headroom,
+                // scored over the index's candidates in bin order (same
+                // tie-breaking as the full scan: strictly-better wins).
+                index.may_fit(choices, &mut candidates);
                 let mut best: Option<(usize, usize, f64)> = None;
-                for (b, bin) in open.iter().enumerate() {
-                    for (c, req) in problem.items[item].choices.iter().enumerate() {
-                        if req.fits(&bin.residual) {
-                            let mut post = bin.residual.clone();
-                            post.sub_assign(req);
-                            let cap = &problem.bin_types[bin.bin_type].capacity;
-                            let slack = post.max_ratio(cap);
+                for &b in &candidates {
+                    let bin = &open[b];
+                    let cap = &problem.bin_types[bin.bin_type].capacity;
+                    for (c, req) in choices.iter().enumerate() {
+                        if let Some(slack) = slack_after(&bin.residual, req, cap) {
                             if best.map_or(true, |(_, _, bs)| slack < bs) {
                                 best = Some((b, c, slack));
                             }
@@ -225,17 +296,20 @@ pub(crate) fn pack_into(
                 }
                 match best {
                     Some((b, c, _)) => {
-                        let req = problem.items[item].choices[c].clone();
-                        open[b].residual.sub_assign(&req);
+                        open[b].residual.sub_assign(&choices[c]);
                         open[b].assignments.push((item, c));
+                        index.update(b, &open[b].residual);
                         true
                     }
                     None => false,
                 }
             }
         };
-        if !placed && !open_new_bin(problem, item, open) {
-            return false;
+        if !placed {
+            if !open_new_bin(problem, item, open) {
+                return false;
+            }
+            index.push(&open.last().expect("bin just opened").residual);
         }
     }
     true

@@ -1,0 +1,260 @@
+//! Residual index: near-logarithmic open-bin lookup for the placement
+//! engine.
+//!
+//! `pack_into` used to scan every open bin per item — O(items × bins ×
+//! choices) — which dominates large solves.  [`ResidualIndex`] is a
+//! segment tree over the open-bin list whose internal nodes hold the
+//! *element-wise maximum* residual of their subtree.  The pruning rule
+//! is a necessary condition: if some dimension's subtree-max is below a
+//! requirement, **no** bin in that subtree fits it, so the whole
+//! subtree is skipped.  At the leaves the comparison is exactly
+//! [`ResourceVec::fits`]'s (same epsilon), so queries return precisely
+//! the bins a linear scan would have found, in the same order — the
+//! index accelerates first-fit/best-fit without changing either
+//! heuristic's result.
+//!
+//! * [`ResidualIndex::first_fit_any`] descends leftmost-first and
+//!   returns the lowest-index bin fitting any choice (with the first
+//!   fitting choice), mirroring the first-fit scan.
+//! * [`ResidualIndex::may_fit`] collects, in increasing bin order, the
+//!   bins fitting at least one choice — the best-fit scorer then ranks
+//!   only genuine candidates instead of every open bin.
+//!
+//! Worst case (every bin fits) degenerates to the linear scan plus an
+//! O(log bins) constant; in packing practice most open bins are nearly
+//! full and are pruned in bulk near the root.
+
+// FIT_EPS is the shared `fits` tolerance — the index must make
+// identical fit decisions to `ResourceVec::fits` or first-fit results
+// would drift from the linear scan's.
+use crate::types::{FIT_EPS, ResourceVec};
+
+/// Segment tree over open-bin residuals (element-wise max per node).
+pub(crate) struct ResidualIndex {
+    dims: usize,
+    /// Leaves in use (= open bins tracked).
+    len: usize,
+    /// Power-of-two leaf capacity of the current tree.
+    cap: usize,
+    /// Flat 1-based heap: node `i` occupies
+    /// `nodes[i * dims .. (i + 1) * dims]`; leaves start at `cap`.
+    /// Unused leaves hold `-inf` so no requirement ever matches them.
+    nodes: Vec<f64>,
+}
+
+impl ResidualIndex {
+    /// Build over the residuals of `open` (possibly empty).
+    pub(crate) fn new(dims: usize, residuals: &[&ResourceVec]) -> ResidualIndex {
+        let cap = residuals.len().next_power_of_two().max(1);
+        let mut index = ResidualIndex {
+            dims,
+            len: residuals.len(),
+            cap,
+            nodes: vec![f64::NEG_INFINITY; 2 * cap * dims.max(1)],
+        };
+        for (i, r) in residuals.iter().enumerate() {
+            index.write_leaf(i, r);
+        }
+        for node in (1..cap).rev() {
+            index.pull(node);
+        }
+        index
+    }
+
+    fn write_leaf(&mut self, i: usize, residual: &ResourceVec) {
+        debug_assert_eq!(residual.dims(), self.dims);
+        let at = (self.cap + i) * self.dims;
+        self.nodes[at..at + self.dims].copy_from_slice(&residual.0);
+    }
+
+    /// Recompute one internal node from its children.
+    fn pull(&mut self, node: usize) {
+        let (l, r) = (2 * node * self.dims, (2 * node + 1) * self.dims);
+        for d in 0..self.dims {
+            self.nodes[node * self.dims + d] = self.nodes[l + d].max(self.nodes[r + d]);
+        }
+    }
+
+    /// A subtree can contain a fitting bin only if every dimension's
+    /// max residual admits the requirement.
+    fn admits(&self, node: usize, req: &ResourceVec) -> bool {
+        let at = node * self.dims;
+        req.0
+            .iter()
+            .zip(&self.nodes[at..at + self.dims])
+            .all(|(need, max)| *need <= max + FIT_EPS)
+    }
+
+    fn admits_any(&self, node: usize, choices: &[ResourceVec]) -> bool {
+        choices.iter().any(|req| self.admits(node, req))
+    }
+
+    /// Track a newly opened bin.  Amortized O(log bins): capacity
+    /// doubles by rebuilding from the stored leaves.
+    pub(crate) fn push(&mut self, residual: &ResourceVec) {
+        if self.len == self.cap {
+            let old_cap = self.cap;
+            let old = std::mem::replace(
+                &mut self.nodes,
+                vec![f64::NEG_INFINITY; 4 * old_cap * self.dims.max(1)],
+            );
+            self.cap = 2 * old_cap;
+            let leaf_base = old_cap * self.dims;
+            let dst_base = self.cap * self.dims;
+            let live = self.len * self.dims;
+            self.nodes[dst_base..dst_base + live]
+                .copy_from_slice(&old[leaf_base..leaf_base + live]);
+            for node in (1..self.cap).rev() {
+                self.pull(node);
+            }
+        }
+        self.write_leaf(self.len, residual);
+        let mut node = (self.cap + self.len) / 2;
+        while node >= 1 {
+            self.pull(node);
+            node /= 2;
+        }
+        self.len += 1;
+    }
+
+    /// Refresh bin `i`'s residual after a placement.
+    pub(crate) fn update(&mut self, i: usize, residual: &ResourceVec) {
+        debug_assert!(i < self.len);
+        self.write_leaf(i, residual);
+        let mut node = (self.cap + i) / 2;
+        while node >= 1 {
+            self.pull(node);
+            node /= 2;
+        }
+    }
+
+    /// Lowest-index bin where any choice fits, with the first fitting
+    /// choice — exactly the pair the first-fit linear scan selects.
+    pub(crate) fn first_fit_any(&self, choices: &[ResourceVec]) -> Option<(usize, usize)> {
+        if self.len == 0 || choices.is_empty() {
+            return None;
+        }
+        self.descend_first(1, choices)
+    }
+
+    fn descend_first(&self, node: usize, choices: &[ResourceVec]) -> Option<(usize, usize)> {
+        if !self.admits_any(node, choices) {
+            return None;
+        }
+        if node >= self.cap {
+            let bin = node - self.cap;
+            if bin >= self.len {
+                return None;
+            }
+            // Leaf values are the exact residual, so `admits` here *is*
+            // the fits test: pick the first passing choice.
+            return choices
+                .iter()
+                .position(|req| self.admits(node, req))
+                .map(|c| (bin, c));
+        }
+        self.descend_first(2 * node, choices)
+            .or_else(|| self.descend_first(2 * node + 1, choices))
+    }
+
+    /// Collect, in increasing bin order, every bin fitting at least one
+    /// choice into `out` (cleared first).
+    pub(crate) fn may_fit(&self, choices: &[ResourceVec], out: &mut Vec<usize>) {
+        out.clear();
+        if self.len == 0 || choices.is_empty() {
+            return;
+        }
+        self.collect(1, choices, out);
+    }
+
+    fn collect(&self, node: usize, choices: &[ResourceVec], out: &mut Vec<usize>) {
+        if !self.admits_any(node, choices) {
+            return;
+        }
+        if node >= self.cap {
+            let bin = node - self.cap;
+            if bin < self.len {
+                out.push(bin);
+            }
+            return;
+        }
+        self.collect(2 * node, choices, out);
+        self.collect(2 * node + 1, choices, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rv(v: &[f64]) -> ResourceVec {
+        ResourceVec::from_slice(v)
+    }
+
+    #[test]
+    fn first_fit_matches_linear_scan() {
+        let bins = [rv(&[1.0, 1.0]), rv(&[5.0, 0.5]), rv(&[4.0, 4.0]), rv(&[9.0, 9.0])];
+        let refs: Vec<&ResourceVec> = bins.iter().collect();
+        let index = ResidualIndex::new(2, &refs);
+        // Needs (3, 2): bins 0 and 1 fail, bin 2 is the first fit.
+        assert_eq!(index.first_fit_any(&[rv(&[3.0, 2.0])]), Some((2, 0)));
+        // Choice order: choice 0 fits nothing before bin 3, choice 1
+        // fits bin 1 — first *bin* wins, with its first fitting choice.
+        assert_eq!(
+            index.first_fit_any(&[rv(&[6.0, 6.0]), rv(&[5.0, 0.2])]),
+            Some((1, 1))
+        );
+        assert_eq!(index.first_fit_any(&[rv(&[20.0, 0.0])]), None);
+    }
+
+    #[test]
+    fn updates_and_pushes_keep_queries_exact() {
+        let bins = [rv(&[4.0, 4.0])];
+        let refs: Vec<&ResourceVec> = bins.iter().collect();
+        let mut index = ResidualIndex::new(2, &refs);
+        assert_eq!(index.first_fit_any(&[rv(&[3.0, 3.0])]), Some((0, 0)));
+        index.update(0, &rv(&[1.0, 1.0]));
+        assert_eq!(index.first_fit_any(&[rv(&[3.0, 3.0])]), None);
+        // Grow far past the initial power-of-two capacity.
+        for i in 0..20 {
+            index.push(&rv(&[i as f64, i as f64]));
+        }
+        let mut out = Vec::new();
+        index.may_fit(&[rv(&[18.5, 18.5])], &mut out);
+        assert_eq!(out, vec![20]); // only the residual (19, 19) bin
+        assert_eq!(index.first_fit_any(&[rv(&[2.0, 2.0])]), Some((3, 0)));
+    }
+
+    #[test]
+    fn may_fit_enumerates_in_bin_order() {
+        let bins = [rv(&[2.0]), rv(&[8.0]), rv(&[1.0]), rv(&[8.0]), rv(&[3.0])];
+        let refs: Vec<&ResourceVec> = bins.iter().collect();
+        let index = ResidualIndex::new(1, &refs);
+        let mut out = Vec::new();
+        index.may_fit(&[rv(&[2.5])], &mut out);
+        assert_eq!(out, vec![1, 3, 4]);
+        index.may_fit(&[rv(&[2.5]), rv(&[0.5])], &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn epsilon_matches_fits_semantics() {
+        // A requirement equal to the residual up to float error must
+        // pass, exactly like ResourceVec::fits.
+        let residual = rv(&[0.3]);
+        let refs: Vec<&ResourceVec> = vec![&residual];
+        let index = ResidualIndex::new(1, &refs);
+        let req = rv(&[0.1 + 0.2]); // 0.30000000000000004
+        assert!(req.fits(&residual));
+        assert_eq!(index.first_fit_any(&[req]), Some((0, 0)));
+    }
+
+    #[test]
+    fn empty_index_returns_nothing() {
+        let index = ResidualIndex::new(2, &[]);
+        assert_eq!(index.first_fit_any(&[rv(&[0.0, 0.0])]), None);
+        let mut out = vec![7];
+        index.may_fit(&[rv(&[0.0, 0.0])], &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -16,9 +16,25 @@
 //! blind answers.  The layers, bottom up:
 //!
 //! * [`problem`] — the instance/solution types with full validation;
+//! * [`index`] — the residual index: a segment tree over open bins
+//!   (element-wise max residual per node) giving near-O(log bins)
+//!   first-fit descent and best-fit candidate enumeration with *exactly*
+//!   the linear scan's fit decisions, so indexing never changes a
+//!   heuristic's answer;
 //! * [`heuristics`] — first-fit / best-fit under pluggable item
-//!   orderings ([`ItemOrder`]), built on a shared placement engine that
-//!   also powers sharded portfolio arms and warm-start delta repacking;
+//!   orderings ([`ItemOrder`]), built on the index-driven placement
+//!   engine that also powers sharded portfolio arms and warm-start
+//!   delta repacking;
+//! * [`aggregate`] — the class-aggregation layer: items with identical
+//!   choice lists merge into multiplicity classes
+//!   ([`group_classes`]), the greedy heuristics place whole *runs* of
+//!   copies per bin via `floor(residual/req)` arithmetic, and the
+//!   class-level packing expands back to per-item assignments — so a
+//!   million-stream fleet with a handful of requirement classes packs
+//!   in near-linear time while plans, certificates, and the warm-start
+//!   repacker stay unchanged downstream.  Aggregation is bypassed when
+//!   items are (mostly) distinct ([`aggregation_pays`]): below two
+//!   items per class on average the per-item sharded path runs instead;
 //! * [`exact`] — branch-and-bound, node- and deadline-bounded, seedable
 //!   with any incumbent ([`BranchAndBound::solve_seeded`]);
 //! * [`arcflow`] — the arc-flow machinery (Brandão & Pedroso): graph
@@ -27,16 +43,22 @@
 //! * [`solver`] — the trait, the per-strategy implementations
 //!   ([`FfdSolver`], [`BfdSolver`], [`ExactSolver`]), the
 //!   [`PortfolioSolver`] that races orderings on `std::thread::scope`
-//!   threads and polishes with a seeded exact arm, and
+//!   threads (aggregated arms when multiplicity pays, sharded per-item
+//!   arms otherwise) and polishes with a seeded exact arm, and
 //!   [`SolverChoice`] — the budget-based routing that replaced the old
 //!   `solve_auto` item-count cliff.
 
+pub mod aggregate;
 pub mod arcflow;
 pub mod exact;
 pub mod heuristics;
+pub mod index;
 pub mod problem;
 pub mod solver;
 
+pub use aggregate::{
+    aggregation_pays, group_classes, group_classes_capped, solve_greedy_aggregated, ItemClass,
+};
 pub use exact::{solve_exact, BranchAndBound, ExactResult};
 pub use heuristics::{solve_best_fit, solve_first_fit, solve_greedy, Decreasing, Greedy, ItemOrder};
 pub use problem::{BinType, Item, MvbpProblem, PackedBin, Solution};

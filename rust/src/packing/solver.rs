@@ -35,6 +35,7 @@
 //! multiple-choice problem because any feasible packing must cover
 //! every dimension's relaxed demand.
 
+use super::aggregate;
 use super::arcflow;
 use super::exact::BranchAndBound;
 use super::heuristics::{self, Greedy, ItemOrder};
@@ -283,23 +284,39 @@ const EXACT_ARM_NODE_CAP: u64 = 200_000;
 /// exact search seeded with that incumbent; returns the cheapest
 /// validate-clean solution overall.
 ///
-/// At or below `full_arm_cutoff` items every arm packs the full
-/// instance, so the portfolio can never return a costlier solution
-/// than plain FFD or BFD (they are arms).  Above the cutoff the arms
-/// shard: the ordered item list is chunked, each chunk packed into its
-/// own bins, and the chunks concatenated — each shard scans only its
-/// own open bins, cutting the quadratic bin-scan cost by the shard
-/// count squared at the price of at most one underfilled bin per shard.
+/// When `aggregate` is on, the instance has real item multiplicity
+/// (at least two items per distinct requirement class on average, see
+/// [`aggregate::aggregation_pays`]), and there are at most
+/// `full_arm_cutoff` classes (class-level arms run unsharded, so the
+/// class count is bounded exactly like the item count is for full
+/// arms), every arm runs over *classes with counts* instead of items —
+/// the class-aggregated packing matches the per-item arm's result
+/// while the work drops from O(items × bins) to near-linear in items.
+/// All-distinct and barely-multiplicitous instances bypass aggregation
+/// onto the per-item (sharded) path.
+///
+/// On the per-item path, at or below `full_arm_cutoff` items every arm
+/// packs the full instance, so the portfolio can never return a
+/// costlier solution than plain FFD or BFD (they are arms).  Above the
+/// cutoff the arms shard: the ordered item list is chunked, each chunk
+/// packed into its own bins, and the chunks concatenated — each shard
+/// scans only its own open bins, cutting the quadratic bin-scan cost by
+/// the shard count squared at the price of at most one underfilled bin
+/// per shard.
 pub struct PortfolioSolver {
     /// Largest instance the full-scan arms handle before sharding.
     pub full_arm_cutoff: usize,
     /// Items per shard in sharded mode.
     pub shard_size: usize,
+    /// Run arms over multiplicity classes when grouping pays (the
+    /// default).  Off forces the per-item (sharded) path — benches use
+    /// this to measure what aggregation buys.
+    pub aggregate: bool,
 }
 
 impl Default for PortfolioSolver {
     fn default() -> Self {
-        PortfolioSolver { full_arm_cutoff: 1024, shard_size: 1024 }
+        PortfolioSolver { full_arm_cutoff: 1024, shard_size: 1024, aggregate: true }
     }
 }
 
@@ -312,21 +329,23 @@ impl PortfolioSolver {
     }
 }
 
-/// Run every task (one greedy pass over one item slice) across a small
-/// scoped worker pool; returns one optional solution per task, in task
-/// order.  Workers claim tasks from an atomic cursor, so thread count
-/// never changes *which* solutions exist — only how fast they arrive.
+/// Run `count` tasks across a small scoped worker pool; returns one
+/// optional solution per task, in task order.  Workers claim tasks from
+/// an atomic cursor, so thread count never changes *which* solutions
+/// exist — only how fast they arrive.
 ///
-/// An expired `deadline` sheds every task of arm > 0 at claim time:
-/// the first arm always completes, so a tight `--solve-budget-ms`
-/// degrades the portfolio to a single-arm solve instead of no solve.
-/// (Which extra arms finish under a fired deadline is wall-clock-
-/// dependent; the default budget is far above any solve the tests or
-/// paper scale run, so results stay deterministic in practice.)
-fn run_tasks(
-    problem: &MvbpProblem,
-    tasks: &[(usize, Greedy, &[usize])],
+/// An expired `deadline` sheds every task whose `arm_of` is > 0 at
+/// claim time: the first arm always completes, so a tight
+/// `--solve-budget-ms` degrades the portfolio to a single-arm solve
+/// instead of no solve.  (Which extra arms finish under a fired
+/// deadline is wall-clock-dependent; the default budget is far above
+/// any solve the tests or paper scale run, so results stay
+/// deterministic in practice.)
+fn race_tasks(
+    count: usize,
     deadline: Option<Instant>,
+    arm_of: impl Fn(usize) -> usize + Sync,
+    run: impl Fn(usize) -> Option<Solution> + Sync,
 ) -> Vec<Option<Solution>> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
@@ -334,28 +353,24 @@ fn run_tasks(
         .map(|n| n.get())
         .unwrap_or(2)
         .clamp(1, 16)
-        .min(tasks.len());
+        .min(count);
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Solution>>> = tasks.iter().map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<Solution>>> = (0..count).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks.len() {
+                if i >= count {
                     break;
                 }
-                let (arm, greedy, items) = tasks[i];
-                if arm != 0 {
+                if arm_of(i) != 0 {
                     if let Some(d) = deadline {
                         if Instant::now() >= d {
                             continue; // shed: slot stays None, arm incomplete
                         }
                     }
                 }
-                let mut open = Vec::new();
-                let solution = heuristics::pack_into(problem, greedy, items, &mut open)
-                    .then(|| heuristics::finish(open));
-                *slots[i].lock().expect("portfolio slot") = solution;
+                *slots[i].lock().expect("portfolio slot") = run(i);
             });
         }
     });
@@ -363,6 +378,96 @@ fn run_tasks(
         .into_iter()
         .map(|slot| slot.into_inner().expect("portfolio slot"))
         .collect()
+}
+
+/// The per-item task runner: one greedy pass over one item slice per
+/// task (kept as the named entry point the shed-semantics test pins).
+fn run_tasks(
+    problem: &MvbpProblem,
+    tasks: &[(usize, Greedy, &[usize])],
+    deadline: Option<Instant>,
+) -> Vec<Option<Solution>> {
+    race_tasks(
+        tasks.len(),
+        deadline,
+        |i| tasks[i].0,
+        |i| {
+            let (_, greedy, items) = tasks[i];
+            let mut open = Vec::new();
+            heuristics::pack_into(problem, greedy, items, &mut open)
+                .then(|| heuristics::finish(open))
+        },
+    )
+}
+
+impl PortfolioSolver {
+    /// The aggregated racing path: every (greedy, ordering) arm packs
+    /// multiplicity classes with counts (`packing::aggregate`) instead
+    /// of individual items, then the usual exact polish runs.  Arms
+    /// race on the same shed-on-deadline worker pool as the per-item
+    /// path; arm iteration order breaks cost ties, so the winner is
+    /// deterministic.
+    fn solve_aggregated(
+        &self,
+        problem: &MvbpProblem,
+        budget: &SolveBudget,
+        classes: &[aggregate::ItemClass],
+        deadline: Option<Instant>,
+    ) -> Option<SolveOutcome> {
+        let arms: Vec<(Greedy, ItemOrder)> = [Greedy::FirstFit, Greedy::BestFit]
+            .iter()
+            .flat_map(|&g| ItemOrder::ALL.iter().map(move |&o| (g, o)))
+            .collect();
+        let results = race_tasks(
+            arms.len(),
+            deadline,
+            |i| i,
+            |i| aggregate::solve_classes(problem, classes, arms[i].0, arms[i].1),
+        );
+        let mut best: Option<(Solution, Dollars)> = None;
+        for candidate in results.into_iter().flatten() {
+            if candidate.validate(problem).is_err() {
+                continue;
+            }
+            let cost = candidate.cost(problem);
+            if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
+                best = Some((candidate, cost));
+            }
+        }
+        let (best, proven) = self.polish(problem, budget, deadline, best);
+        best.map(|(solution, _)| outcome_for(problem, solution, SolverKind::Portfolio, proven))
+    }
+
+    /// Exact polish shared by both racing paths: seeded with the racing
+    /// winner, bounded by the remaining deadline and a deterministic
+    /// node cap, and only attempted on instances small enough for a
+    /// bounded search to improve within budget.
+    fn polish(
+        &self,
+        problem: &MvbpProblem,
+        budget: &SolveBudget,
+        deadline: Option<Instant>,
+        mut best: Option<(Solution, Dollars)>,
+    ) -> (Option<(Solution, Dollars)>, bool) {
+        let mut proven = false;
+        if problem.items.len() <= Self::exact_arm_limit(budget) {
+            let bb = BranchAndBound {
+                node_budget: budget.node_budget.min(EXACT_ARM_NODE_CAP),
+                deadline,
+            };
+            let incumbent = best.as_ref().map(|(s, _)| s.clone());
+            if let Some(result) = bb.solve_seeded(problem, incumbent) {
+                if result.solution.validate(problem).is_ok() {
+                    let cost = result.solution.cost(problem);
+                    if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
+                        best = Some((result.solution, cost));
+                    }
+                    proven = result.proven_optimal;
+                }
+            }
+        }
+        (best, proven)
+    }
 }
 
 impl Solver for PortfolioSolver {
@@ -377,6 +482,23 @@ impl Solver for PortfolioSolver {
             return Some(outcome_for(problem, Solution::default(), SolverKind::Portfolio, true));
         }
         let deadline = budget.deadline();
+        if self.aggregate {
+            // Two gates, folded into the grouping cap so an all-distinct
+            // fleet aborts the scan almost immediately: aggregation must
+            // pay (≤ n/2 classes, i.e. ≥ 2 items per class on average,
+            // see [`aggregate::aggregation_pays`]), and the *class
+            // count* must be small enough for unsharded class-level
+            // arms — `full_arm_cutoff` plays the same role it does for
+            // items.  A 100k-item fleet of 50k duplicated pairs fails
+            // the cap and takes the sharded per-item path instead of
+            // reintroducing the unbounded full scan sharding exists to
+            // prevent.
+            let cap = (n / 2).min(self.full_arm_cutoff);
+            if let Some(classes) = aggregate::group_classes_capped(problem, cap) {
+                debug_assert!(aggregate::aggregation_pays(classes.len(), n));
+                return self.solve_aggregated(problem, budget, &classes, deadline);
+            }
+        }
         let sharded = n > self.full_arm_cutoff;
         // Sharded mode drops the FewestChoices ordering: constrained-
         // first placement matters while bins are few, and two orderings
@@ -435,24 +557,7 @@ impl Solver for PortfolioSolver {
 
         // Exact polish: seeded with the racing winner, bounded by the
         // remaining deadline and a deterministic node cap.
-        let mut proven = false;
-        if n <= Self::exact_arm_limit(budget) {
-            let bb = BranchAndBound {
-                node_budget: budget.node_budget.min(EXACT_ARM_NODE_CAP),
-                deadline,
-            };
-            let incumbent = best.as_ref().map(|(s, _)| s.clone());
-            if let Some(result) = bb.solve_seeded(problem, incumbent) {
-                if result.solution.validate(problem).is_ok() {
-                    let cost = result.solution.cost(problem);
-                    if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
-                        best = Some((result.solution, cost));
-                    }
-                    proven = result.proven_optimal;
-                }
-            }
-        }
-
+        let (best, proven) = self.polish(problem, budget, deadline, best);
         best.map(|(solution, _)| outcome_for(problem, solution, SolverKind::Portfolio, proven))
     }
 }
@@ -604,11 +709,62 @@ mod tests {
                 })
                 .collect(),
         };
-        let sharded = PortfolioSolver { full_arm_cutoff: 4, shard_size: 3 };
+        // aggregate off: the weights repeat (three classes), and the
+        // point here is exercising the *sharded per-item* path.
+        let sharded = PortfolioSolver { full_arm_cutoff: 4, shard_size: 3, aggregate: false };
         let out = sharded.solve(&p, &SolveBudget::default()).unwrap();
         out.solution.validate(&p).unwrap();
         assert!(out.lower_bound <= out.cost);
         assert!(out.gap().is_finite());
+    }
+
+    /// `copies` copies of every `small_problem` item — a
+    /// high-multiplicity fleet in miniature.
+    fn replicated_small(copies: usize) -> MvbpProblem {
+        let base = small_problem();
+        let mut items = Vec::new();
+        for (t, item) in base.items.iter().enumerate() {
+            for i in 0..copies {
+                items.push(Item {
+                    id: format!("c{t}-{i}"),
+                    choices: item.choices.clone(),
+                });
+            }
+        }
+        MvbpProblem { dims: base.dims, bin_types: base.bin_types.clone(), items }
+    }
+
+    #[test]
+    fn aggregated_portfolio_matches_per_item_portfolio() {
+        // Aggregation pays (3 classes × 40 members); with the exact
+        // polish disabled (cutoff 0) both paths are pure racing arms
+        // and must agree exactly.
+        let p = replicated_small(40);
+        let budget = SolveBudget { exact_cutoff: 0, ..Default::default() };
+        let agg = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        let per_item = PortfolioSolver { aggregate: false, ..Default::default() }
+            .solve(&p, &budget)
+            .unwrap();
+        agg.solution.validate(&p).unwrap();
+        per_item.solution.validate(&p).unwrap();
+        assert_eq!(agg.cost, per_item.cost);
+        assert_eq!(
+            agg.solution.bins_per_type(&p),
+            per_item.solution.bins_per_type(&p)
+        );
+        assert!(agg.lower_bound <= agg.cost);
+        assert!(agg.gap().is_finite());
+    }
+
+    #[test]
+    fn aggregated_portfolio_is_deterministic_and_certified() {
+        let p = replicated_small(25);
+        let budget = SolveBudget::default();
+        let a = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        let b = PortfolioSolver::default().solve(&p, &budget).unwrap();
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.lower_bound, b.lower_bound);
+        assert_eq!(a.solver, SolverKind::Portfolio);
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! default event-driven one); [`SimEngine`] selects between them and
 //! [`Simulation::run`] dispatches.  The fixed-step engine advances a
 //! global clock in `dt` increments and re-solves the processor-sharing
-//! allocation every tick — O(duration/dt x streams) regardless of how
-//! much actually happens — and is kept as the independently-simple
-//! cross-validation baseline for the event engine.
+//! allocation every tick, but only for instances with queued or
+//! arriving work — idle instances are skipped wholesale (their meters
+//! are credited the idle span in one batched record), so the per-tick
+//! cost scales with *active* instances rather than fleet size.  It is
+//! kept as the independently-simple cross-validation baseline for the
+//! event engine.
 //!
 //! Both engines run *sharded* (see the `shard` submodule): instances
 //! are independent given the assignments — per-instance queues never
@@ -319,96 +322,184 @@ impl Simulation {
     }
 
     /// The fixed-step fluid engine.
+    ///
+    /// Advances only instances with queued or arriving work per tick:
+    /// each instance tracks its earliest pending arrival and queued-job
+    /// count, and a tick touches an instance only when one of them is
+    /// due (the ROADMAP's "stop ticking idle instances").  Instances
+    /// are independent — per-instance queues never interact — so
+    /// skipping an idle instance cannot change any other's dynamics,
+    /// and the skipped spans are credited to the utilization meters as
+    /// batched zero-utilization time (identical integral, so reported
+    /// means match the always-ticking engine to float rounding).
     pub fn run_fixed(&mut self, config: SimConfig) -> SimReport {
         let steps = (config.duration_s / config.dt).round() as u64;
-        let mut queues: Vec<Vec<Job>> = vec![Vec::new(); self.streams.len()];
+        let n_streams = self.streams.len();
+        let mut queues: Vec<Vec<Job>> = vec![Vec::new(); n_streams];
         let mut next_arrival: Vec<f64> = self
             .streams
             .iter()
             .map(|s| if s.desired_fps > 0.0 { 0.0 } else { f64::INFINITY })
             .collect();
-        let mut completed = vec![0u64; self.streams.len()];
+        let mut completed = vec![0u64; n_streams];
         let mut dropped = 0u64;
+
+        // Group streams and devices per instance so idle instances are
+        // skipped wholesale instead of re-scanned every tick.
+        let mut instances: Vec<usize> = self.device_names.iter().map(|(i, _)| *i).collect();
+        instances.sort_unstable();
+        instances.dedup();
+        let inst_pos: BTreeMap<usize, usize> =
+            instances.iter().enumerate().map(|(p, &i)| (i, p)).collect();
+        let mut inst_streams: Vec<Vec<usize>> = vec![Vec::new(); instances.len()];
+        for (s, exec) in self.streams.iter().enumerate() {
+            inst_streams[inst_pos[&exec.instance]].push(s);
+        }
+        let mut inst_devices: Vec<Vec<usize>> = vec![Vec::new(); instances.len()];
+        for (&(inst, _slot), &dev) in self.device_index.iter() {
+            inst_devices[inst_pos[&inst]].push(dev);
+        }
+
+        // Per-instance activity state: earliest pending arrival, queued
+        // jobs, and how much simulated time its meters already cover.
+        let mut wake: Vec<f64> = inst_streams
+            .iter()
+            .map(|streams| {
+                streams
+                    .iter()
+                    .map(|&s| next_arrival[s])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let mut queued: Vec<usize> = vec![0; instances.len()];
+        let mut metered: Vec<f64> = vec![0.0; instances.len()];
+
+        // The stream → device mapping is immutable for the whole run:
+        // resolve it once so the hot loop never touches the BTreeMap.
+        let cpu_dev: Vec<usize> = self
+            .streams
+            .iter()
+            .map(|e| self.device_index[&(e.instance, 0)])
+            .collect();
+        let gpu_dev: Vec<Option<usize>> = self
+            .streams
+            .iter()
+            .map(|e| e.gpu_index.map(|g| self.device_index[&(e.instance, 1 + g)]))
+            .collect();
+
+        // Scratch reused across ticks — the per-tick allocations of the
+        // old engine are gone along with the idle scans.  Demand lists
+        // are bucketed per device and cleared after each device's fill,
+        // so gathering is one pass over the instance's streams.
+        let mut dev_demands: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.devices.len()];
+        let mut rates: Vec<f64> = Vec::new();
+        let mut fill_scratch: Vec<usize> = Vec::new();
 
         for step in 0..steps {
             let now = step as f64 * config.dt;
-
-            // 1. Frame arrivals.
-            for (s, exec) in self.streams.iter().enumerate() {
-                while next_arrival[s] <= now {
-                    next_arrival[s] += 1.0 / exec.desired_fps;
-                    if queues[s].len() >= config.queue_cap {
-                        dropped += 1;
-                        continue;
-                    }
-                    queues[s].push(Job {
-                        stream: s,
-                        remaining_cpu: exec.cpu_work,
-                        remaining_gpu: exec.gpu_work,
-                    });
+            for ip in 0..instances.len() {
+                if queued[ip] == 0 && wake[ip] > now {
+                    continue; // idle: nothing queued, no arrival due
                 }
-            }
+                // Credit the skipped idle span before resuming metering.
+                if metered[ip] < now {
+                    let gap = now - metered[ip];
+                    for &dev in &inst_devices[ip] {
+                        self.devices[dev].meter.record(0.0, gap);
+                    }
+                    metered[ip] = now;
+                }
 
-            // 2. Capacity allocation per device (water-filling over the
-            //    *oldest active job of each stream* — frames of one
-            //    stream are processed in order, streams share fairly).
-            // Gather demands: (device, job pointer, parallelism cap).
-            let mut used = vec![0.0f64; self.devices.len()];
-            // Collect per-device active lists.
-            let mut active: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.devices.len()];
-            for (s, exec) in self.streams.iter().enumerate() {
-                if let Some(job) = queues[s].first() {
+                // 1. Frame arrivals.
+                for &s in &inst_streams[ip] {
+                    while next_arrival[s] <= now {
+                        next_arrival[s] += 1.0 / self.streams[s].desired_fps;
+                        if queues[s].len() >= config.queue_cap {
+                            dropped += 1;
+                            continue;
+                        }
+                        queues[s].push(Job {
+                            stream: s,
+                            remaining_cpu: self.streams[s].cpu_work,
+                            remaining_gpu: self.streams[s].gpu_work,
+                        });
+                        queued[ip] += 1;
+                    }
+                }
+
+                // 2. Capacity allocation per device (water-filling over
+                //    the *oldest active job of each stream* — frames of
+                //    one stream are processed in order, streams share
+                //    fairly), then utilization accounting.  One pass
+                //    over the instance's streams buckets demands by
+                //    device (stream order preserved per device, so
+                //    rates are identical to the former global scan).
+                for &s in &inst_streams[ip] {
+                    let Some(job) = queues[s].first() else { continue };
+                    let exec = &self.streams[s];
                     if job.remaining_cpu > 0.0 {
-                        let dev = self.device_index[&(exec.instance, 0)];
-                        active[dev].push((s, exec.cpu_parallelism));
+                        dev_demands[cpu_dev[s]].push((s, exec.cpu_parallelism));
                     }
                     if job.remaining_gpu > 0.0 {
-                        if let Some(g) = exec.gpu_index {
-                            let dev = self.device_index[&(exec.instance, 1 + g)];
-                            active[dev].push((s, exec.gpu_parallelism));
+                        if let Some(gd) = gpu_dev[s] {
+                            dev_demands[gd].push((s, exec.gpu_parallelism));
                         }
                     }
                 }
-            }
-            // Water-fill each device and apply work.
-            for (dev_idx, demands) in active.iter().enumerate() {
-                if demands.is_empty() {
-                    continue;
-                }
-                let rates = water_fill(self.devices[dev_idx].capacity, demands);
-                for ((s, _cap), rate) in demands.iter().zip(&rates) {
-                    let job = &mut queues[*s][0];
-                    let is_cpu_leg = {
-                        let exec = &self.streams[*s];
-                        self.device_index[&(exec.instance, 0)] == dev_idx
-                    };
-                    if is_cpu_leg {
-                        job.remaining_cpu -= rate * config.dt;
-                    } else {
-                        job.remaining_gpu -= rate * config.dt;
+                for &dev in &inst_devices[ip] {
+                    let mut used = 0.0f64;
+                    if !dev_demands[dev].is_empty() {
+                        water_fill_into(
+                            self.devices[dev].capacity,
+                            &dev_demands[dev],
+                            &mut rates,
+                            &mut fill_scratch,
+                        );
+                        for ((s, _cap), rate) in dev_demands[dev].iter().zip(&rates) {
+                            let job = &mut queues[*s][0];
+                            if cpu_dev[*s] == dev {
+                                job.remaining_cpu -= rate * config.dt;
+                            } else {
+                                job.remaining_gpu -= rate * config.dt;
+                            }
+                            used += rate;
+                        }
+                        dev_demands[dev].clear();
                     }
-                    used[dev_idx] += rate;
+                    let device = &mut self.devices[dev];
+                    let util = if device.capacity > 0.0 { used / device.capacity } else { 0.0 };
+                    device.meter.record(util, config.dt);
                 }
-            }
+                metered[ip] = now + config.dt;
 
-            // 3. Completions.
-            for queue in queues.iter_mut() {
-                if let Some(job) = queue.first() {
-                    if job.remaining_cpu <= 1e-12 && job.remaining_gpu <= 1e-12 {
-                        completed[job.stream] += 1;
-                        queue.remove(0);
+                // 3. Completions.
+                for &s in &inst_streams[ip] {
+                    if let Some(job) = queues[s].first() {
+                        if job.remaining_cpu <= 1e-12 && job.remaining_gpu <= 1e-12 {
+                            completed[job.stream] += 1;
+                            queues[s].remove(0);
+                            queued[ip] -= 1;
+                        }
                     }
                 }
-            }
 
-            // 4. Utilization accounting.
-            for (dev_idx, device) in self.devices.iter_mut().enumerate() {
-                let util = if device.capacity > 0.0 {
-                    used[dev_idx] / device.capacity
-                } else {
-                    0.0
-                };
-                device.meter.record(util, config.dt);
+                // 4. Next wake-up: the earliest pending arrival (queued
+                //    work keeps the instance active regardless).
+                wake[ip] = inst_streams[ip]
+                    .iter()
+                    .map(|&s| next_arrival[s])
+                    .fold(f64::INFINITY, f64::min);
+            }
+        }
+
+        // Flush trailing idle time so every meter covers the full run.
+        let end = steps as f64 * config.dt;
+        for ip in 0..instances.len() {
+            if metered[ip] < end {
+                let gap = end - metered[ip];
+                for &dev in &inst_devices[ip] {
+                    self.devices[dev].meter.record(0.0, gap);
+                }
             }
         }
 
@@ -450,7 +541,10 @@ impl Simulation {
 }
 
 /// Water-filling: split `capacity` among demands with per-demand caps.
-/// Returns the rate granted to each demand.
+/// Returns the rate granted to each demand.  (Reference wrapper kept
+/// for the unit tests; both engines run the allocation-free
+/// [`water_fill_into`] in their hot loops.)
+#[cfg_attr(not(test), allow(dead_code))]
 pub(crate) fn water_fill(capacity: f64, demands: &[(usize, f64)]) -> Vec<f64> {
     let mut rates = Vec::new();
     let mut open = Vec::new();

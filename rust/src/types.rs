@@ -198,21 +198,180 @@ impl DimLayout {
     }
 }
 
+/// Dimensions a [`FloatVec`] stores without touching the heap: the
+/// paper's layout needs `2 + 2·GPUs` dims, so 10 covers catalogs up to
+/// four GPUs per instance.
+const INLINE_DIMS: usize = 10;
+
+/// The `fits` comparison tolerance, shared by every code path that must
+/// agree with [`ResourceVec::fits`] bit-for-bit: the residual index's
+/// subtree pruning, the clone-free best-fit slack, and the aggregated
+/// run arithmetic.  One constant, so the tolerance cannot drift apart.
+pub(crate) const FIT_EPS: f64 = 1e-9;
+
+/// Inline-capacity backing store for [`ResourceVec`].
+///
+/// The packing hot loops clone, subtract, and compare requirement
+/// vectors millions of times per solve; with `Vec<f64>` every clone was
+/// a heap allocation.  `FloatVec` keeps up to [`FloatVec::INLINE`]
+/// dimensions inline and spills to the heap only above that — low-dim
+/// vectors clone as a memcpy with no allocator traffic.  It derefs to
+/// `[f64]`, so slice APIs (`iter`, `len`, indexing) work unchanged, and
+/// it collects from `f64` iterators like `Vec` does.
+#[derive(Clone, Default)]
+pub struct FloatVec {
+    len: u32,
+    inline: [f64; INLINE_DIMS],
+    /// Heap storage, used only when `len > INLINE`.
+    spill: Vec<f64>,
+}
+
+impl FloatVec {
+    /// Dimensions stored without touching the heap.
+    pub const INLINE: usize = INLINE_DIMS;
+
+    /// A vector of `len` copies of `value`.
+    pub fn from_elem(value: f64, len: usize) -> FloatVec {
+        if len <= Self::INLINE {
+            let mut inline = [0.0; Self::INLINE];
+            inline[..len].fill(value);
+            FloatVec { len: len as u32, inline, spill: Vec::new() }
+        } else {
+            FloatVec {
+                len: len as u32,
+                inline: [0.0; Self::INLINE],
+                spill: vec![value; len],
+            }
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        let len = self.len as usize;
+        if len <= Self::INLINE {
+            &self.inline[..len]
+        } else {
+            &self.spill
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        let len = self.len as usize;
+        if len <= Self::INLINE {
+            &mut self.inline[..len]
+        } else {
+            &mut self.spill
+        }
+    }
+
+    /// Append one value, migrating inline storage to the heap at the
+    /// inline-capacity boundary.
+    pub fn push(&mut self, value: f64) {
+        let len = self.len as usize;
+        if len < Self::INLINE {
+            self.inline[len] = value;
+        } else {
+            if len == Self::INLINE {
+                self.spill = self.inline.to_vec();
+            }
+            self.spill.push(value);
+        }
+        self.len += 1;
+    }
+}
+
+impl std::ops::Deref for FloatVec {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for FloatVec {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        self.as_mut_slice()
+    }
+}
+
+impl From<&[f64]> for FloatVec {
+    fn from(v: &[f64]) -> FloatVec {
+        let mut out = FloatVec::default();
+        for &x in v {
+            out.push(x);
+        }
+        out
+    }
+}
+
+impl From<Vec<f64>> for FloatVec {
+    fn from(v: Vec<f64>) -> FloatVec {
+        if v.len() > INLINE_DIMS {
+            // Keep the existing allocation as the spill storage.
+            FloatVec { len: v.len() as u32, inline: [0.0; INLINE_DIMS], spill: v }
+        } else {
+            FloatVec::from(v.as_slice())
+        }
+    }
+}
+
+impl FromIterator<f64> for FloatVec {
+    fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> FloatVec {
+        let mut out = FloatVec::default();
+        for x in iter {
+            out.push(x);
+        }
+        out
+    }
+}
+
+impl<'a> IntoIterator for &'a FloatVec {
+    type Item = &'a f64;
+    type IntoIter = std::slice::Iter<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl PartialEq for FloatVec {
+    fn eq(&self, other: &FloatVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f64>> for FloatVec {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f64]> for FloatVec {
+    fn eq(&self, other: &[f64]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl fmt::Debug for FloatVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
 /// A resource vector: requirements of a stream or capacity of an instance.
 ///
 /// Units are absolute (CPU cores, GB, GPU cores, GB) rather than the
 /// paper's instance-relative percentages, so the same requirement vector
-/// is valid against any instance type.
+/// is valid against any instance type.  Backed by [`FloatVec`], so
+/// paper-layout vectors (≤ 10 dims) never touch the heap — the packing
+/// engines clone these in their innermost loops.
 #[derive(Clone, PartialEq, Debug, Default)]
-pub struct ResourceVec(pub Vec<f64>);
+pub struct ResourceVec(pub FloatVec);
 
 impl ResourceVec {
     pub fn zeros(dims: usize) -> Self {
-        ResourceVec(vec![0.0; dims])
+        ResourceVec(FloatVec::from_elem(0.0, dims))
     }
 
     pub fn from_slice(v: &[f64]) -> Self {
-        ResourceVec(v.to_vec())
+        ResourceVec(FloatVec::from(v))
     }
 
     pub fn dims(&self) -> usize {
@@ -259,11 +418,10 @@ impl ResourceVec {
     /// equal to capacity (e.g. exactly 90% headroom) must count as fitting.
     pub fn fits(&self, capacity: &ResourceVec) -> bool {
         debug_assert_eq!(self.dims(), capacity.dims());
-        const EPS: f64 = 1e-9;
         self.0
             .iter()
             .zip(&capacity.0)
-            .all(|(need, cap)| *need <= cap + EPS)
+            .all(|(need, cap)| *need <= cap + FIT_EPS)
     }
 
     /// Max over dimensions of `self[d] / denom[d]` (0/0 counts as 0).
@@ -357,6 +515,55 @@ mod tests {
         let cap = ResourceVec::from_slice(&[0.3]);
         assert!(need.fits(&cap));
         assert!(!ResourceVec::from_slice(&[0.31]).fits(&cap));
+    }
+
+    #[test]
+    fn floatvec_inline_and_spill_round_trip() {
+        // Below the inline capacity: no heap storage, slice view exact.
+        let small: FloatVec = (0..4).map(|i| i as f64).collect();
+        assert_eq!(small.len(), 4);
+        assert_eq!(small, vec![0.0, 1.0, 2.0, 3.0]);
+        // Crossing the boundary migrates values losslessly to the heap.
+        let mut v = FloatVec::default();
+        for i in 0..(FloatVec::INLINE + 3) {
+            v.push(i as f64);
+        }
+        assert_eq!(v.len(), FloatVec::INLINE + 3);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as f64);
+        }
+        // Spilled vectors still clone, compare, and mutate correctly.
+        let mut w = v.clone();
+        assert_eq!(w, v);
+        w[0] = 99.0;
+        assert_ne!(w, v);
+        assert_eq!(format!("{:?}", FloatVec::from_elem(1.5, 2)), "[1.5, 1.5]");
+    }
+
+    #[test]
+    fn floatvec_from_elem_spans_the_boundary() {
+        for len in [0, 1, FloatVec::INLINE, FloatVec::INLINE + 1, 25] {
+            let v = FloatVec::from_elem(2.5, len);
+            assert_eq!(v.len(), len);
+            assert!(v.iter().all(|x| *x == 2.5));
+            let rv = ResourceVec::zeros(len);
+            assert_eq!(rv.dims(), len);
+            assert!(rv.is_zero());
+        }
+    }
+
+    #[test]
+    fn resource_vec_ops_survive_spill_dims() {
+        // Arithmetic must behave identically above the inline capacity
+        // (a DimLayout with >4 GPUs spills to the heap).
+        let dims = FloatVec::INLINE + 4;
+        let mut a = ResourceVec(FloatVec::from_elem(2.0, dims));
+        let b = ResourceVec(FloatVec::from_elem(0.5, dims));
+        a.add_assign(&b);
+        assert!(a.0.iter().all(|x| *x == 2.5));
+        a.sub_assign(&b);
+        assert!(a.fits(&ResourceVec(FloatVec::from_elem(2.0, dims))));
+        assert_eq!(a.max_ratio(&ResourceVec(FloatVec::from_elem(4.0, dims))), 0.5);
     }
 
     #[test]

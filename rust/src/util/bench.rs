@@ -57,6 +57,15 @@ pub fn peak_rss_bytes() -> Option<u64> {
     None
 }
 
+/// Reset the peak-RSS high-water mark to the *current* resident size
+/// (Linux `/proc/self/clear_refs`, code 5), so a subsequent
+/// [`peak_rss_bytes`] reflects only the work since the reset instead of
+/// the process-lifetime maximum.  Returns `false` where unsupported —
+/// callers should then treat the reading as cumulative.
+pub fn reset_peak_rss() -> bool {
+    std::fs::write("/proc/self/clear_refs", "5").is_ok()
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -194,6 +203,10 @@ mod tests {
         // the probe degrades to None instead of failing.
         if let Some(rss) = peak_rss_bytes() {
             assert!(rss > 0);
+            // Resetting (where supported) re-bases to current RSS; the
+            // reading stays sane either way.
+            let _ = reset_peak_rss();
+            assert!(peak_rss_bytes().unwrap() > 0);
         }
     }
 

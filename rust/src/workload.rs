@@ -97,6 +97,13 @@ pub struct FleetSpec {
     pub vgg_fps: (f64, f64),
     /// Desired-rate range (fps) for ZF streams.
     pub zf_fps: (f64, f64),
+    /// Quantize drawn rates to this many discrete levels per program
+    /// range (`None` = continuous).  Real deployments configure a
+    /// handful of analysis rates across thousands of cameras, which is
+    /// exactly the item multiplicity `packing::aggregate` exploits —
+    /// quantized fleets collapse to `programs × levels × sizes`
+    /// requirement classes regardless of camera count.
+    pub rate_levels: Option<u32>,
     /// Frame sizes to draw from (uniformly).
     pub frame_sizes: Vec<FrameSize>,
     pub catalog: Catalog,
@@ -110,6 +117,7 @@ impl FleetSpec {
             vgg_fraction: 0.5,
             vgg_fps: (0.05, 3.0),
             zf_fps: (0.1, 8.0),
+            rate_levels: None,
             frame_sizes: vec![VGA],
             catalog: Catalog::paper_experiments(),
         }
@@ -132,6 +140,15 @@ impl FleetSpec {
 
     pub fn zf_fps(mut self, lo: f64, hi: f64) -> FleetSpec {
         self.zf_fps = (lo, hi);
+        self
+    }
+
+    /// Quantize rates to `levels` discrete values per program range —
+    /// the high-multiplicity fleet shape (identical streams collapse
+    /// into requirement classes the aggregated solver packs with
+    /// counts).
+    pub fn rate_levels(mut self, levels: u32) -> FleetSpec {
+        self.rate_levels = Some(levels);
         self
     }
 
@@ -161,6 +178,17 @@ impl FleetSpec {
                     Program::Zf => self.zf_fps,
                 };
                 let fps = rng.range_f64(lo, hi);
+                // Snap to the level midpoint: the same (range, level)
+                // always produces bit-identical rates, so equal-level
+                // streams share one requirement class.
+                let fps = match self.rate_levels {
+                    Some(k) if k > 0 && hi > lo => {
+                        let step = (hi - lo) / k as f64;
+                        let level = ((fps - lo) / step).floor().min((k - 1) as f64);
+                        lo + (level + 0.5) * step
+                    }
+                    _ => fps,
+                };
                 let size = *rng.choose(&self.frame_sizes);
                 StreamSpec::new(Camera::new(i, size), program, fps)
             })
@@ -225,6 +253,38 @@ mod tests {
             let placed: usize = plan.instances.iter().map(|i| i.streams.len()).sum();
             assert_eq!(placed, 60);
         }
+    }
+
+    #[test]
+    fn rate_levels_collapse_the_fleet_into_classes() {
+        let fleet = FleetSpec::new(500).seed(9).rate_levels(4).build();
+        let mut rates: Vec<(Program, u64)> = fleet
+            .streams
+            .iter()
+            .map(|s| (s.program, s.desired_fps.to_bits()))
+            .collect();
+        rates.sort_unstable();
+        rates.dedup();
+        // At most programs × levels distinct (program, rate) pairs.
+        assert!(rates.len() <= 8, "got {} distinct rates", rates.len());
+        // Levels stay inside the configured ranges.
+        for s in &fleet.streams {
+            let (lo, hi) = match s.program {
+                Program::Vgg16 => (0.05, 3.0),
+                Program::Zf => (0.1, 8.0),
+            };
+            assert!(s.desired_fps > lo && s.desired_fps < hi);
+        }
+        // Continuous fleets stay (essentially) all-distinct.
+        let continuous = FleetSpec::new(500).seed(9).build();
+        let mut cr: Vec<u64> = continuous
+            .streams
+            .iter()
+            .map(|s| s.desired_fps.to_bits())
+            .collect();
+        cr.sort_unstable();
+        cr.dedup();
+        assert!(cr.len() > 400);
     }
 
     #[test]

@@ -96,6 +96,8 @@ impl WorkloadTrace {
     pub const DIURNAL_CAMERAS: u32 = 32;
     pub const CHURN_CAMERAS: u32 = 40;
     pub const CHURN_EPOCHS: usize = 8;
+    /// Discrete rate levels of the churn pool (see [`FleetSpec::rate_levels`]).
+    pub const CHURN_RATE_LEVELS: u32 = 6;
 
     /// Resolve a builtin generator by name (the CLI's `--trace` values).
     pub fn builtin(name: &str, seed: u64) -> Result<WorkloadTrace> {
@@ -185,7 +187,15 @@ impl WorkloadTrace {
     pub fn camera_churn(cameras: u32, epochs: usize, seed: u64) -> WorkloadTrace {
         assert!(cameras > 0, "churn needs a base camera count");
         let mut rng = Rng::new(seed ^ 0x5ca1ab1e);
-        let pool = FleetSpec::new(cameras * 2).seed(seed).build();
+        // Quantized rates: a churn fleet models one operator's camera
+        // network, which configures a handful of analysis rates rather
+        // than a continuum — and gives the trace the item multiplicity
+        // the aggregated solver path (`packing::aggregate`) exploits,
+        // so `--trace churn --solver portfolio` exercises aggregation.
+        let pool = FleetSpec::new(cameras * 2)
+            .seed(seed)
+            .rate_levels(Self::CHURN_RATE_LEVELS)
+            .build();
         let mut trace =
             WorkloadTrace::new(format!("churn-{seed}-{cameras}x{epochs}"), pool.catalog.clone());
         let mut count = cameras as i64;
@@ -346,14 +356,28 @@ mod tests {
         let counts: Vec<usize> = t.epochs.iter().map(|e| e.streams.len()).collect();
         assert!(counts.iter().all(|&n| (20..=80).contains(&n)), "{counts:?}");
         assert!(counts.windows(2).any(|w| w[0] != w[1]), "{counts:?}");
-        // Stable identity: epoch populations are prefixes of one pool.
-        let pool = FleetSpec::new(80).seed(11).build();
+        // Stable identity: epoch populations are prefixes of one pool
+        // (the quantized-rate pool the aggregated solver exploits).
+        let pool = FleetSpec::new(80)
+            .seed(11)
+            .rate_levels(WorkloadTrace::CHURN_RATE_LEVELS)
+            .build();
         for e in &t.epochs {
             for (s, p) in e.streams.iter().zip(&pool.streams) {
                 assert_eq!(s.camera.id, p.camera.id);
                 assert_eq!(s.desired_fps, p.desired_fps);
             }
         }
+        // The pool collapses to few requirement classes: every epoch is
+        // high-multiplicity once it has more streams than classes.
+        let mut rates: Vec<(crate::types::Program, u64)> = pool
+            .streams
+            .iter()
+            .map(|s| (s.program, s.desired_fps.to_bits()))
+            .collect();
+        rates.sort_unstable();
+        rates.dedup();
+        assert!(rates.len() <= 2 * WorkloadTrace::CHURN_RATE_LEVELS as usize);
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! invariants on every random instance (the PR's acceptance criteria).
 
 use camcloud::packing::{
-    certified_lower_bound, BfdSolver, BinType, ExactSolver, FfdSolver, Item, MvbpProblem,
-    PortfolioSolver, SolveBudget, Solver, SolverChoice,
+    aggregation_pays, certified_lower_bound, group_classes, solve_greedy,
+    solve_greedy_aggregated, BfdSolver, BinType, ExactSolver, FfdSolver, Greedy, Item,
+    ItemOrder, MvbpProblem, PortfolioSolver, SolveBudget, Solver, SolverChoice,
 };
 use camcloud::types::{Dollars, ResourceVec};
 use camcloud::util::proptest::{check, Config};
@@ -124,6 +125,141 @@ fn lower_bound_never_exceeds_cost_on_random_instances() {
                 .ok_or("exact must solve a feasible instance")?;
             if lb > exact.cost {
                 return Err(format!("bound {lb} exceeds exact optimum {}", exact.cost));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random *high-multiplicity* MVBP instance: 2-5 distinct item
+/// templates, each duplicated as a contiguous block of 5-40 copies —
+/// the fleet shape (few requirement classes, many streams) the
+/// class-aggregation layer exploits.  Randomly drawn requirements make
+/// template measures distinct, which is the regime where aggregated
+/// packing provably reproduces per-item packing.
+fn random_high_multiplicity(rng: &mut Rng) -> MvbpProblem {
+    let dims = 2;
+    let n_types = 1 + rng.below(3) as usize;
+    let bin_types: Vec<BinType> = (0..n_types)
+        .map(|t| BinType {
+            name: format!("t{t}"),
+            cost: Dollars::from_f64(rng.range_f64(0.3, 3.0)),
+            capacity: ResourceVec((0..dims).map(|_| rng.range_f64(5.0, 14.0)).collect()),
+        })
+        .collect();
+    let n_templates = 2 + rng.below(4) as usize;
+    let mut items = Vec::new();
+    for t in 0..n_templates {
+        let n_choices = 1 + rng.below(3) as usize;
+        let choices: Vec<ResourceVec> = (0..n_choices)
+            .map(|_| ResourceVec((0..dims).map(|_| rng.range_f64(0.3, 4.5)).collect()))
+            .collect();
+        let copies = 5 + rng.below(36) as usize;
+        for i in 0..copies {
+            items.push(Item {
+                id: format!("c{t}-{i}"),
+                choices: choices.clone(),
+            });
+        }
+    }
+    MvbpProblem { dims, bin_types, items }
+}
+
+/// Aggregated-class packing must cost exactly what per-item packing
+/// costs, for every greedy rule and ordering, and for the portfolio —
+/// and the expanded solutions must pass full per-bin validation.
+#[test]
+fn aggregated_packing_matches_per_item_on_high_multiplicity_instances() {
+    check(
+        "aggregated-equals-per-item",
+        Config { cases: 32, ..Default::default() },
+        random_high_multiplicity,
+        |p| {
+            let classes = group_classes(p);
+            if !aggregation_pays(classes.len(), p.items.len()) {
+                return Err("generator must produce high-multiplicity instances".to_string());
+            }
+            for greedy in [Greedy::FirstFit, Greedy::BestFit] {
+                for order in ItemOrder::ALL {
+                    let per_item = solve_greedy(p, greedy, order)
+                        .ok_or("per-item greedy must pack a feasible instance")?;
+                    let agg = solve_greedy_aggregated(p, greedy, order)
+                        .ok_or("aggregated greedy must pack a feasible instance")?;
+                    agg.validate(p)
+                        .map_err(|e| format!("{greedy:?}/{order:?}: expansion invalid: {e}"))?;
+                    if agg.cost(p) != per_item.cost(p) {
+                        return Err(format!(
+                            "{greedy:?}/{order:?}: aggregated {} vs per-item {}",
+                            agg.cost(p),
+                            per_item.cost(p)
+                        ));
+                    }
+                    if agg.bins_per_type(p) != per_item.bins_per_type(p) {
+                        return Err(format!("{greedy:?}/{order:?}: bin mix diverged"));
+                    }
+                }
+            }
+            // Portfolio: arms-only comparison (exact polish disabled via
+            // a zero cutoff) — the aggregated and per-item racing paths
+            // must land on the same cost and both certify.
+            let budget = SolveBudget {
+                exact_cutoff: 0,
+                node_budget: 40_000,
+                ..Default::default()
+            };
+            let agg = PortfolioSolver::default()
+                .solve(p, &budget)
+                .ok_or("aggregated portfolio must solve")?;
+            let per_item = PortfolioSolver { aggregate: false, ..Default::default() }
+                .solve(p, &budget)
+                .ok_or("per-item portfolio must solve")?;
+            agg.solution
+                .validate(p)
+                .map_err(|e| format!("aggregated portfolio invalid: {e}"))?;
+            if agg.cost != per_item.cost {
+                return Err(format!(
+                    "portfolio: aggregated {} vs per-item {}",
+                    agg.cost, per_item.cost
+                ));
+            }
+            if agg.lower_bound > agg.cost || !agg.gap().is_finite() {
+                return Err("aggregated portfolio certificate broken".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Grouping invariants on random high-multiplicity instances: classes
+/// partition the items, members ascend, and every member's choice list
+/// is bit-identical to its representative's.
+#[test]
+fn class_grouping_partitions_items_exactly() {
+    check(
+        "class-grouping-partition",
+        Config { cases: 24, ..Default::default() },
+        random_high_multiplicity,
+        |p| {
+            let classes = group_classes(p);
+            let mut seen = vec![false; p.items.len()];
+            for class in &classes {
+                let rep = &p.items[class.rep];
+                for &m in &class.members {
+                    let m = m as usize;
+                    if seen[m] {
+                        return Err(format!("item {m} in two classes"));
+                    }
+                    seen[m] = true;
+                    if p.items[m].choices != rep.choices {
+                        return Err(format!("item {m} grouped with a different template"));
+                    }
+                }
+                if !class.members.windows(2).all(|w| w[0] < w[1]) {
+                    return Err("members must ascend".to_string());
+                }
+            }
+            if !seen.iter().all(|s| *s) {
+                return Err("classes must cover every item".to_string());
             }
             Ok(())
         },
