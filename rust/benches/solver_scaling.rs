@@ -34,13 +34,32 @@
 //! across PRs.  Env knobs for CI smoke runs: `BENCH5_MAX_N` caps the
 //! instance sizes, `BENCH5_SMOKE` records without asserting the timing
 //! gates (shared runners are too noisy to gate on).
+//!
+//! The suite also writes `target/BENCH_6.json` covering the exact
+//! search and certificate work:
+//!
+//! * on a seeded 64-class / 4,800-item fleet, class-multiplicity
+//!   branching must prove the same optimum as per-item branching in at
+//!   least 10x fewer nodes (node counts are deterministic, so this
+//!   gate holds in smoke runs too);
+//! * with the DFF bound family ablated (`set_dff_disabled`), the mean
+//!   certified gap over the churn epochs must not beat the full bound's
+//!   mean gap (strictly worse outside `BENCH6_SMOKE`);
+//! * a reactive autoscale run over a churn trace must need no *more*
+//!   cold solves with DFF certificates than without them (strictly
+//!   fewer outside `BENCH6_SMOKE`) — the refresh-skip gate only has
+//!   teeth when the bound is tight.
 
-use camcloud::coordinator::Coordinator;
+use camcloud::coordinator::{
+    AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, Coordinator, ScalePolicy, SolveMode,
+};
 use camcloud::manager::{AllocationPlan, Strategy};
 use camcloud::packing::{
-    group_classes, solve_greedy, solve_greedy_aggregated, BfdSolver, Greedy, ItemOrder,
-    PortfolioSolver, SolveBudget, Solver,
+    certified_lower_bound, group_classes, set_dff_disabled, solve_greedy, solve_greedy_aggregated,
+    BfdSolver, BinType, BranchAndBound, Greedy, Item, ItemOrder, MvbpProblem, PortfolioSolver,
+    SolveBudget, Solver,
 };
+use camcloud::types::{Dollars, ResourceVec};
 use camcloud::util::bench::{peak_rss_bytes, Bench};
 use camcloud::util::json::Json;
 use camcloud::workload::trace::WorkloadTrace;
@@ -388,6 +407,182 @@ fn main() {
         ]),
     ));
 
+    // ----- BENCH_6: class-multiplicity vs per-item exact search -------
+    // Seeded 64-class / 4,800-item fleet.  The cheap small bin wins
+    // `best_new_bin`, so the BFD incumbent starts at $960 while the
+    // optimum is 160 big bins at $400 — both searches must close that
+    // gap and prove it under one node cap, the class search in >=10x
+    // fewer nodes.  Node counts are deterministic, so this gate holds
+    // in smoke runs too.
+    let smoke6 = smoke || std::env::var("BENCH6_SMOKE").is_ok();
+    let mut bench6_extra: Vec<(String, Json)> = Vec::new();
+    {
+        let problem = class_gate_problem();
+        let class_bb = BranchAndBound { node_budget: 200_000, ..BranchAndBound::default() };
+        let per_item_bb = BranchAndBound {
+            node_budget: 200_000,
+            per_item: true,
+            ..BranchAndBound::default()
+        };
+        let mut class = None;
+        let class_s = bench
+            .measure("exact_class_64c", 1, 3, || {
+                class = Some(class_bb.solve(&problem).expect("class search solves"));
+            })
+            .p50();
+        let mut per_item = None;
+        let per_item_s = bench
+            .measure("exact_per_item_64c", 1, 3, || {
+                per_item = Some(per_item_bb.solve(&problem).expect("per-item search solves"));
+            })
+            .p50();
+        let (class, per_item) = (class.unwrap(), per_item.unwrap());
+        class.solution.validate(&problem).expect("class expansion validates");
+        per_item.solution.validate(&problem).expect("per-item solution validates");
+        assert!(class.proven_optimal, "class search must prove the 64-class optimum");
+        assert!(per_item.proven_optimal, "per-item search must prove the 64-class optimum");
+        assert_eq!(
+            class.solution.cost(&problem),
+            per_item.solution.cost(&problem),
+            "the two exact searches must land on the same optimum"
+        );
+        let node_ratio = per_item.nodes_explored as f64 / class.nodes_explored.max(1) as f64;
+        bench.record("exact_class_nodes_64c", class.nodes_explored as f64);
+        bench.record("exact_per_item_nodes_64c", per_item.nodes_explored as f64);
+        bench.record("exact_node_ratio_64c", node_ratio);
+        assert!(
+            node_ratio >= 10.0,
+            "class branching must prove the 64-class optimum in >=10x fewer nodes than \
+             per-item branching, got {node_ratio:.1}x ({} vs {} nodes)",
+            class.nodes_explored,
+            per_item.nodes_explored
+        );
+        bench6_extra.push((
+            "exact_class_search".to_string(),
+            Json::obj(vec![
+                ("items".to_string(), Json::Num(problem.items.len() as f64)),
+                ("classes".to_string(), Json::Num(64.0)),
+                ("class_nodes".to_string(), Json::Num(class.nodes_explored as f64)),
+                ("per_item_nodes".to_string(), Json::Num(per_item.nodes_explored as f64)),
+                ("node_ratio".to_string(), Json::Num(node_ratio)),
+                ("class_p50_s".to_string(), Json::Num(class_s)),
+                ("per_item_p50_s".to_string(), Json::Num(per_item_s)),
+                (
+                    "optimal_cost".to_string(),
+                    Json::Num(class.solution.cost(&problem).as_f64()),
+                ),
+            ]),
+        ));
+    }
+
+    // ----- BENCH_6: DFF-vs-legacy certified gaps on churn epochs ------
+    // Same BFD incumbent both times; only the bound family changes, so
+    // the mean certified gap isolates what the DFF bounds buy.
+    {
+        let mut legacy_gaps: Vec<f64> = Vec::new();
+        let mut full_gaps: Vec<f64> = Vec::new();
+        for (i, mgr) in managers.iter().enumerate() {
+            let built = mgr
+                .build_problem(&trace.epochs[i].streams, Strategy::St3)
+                .expect("churn epoch builds");
+            let cost = BfdSolver
+                .solve(&built.problem, &budget)
+                .expect("bfd solves churn epoch")
+                .cost
+                .as_f64();
+            set_dff_disabled(true);
+            let legacy = certified_lower_bound(&built.problem).as_f64();
+            set_dff_disabled(false);
+            let full = certified_lower_bound(&built.problem).as_f64();
+            legacy_gaps.push((cost - legacy) / cost);
+            full_gaps.push((cost - full) / cost);
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (legacy_mean, full_mean) = (mean(&legacy_gaps), mean(&full_gaps));
+        bench.record("mean_gap_legacy_bound", legacy_mean);
+        bench.record("mean_gap_dff_bound", full_mean);
+        assert!(
+            full_mean <= legacy_mean + 1e-12,
+            "the DFF family must never weaken the mean certified gap: \
+             {full_mean:.4} vs legacy {legacy_mean:.4}"
+        );
+        if !smoke6 {
+            assert!(
+                full_mean < legacy_mean,
+                "the DFF family must strictly shrink the mean certified gap on the churn \
+                 trace: {full_mean:.4} vs legacy {legacy_mean:.4}"
+            );
+        }
+        bench6_extra.push((
+            "gap_ablation".to_string(),
+            Json::obj(vec![
+                ("epochs".to_string(), Json::Num(legacy_gaps.len() as f64)),
+                ("mean_gap_legacy".to_string(), Json::Num(legacy_mean)),
+                ("mean_gap_dff".to_string(), Json::Num(full_mean)),
+            ]),
+        ));
+    }
+
+    // ----- BENCH_6: certificate-gated refresh skips -------------------
+    // Two reactive autoscale runs over one churn trace, identical except
+    // for the bound family.  Tighter certificates let the periodic
+    // refresh keep warm plans (`refresh_skip_gap`), so the DFF run must
+    // need no more cold solves than the ablated run.
+    {
+        let (cameras, epochs) = if smoke6 { (120, 10) } else { (600, 24) };
+        let churn = WorkloadTrace::camera_churn(cameras, epochs, 3);
+        let config = AutoscaleConfig { cold_refresh_every: 4, ..AutoscaleConfig::default() };
+        let runner = AutoscaleRunner::new(&coordinator).with_config(config);
+        set_dff_disabled(true);
+        let ablated = runner
+            .run(&churn, ScalePolicy::Reactive)
+            .expect("ablated reactive run completes");
+        set_dff_disabled(false);
+        let certified = runner
+            .run(&churn, ScalePolicy::Reactive)
+            .expect("certified reactive run completes");
+        let cold_solves = |run: &AutoscaleOutcome| {
+            run.epochs.iter().filter(|e| e.mode != SolveMode::Warm).count()
+        };
+        let (ablated_cold, certified_cold) = (cold_solves(&ablated), cold_solves(&certified));
+        bench.record("reactive_cold_solves_legacy", ablated_cold as f64);
+        bench.record("reactive_cold_solves_dff", certified_cold as f64);
+        assert!(
+            certified_cold <= ablated_cold,
+            "DFF certificates must not add cold solves: {certified_cold} vs {ablated_cold}"
+        );
+        if !smoke6 {
+            assert!(
+                certified_cold < ablated_cold,
+                "DFF certificates must skip at least one periodic refresh on the churn \
+                 trace: {certified_cold} vs {ablated_cold} cold solves"
+            );
+        }
+        bench6_extra.push((
+            "refresh_ablation".to_string(),
+            Json::obj(vec![
+                ("cameras".to_string(), Json::Num(cameras as f64)),
+                ("epochs".to_string(), Json::Num(epochs as f64)),
+                ("cold_solves_legacy".to_string(), Json::Num(ablated_cold as f64)),
+                ("cold_solves_dff".to_string(), Json::Num(certified_cold as f64)),
+            ]),
+        ));
+    }
+
+    // ----- BENCH_6.json: exact search + certificate record ------------
+    let mut record6 = vec![(
+        "suite".to_string(),
+        Json::Str("exact_and_certificates".to_string()),
+    )];
+    record6.extend(bench6_extra);
+    let json6 = Json::obj(record6).to_pretty();
+    let path6 = std::path::Path::new("target/BENCH_6.json");
+    if let Some(parent) = path6.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(path6, format!("{json6}\n")).expect("write BENCH_6.json");
+    println!("wrote {}", path6.display());
+
     // ----- BENCH_5.json: the machine-readable perf trajectory ---------
     // No top-level peak-RSS field: VmHWM is re-based per section, so a
     // suite-wide reading would cover only the tail since the last reset
@@ -406,4 +601,36 @@ fn main() {
     println!("wrote {}", path.display());
 
     bench.finish();
+}
+
+/// Seeded 64-class / 4,800-item instance for the exact-search gate.
+/// Every stream needs 2.0 of the binding dimension; classes differ only
+/// by a tiny second-dimension epsilon, so per-item branching sees 4,800
+/// distinct items while class branching sees 64 multiplicity classes.
+/// The cheap small bin baits `best_new_bin`, making the BFD incumbent
+/// $960 (960 small bins) against a $400 optimum (160 big bins) — the
+/// searches must close a real gap rather than inherit the answer.
+fn class_gate_problem() -> MvbpProblem {
+    let bin_types = vec![
+        BinType {
+            name: "big".to_string(),
+            cost: Dollars::from_f64(2.5),
+            capacity: ResourceVec::from_slice(&[60.0, 1.0]),
+        },
+        BinType {
+            name: "small".to_string(),
+            cost: Dollars::from_f64(1.0),
+            capacity: ResourceVec::from_slice(&[10.0, 1.0]),
+        },
+    ];
+    let mut items = Vec::new();
+    for class in 0..64u32 {
+        for copy in 0..75 {
+            items.push(Item {
+                id: format!("c{class}-{copy}"),
+                choices: vec![ResourceVec::from_slice(&[2.0, f64::from(class + 1) * 1e-6])],
+            });
+        }
+    }
+    MvbpProblem { dims: 2, bin_types, items }
 }

@@ -48,7 +48,12 @@
 //! when the warm plan's certified gap drifts more than
 //! [`AutoscaleConfig::cold_refresh_drift`] above the last cold
 //! solve's) so warm-start ratcheting is bounded *and visible* in the
-//! per-epoch report.
+//! per-epoch report.  A periodic refresh is *certificate-gated*: the
+//! warm repack runs first, and when its certified gap is within
+//! [`AutoscaleConfig::refresh_skip_gap`] the cold solve is provably
+//! near-redundant and skipped — tighter lower bounds (the DFF family)
+//! therefore translate directly into fewer cold solves on churny
+//! traces.
 //!
 //! Four [`ScalePolicy`]s make the cost/performance trade-off
 //! measurable:
@@ -80,6 +85,7 @@ use crate::packing::SolverKind;
 use crate::sched::{SimConfig, SimReport};
 use crate::types::Dollars;
 use crate::util::error::{anyhow, Context, Result};
+use crate::util::profiling;
 use crate::workload::trace::WorkloadTrace;
 
 /// Provisioning policy compared by the autoscale harness.
@@ -166,14 +172,22 @@ pub struct AutoscaleConfig {
     /// Hysteresis planning horizon in hours; `None` = the remaining
     /// trace duration at each decision point.
     pub horizon_hours: Option<f64>,
-    /// Force a cold solve after this many consecutive warm-served
-    /// epochs (0 disables the periodic refresh).
+    /// Trigger a periodic refresh after this many consecutive
+    /// warm-served epochs (0 disables it).  The refresh cold-solves
+    /// unless the epoch's warm repack certifies a gap within
+    /// [`AutoscaleConfig::refresh_skip_gap`].
     pub cold_refresh_every: usize,
     /// Force a cold solve when a warm plan's certified gap exceeds the
     /// last cold solve's by more than this (cumulative-drift anchor;
     /// the per-epoch `warm_gap_margin` gate in `allocate_warm` only
     /// bounds drift *per step* and can ratchet).
     pub cold_refresh_drift: f64,
+    /// At a periodic refresh, keep the warm plan (and skip the cold
+    /// solve) when its certified gap is at most this: the certificate
+    /// proves a cold solve could recoup no more.  The knob only has
+    /// teeth when the lower bound is tight — the DFF certificates are
+    /// what let churny mixed-catalog traces skip most refresh solves.
+    pub refresh_skip_gap: f64,
 }
 
 impl Default for AutoscaleConfig {
@@ -184,6 +198,7 @@ impl Default for AutoscaleConfig {
             horizon_hours: None,
             cold_refresh_every: 8,
             cold_refresh_drift: 0.15,
+            refresh_skip_gap: 0.05,
         }
     }
 }
@@ -440,6 +455,10 @@ struct PlanStage<'a> {
 
 impl PlanStage<'_> {
     fn plan(&self, i: usize, seed: &PlanSeed) -> Result<PlannedEpoch> {
+        profiling::time_phase("epoch:solve", || self.plan_inner(i, seed))
+    }
+
+    fn plan_inner(&self, i: usize, seed: &PlanSeed) -> Result<PlannedEpoch> {
         match self.policy {
             ScalePolicy::Oracle => {
                 let epoch = &self.trace.epochs[i];
@@ -477,10 +496,27 @@ impl PlanStage<'_> {
         } else if self.config.cold_refresh_every > 0
             && seed.warm_streak >= self.config.cold_refresh_every
         {
+            // Periodic refresh, warm-first: a warm repack whose
+            // certified gap is within `refresh_skip_gap` proves a cold
+            // solve could recoup at most that much — keep it and skip
+            // the cold solve.  Only a warm plan that declines or
+            // certifies worse pays for one.
             let plan = pw
-                .allocate(strategy)
+                .manager()
+                .allocate_warm(&epoch.streams, strategy, &seed.incumbent)
                 .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-            (plan, SolveMode::ColdRefresh)
+            if plan.solver != SolverKind::WarmStart {
+                // allocate_warm already fell back to a cold solve on
+                // its own gate; that is the refresh.
+                (plan, SolveMode::ColdRefresh)
+            } else if plan.gap().map_or(false, |g| g <= self.config.refresh_skip_gap) {
+                (plan, SolveMode::Warm)
+            } else {
+                let cold = pw
+                    .allocate(strategy)
+                    .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
+                (cold, SolveMode::ColdRefresh)
+            }
         } else {
             let plan = pw
                 .manager()
@@ -800,12 +836,15 @@ impl EpochConsumer for EpochDriver<'_> {
     type Carry = SimJob;
 
     fn actuate(&mut self, planned: PlannedEpoch) -> Result<(SimJob, PlanSeed)> {
-        Ok(self.actuate.apply(self.trace, self.profiled, planned))
+        Ok(profiling::time_phase("epoch:actuate", || {
+            self.actuate.apply(self.trace, self.profiled, planned)
+        }))
     }
 
     fn finish(&mut self, job: SimJob) -> Result<()> {
-        let report = self.simulate.run(self.trace, self.profiled, &job);
-        self.bill.record(self.trace, job, &report);
+        let report =
+            profiling::time_phase("epoch:simulate", || self.simulate.run(self.trace, self.profiled, &job));
+        profiling::time_phase("epoch:bill", || self.bill.record(self.trace, job, &report));
         Ok(())
     }
 }
@@ -1151,22 +1190,54 @@ mod tests {
 
     #[test]
     fn cold_refresh_recurs_every_k_warm_epochs() {
-        // Six identical epochs with cold_refresh_every = 2: after two
-        // consecutive warm-served epochs the next one must re-solve
-        // cold (mode `refresh`), then the cycle restarts.
+        // Six identical epochs with cold_refresh_every = 2.  The
+        // workload is the tight CPU instance whose warm repack
+        // certifies gap 0, so with the default `refresh_skip_gap` the
+        // periodic refresh keeps the warm plan (its certificate proves
+        // a cold solve could recoup nothing); disabling the skip gate
+        // restores the classic warm/warm/refresh cycle.
         let c = Coordinator::new();
-        let config = AutoscaleConfig {
-            strategy: Strategy::St1,
-            cold_refresh_every: 2,
-            ..AutoscaleConfig::default()
-        };
-        let runner = AutoscaleRunner::new(&c).with_config(config);
         let base = StreamSpec::replicate(0, 4, VGA, Program::Zf, 0.5);
         let mut trace = WorkloadTrace::new("refresh", Catalog::paper_experiments());
         for i in 0..6 {
             trace = trace.epoch(format!("e{i}"), 1800.0, base.clone());
         }
-        let out = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+
+        let config = AutoscaleConfig {
+            strategy: Strategy::St1,
+            cold_refresh_every: 2,
+            ..AutoscaleConfig::default()
+        };
+        let skipping = AutoscaleRunner::new(&c)
+            .with_config(config)
+            .run(&trace, ScalePolicy::Reactive)
+            .unwrap();
+        let modes: Vec<SolveMode> = skipping.epochs.iter().map(|e| e.mode).collect();
+        assert_eq!(
+            modes,
+            vec![
+                SolveMode::Cold,
+                SolveMode::Warm,
+                SolveMode::Warm,
+                SolveMode::Warm,
+                SolveMode::Warm,
+                SolveMode::Warm,
+            ],
+            "gap-0 certificates skip every periodic refresh"
+        );
+
+        let strict = AutoscaleConfig {
+            strategy: Strategy::St1,
+            cold_refresh_every: 2,
+            // A negative threshold no certificate can meet: every
+            // refresh epoch must pay for the cold solve again.
+            refresh_skip_gap: -1.0,
+            ..AutoscaleConfig::default()
+        };
+        let out = AutoscaleRunner::new(&c)
+            .with_config(strict)
+            .run(&trace, ScalePolicy::Reactive)
+            .unwrap();
         let modes: Vec<SolveMode> = out.epochs.iter().map(|e| e.mode).collect();
         assert_eq!(
             modes,
@@ -1183,11 +1254,15 @@ mod tests {
         // the fleet itself never churns.
         assert_eq!(out.epochs[3].solver, SolverKind::Exact);
         assert!(out.epochs.iter().skip(1).all(|e| !e.reallocated));
-        // Cost is flat: refreshes change provenance, not the fleet.
-        assert!(out
-            .epochs
-            .iter()
-            .all(|e| e.hourly_rate == out.epochs[0].hourly_rate));
+        // Cost is flat either way: refreshes change provenance, not the
+        // fleet.
+        for run in [&skipping, &out] {
+            assert!(run.epochs.iter().skip(1).all(|e| !e.reallocated));
+            assert!(run
+                .epochs
+                .iter()
+                .all(|e| e.hourly_rate == run.epochs[0].hourly_rate));
+        }
     }
 
     #[test]

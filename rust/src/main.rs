@@ -70,7 +70,9 @@ fn print_help() {
          \u{20}                              same pipeline on a synthetic N-camera fleet\n\
          \u{20}  trace --trace emergency|diurnal|churn|FILE [--policy NAME|all]\n\
          \u{20}        [--strategy stX] [--seed S] [--cameras N] [--epochs N]\n\
-         \u{20}        [--horizon H] [--engine event|fixed] [--out FILE]\n\
+         \u{20}        [--horizon H] [--engine event|fixed] [--out FILE] [--profile]\n\
+         \u{20}        (--profile prints the per-phase wall-clock table; build with\n\
+         \u{20}         --features profiling to record phases)\n\
          \u{20}                              online autoscaling over a demand trace:\n\
          \u{20}                              warm-started per-epoch re-solve + hysteresis,\n\
          \u{20}                              policies static-peak/static-mean/oracle/reactive\n\
@@ -396,6 +398,12 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
         }
     }
     print!("{}", reports::trace_policy_table(&trace.name, &outcomes).render());
+    if args.has("profile") {
+        // Per-phase wall-clock table (solve/actuate/simulate/bill and
+        // portfolio arms); prints a rebuild hint unless the binary was
+        // built with `--features profiling`.
+        println!("\n{}", camcloud::util::profiling::report());
+    }
     let failed = outcomes.iter().any(|(_, o)| o.is_err());
     Ok(if failed { 1 } else { 0 })
 }

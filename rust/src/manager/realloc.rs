@@ -30,7 +30,7 @@ use super::plan::{AllocationPlan, PlannedInstance, StreamAssignment};
 use super::{AllocationError, BuiltProblem, ResourceManager, Strategy};
 use crate::cloud::Catalog;
 use crate::packing::heuristics::{self, Greedy, OpenBin};
-use crate::packing::{certified_lower_bound, Decreasing, SolveOutcome, SolverKind};
+use crate::packing::{aggregate, certified_lower_bound, Decreasing, SolveOutcome, SolverKind};
 use crate::profiler::{ExecChoice, ResourceProfile};
 use crate::streams::StreamSpec;
 use crate::types::{Dollars, ResourceVec};
@@ -303,11 +303,21 @@ pub(crate) fn repack_incremental(
     }
 
     // Stage 3: best-fit the delta (hardest first) into the residuals.
+    // A churn epoch typically delivers many identical streams at once;
+    // when the delta collapses into few multiplicity classes the
+    // class-aggregated packer places whole runs per index lookup, and a
+    // mostly-distinct delta keeps the per-item path.
     let delta: Vec<usize> = Decreasing::order(problem)
         .into_iter()
         .filter(|&i| !placed[i])
         .collect();
-    if !heuristics::pack_into(problem, Greedy::BestFit, &delta, &mut open) {
+    let classes = aggregate::group_subset(problem, &delta);
+    let packed = if aggregate::aggregation_pays(classes.len(), delta.len()) {
+        aggregate::pack_delta_classes(problem, &classes, &mut open)
+    } else {
+        heuristics::pack_into(problem, Greedy::BestFit, &delta, &mut open)
+    };
+    if !packed {
         return None;
     }
     let solution = heuristics::finish(open);
@@ -651,6 +661,24 @@ mod tests {
         // One c4.2xlarge serves the quiet workload: the warm plan must
         // shrink to it, not hold two GPU instances.
         assert_eq!(warm.cost, Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn incremental_repack_aggregates_high_multiplicity_deltas() {
+        // 4 surviving streams plus a 16-stream burst of the same class:
+        // the delta collapses to one multiplicity class (the aggregated
+        // packer runs) and still lands on the cold-optimal fleet.
+        let c = Coordinator::new();
+        let mgr = tight_manager(&c);
+        let cold_small = mgr.allocate(&tight_streams(4), Strategy::St1).unwrap();
+        let burst = tight_streams(20);
+        let built = mgr.build_problem(&burst, Strategy::St1).unwrap();
+        let warm = repack_incremental(&built, &cold_small).unwrap();
+        warm.solution.validate(&built.problem).unwrap();
+        let cold_big = mgr.allocate(&burst, Strategy::St1).unwrap();
+        assert_eq!(warm.cost, cold_big.hourly_cost);
+        assert_eq!(warm.solver, crate::packing::SolverKind::WarmStart);
+        assert!(warm.lower_bound <= warm.cost);
     }
 
     #[test]

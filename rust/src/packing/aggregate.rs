@@ -325,6 +325,126 @@ fn expand(classes: &[ItemClass], open: &[AggBin]) -> Solution {
     Solution { bins }
 }
 
+/// Group a *subset* of the problem's items (e.g. a warm-start delta)
+/// into multiplicity classes under the same bit-exact key as
+/// [`group_classes`].  Members come back ascending with the rep as the
+/// lowest member, whatever order `items` arrives in.
+pub(crate) fn group_subset(problem: &MvbpProblem, items: &[usize]) -> Vec<ItemClass> {
+    use std::collections::HashMap;
+    let mut by_key: HashMap<Vec<u64>, usize> = HashMap::new();
+    let mut classes: Vec<ItemClass> = Vec::new();
+    for &i in items {
+        let item = &problem.items[i];
+        let mut key = Vec::with_capacity(1 + item.choices.len() * problem.dims);
+        key.push(item.choices.len() as u64);
+        for choice in &item.choices {
+            for v in &choice.0 {
+                key.push(v.to_bits());
+            }
+        }
+        match by_key.get(&key) {
+            Some(&ci) => classes[ci].members.push(i as u32),
+            None => {
+                by_key.insert(key, classes.len());
+                classes.push(ItemClass { rep: i, members: vec![i as u32] });
+            }
+        }
+    }
+    for class in &mut classes {
+        class.members.sort_unstable();
+        class.rep = class.members[0] as usize;
+    }
+    classes
+}
+
+/// Pack the members of `classes` (an already-grouped delta of unplaced
+/// items) into the existing `open` bins under best-fit semantics — the
+/// class-aggregated counterpart of [`heuristics::pack_into`], used by
+/// the warm-start repacker when a churn epoch delivers many identical
+/// streams at once.  One residual-index lookup per *run* instead of per
+/// item; classes go hardest-first like the per-item delta order.
+/// Returns `false` when some member fits no bin type.
+pub(crate) fn pack_delta_classes(
+    problem: &MvbpProblem,
+    classes: &[ItemClass],
+    open: &mut Vec<heuristics::OpenBin>,
+) -> bool {
+    let residuals: Vec<&ResourceVec> = open.iter().map(|b| &b.residual).collect();
+    let mut index = ResidualIndex::new(problem.dims, &residuals);
+    drop(residuals);
+
+    let mut class_order: Vec<usize> = (0..classes.len()).collect();
+    ItemOrder::HardestFirst.sort_keys(problem, &mut class_order, |&ci| classes[ci].rep);
+
+    let mut candidates: Vec<usize> = Vec::new();
+    for &ci in &class_order {
+        let rep = classes[ci].rep;
+        let choices = &problem.items[rep].choices;
+        let members = &classes[ci].members;
+        let mut cursor = 0usize; // next member to deal out
+        while cursor < members.len() {
+            // Best-fit target across surviving and newly opened bins.
+            index.may_fit(choices, &mut candidates);
+            let mut best: Option<(usize, f64)> = None;
+            for &b in &candidates {
+                let cap = &problem.bin_types[open[b].bin_type].capacity;
+                for req in choices.iter() {
+                    if let Some(slack) = heuristics::slack_after(&open[b].residual, req, cap) {
+                        if best.map_or(true, |(_, bs)| slack < bs) {
+                            best = Some((b, slack));
+                        }
+                    }
+                }
+            }
+            let (b, opened) = match best {
+                Some((b, _)) => (b, false),
+                None => {
+                    // Cheapest feasible new bin, seeded with one copy.
+                    let Some((t, c)) = heuristics::best_new_bin(problem, rep) else {
+                        return false;
+                    };
+                    let mut residual = problem.bin_types[t].capacity.clone();
+                    residual.sub_assign(&choices[c]);
+                    open.push(heuristics::OpenBin {
+                        bin_type: t,
+                        residual,
+                        assignments: vec![(members[cursor] as usize, c)],
+                    });
+                    cursor += 1;
+                    index.push(&open.last().expect("bin just opened").residual);
+                    (open.len() - 1, true)
+                }
+            };
+            // Fill the target copy-by-copy, each on its best choice,
+            // until the bin admits none (the argmin stays inside the
+            // bin — see `fill_best_fit`).
+            let before = cursor;
+            let cap = &problem.bin_types[open[b].bin_type].capacity;
+            while cursor < members.len() {
+                let mut pick: Option<(usize, f64)> = None;
+                for (c, req) in choices.iter().enumerate() {
+                    if let Some(slack) = heuristics::slack_after(&open[b].residual, req, cap) {
+                        if pick.map_or(true, |(_, ps)| slack < ps) {
+                            pick = Some((c, slack));
+                        }
+                    }
+                }
+                let Some((c, _)) = pick else { break };
+                open[b].residual.sub_assign(&choices[c]);
+                open[b].assignments.push((members[cursor] as usize, c));
+                cursor += 1;
+            }
+            index.update(b, &open[b].residual);
+            if cursor == before && !opened {
+                // Defensive: the index reported a fitting bin, so at
+                // least one copy must place (mirrors `solve_classes`).
+                return false;
+            }
+        }
+    }
+    true
+}
+
 /// One aggregated greedy pass: group, pack classes, expand.  The
 /// aggregated counterpart of [`heuristics::solve_greedy`] — identical
 /// packing on instances whose distinct classes have distinct ordering
@@ -484,6 +604,35 @@ mod tests {
             assert_eq!(s.bins.len(), 4, "{greedy:?}: floor(10/3)=3 per bin");
             assert_eq!(s.cost(&p), Dollars::from_f64(4.0));
         }
+    }
+
+    #[test]
+    fn delta_classes_match_the_per_item_delta_packer() {
+        let p = fixture();
+        let delta = crate::packing::Decreasing::order(&p);
+        let mut per_item: Vec<heuristics::OpenBin> = Vec::new();
+        assert!(heuristics::pack_into(&p, Greedy::BestFit, &delta, &mut per_item));
+        let classes = group_subset(&p, &delta);
+        assert!(aggregation_pays(classes.len(), delta.len()));
+        let mut aggregated: Vec<heuristics::OpenBin> = Vec::new();
+        assert!(pack_delta_classes(&p, &classes, &mut aggregated));
+        let s_pi = heuristics::finish(per_item);
+        let s_cl = heuristics::finish(aggregated);
+        s_cl.validate(&p).unwrap();
+        assert_eq!(s_cl.cost(&p), s_pi.cost(&p));
+        assert_eq!(s_cl.bins_per_type(&p), s_pi.bins_per_type(&p));
+        // An unpackable class reports failure like the per-item packer.
+        let mut q = fixture();
+        for i in 0..2 {
+            q.items.push(Item {
+                id: format!("huge-{i}"),
+                choices: vec![ResourceVec::from_slice(&[100.0, 0.0])],
+            });
+        }
+        let all = crate::packing::Decreasing::order(&q);
+        let qc = group_subset(&q, &all);
+        let mut bins: Vec<heuristics::OpenBin> = Vec::new();
+        assert!(!pack_delta_classes(&q, &qc, &mut bins));
     }
 
     #[test]

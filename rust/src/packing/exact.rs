@@ -1,16 +1,42 @@
 //! Exact branch-and-bound solver for MVBP.
 //!
-//! Depth-first search over items (sorted hardest-first), branching on
-//! "place item in an existing open bin" and "open a new bin of each
-//! type", under each requirement choice.  Pruned by a per-dimension
-//! cost lower bound and seeded with an incumbent — best-fit-decreasing
-//! by default, or any solution the caller already holds (the portfolio
-//! seeds its racing winner via [`BranchAndBound::solve_seeded`]).
-//! Proven optimal at paper scale (validated against brute force in the
-//! property tests); past the node budget or wall-clock deadline it
-//! degrades gracefully to the best incumbent and reports
-//! `proven_optimal = false`.
+//! Two search modes share the node budget, deadline, incumbent seeding,
+//! and the per-dimension cost lower bound:
+//!
+//! * **Per-item** — depth-first over items (sorted hardest-first),
+//!   branching on "place item in an existing open bin" and "open a new
+//!   bin of each type", under each requirement choice, with
+//!   equal-residual bins deduplicated per node.  This is the path for
+//!   (mostly) distinct items.
+//! * **Class-multiplicity** — when aggregation pays (at least two items
+//!   per [`ItemClass`] on average, the same gate the greedy layer
+//!   uses), the search branches on "place `k` copies of class `c` into
+//!   bin `b`" instead.  Identical items are interchangeable, so a
+//!   per-item search wastes `k!` permutations per bin content; class
+//!   branching enumerates each *distribution* once, under three
+//!   symmetry-breaking rules: classes are placed in a fixed
+//!   (hardest-first) order; within a class, placements walk a
+//!   nondecreasing `(bin, choice)` cursor with copy counts tried
+//!   largest-first; and among equal-residual bins of one type only the
+//!   first is branched (swapping the full remaining contents of two
+//!   equal-residual bins is a cost-preserving bijection).  Fresh bins
+//!   open in non-increasing `(type, choice, count)` key order, so the
+//!   interchangeable-at-open bins of one class are enumerated as a
+//!   sorted sequence rather than every permutation.
+//!
+//! Both modes prune on a per-dimension cost lower bound, evaluated in
+//! the *parent* before a child is expanded — a dominated child costs
+//! one bound evaluation instead of a call frame and a unit of node
+//! budget (for run branching this is the difference between paying
+//! O(1) and O(k) nodes per dominated run family).  The search is seeded
+//! with an incumbent — best-fit-decreasing by default, or any solution
+//! the caller already holds (the portfolio seeds its racing winner via
+//! [`BranchAndBound::solve_seeded`]).  Proven optimal at paper scale
+//! (validated against brute force in the property tests); past the node
+//! budget or wall-clock deadline it degrades gracefully to the best
+//! incumbent and reports `proven_optimal = false`.
 
+use super::aggregate::{self, ItemClass};
 use super::heuristics::solve_best_fit;
 use super::problem::{MvbpProblem, PackedBin, Solution};
 use crate::types::{Dollars, ResourceVec};
@@ -34,6 +60,11 @@ pub struct BranchAndBound {
     /// deterministic cap; the deadline is the safety net for instances
     /// whose nodes are individually expensive.
     pub deadline: Option<Instant>,
+    /// Force per-item branching even on instances where class-
+    /// multiplicity branching would engage.  Off by default; benches
+    /// flip it to measure what class branching buys under an identical
+    /// node cap.
+    pub per_item: bool,
 }
 
 /// Deadline polling interval mask (checked when `nodes & MASK == 0`).
@@ -43,7 +74,7 @@ impl Default for BranchAndBound {
     fn default() -> Self {
         // Generous for paper-scale instances (<=30 items, <=4 types):
         // those need well under 1e5 nodes.
-        BranchAndBound { node_budget: 5_000_000, deadline: None }
+        BranchAndBound { node_budget: 5_000_000, deadline: None, per_item: false }
     }
 }
 
@@ -69,6 +100,59 @@ struct SearchCtx<'p> {
     node_budget: u64,
     deadline: Option<Instant>,
     exhausted: bool,
+}
+
+/// Per-dimension "best capacity per dollar" vector shared by both
+/// search modes' lower bounds.
+fn dim_efficiencies(problem: &MvbpProblem) -> Vec<f64> {
+    (0..problem.dims)
+        .map(|d| {
+            problem
+                .bin_types
+                .iter()
+                .map(|bt| {
+                    let cost = bt.cost.as_f64();
+                    if cost > 0.0 {
+                        bt.capacity[d] / cost
+                    } else {
+                        f64::INFINITY
+                    }
+                })
+                .fold(0.0, f64::max)
+        })
+        .collect()
+}
+
+/// Element-wise max capacity over bin types (the "roomiest bin" the
+/// hardness measure normalizes against).
+fn roomiest_capacity(problem: &MvbpProblem) -> ResourceVec {
+    ResourceVec(
+        (0..problem.dims)
+            .map(|d| {
+                problem
+                    .bin_types
+                    .iter()
+                    .map(|bt| bt.capacity[d])
+                    .fold(0.0, f64::max)
+            })
+            .collect(),
+    )
+}
+
+/// Relaxed one-copy demand of an item: the min over choices per
+/// dimension (whatever choice the optimum picks needs at least this).
+fn relaxed_req(problem: &MvbpProblem, item: usize) -> ResourceVec {
+    ResourceVec(
+        (0..problem.dims)
+            .map(|d| {
+                problem.items[item]
+                    .choices
+                    .iter()
+                    .map(|c| c[d])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect(),
+    )
 }
 
 impl BranchAndBound {
@@ -101,19 +185,25 @@ impl BranchAndBound {
             });
         }
 
+        // Incumbent (may not exist for pathological instances); an
+        // invalid seed is discarded rather than poisoning the bound.
+        let incumbent = incumbent.filter(|s| s.validate(problem).is_ok());
+
+        // Class-multiplicity branching engages exactly when aggregation
+        // pays (the capped grouping aborts past items/2 classes, the
+        // same "at least two items per class on average" gate the
+        // greedy layer uses).
+        if !self.per_item {
+            if let Some(classes) =
+                aggregate::group_classes_capped(problem, problem.items.len() / 2)
+            {
+                return self.solve_class_search(problem, classes, incumbent);
+            }
+        }
+
         // Hardest-first ordering: by decreasing "best-case fullness" —
         // min over choices of the max capacity ratio vs the roomiest bin.
-        let roomiest = ResourceVec(
-            (0..problem.dims)
-                .map(|d| {
-                    problem
-                        .bin_types
-                        .iter()
-                        .map(|bt| bt.capacity[d])
-                        .fold(0.0, f64::max)
-                })
-                .collect(),
-        );
+        let roomiest = roomiest_capacity(problem);
         let mut order: Vec<usize> = (0..problem.items.len()).collect();
         let hardness = |i: usize| -> f64 {
             problem.items[i]
@@ -126,38 +216,10 @@ impl BranchAndBound {
         // panic mid-sort, even on inputs validate would reject.
         order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
 
-        let dim_efficiency: Vec<f64> = (0..problem.dims)
-            .map(|d| {
-                problem
-                    .bin_types
-                    .iter()
-                    .map(|bt| {
-                        let cost = bt.cost.as_f64();
-                        if cost > 0.0 {
-                            bt.capacity[d] / cost
-                        } else {
-                            f64::INFINITY
-                        }
-                    })
-                    .fold(0.0, f64::max)
-            })
-            .collect();
+        let dim_efficiency = dim_efficiencies(problem);
 
-        let min_req: Vec<ResourceVec> = problem
-            .items
-            .iter()
-            .map(|it| {
-                ResourceVec(
-                    (0..problem.dims)
-                        .map(|d| {
-                            it.choices
-                                .iter()
-                                .map(|c| c[d])
-                                .fold(f64::INFINITY, f64::min)
-                        })
-                        .collect(),
-                )
-            })
+        let min_req: Vec<ResourceVec> = (0..problem.items.len())
+            .map(|i| relaxed_req(problem, i))
             .collect();
 
         let mut suffix_demand = vec![ResourceVec::zeros(problem.dims); order.len() + 1];
@@ -165,9 +227,6 @@ impl BranchAndBound {
             suffix_demand[k] = suffix_demand[k + 1].add(&min_req[order[k]]);
         }
 
-        // Incumbent (may not exist for pathological instances); an
-        // invalid seed is discarded rather than poisoning the bound.
-        let incumbent = incumbent.filter(|s| s.validate(problem).is_ok());
         let best_cost = incumbent
             .as_ref()
             .map(|s| s.cost(problem))
@@ -187,6 +246,73 @@ impl BranchAndBound {
         };
         let mut open: Vec<OpenBin> = Vec::new();
         dfs(&mut ctx, 0, Dollars::ZERO, &mut open);
+
+        ctx.best.map(|solution| ExactResult {
+            solution,
+            proven_optimal: !ctx.exhausted,
+            nodes_explored: ctx.nodes,
+        })
+    }
+
+    /// The class-multiplicity search: branch on "place `k` copies of
+    /// the current class into bin `b` under choice `c`" (see the module
+    /// docs for the symmetry-breaking rules).
+    fn solve_class_search(
+        &self,
+        problem: &MvbpProblem,
+        mut classes: Vec<ItemClass>,
+        incumbent: Option<Solution>,
+    ) -> Option<ExactResult> {
+        // Hardest representative first — the class-level analogue of
+        // the per-item ordering (ties keep first-occurrence order:
+        // sort_by is stable).
+        let roomiest = roomiest_capacity(problem);
+        let hardness = |rep: usize| -> f64 {
+            problem.items[rep]
+                .choices
+                .iter()
+                .map(|c| c.max_ratio(&roomiest))
+                .fold(f64::INFINITY, f64::min)
+        };
+        classes.sort_by(|a, b| hardness(b.rep).total_cmp(&hardness(a.rep)));
+
+        let dim_efficiency = dim_efficiencies(problem);
+        let min_req: Vec<ResourceVec> = classes
+            .iter()
+            .map(|class| relaxed_req(problem, class.rep))
+            .collect();
+
+        let mut suffix_demand = vec![ResourceVec::zeros(problem.dims); classes.len() + 1];
+        for k in (0..classes.len()).rev() {
+            let mut acc = suffix_demand[k + 1].clone();
+            let count = classes[k].count() as f64;
+            for d in 0..problem.dims {
+                acc.0[d] += min_req[k][d] * count;
+            }
+            suffix_demand[k] = acc;
+        }
+
+        let best_cost = incumbent
+            .as_ref()
+            .map(|s| s.cost(problem))
+            .unwrap_or(Dollars(i64::MAX));
+        let first_count = classes[0].count() as u32;
+
+        let mut ctx = ClassCtx {
+            problem,
+            classes,
+            min_req,
+            dim_efficiency,
+            suffix_demand,
+            best_cost,
+            best: incumbent,
+            nodes: 0,
+            node_budget: self.node_budget,
+            deadline: self.deadline,
+            exhausted: false,
+        };
+        let mut bins: Vec<ClassBin> = Vec::new();
+        distribute(&mut ctx, 0, first_count, Dollars::ZERO, &mut bins, (0, 0), None);
 
         ctx.best.map(|solution| ExactResult {
             solution,
@@ -214,6 +340,14 @@ fn lower_bound(ctx: &SearchCtx, k: usize, open: &[OpenBin]) -> f64 {
         }
     }
     bound
+}
+
+/// The child's entry prune (`cost + lower_bound >= incumbent`),
+/// evaluated in the parent on the already-mutated state: dominated
+/// children are skipped without being expanded, so they cost one bound
+/// evaluation instead of a call frame and a unit of node budget.
+fn prune_child(ctx: &SearchCtx, k: usize, cost: Dollars, open: &[OpenBin]) -> bool {
+    cost.as_f64() + lower_bound(ctx, k, open) >= ctx.best_cost.as_f64() - 1e-9
 }
 
 fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
@@ -277,6 +411,10 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
             let req = &problem.items[item_idx].choices[c];
             if req.fits(&open[b].residual) {
                 open[b].residual.sub_assign(req);
+                if prune_child(ctx, k + 1, cost, open) {
+                    open[b].residual.add_assign(req);
+                    continue;
+                }
                 open[b].assignments.push((item_idx, c));
                 dfs(ctx, k + 1, cost, open);
                 open[b].assignments.pop();
@@ -304,8 +442,248 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
                     residual,
                     assignments: vec![(item_idx, c)],
                 });
+                if prune_child(ctx, k + 1, new_cost, open) {
+                    open.pop();
+                    continue;
+                }
                 dfs(ctx, k + 1, new_cost, open);
                 open.pop();
+                if ctx.exhausted {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// One open bin of the class search.
+struct ClassBin {
+    bin_type: usize,
+    residual: ResourceVec,
+    /// `(class position in search order, choice, copies)` in placement
+    /// order.
+    entries: Vec<(usize, usize, u32)>,
+}
+
+struct ClassCtx<'p> {
+    problem: &'p MvbpProblem,
+    /// Classes in search order (hardest representative first).
+    classes: Vec<ItemClass>,
+    /// Relaxed one-copy demand per class (min over choices per dim).
+    min_req: Vec<ResourceVec>,
+    dim_efficiency: Vec<f64>,
+    /// `suffix_demand[k]` = relaxed demand of classes `k..`, counts
+    /// included.
+    suffix_demand: Vec<ResourceVec>,
+    best_cost: Dollars,
+    best: Option<Solution>,
+    nodes: u64,
+    node_budget: u64,
+    deadline: Option<Instant>,
+    exhausted: bool,
+}
+
+/// Class-search analogue of [`lower_bound`]: relaxed demand of the
+/// unplaced copies of class `ci` plus every later class, minus open
+/// residuals, priced at the best capacity-per-dollar.
+fn class_lower_bound(ctx: &ClassCtx, ci: usize, remaining: u32, bins: &[ClassBin]) -> f64 {
+    let mut bound: f64 = 0.0;
+    for d in 0..ctx.problem.dims {
+        let demand = ctx.suffix_demand[ci + 1][d] + ctx.min_req[ci][d] * remaining as f64;
+        if demand <= 0.0 {
+            continue;
+        }
+        let residual: f64 = bins.iter().map(|b| b.residual[d].max(0.0)).sum();
+        let extra = demand - residual;
+        if extra > 0.0 && ctx.dim_efficiency[d] > 0.0 {
+            bound = bound.max(extra / ctx.dim_efficiency[d]);
+        }
+    }
+    bound
+}
+
+/// Class-search analogue of [`prune_child`]: evaluate the child's entry
+/// prune in the parent.  This is what keeps run branching cheap — the
+/// `k-1` shorter runs under a dominated maximal run each cost one bound
+/// evaluation, not an expanded node (the per-copy search pays a node per
+/// copy no matter what).
+fn prune_class_child(
+    ctx: &ClassCtx,
+    ci: usize,
+    remaining: u32,
+    cost: Dollars,
+    bins: &[ClassBin],
+) -> bool {
+    cost.as_f64() + class_lower_bound(ctx, ci, remaining, bins) >= ctx.best_cost.as_f64() - 1e-9
+}
+
+/// Expand the class-level bins to per-item assignments (members dealt
+/// out ascending, exactly like `aggregate::expand`) and record the
+/// solution if it beats the incumbent.
+fn record_class_leaf(ctx: &mut ClassCtx, cost: Dollars, bins: &[ClassBin]) {
+    if cost >= ctx.best_cost {
+        return;
+    }
+    ctx.best_cost = cost;
+    let mut cursor = vec![0usize; ctx.classes.len()];
+    let mut out = Vec::with_capacity(bins.len());
+    for bin in bins {
+        let total: usize = bin.entries.iter().map(|&(_, _, k)| k as usize).sum();
+        let mut assignments = Vec::with_capacity(total);
+        for &(ci, choice, count) in &bin.entries {
+            let start = cursor[ci];
+            cursor[ci] += count as usize;
+            for &member in &ctx.classes[ci].members[start..start + count as usize] {
+                assignments.push((member as usize, choice));
+            }
+        }
+        out.push(PackedBin { bin_type: bin.bin_type, assignments });
+    }
+    ctx.best = Some(Solution { bins: out });
+}
+
+/// Distribute the `remaining` unplaced copies of class `ci` and recurse
+/// into later classes.
+///
+/// `from` is the `(bin, choice)` cursor: within one class, placements
+/// are generated in strictly increasing cursor order, so each
+/// *distribution* (set of `(bin, choice, count)` runs) is enumerated
+/// exactly once regardless of placement order.  `last_fresh` is the
+/// `(type, choice, count)` key of the class's most recent fresh-opened
+/// bin; fresh opens must not increase in that key, which sorts the
+/// interchangeable-at-open bins of one class into a canonical sequence.
+#[allow(clippy::too_many_arguments)]
+fn distribute(
+    ctx: &mut ClassCtx,
+    ci: usize,
+    remaining: u32,
+    cost: Dollars,
+    bins: &mut Vec<ClassBin>,
+    from: (usize, usize),
+    last_fresh: Option<(usize, usize, u32)>,
+) {
+    ctx.nodes += 1;
+    if ctx.nodes > ctx.node_budget {
+        ctx.exhausted = true;
+        return;
+    }
+    if ctx.nodes & DEADLINE_CHECK_MASK == 0 {
+        if let Some(deadline) = ctx.deadline {
+            if Instant::now() >= deadline {
+                ctx.exhausted = true;
+                return;
+            }
+        }
+    }
+    if remaining == 0 {
+        if ci + 1 == ctx.classes.len() {
+            record_class_leaf(ctx, cost, bins);
+            return;
+        }
+        let next_count = ctx.classes[ci + 1].count() as u32;
+        distribute(ctx, ci + 1, next_count, cost, bins, (0, 0), None);
+        return;
+    }
+    // Prune: even the relaxed remainder cannot beat the incumbent.
+    let lb = cost.as_f64() + class_lower_bound(ctx, ci, remaining, bins);
+    if lb >= ctx.best_cost.as_f64() - 1e-9 {
+        return;
+    }
+
+    let problem = ctx.problem;
+    let rep = ctx.classes[ci].rep;
+    let n_choices = problem.items[rep].choices.len();
+
+    // Branch 1: runs into existing bins at or past the cursor, with the
+    // same equal-(type, residual) dedup as the per-item search —
+    // swapping the full remaining contents of two equal-residual bins
+    // of one type is a cost-preserving bijection, so branching the
+    // first of each group is enough.
+    let mut tried: Vec<(usize, Vec<i64>)> = Vec::new();
+    for b in from.0..bins.len() {
+        let key: Vec<i64> = bins[b]
+            .residual
+            .0
+            .iter()
+            .map(|v| (v * 1e6).round() as i64)
+            .collect();
+        if tried.iter().any(|(t, k2)| *t == bins[b].bin_type && *k2 == key) {
+            continue;
+        }
+        tried.push((bins[b].bin_type, key));
+        let c_start = if b == from.0 { from.1 } else { 0 };
+        for c in c_start..n_choices {
+            let req = &problem.items[rep].choices[c];
+            // Subtract copies one by one under the shared `fits`
+            // tolerance; `placed` copies are subtracted on exit.
+            let mut placed: u32 = 0;
+            while placed < remaining && req.fits(&bins[b].residual) {
+                bins[b].residual.sub_assign(req);
+                placed += 1;
+            }
+            if placed == 0 {
+                continue;
+            }
+            // Largest run first; `k` copies stay subtracted while the
+            // branch for `k` runs.
+            let mut k = placed;
+            loop {
+                if !prune_class_child(ctx, ci, remaining - k, cost, bins) {
+                    bins[b].entries.push((ci, c, k));
+                    distribute(ctx, ci, remaining - k, cost, bins, (b, c + 1), last_fresh);
+                    bins[b].entries.pop();
+                    if ctx.exhausted {
+                        for _ in 0..k {
+                            bins[b].residual.add_assign(req);
+                        }
+                        return;
+                    }
+                }
+                bins[b].residual.add_assign(req);
+                if k == 1 {
+                    break;
+                }
+                k -= 1;
+            }
+        }
+    }
+
+    // Branch 2: open a fresh bin with a run of this class, in
+    // non-increasing (type, choice, count) key order.
+    for (t, bt) in problem.bin_types.iter().enumerate() {
+        let new_cost = cost + bt.cost;
+        if new_cost >= ctx.best_cost {
+            continue;
+        }
+        for c in 0..n_choices {
+            let req = &problem.items[rep].choices[c];
+            if !req.fits(&bt.capacity) {
+                continue;
+            }
+            let mut probe = bt.capacity.clone();
+            let mut max_k: u32 = 0;
+            while max_k < remaining && req.fits(&probe) {
+                probe.sub_assign(req);
+                max_k += 1;
+            }
+            for k in (1..=max_k).rev() {
+                if let Some(last) = last_fresh {
+                    if (t, c, k) > last {
+                        continue;
+                    }
+                }
+                let mut residual = bt.capacity.clone();
+                for _ in 0..k {
+                    residual.sub_assign(req);
+                }
+                bins.push(ClassBin { bin_type: t, residual, entries: vec![(ci, c, k)] });
+                if prune_class_child(ctx, ci, remaining - k, new_cost, bins) {
+                    bins.pop();
+                    continue;
+                }
+                let idx = bins.len() - 1;
+                distribute(ctx, ci, remaining - k, new_cost, bins, (idx, c + 1), Some((t, c, k)));
+                bins.pop();
                 if ctx.exhausted {
                     return;
                 }
@@ -445,6 +823,7 @@ mod tests {
         let bb = BranchAndBound {
             node_budget: u64::MAX,
             deadline: Some(Instant::now() - std::time::Duration::from_millis(1)),
+            ..Default::default()
         };
         let r = bb.solve(&p).unwrap();
         r.solution.validate(&p).unwrap();
@@ -466,5 +845,104 @@ mod tests {
             .unwrap();
         assert!(r2.proven_optimal);
         assert_eq!(r2.solution.cost(&p), r.solution.cost(&p));
+    }
+
+    /// `counts[i]` copies of `small_problem` item `i` — the class path
+    /// engages whenever aggregation pays.
+    fn replicated_fixture(counts: &[usize]) -> MvbpProblem {
+        let base = small_problem();
+        let mut items = Vec::new();
+        for (t, item) in base.items.iter().enumerate() {
+            for i in 0..counts[t] {
+                items.push(Item {
+                    id: format!("c{t}-{i}"),
+                    choices: item.choices.clone(),
+                });
+            }
+        }
+        MvbpProblem { dims: base.dims, bin_types: base.bin_types.clone(), items }
+    }
+
+    #[test]
+    fn class_search_matches_per_item_on_replicated_fixture() {
+        let p = replicated_fixture(&[4, 3, 5]); // 12 items, 3 classes
+        let class = BranchAndBound::default().solve(&p).unwrap();
+        let per_item = BranchAndBound { per_item: true, ..Default::default() }
+            .solve(&p)
+            .unwrap();
+        class.solution.validate(&p).unwrap();
+        per_item.solution.validate(&p).unwrap();
+        assert!(class.proven_optimal, "class search must prove this scale");
+        assert!(per_item.proven_optimal, "per-item search must prove this scale");
+        assert_eq!(class.solution.cost(&p), per_item.solution.cost(&p));
+    }
+
+    #[test]
+    fn class_search_node_budget_degrades_gracefully() {
+        let p = replicated_fixture(&[6, 6, 6]);
+        let r = BranchAndBound { node_budget: 1, ..Default::default() }
+            .solve(&p)
+            .unwrap();
+        r.solution.validate(&p).unwrap();
+        assert!(!r.proven_optimal);
+    }
+
+    #[test]
+    fn class_search_uses_choices_for_colocation() {
+        // Two copies each of x=[3] and y=[3]|[1] into cap-4 bins: the
+        // optimum pairs every x with a y on its alternative choice.
+        let p = MvbpProblem {
+            dims: 1,
+            bin_types: vec![BinType {
+                name: "b".into(),
+                cost: Dollars::from_f64(1.0),
+                capacity: ResourceVec::from_slice(&[4.0]),
+            }],
+            items: vec![
+                Item { id: "x0".into(), choices: vec![ResourceVec::from_slice(&[3.0])] },
+                Item { id: "x1".into(), choices: vec![ResourceVec::from_slice(&[3.0])] },
+                Item {
+                    id: "y0".into(),
+                    choices: vec![
+                        ResourceVec::from_slice(&[3.0]),
+                        ResourceVec::from_slice(&[1.0]),
+                    ],
+                },
+                Item {
+                    id: "y1".into(),
+                    choices: vec![
+                        ResourceVec::from_slice(&[3.0]),
+                        ResourceVec::from_slice(&[1.0]),
+                    ],
+                },
+            ],
+        };
+        let r = BranchAndBound::default().solve(&p).unwrap();
+        r.solution.validate(&p).unwrap();
+        assert!(r.proven_optimal);
+        assert_eq!(r.solution.cost(&p), Dollars::from_f64(2.0));
+    }
+
+    #[test]
+    fn single_class_fleet_proves_tight_packing() {
+        // 12 copies of [3] into cap-10 bins: 3 per bin, 4 bins, proven.
+        let p = MvbpProblem {
+            dims: 1,
+            bin_types: vec![BinType {
+                name: "b".into(),
+                cost: Dollars::from_f64(1.0),
+                capacity: ResourceVec::from_slice(&[10.0]),
+            }],
+            items: (0..12)
+                .map(|i| Item {
+                    id: format!("s{i}"),
+                    choices: vec![ResourceVec::from_slice(&[3.0])],
+                })
+                .collect(),
+        };
+        let r = BranchAndBound::default().solve(&p).unwrap();
+        r.solution.validate(&p).unwrap();
+        assert!(r.proven_optimal);
+        assert_eq!(r.solution.cost(&p), Dollars::from_f64(4.0));
     }
 }

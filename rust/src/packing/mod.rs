@@ -36,10 +36,26 @@
 //!   items are (mostly) distinct ([`aggregation_pays`]): below two
 //!   items per class on average the per-item sharded path runs instead;
 //! * [`exact`] — branch-and-bound, node- and deadline-bounded, seedable
-//!   with any incumbent ([`BranchAndBound::solve_seeded`]);
+//!   with any incumbent ([`BranchAndBound::solve_seeded`]).  On
+//!   high-multiplicity instances it branches over *class
+//!   multiplicities* ("place k copies of class c into bin b") instead
+//!   of individual items, with symmetry breaking — classes are placed
+//!   in a fixed (hardest-first) order, copy counts are tried
+//!   non-increasing, equal-residual bins of one type are branched only
+//!   once, and fresh bins open in non-increasing `(type, choice,
+//!   count)` order — so the `k!` permutations of identical items
+//!   collapse to a single search path;
 //! * [`arcflow`] — the arc-flow machinery (Brandão & Pedroso): graph
 //!   construction with compression (Ablation B), the Martello-Toth L2
 //!   bound the certified gap is built from, and a 1-D exact oracle;
+//! * [`bounds`] — dual-feasible-function (DFF) lower bounds: a family
+//!   of superadditive roundings evaluated over weighted dimension
+//!   projections (per-dimension units plus a combined
+//!   `1/roomiest`-normalized weighting), maxed into
+//!   [`certified_lower_bound`].  The combined projection is what
+//!   tightens certificates on mixed CPU+GPU catalogs, where
+//!   per-dimension relaxations let every stream dodge each dimension
+//!   via its other execution choice;
 //! * [`solver`] — the trait, the per-strategy implementations
 //!   ([`FfdSolver`], [`BfdSolver`], [`ExactSolver`]), the
 //!   [`PortfolioSolver`] that races orderings on `std::thread::scope`
@@ -50,6 +66,7 @@
 
 pub mod aggregate;
 pub mod arcflow;
+pub mod bounds;
 pub mod exact;
 pub mod heuristics;
 pub mod index;
@@ -59,6 +76,7 @@ pub mod solver;
 pub use aggregate::{
     aggregation_pays, group_classes, group_classes_capped, solve_greedy_aggregated, ItemClass,
 };
+pub use bounds::{dff_disabled, dff_lower_bound, set_dff_disabled};
 pub use exact::{solve_exact, BranchAndBound, ExactResult};
 pub use heuristics::{solve_best_fit, solve_first_fit, solve_greedy, Decreasing, Greedy, ItemOrder};
 pub use problem::{BinType, Item, MvbpProblem, PackedBin, Solution};

@@ -26,23 +26,47 @@
 //!    whose own exact arm keeps polishing mid-size instances instead of
 //!    falling off a heuristic cliff.
 //!
-//! The lower bound is the arc-flow L2 bound
+//! The lower bound is the max of three bound families, each valid for
+//! the multi-dimensional multiple-choice problem because items are
+//! counted at their cheapest choice: the arc-flow L2 bound
 //! ([`arcflow::l2_lower_bound`]) evaluated on each dimension's relaxed
 //! 1-D projection (weights rounded *down*, see
-//! [`arcflow::discretize_relaxed`]), priced at the cheapest bin type,
-//! maxed with the capacity-per-dollar bound — the max over dimensions
-//! of both is a valid cost bound for the multi-dimensional
-//! multiple-choice problem because any feasible packing must cover
-//! every dimension's relaxed demand.
+//! [`arcflow::discretize_relaxed`]), priced at the cheapest bin type;
+//! the capacity-per-dollar bound (every dollar buys at most the best
+//! capacity-per-dollar in each dimension); and the dual-feasible-
+//! function bounds of [`super::bounds`], evaluated over weighted
+//! dimension *combinations*.  The DFF term closes what used to be a
+//! documented looseness on mixed CPU+GPU catalogs: per-dimension
+//! projections are nearly vacuous there, because every stream can zero
+//! its GPU-dimension demand by choosing CPU and shrink its
+//! CPU-dimension demand by choosing GPU — a combined projection
+//! normalized by each dimension's roomiest capacity cannot be dodged
+//! by either choice, so the certificate tightens exactly where the
+//! warm-drift gate needs it.
 
 use super::aggregate;
 use super::arcflow;
+use super::bounds;
 use super::exact::BranchAndBound;
 use super::heuristics::{self, Greedy, ItemOrder};
 use super::problem::{MvbpProblem, Solution};
 use super::SolverKind;
 use crate::types::Dollars;
+use crate::util::profiling;
 use std::time::{Duration, Instant};
+
+/// Static per-arm labels for the phase profiler (no allocation on the
+/// hot path, nothing at all unless the `profiling` feature is on).
+fn arm_label(greedy: Greedy, order: ItemOrder) -> &'static str {
+    match (greedy, order) {
+        (Greedy::FirstFit, ItemOrder::HardestFirst) => "arm:ff-hardest",
+        (Greedy::FirstFit, ItemOrder::SumDecreasing) => "arm:ff-sum",
+        (Greedy::FirstFit, ItemOrder::FewestChoices) => "arm:ff-fewest",
+        (Greedy::BestFit, ItemOrder::HardestFirst) => "arm:bf-hardest",
+        (Greedy::BestFit, ItemOrder::SumDecreasing) => "arm:bf-sum",
+        (Greedy::BestFit, ItemOrder::FewestChoices) => "arm:bf-fewest",
+    }
+}
 
 /// Resource limits a solve may spend, replacing the old hard-coded
 /// `exact_cutoff` field with an explicit, CLI-settable budget.
@@ -127,15 +151,41 @@ impl SolveOutcome {
 pub trait Solver: Sync {
     fn name(&self) -> &'static str;
     fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome>;
+
+    /// Like [`Solver::solve`], with an optional lower bound the caller
+    /// has *already certified* for this exact problem (e.g. carried
+    /// over from a declined warm-start solve of the same instance).  A
+    /// valid hint substitutes for recomputing
+    /// [`certified_lower_bound`] on the outcome path — the bound
+    /// evaluation is pure, so re-running it on the same problem can
+    /// only reproduce the hint.  The default ignores the hint.
+    fn solve_with(
+        &self,
+        problem: &MvbpProblem,
+        budget: &SolveBudget,
+        bound_hint: Option<Dollars>,
+    ) -> Option<SolveOutcome> {
+        let _ = bound_hint;
+        self.solve(problem, budget)
+    }
 }
 
-/// Certified cost lower bound for an MVBP instance: for each dimension,
-/// the max of the arc-flow L2 bin bound (relaxed grid, priced at the
-/// cheapest type) and the capacity-per-dollar bound; the max over
-/// dimensions.  Valid because every feasible packing covers each
-/// dimension's relaxed demand (items counted at their cheapest choice),
-/// every opened bin costs at least the cheapest type, and every dollar
-/// buys at most the best capacity-per-dollar in each dimension.
+/// Certified cost lower bound for an MVBP instance: the max of
+///
+/// * per dimension, the arc-flow L2 bin bound (relaxed grid, priced at
+///   the cheapest type) and the capacity-per-dollar bound — valid
+///   because every feasible packing covers each dimension's relaxed
+///   demand (items counted at their cheapest choice), every opened bin
+///   costs at least the cheapest type, and every dollar buys at most
+///   the best capacity-per-dollar in each dimension;
+/// * the dual-feasible-function bound ([`bounds::dff_lower_bound`])
+///   over weighted dimension combinations, which stays sharp on mixed
+///   CPU+GPU catalogs where the per-dimension projections above go
+///   slack (each dimension individually can be dodged via the other
+///   execution choice; the combined projection cannot).
+///
+/// The result is never weaker than the pre-DFF bound: the DFF term
+/// only enters through a `max`.
 pub fn certified_lower_bound(problem: &MvbpProblem) -> Dollars {
     if problem.items.is_empty() || problem.bin_types.is_empty() {
         return Dollars::ZERO;
@@ -204,7 +254,40 @@ pub fn certified_lower_bound(problem: &MvbpProblem) -> Dollars {
             }
         }
     }
+    // The DFF family (gated only for old-vs-new bench ablation).
+    if !bounds::dff_disabled() {
+        let dff = bounds::dff_lower_bound(problem);
+        if dff > best {
+            best = dff;
+        }
+    }
     best
+}
+
+/// Build a certified outcome.  A proven-optimal solution is its own
+/// certificate, so the bound evaluation is skipped outright; otherwise
+/// `bound_hint` — a lower bound the caller already certified for this
+/// exact problem — substitutes for recomputing [`certified_lower_bound`]
+/// (the evaluation is pure, so re-running it would only reproduce the
+/// hint).
+fn outcome_with(
+    problem: &MvbpProblem,
+    solution: Solution,
+    solver: SolverKind,
+    proven_optimal: bool,
+    bound_hint: Option<Dollars>,
+) -> SolveOutcome {
+    let cost = solution.cost(problem);
+    if proven_optimal {
+        return SolveOutcome { solution, solver, cost, lower_bound: cost, proven_optimal };
+    }
+    // Clamp: the bound is valid by construction, but `cost` is the
+    // invariant reports and tests lean on.
+    let lower_bound = bound_hint
+        .unwrap_or_else(|| certified_lower_bound(problem))
+        .min(cost);
+    let proven_optimal = lower_bound == cost;
+    SolveOutcome { solution, solver, cost, lower_bound, proven_optimal }
 }
 
 fn outcome_for(
@@ -213,16 +296,7 @@ fn outcome_for(
     solver: SolverKind,
     proven_optimal: bool,
 ) -> SolveOutcome {
-    let cost = solution.cost(problem);
-    let lower_bound = if proven_optimal {
-        cost
-    } else {
-        // Clamp: the bound is valid by construction, but `cost` is the
-        // invariant reports and tests lean on.
-        certified_lower_bound(problem).min(cost)
-    };
-    let proven_optimal = proven_optimal || lower_bound == cost;
-    SolveOutcome { solution, solver, cost, lower_bound, proven_optimal }
+    outcome_with(problem, solution, solver, proven_optimal, None)
 }
 
 /// First-fit-decreasing behind the trait.
@@ -233,9 +307,18 @@ impl Solver for FfdSolver {
         "ffd"
     }
 
-    fn solve(&self, problem: &MvbpProblem, _budget: &SolveBudget) -> Option<SolveOutcome> {
+    fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        self.solve_with(problem, budget, None)
+    }
+
+    fn solve_with(
+        &self,
+        problem: &MvbpProblem,
+        _budget: &SolveBudget,
+        bound_hint: Option<Dollars>,
+    ) -> Option<SolveOutcome> {
         let solution = heuristics::solve_first_fit(problem)?;
-        Some(outcome_for(problem, solution, SolverKind::FirstFit, false))
+        Some(outcome_with(problem, solution, SolverKind::FirstFit, false, bound_hint))
     }
 }
 
@@ -247,9 +330,18 @@ impl Solver for BfdSolver {
         "bfd"
     }
 
-    fn solve(&self, problem: &MvbpProblem, _budget: &SolveBudget) -> Option<SolveOutcome> {
+    fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        self.solve_with(problem, budget, None)
+    }
+
+    fn solve_with(
+        &self,
+        problem: &MvbpProblem,
+        _budget: &SolveBudget,
+        bound_hint: Option<Dollars>,
+    ) -> Option<SolveOutcome> {
         let solution = heuristics::solve_best_fit(problem)?;
-        Some(outcome_for(problem, solution, SolverKind::BestFit, false))
+        Some(outcome_with(problem, solution, SolverKind::BestFit, false, bound_hint))
     }
 }
 
@@ -263,13 +355,27 @@ impl Solver for ExactSolver {
     }
 
     fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
-        let bb = BranchAndBound { node_budget: budget.node_budget, deadline: budget.deadline() };
+        self.solve_with(problem, budget, None)
+    }
+
+    fn solve_with(
+        &self,
+        problem: &MvbpProblem,
+        budget: &SolveBudget,
+        bound_hint: Option<Dollars>,
+    ) -> Option<SolveOutcome> {
+        let bb = BranchAndBound {
+            node_budget: budget.node_budget,
+            deadline: budget.deadline(),
+            ..Default::default()
+        };
         let result = bb.solve(problem)?;
-        Some(outcome_for(
+        Some(outcome_with(
             problem,
             result.solution,
             SolverKind::Exact,
             result.proven_optimal,
+            bound_hint,
         ))
     }
 }
@@ -393,9 +499,15 @@ fn run_tasks(
         |i| tasks[i].0,
         |i| {
             let (_, greedy, items) = tasks[i];
-            let mut open = Vec::new();
-            heuristics::pack_into(problem, greedy, items, &mut open)
-                .then(|| heuristics::finish(open))
+            let label = match greedy {
+                Greedy::FirstFit => "arm:ff-shard",
+                Greedy::BestFit => "arm:bf-shard",
+            };
+            profiling::time_phase(label, || {
+                let mut open = Vec::new();
+                heuristics::pack_into(problem, greedy, items, &mut open)
+                    .then(|| heuristics::finish(open))
+            })
         },
     )
 }
@@ -413,6 +525,7 @@ impl PortfolioSolver {
         budget: &SolveBudget,
         classes: &[aggregate::ItemClass],
         deadline: Option<Instant>,
+        bound_hint: Option<Dollars>,
     ) -> Option<SolveOutcome> {
         let arms: Vec<(Greedy, ItemOrder)> = [Greedy::FirstFit, Greedy::BestFit]
             .iter()
@@ -422,7 +535,12 @@ impl PortfolioSolver {
             arms.len(),
             deadline,
             |i| i,
-            |i| aggregate::solve_classes(problem, classes, arms[i].0, arms[i].1),
+            |i| {
+                let (greedy, order) = arms[i];
+                profiling::time_phase(arm_label(greedy, order), || {
+                    aggregate::solve_classes(problem, classes, greedy, order)
+                })
+            },
         );
         let mut best: Option<(Solution, Dollars)> = None;
         for candidate in results.into_iter().flatten() {
@@ -435,7 +553,9 @@ impl PortfolioSolver {
             }
         }
         let (best, proven) = self.polish(problem, budget, deadline, best);
-        best.map(|(solution, _)| outcome_for(problem, solution, SolverKind::Portfolio, proven))
+        best.map(|(solution, _)| {
+            outcome_with(problem, solution, SolverKind::Portfolio, proven, bound_hint)
+        })
     }
 
     /// Exact polish shared by both racing paths: seeded with the racing
@@ -454,9 +574,12 @@ impl PortfolioSolver {
             let bb = BranchAndBound {
                 node_budget: budget.node_budget.min(EXACT_ARM_NODE_CAP),
                 deadline,
+                ..Default::default()
             };
             let incumbent = best.as_ref().map(|(s, _)| s.clone());
-            if let Some(result) = bb.solve_seeded(problem, incumbent) {
+            let polished =
+                profiling::time_phase("arm:exact-polish", || bb.solve_seeded(problem, incumbent));
+            if let Some(result) = polished {
                 if result.solution.validate(problem).is_ok() {
                     let cost = result.solution.cost(problem);
                     if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
@@ -476,6 +599,15 @@ impl Solver for PortfolioSolver {
     }
 
     fn solve(&self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        self.solve_with(problem, budget, None)
+    }
+
+    fn solve_with(
+        &self,
+        problem: &MvbpProblem,
+        budget: &SolveBudget,
+        bound_hint: Option<Dollars>,
+    ) -> Option<SolveOutcome> {
         problem.validate().ok()?;
         let n = problem.items.len();
         if n == 0 {
@@ -496,7 +628,7 @@ impl Solver for PortfolioSolver {
             let cap = (n / 2).min(self.full_arm_cutoff);
             if let Some(classes) = aggregate::group_classes_capped(problem, cap) {
                 debug_assert!(aggregate::aggregation_pays(classes.len(), n));
-                return self.solve_aggregated(problem, budget, &classes, deadline);
+                return self.solve_aggregated(problem, budget, &classes, deadline, bound_hint);
             }
         }
         let sharded = n > self.full_arm_cutoff;
@@ -558,7 +690,9 @@ impl Solver for PortfolioSolver {
         // Exact polish: seeded with the racing winner, bounded by the
         // remaining deadline and a deterministic node cap.
         let (best, proven) = self.polish(problem, budget, deadline, best);
-        best.map(|(solution, _)| outcome_for(problem, solution, SolverKind::Portfolio, proven))
+        best.map(|(solution, _)| {
+            outcome_with(problem, solution, SolverKind::Portfolio, proven, bound_hint)
+        })
     }
 }
 
@@ -587,18 +721,31 @@ impl SolverChoice {
 
     /// Solve `problem` under this routing.
     pub fn solve(self, problem: &MvbpProblem, budget: &SolveBudget) -> Option<SolveOutcome> {
+        self.solve_with(problem, budget, None)
+    }
+
+    /// [`SolverChoice::solve`] with an already-certified lower bound
+    /// hint — see [`Solver::solve_with`].
+    pub fn solve_with(
+        self,
+        problem: &MvbpProblem,
+        budget: &SolveBudget,
+        bound_hint: Option<Dollars>,
+    ) -> Option<SolveOutcome> {
         match self {
             SolverChoice::Auto => {
                 if problem.items.len() <= budget.exact_cutoff {
-                    ExactSolver.solve(problem, budget)
+                    ExactSolver.solve_with(problem, budget, bound_hint)
                 } else {
-                    PortfolioSolver::default().solve(problem, budget)
+                    PortfolioSolver::default().solve_with(problem, budget, bound_hint)
                 }
             }
-            SolverChoice::Ffd => FfdSolver.solve(problem, budget),
-            SolverChoice::Bfd => BfdSolver.solve(problem, budget),
-            SolverChoice::Exact => ExactSolver.solve(problem, budget),
-            SolverChoice::Portfolio => PortfolioSolver::default().solve(problem, budget),
+            SolverChoice::Ffd => FfdSolver.solve_with(problem, budget, bound_hint),
+            SolverChoice::Bfd => BfdSolver.solve_with(problem, budget, bound_hint),
+            SolverChoice::Exact => ExactSolver.solve_with(problem, budget, bound_hint),
+            SolverChoice::Portfolio => {
+                PortfolioSolver::default().solve_with(problem, budget, bound_hint)
+            }
         }
     }
 }

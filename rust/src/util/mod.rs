@@ -11,11 +11,15 @@
 //! * [`cli`] — argument parsing for the `camcloud` binary;
 //! * [`bench`] — measurement harness used by `rust/benches/*`
 //!   (criterion-style warmup + timed samples + percentile report);
-//! * [`proptest`] — seeded randomized property-testing harness.
+//! * [`proptest`] — seeded randomized property-testing harness;
+//! * [`profiling`] — per-phase wall-clock registry behind the
+//!   off-by-default `profiling` feature (zero-cost pass-through
+//!   otherwise).
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod profiling;
 pub mod proptest;
 pub mod rng;

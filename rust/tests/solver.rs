@@ -3,9 +3,9 @@
 //! invariants on every random instance (the PR's acceptance criteria).
 
 use camcloud::packing::{
-    aggregation_pays, certified_lower_bound, group_classes, solve_greedy,
-    solve_greedy_aggregated, BfdSolver, BinType, ExactSolver, FfdSolver, Greedy, Item,
-    ItemOrder, MvbpProblem, PortfolioSolver, SolveBudget, Solver, SolverChoice,
+    aggregation_pays, certified_lower_bound, group_classes, set_dff_disabled, solve_greedy,
+    solve_greedy_aggregated, BfdSolver, BinType, BranchAndBound, ExactSolver, FfdSolver, Greedy,
+    Item, ItemOrder, MvbpProblem, PortfolioSolver, SolveBudget, Solver, SolverChoice,
 };
 use camcloud::types::{Dollars, ResourceVec};
 use camcloud::util::proptest::{check, Config};
@@ -260,6 +260,85 @@ fn class_grouping_partitions_items_exactly() {
             }
             if !seen.iter().all(|s| *s) {
                 return Err("classes must cover every item".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The DFF family can only *strengthen* `certified_lower_bound`: the
+/// bound with the DFF term disabled never exceeds the full bound, and
+/// the full bound never exceeds the exact search's cost (which equals
+/// the optimum whenever the proof completes).
+///
+/// This is the single test in the suite that toggles the DFF kill
+/// switch; every other test is knob-invariant (their assertions hold
+/// for any valid bound), and the knob is restored before any early
+/// return.
+#[test]
+fn dff_bound_dominates_the_legacy_bound() {
+    let budget = test_budget();
+    check(
+        "dff-dominance",
+        Config { cases: 32, ..Default::default() },
+        random_instance,
+        |p| {
+            set_dff_disabled(true);
+            let legacy = certified_lower_bound(p);
+            set_dff_disabled(false);
+            let full = certified_lower_bound(p);
+            if legacy > full {
+                return Err(format!("DFF weakened the bound: {legacy} > {full}"));
+            }
+            let exact = ExactSolver
+                .solve(p, &budget)
+                .ok_or("exact must solve a feasible instance")?;
+            if full > exact.cost {
+                return Err(format!(
+                    "bound {full} exceeds the exact cost {} (proven: {})",
+                    exact.cost, exact.proven_optimal
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Class-multiplicity branching must land on exactly the per-item
+/// optimum: whenever both searches complete their proof the costs
+/// agree, and a proven-optimal cost never exceeds the other search's
+/// incumbent even when that search ran out of nodes.
+#[test]
+fn class_exact_matches_per_item_exact_on_high_multiplicity_instances() {
+    check(
+        "class-exact-equals-per-item",
+        Config { cases: 12, ..Default::default() },
+        random_high_multiplicity,
+        |p| {
+            let class = BranchAndBound { node_budget: 60_000, ..Default::default() }
+                .solve(p)
+                .ok_or("class search must solve a feasible instance")?;
+            let per_item =
+                BranchAndBound { node_budget: 60_000, per_item: true, ..Default::default() }
+                    .solve(p)
+                    .ok_or("per-item search must solve a feasible instance")?;
+            class
+                .solution
+                .validate(p)
+                .map_err(|e| format!("class expansion invalid: {e}"))?;
+            per_item
+                .solution
+                .validate(p)
+                .map_err(|e| format!("per-item solution invalid: {e}"))?;
+            let (cc, pc) = (class.solution.cost(p), per_item.solution.cost(p));
+            if class.proven_optimal && per_item.proven_optimal && cc != pc {
+                return Err(format!("proven optima diverge: class {cc} vs per-item {pc}"));
+            }
+            if class.proven_optimal && cc > pc {
+                return Err(format!("class 'optimum' {cc} above per-item incumbent {pc}"));
+            }
+            if per_item.proven_optimal && pc > cc {
+                return Err(format!("per-item 'optimum' {pc} above class incumbent {cc}"));
             }
             Ok(())
         },
