@@ -632,5 +632,5 @@ fn class_gate_problem() -> MvbpProblem {
             });
         }
     }
-    MvbpProblem { dims: 2, bin_types, items }
+    MvbpProblem { dims: 2, bin_types, items, choice_costs: vec![] }
 }

@@ -1,0 +1,195 @@
+//! Bench: spot-market economics — the tiered-pricing acceptance gates.
+//!
+//! Two claims back the tiered cloud-economics refactor:
+//!
+//! * **Savings gate** — on the builtin spot trace (mid-epoch spot
+//!   revocations scheduled in epochs 1 and 3), the reactive policy
+//!   buying discounted spot capacity must bill strictly less end to end
+//!   than on-demand-only static-peak provisioning of the same demand,
+//!   even though it pays for revocation churn.  Billing totals are
+//!   deterministic, so this gate holds in smoke runs too.
+//! * **Revocation-repack latency** — at 10,000 streams, the emergency
+//!   repack after a spot reclaim (surviving fleet as warm incumbent,
+//!   orphans re-packed via `ResourceManager::allocate_warm`) is
+//!   measured against a cold re-solve of the same epoch.  Wall-clock
+//!   is recorded for the perf trajectory; the warm-beats-cold
+//!   assertion is skipped under `BENCH7_SMOKE` (shared runners are too
+//!   noisy to gate on).
+//!
+//! Writes `target/BENCH_7.json` for CI to archive.  Env knobs:
+//! `BENCH7_SMOKE` shrinks the repack instance and skips timing gates.
+
+use camcloud::cloud::{Catalog, PricingModel, PricingTier, TierSpec};
+use camcloud::coordinator::{AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::manager::{ResourceManager, Strategy};
+use camcloud::streams::StreamSpec;
+use camcloud::types::{Program, VGA};
+use camcloud::util::bench::Bench;
+use camcloud::util::json::Json;
+use camcloud::workload::trace::WorkloadTrace;
+
+fn main() {
+    let mut bench = Bench::new("spot_market");
+    let smoke = std::env::var("BENCH7_SMOKE").is_ok();
+    let coordinator = Coordinator::new();
+
+    // ----- Savings gate: reactive-under-spot vs on-demand static-peak -
+    let spot_trace = WorkloadTrace::spot_market(7);
+    let runner = AutoscaleRunner::new(&coordinator);
+    let reactive_spot = runner
+        .run(&spot_trace, ScalePolicy::Reactive)
+        .expect("reactive spot run completes");
+    let revoked: u32 = reactive_spot.epochs.iter().map(|e| e.revoked).sum();
+    assert!(revoked > 0, "the spot trace's scheduled reclaims must fire");
+    assert!(
+        reactive_spot.epochs.iter().all(|e| e.unserved == 0),
+        "every orphaned stream must be re-placed"
+    );
+
+    let mut ondemand_trace = WorkloadTrace::spot_market(7);
+    ondemand_trace.catalog = Catalog::paper_experiments();
+    let peak_ondemand = runner
+        .run(&ondemand_trace, ScalePolicy::StaticPeak)
+        .expect("on-demand static-peak run completes");
+    assert!(
+        peak_ondemand.epochs.iter().all(|e| e.revoked == 0),
+        "on-demand instances are never revoked"
+    );
+
+    let savings = reactive_spot
+        .total_billed
+        .savings_vs(peak_ondemand.total_billed);
+    bench.record("reactive_spot_billed", reactive_spot.total_billed.as_f64());
+    bench.record("static_peak_ondemand_billed", peak_ondemand.total_billed.as_f64());
+    bench.record("spot_savings_pct", savings);
+    bench.record("spot_revocations", f64::from(revoked));
+    assert!(
+        reactive_spot.total_billed < peak_ondemand.total_billed,
+        "reactive under spot ({}) must undercut on-demand-only static-peak ({}), \
+         revocation churn included",
+        reactive_spot.total_billed,
+        peak_ondemand.total_billed
+    );
+
+    // ----- Revocation-repack latency at 10k streams -------------------
+    // A rate-quantized 10k-stream fleet on the tiered catalog; the cold
+    // solve is the baseline, the warm repack starts from the cold plan
+    // minus 10% of its instances (the reclaim's orphans).
+    let n_streams: u32 = if smoke { 1_000 } else { 10_000 };
+    let catalog = Catalog::paper_experiments().with_pricing(PricingModel::with_tiers(vec![
+        TierSpec::new(PricingTier::OnDemand),
+        TierSpec::new(PricingTier::Spot),
+    ]));
+    let mgr = ResourceManager::new(catalog, &coordinator);
+    let per_level = n_streams / 8;
+    let mut streams = Vec::new();
+    for level in 0..8u32 {
+        streams.extend(StreamSpec::replicate(
+            level * per_level,
+            per_level,
+            VGA,
+            Program::Zf,
+            0.20 + 0.04 * f64::from(level),
+        ));
+    }
+
+    let (warmup, samples) = if smoke { (1, 2) } else { (1, 5) };
+    let mut incumbent = None;
+    let cold = bench
+        .measure(&format!("cold_solve_{n_streams}"), warmup, samples, || {
+            let plan = mgr
+                .allocate(&streams, Strategy::St3)
+                .expect("tiered fleet allocates");
+            incumbent = Some(plan);
+        })
+        .p50();
+    let incumbent = incumbent.expect("cold solve ran");
+    let placed: usize = incumbent.instances.iter().map(|i| i.streams.len()).sum();
+    assert_eq!(placed, streams.len(), "cold plan places every stream");
+
+    // Reclaim 10% of the fleet (at least one instance): drop the tail
+    // instances and their assignments, exactly what a revocation
+    // orphans.
+    let keep = (incumbent.instances.len() * 9 / 10).min(incumbent.instances.len() - 1);
+    let mut survivor = incumbent.clone();
+    survivor.instances.truncate(keep);
+    survivor.hourly_cost = survivor.instances.iter().map(|i| i.hourly_cost).sum();
+    survivor.lower_bound = None;
+    let orphans = streams.len()
+        - survivor
+            .instances
+            .iter()
+            .map(|i| i.streams.len())
+            .sum::<usize>();
+    assert!(orphans > 0, "truncation must orphan streams");
+
+    let mut repack_solver = None;
+    let warm = bench
+        .measure(&format!("revocation_repack_{n_streams}"), warmup, samples, || {
+            let plan = mgr
+                .allocate_warm(&streams, Strategy::St3, &survivor)
+                .expect("revocation repack allocates");
+            let placed: usize = plan.instances.iter().map(|i| i.streams.len()).sum();
+            assert_eq!(placed, streams.len(), "repack re-places every orphan");
+            repack_solver = Some(plan.solver);
+        })
+        .p50();
+    let repack_solver = repack_solver.expect("repack ran");
+    bench.record("repack_speedup", cold / warm);
+    if !smoke {
+        assert!(
+            warm < cold,
+            "revocation repack must beat a cold re-solve at {n_streams} streams: \
+             warm {warm:.4}s vs cold {cold:.4}s"
+        );
+    }
+
+    // ----- BENCH_7.json ----------------------------------------------
+    let record = vec![
+        ("suite".to_string(), Json::Str("spot_market".to_string())),
+        (
+            "savings".to_string(),
+            Json::obj(vec![
+                ("trace".to_string(), Json::Str(spot_trace.name.clone())),
+                (
+                    "reactive_spot_billed".to_string(),
+                    Json::Num(reactive_spot.total_billed.as_f64()),
+                ),
+                (
+                    "static_peak_ondemand_billed".to_string(),
+                    Json::Num(peak_ondemand.total_billed.as_f64()),
+                ),
+                ("savings_pct".to_string(), Json::Num(savings)),
+                ("revocations".to_string(), Json::Num(f64::from(revoked))),
+                (
+                    "reactive_mean_performance".to_string(),
+                    Json::Num(reactive_spot.mean_performance),
+                ),
+            ]),
+        ),
+        (
+            "repack".to_string(),
+            Json::obj(vec![
+                ("streams".to_string(), Json::Num(f64::from(n_streams))),
+                (
+                    "fleet_instances".to_string(),
+                    Json::Num(incumbent.instances.len() as f64),
+                ),
+                ("orphaned_streams".to_string(), Json::Num(orphans as f64)),
+                ("cold_p50_s".to_string(), Json::Num(cold)),
+                ("warm_repack_p50_s".to_string(), Json::Num(warm)),
+                ("speedup".to_string(), Json::Num(cold / warm)),
+                ("repack_solver".to_string(), Json::Str(repack_solver.to_string())),
+            ]),
+        ),
+    ];
+    let json = Json::obj(record).to_pretty();
+    let path = std::path::Path::new("target/BENCH_7.json");
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_7.json");
+    println!("wrote {}", path.display());
+
+    bench.finish();
+}

@@ -1,4 +1,5 @@
-//! Hourly billing meter over the simulation clock.
+//! Hourly billing meter over the simulation clock, with per-tier
+//! lease semantics.
 //!
 //! Implements the pay-as-you-go model the paper relies on (§1): each
 //! instance bills its hourly cost for every *started* hour between
@@ -22,22 +23,89 @@
 //!   [`worth_reallocating`](crate::manager::realloc::worth_reallocating)
 //!   hysteresis gate weighs against horizon savings.
 //!
+//! # Per-tier lease semantics
+//!
+//! Each record carries the [`PricingTier`] its instance was purchased
+//! under (see [`crate::cloud::Offering`]); the tier changes *when*
+//! hours are charged, never the effective hourly rate (which is baked
+//! into the offering's `hourly_cost`):
+//!
+//! * **OnDemand** — the paper's model: `ceil` started hours from
+//!   provision to termination, minimum one hour.
+//! * **Reserved** — a commitment: billed from provision to the
+//!   settlement horizon `now` *regardless of termination*.  Churning a
+//!   reserved instance away early saves nothing; the discount is paid
+//!   for with inflexibility.
+//! * **Spot** — billed like on-demand while it runs, but when the
+//!   vendor revokes it ([`BillingMeter::on_revoke`]) the interrupted
+//!   partial hour is *not* charged: `floor` full hours only, possibly
+//!   zero.  Voluntary termination of a spot instance still pays the
+//!   started hour.
+//!
+//! Cross-region data-transfer charges are metered separately via
+//! [`BillingMeter::add_transfer`] and folded into the settlement
+//! total.
+//!
 //! One meter therefore spans a whole trace run: records open at each
-//! provision, close at each terminate, and [`BillingMeter::total_cost`]
-//! prices the union at settlement.  [`BillingMeter::hourly_rate`] is the
-//! *run-rate* view — the combined hourly cost of instances running at an
-//! instant — and is well-defined mid-simulation even for records whose
-//! termination has already been written with a later timestamp.
+//! provision, close at each terminate or revoke, and
+//! [`BillingMeter::total_cost`] prices the union at settlement.
+//! [`BillingMeter::hourly_rate`] is the *run-rate* view — the combined
+//! hourly cost of instances running at an instant — and is
+//! well-defined mid-simulation even for records whose termination has
+//! already been written with a later timestamp.
 
-use super::catalog::InstanceType;
+use super::catalog::{InstanceType, PricingTier};
 use super::instance::{InstanceId, SimInstance};
 use crate::types::Dollars;
 use std::collections::BTreeMap;
 
+/// One instance's usage span and the lease it was purchased under.
+#[derive(Clone, Debug)]
+struct BillingRecord {
+    itype: InstanceType,
+    tier: PricingTier,
+    start: f64,
+    end: Option<f64>,
+    revoked: bool,
+}
+
+impl BillingRecord {
+    /// Billed hours for this record at settlement time `now`.
+    fn hours(&self, now: f64) -> u32 {
+        match self.tier {
+            PricingTier::Reserved => {
+                // Commitment: start -> settlement horizon, regardless
+                // of early termination.
+                BillingMeter::billed_hours(now - self.start)
+            }
+            PricingTier::OnDemand => {
+                BillingMeter::billed_hours(self.end.unwrap_or(now) - self.start)
+            }
+            PricingTier::Spot => {
+                let span = self.end.unwrap_or(now) - self.start;
+                if self.revoked {
+                    // Vendor interruption: only completed hours are
+                    // charged; a revocation inside the first hour is
+                    // free.
+                    (span.max(0.0) / 3600.0).floor() as u32
+                } else {
+                    BillingMeter::billed_hours(span)
+                }
+            }
+        }
+    }
+
+    fn cost(&self, now: f64) -> Dollars {
+        self.itype.hourly_cost * self.hours(now)
+    }
+}
+
 /// Accumulates per-instance usage and prices it.
 #[derive(Default, Debug)]
 pub struct BillingMeter {
-    records: BTreeMap<InstanceId, (InstanceType, f64, Option<f64>)>,
+    records: BTreeMap<InstanceId, BillingRecord>,
+    /// Accumulated cross-region data-transfer charges.
+    transfer: Dollars,
 }
 
 impl BillingMeter {
@@ -46,14 +114,50 @@ impl BillingMeter {
     }
 
     pub fn on_provision(&mut self, inst: &SimInstance) {
-        self.records
-            .insert(inst.id, (inst.itype.clone(), inst.started_at, None));
+        self.records.insert(
+            inst.id,
+            BillingRecord {
+                itype: inst.itype.clone(),
+                tier: inst.tier,
+                start: inst.started_at,
+                end: None,
+                revoked: false,
+            },
+        );
     }
 
+    /// Close a record at `now`.  Idempotent: once a span has ended —
+    /// by termination or revocation — later calls never move it, so
+    /// an instance can never be double-charged for one span.
     pub fn on_terminate(&mut self, id: InstanceId, now: f64) {
-        if let Some((_, start, end)) = self.records.get_mut(&id) {
-            *end = Some(now.max(*start));
+        if let Some(rec) = self.records.get_mut(&id) {
+            if rec.end.is_none() {
+                rec.end = Some(now.max(rec.start));
+            }
         }
+    }
+
+    /// Vendor revocation of a spot instance at `now`: closes the span
+    /// and marks it interrupted, which forgives the partial hour.  A
+    /// record that already ended is left untouched.
+    pub fn on_revoke(&mut self, id: InstanceId, now: f64) {
+        if let Some(rec) = self.records.get_mut(&id) {
+            if rec.end.is_none() {
+                rec.end = Some(now.max(rec.start));
+                rec.revoked = true;
+            }
+        }
+    }
+
+    /// Accrue a cross-region data-transfer charge.
+    pub fn add_transfer(&mut self, amount: Dollars) {
+        debug_assert!(amount >= Dollars::ZERO, "transfer charges are non-negative");
+        self.transfer = self.transfer + amount;
+    }
+
+    /// Accumulated transfer charges so far.
+    pub fn transfer_cost(&self) -> Dollars {
+        self.transfer
     }
 
     /// Billed started-hours for a usage span.
@@ -66,27 +170,18 @@ impl BillingMeter {
         }
     }
 
-    /// Total cost of all usage up to `now`.
+    /// Total cost of all usage up to `now`, including transfer fees.
     pub fn total_cost(&self, now: f64) -> Dollars {
-        self.records
-            .values()
-            .map(|(itype, start, end)| {
-                let span = end.unwrap_or(now) - start;
-                itype.hourly_cost * Self::billed_hours(span)
-            })
-            .sum()
+        self.records.values().map(|rec| rec.cost(now)).sum::<Dollars>() + self.transfer
     }
 
     /// `(instance, billed hours, cost)` per record up to `now` — the
-    /// per-instance breakdown of [`BillingMeter::total_cost`].
+    /// per-instance breakdown of [`BillingMeter::total_cost`] (minus
+    /// transfer fees, which are not attributable to one instance).
     pub fn per_instance(&self, now: f64) -> Vec<(InstanceId, u32, Dollars)> {
         self.records
             .iter()
-            .map(|(id, (itype, start, end))| {
-                let span = end.unwrap_or(now) - start;
-                let hours = Self::billed_hours(span);
-                (*id, hours, itype.hourly_cost * hours)
-            })
+            .map(|(id, rec)| (*id, rec.hours(now), rec.cost(now)))
             .collect()
     }
 
@@ -94,11 +189,17 @@ impl BillingMeter {
     /// at or before `now` and not terminated until strictly after it.
     /// A record whose `end` is already written with a *later* timestamp
     /// still counts — mid-simulation queries must see it running.
+    /// Reserved commitments keep billing after termination, so they
+    /// count whenever they have started.
     pub fn hourly_rate(&self, now: f64) -> Dollars {
         self.records
             .values()
-            .filter(|(_, start, end)| *start <= now && end.map_or(true, |e| e > now))
-            .map(|(itype, _, _)| itype.hourly_cost)
+            .filter(|rec| {
+                rec.start <= now
+                    && (rec.tier == PricingTier::Reserved
+                        || rec.end.map_or(true, |e| e > now))
+            })
+            .map(|rec| rec.itype.hourly_cost)
             .sum()
     }
 
@@ -118,6 +219,13 @@ mod tests {
         let mut m = BillingMeter::new();
         m.on_provision(&inst);
         (m, inst)
+    }
+
+    fn tiered(id: u32, tier: PricingTier, start: f64) -> SimInstance {
+        let t = Catalog::aws_table1().get("c4.2xlarge").unwrap().clone();
+        let mut inst = SimInstance::new(InstanceId(id), t, start);
+        inst.tier = tier;
+        inst
     }
 
     #[test]
@@ -174,5 +282,56 @@ mod tests {
         // Not-yet-started instances never count.
         let (m2, _) = meter_with(2, "g2.2xlarge", 50.0);
         assert_eq!(m2.hourly_rate(10.0), Dollars::ZERO);
+    }
+
+    #[test]
+    fn terminate_is_idempotent() {
+        let (mut m, _) = meter_with(1, "c4.2xlarge", 0.0);
+        m.on_terminate(InstanceId(1), 1800.0); // 1 started hour
+        m.on_terminate(InstanceId(1), 7200.0); // must not extend the span
+        assert_eq!(m.total_cost(10_000.0), Dollars::from_f64(0.419));
+        // A late revoke of an already-closed record changes nothing.
+        m.on_revoke(InstanceId(1), 9000.0);
+        assert_eq!(m.total_cost(10_000.0), Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn reserved_commitment_billed_regardless_of_churn() {
+        let mut m = BillingMeter::new();
+        m.on_provision(&tiered(1, PricingTier::Reserved, 0.0));
+        // Terminated after 30 minutes, but the commitment runs to the
+        // settlement horizon: 2 started hours at t = 2h - 1s.
+        m.on_terminate(InstanceId(1), 1800.0);
+        assert_eq!(m.total_cost(7199.0), Dollars::from_f64(0.838));
+        // Still on the books for run-rate purposes.
+        assert_eq!(m.hourly_rate(3600.0), Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn spot_revocation_forgives_partial_hour() {
+        let mut m = BillingMeter::new();
+        m.on_provision(&tiered(1, PricingTier::Spot, 0.0));
+        m.on_provision(&tiered(2, PricingTier::Spot, 0.0));
+        // Revoked inside the first hour: free.
+        m.on_revoke(InstanceId(1), 1800.0);
+        // Revoked after 1h30: only the completed hour is charged.
+        m.on_revoke(InstanceId(2), 5400.0);
+        let per = m.per_instance(10_000.0);
+        assert_eq!(per[0], (InstanceId(1), 0, Dollars::ZERO));
+        assert_eq!(per[1], (InstanceId(2), 1, Dollars::from_f64(0.419)));
+        // Voluntary termination of spot still pays the started hour.
+        let mut m2 = BillingMeter::new();
+        m2.on_provision(&tiered(3, PricingTier::Spot, 0.0));
+        m2.on_terminate(InstanceId(3), 1800.0);
+        assert_eq!(m2.total_cost(10_000.0), Dollars::from_f64(0.419));
+    }
+
+    #[test]
+    fn transfer_charges_fold_into_total() {
+        let (mut m, _) = meter_with(1, "c4.2xlarge", 0.0);
+        m.add_transfer(Dollars::from_f64(0.010));
+        m.add_transfer(Dollars::from_f64(0.005));
+        assert_eq!(m.transfer_cost(), Dollars::from_f64(0.015));
+        assert_eq!(m.total_cost(1.0), Dollars::from_f64(0.434));
     }
 }

@@ -1,4 +1,39 @@
-//! Instance-type catalog (the paper's Table 1).
+//! Instance-type catalog (the paper's Table 1) and the pricing model
+//! layered on top of it.
+//!
+//! The paper prices a single-region, on-demand catalog: one
+//! started-hour rate per instance type.  Real cloud vendors sell the
+//! same hardware under several **lease tiers** and in several
+//! **regions**, and the spread between those prices is the largest
+//! cost lever a provisioner has.  This module keeps [`InstanceType`]
+//! as the hardware description (capability vector + *base* on-demand
+//! rate) and adds a [`PricingModel`] describing how that base rate is
+//! modulated:
+//!
+//! * [`PricingTier`] — `Reserved` (discounted commitment, billed for
+//!   the whole settlement window regardless of churn), `OnDemand`
+//!   (the paper's started-hour semantics), `Spot` (deep discount, but
+//!   the vendor may revoke the instance mid-trace; see
+//!   `workload::trace` revocation events and `cloud::billing` for how
+//!   interrupted hours are priced).
+//! * [`RegionSpec`] — a named region with a price factor and an
+//!   hourly **data-transfer charge** applied when a stream is served
+//!   from an instance outside its home region (cross-region
+//!   assignment, as in geo-distributed lease optimization).
+//!
+//! A (type, tier, region) combination is an [`Offering`]: a synthetic
+//! `InstanceType` whose name is `base:tier@region` (for example
+//! `c4.2xlarge:spot@r1`) and whose `hourly_cost` is the *effective*
+//! rate `base × tier factor × region factor`.  [`Catalog::offerings`]
+//! enumerates them and [`Catalog::resolve`] maps any plan type name —
+//! plain or offering-qualified — back to its offering, so the fleet
+//! simulator and billing meter price provisioned instances correctly.
+//!
+//! The default [`PricingModel`] is **flat** (one on-demand tier, one
+//! local region, zero transfer): under it `offerings()` reproduces the
+//! plain catalog byte for byte and every downstream path — problem
+//! construction, billing, reports — is bit-identical to the
+//! single-price model the paper describes.
 
 use crate::types::{DimLayout, Dollars, ResourceVec};
 
@@ -49,10 +84,152 @@ impl InstanceType {
     }
 }
 
+/// A cloud lease tier: how an instance is paid for, and what the
+/// vendor may do to it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PricingTier {
+    /// Committed capacity at a discount: billed from provision until
+    /// the settlement horizon regardless of early termination.
+    Reserved,
+    /// The paper's model: started-hour billing, never revoked.
+    OnDemand,
+    /// Deep discount; the vendor may revoke the instance mid-trace
+    /// (the interrupted partial hour is not charged).
+    Spot,
+}
+
+impl PricingTier {
+    /// Conventional price factor relative to the on-demand base rate.
+    pub fn default_factor(self) -> f64 {
+        match self {
+            PricingTier::Reserved => 0.6,
+            PricingTier::OnDemand => 1.0,
+            PricingTier::Spot => 0.35,
+        }
+    }
+}
+
+impl std::fmt::Display for PricingTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PricingTier::Reserved => "reserved",
+            PricingTier::OnDemand => "ondemand",
+            PricingTier::Spot => "spot",
+        })
+    }
+}
+
+impl std::str::FromStr for PricingTier {
+    type Err = String;
+    fn from_str(s: &str) -> Result<PricingTier, String> {
+        match s {
+            "reserved" => Ok(PricingTier::Reserved),
+            "ondemand" | "on-demand" => Ok(PricingTier::OnDemand),
+            "spot" => Ok(PricingTier::Spot),
+            other => Err(format!(
+                "unknown pricing tier {other:?} (expected reserved, ondemand, or spot)"
+            )),
+        }
+    }
+}
+
+/// One lease tier on offer, with its price factor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierSpec {
+    pub tier: PricingTier,
+    /// Multiplier applied to the base on-demand rate.
+    pub factor: f64,
+}
+
+impl TierSpec {
+    pub fn new(tier: PricingTier) -> TierSpec {
+        TierSpec { tier, factor: tier.default_factor() }
+    }
+}
+
+/// One region on offer: price factor plus the hourly data-transfer
+/// charge for serving a stream homed elsewhere from this region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionSpec {
+    pub name: String,
+    /// Multiplier applied to the (tier-adjusted) rate in this region.
+    pub factor: f64,
+    /// Hourly cross-region transfer cost per stream assigned here
+    /// from another home region.
+    pub transfer_hourly: Dollars,
+}
+
+/// The tier × region grid modulating a catalog's base rates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PricingModel {
+    pub tiers: Vec<TierSpec>,
+    pub regions: Vec<RegionSpec>,
+}
+
+impl Default for PricingModel {
+    /// The paper's model: one on-demand tier, one local region, no
+    /// transfer charges.  Everything downstream treats this as "no
+    /// pricing layer at all".
+    fn default() -> PricingModel {
+        PricingModel {
+            tiers: vec![TierSpec { tier: PricingTier::OnDemand, factor: 1.0 }],
+            regions: vec![RegionSpec {
+                name: "local".into(),
+                factor: 1.0,
+                transfer_hourly: Dollars::ZERO,
+            }],
+        }
+    }
+}
+
+impl PricingModel {
+    /// Tiered pricing in the default single local region.
+    pub fn with_tiers(tiers: Vec<TierSpec>) -> PricingModel {
+        let mut m = PricingModel::default();
+        if !tiers.is_empty() {
+            m.tiers = tiers;
+        }
+        m
+    }
+
+    /// True when this model changes nothing relative to the paper's
+    /// single-price catalog: one on-demand tier at factor 1 and at
+    /// most one region at factor 1 with zero transfer cost.
+    pub fn is_flat(&self) -> bool {
+        let flat_tiers = self.tiers.len() == 1
+            && self.tiers[0].tier == PricingTier::OnDemand
+            && self.tiers[0].factor == 1.0;
+        let flat_regions = match self.regions.as_slice() {
+            [] => true,
+            [r] => r.factor == 1.0 && r.transfer_hourly == Dollars::ZERO,
+            _ => false,
+        };
+        flat_tiers && flat_regions
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len().max(1)
+    }
+}
+
+/// One purchasable (type, tier, region) combination.
+///
+/// `itype.name` is the offering-qualified name (`base:tier@region`,
+/// or the plain base name under a flat model) and `itype.hourly_cost`
+/// the effective rate after tier and region factors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Offering {
+    pub itype: InstanceType,
+    pub tier: PricingTier,
+    /// Index into [`PricingModel::regions`].
+    pub region: usize,
+}
+
 /// A set of instance types offered by the (simulated) cloud vendor.
 #[derive(Clone, Debug, Default)]
 pub struct Catalog {
     pub types: Vec<InstanceType>,
+    pub pricing: PricingModel,
 }
 
 impl Catalog {
@@ -90,6 +267,7 @@ impl Catalog {
                     hourly_cost: Dollars::from_f64(2.600),
                 },
             ],
+            pricing: PricingModel::default(),
         }
     }
 
@@ -100,15 +278,30 @@ impl Catalog {
         Catalog::aws_table1().subset(&["c4.2xlarge", "g2.2xlarge"])
     }
 
+    /// Replace the pricing model (builder style).
+    pub fn with_pricing(mut self, pricing: PricingModel) -> Catalog {
+        self.pricing = pricing;
+        self
+    }
+
     /// Restrict to the named types (preserving catalog order).
+    ///
+    /// Offering-qualified names (`base:tier@region`) select their base
+    /// type, so a fleet provisioned from `offerings()` can restrict a
+    /// catalog for repacking.
     pub fn subset(&self, names: &[&str]) -> Catalog {
         Catalog {
             types: self
                 .types
                 .iter()
-                .filter(|t| names.contains(&t.name.as_str()))
+                .filter(|t| {
+                    names
+                        .iter()
+                        .any(|n| n.split(':').next().unwrap_or(n) == t.name)
+                })
                 .cloned()
                 .collect(),
+            pricing: self.pricing.clone(),
         }
     }
 
@@ -116,6 +309,7 @@ impl Catalog {
     pub fn non_gpu_only(&self) -> Catalog {
         Catalog {
             types: self.types.iter().filter(|t| !t.has_gpu()).cloned().collect(),
+            pricing: self.pricing.clone(),
         }
     }
 
@@ -123,11 +317,79 @@ impl Catalog {
     pub fn gpu_only(&self) -> Catalog {
         Catalog {
             types: self.types.iter().filter(|t| t.has_gpu()).cloned().collect(),
+            pricing: self.pricing.clone(),
         }
     }
 
     pub fn get(&self, name: &str) -> Option<&InstanceType> {
         self.types.iter().find(|t| t.name == name)
+    }
+
+    /// Enumerate every purchasable (type, tier, region) offering.
+    ///
+    /// Under a flat pricing model this is exactly the plain catalog
+    /// (same names, same rates); otherwise the type list is expanded
+    /// across the tier × region grid with effective rates.
+    pub fn offerings(&self) -> Vec<Offering> {
+        if self.pricing.is_flat() {
+            return self
+                .types
+                .iter()
+                .map(|t| Offering {
+                    itype: t.clone(),
+                    tier: PricingTier::OnDemand,
+                    region: 0,
+                })
+                .collect();
+        }
+        let mut out = Vec::new();
+        for t in &self.types {
+            for ts in &self.pricing.tiers {
+                for (r, rs) in self.pricing.regions.iter().enumerate() {
+                    let mut itype = t.clone();
+                    itype.name = format!("{}:{}@{}", t.name, ts.tier, rs.name);
+                    itype.hourly_cost = t.hourly_cost.scale(ts.factor * rs.factor);
+                    out.push(Offering { itype, tier: ts.tier, region: r });
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve a plan type name — plain (`c4.2xlarge`) or
+    /// offering-qualified (`c4.2xlarge:spot@r1`) — to its offering.
+    ///
+    /// Plain names resolve to the base type at on-demand rates in
+    /// region 0, which keeps pre-pricing plans valid unchanged.
+    pub fn resolve(&self, name: &str) -> Option<Offering> {
+        if let Some(t) = self.get(name) {
+            return Some(Offering {
+                itype: t.clone(),
+                tier: PricingTier::OnDemand,
+                region: 0,
+            });
+        }
+        let (base, rest) = name.split_once(':')?;
+        let (tier_s, region_s) = rest.split_once('@')?;
+        let tier: PricingTier = tier_s.parse().ok()?;
+        let tier_factor = self
+            .pricing
+            .tiers
+            .iter()
+            .find(|ts| ts.tier == tier)
+            .map(|ts| ts.factor)?;
+        let region = self
+            .pricing
+            .regions
+            .iter()
+            .position(|r| r.name == region_s)?;
+        let t = self.get(base)?;
+        let mut itype = t.clone();
+        itype.name = name.to_string();
+        itype.hourly_cost = t
+            .hourly_cost
+            .scale(tier_factor * self.pricing.regions[region].factor);
+        Some(Offering { itype, tier, region })
     }
 
     /// Dimension layout wide enough for every type in this catalog.
@@ -212,5 +474,82 @@ mod tests {
             Catalog::aws_table1().non_gpu_only().layout(),
             DimLayout::new(0)
         );
+    }
+
+    #[test]
+    fn tier_names_round_trip() {
+        for tier in [PricingTier::Reserved, PricingTier::OnDemand, PricingTier::Spot] {
+            let s = tier.to_string();
+            assert_eq!(s.parse::<PricingTier>().unwrap(), tier);
+        }
+        assert_eq!("on-demand".parse::<PricingTier>().unwrap(), PricingTier::OnDemand);
+        assert!("preemptible".parse::<PricingTier>().is_err());
+        assert_eq!(PricingTier::Spot.default_factor(), 0.35);
+        assert_eq!(PricingTier::Reserved.default_factor(), 0.6);
+    }
+
+    #[test]
+    fn flat_model_offerings_reproduce_plain_catalog() {
+        let cat = Catalog::aws_table1();
+        assert!(cat.pricing.is_flat());
+        let offs = cat.offerings();
+        assert_eq!(offs.len(), cat.types.len());
+        for (o, t) in offs.iter().zip(&cat.types) {
+            assert_eq!(o.itype, *t);
+            assert_eq!(o.tier, PricingTier::OnDemand);
+            assert_eq!(o.region, 0);
+        }
+        // Plain names resolve to themselves at base rates.
+        let r = cat.resolve("g2.2xlarge").unwrap();
+        assert_eq!(r.itype.hourly_cost, Dollars::from_f64(0.650));
+        assert!(cat.resolve("m5.large").is_none());
+    }
+
+    #[test]
+    fn tiered_offerings_expand_and_resolve() {
+        let pricing = PricingModel {
+            tiers: vec![
+                TierSpec { tier: PricingTier::OnDemand, factor: 1.0 },
+                TierSpec { tier: PricingTier::Spot, factor: 0.35 },
+            ],
+            regions: vec![
+                RegionSpec { name: "r0".into(), factor: 1.0, transfer_hourly: Dollars::ZERO },
+                RegionSpec {
+                    name: "r1".into(),
+                    factor: 1.05,
+                    transfer_hourly: Dollars::from_f64(0.01),
+                },
+            ],
+        };
+        assert!(!pricing.is_flat());
+        let cat = Catalog::paper_experiments().with_pricing(pricing);
+        let offs = cat.offerings();
+        // 2 types x 2 tiers x 2 regions.
+        assert_eq!(offs.len(), 8);
+        let spot = offs
+            .iter()
+            .find(|o| o.itype.name == "c4.2xlarge:spot@r1")
+            .unwrap();
+        assert_eq!(spot.tier, PricingTier::Spot);
+        assert_eq!(spot.region, 1);
+        assert_eq!(
+            spot.itype.hourly_cost,
+            Dollars::from_f64(0.419).scale(0.35 * 1.05)
+        );
+        // Every offering name resolves back to an identical offering.
+        for o in &offs {
+            let r = cat.resolve(&o.itype.name).unwrap();
+            assert_eq!(r.itype, o.itype);
+            assert_eq!(r.tier, o.tier);
+            assert_eq!(r.region, o.region);
+        }
+        // Plain base names still resolve (on-demand, region 0).
+        let plain = cat.resolve("c4.2xlarge").unwrap();
+        assert_eq!(plain.itype.hourly_cost, Dollars::from_f64(0.419));
+        // subset() accepts offering-qualified names.
+        let sub = cat.subset(&["c4.2xlarge:spot@r1"]);
+        assert_eq!(sub.types.len(), 1);
+        assert_eq!(sub.types[0].name, "c4.2xlarge");
+        assert!(!sub.pricing.is_flat());
     }
 }

@@ -1,6 +1,6 @@
 //! Provisioned-instance lifecycle.
 
-use super::catalog::InstanceType;
+use super::catalog::{InstanceType, PricingTier};
 use crate::types::{DimLayout, ResourceVec};
 
 /// Opaque instance identifier, unique per provisioning session.
@@ -29,6 +29,9 @@ pub enum InstanceState {
 pub struct SimInstance {
     pub id: InstanceId,
     pub itype: InstanceType,
+    /// Lease tier the instance was purchased under (plain catalog
+    /// names provision as on-demand; see [`crate::cloud::Offering`]).
+    pub tier: PricingTier,
     pub state: InstanceState,
     /// Simulation time (seconds) at which the instance started billing.
     pub started_at: f64,
@@ -41,6 +44,7 @@ impl SimInstance {
         SimInstance {
             id,
             itype,
+            tier: PricingTier::OnDemand,
             state: InstanceState::Provisioning,
             started_at: now,
             terminated_at: None,

@@ -1,16 +1,24 @@
-//! Simulated cloud substrate: instance catalog, lifecycle, and billing.
+//! Simulated cloud substrate: instance catalog, pricing tiers,
+//! lifecycle, and billing.
 //!
 //! The paper evaluates on Amazon EC2 (Table 1).  This module implements
 //! the equivalent substrate: the instance-type catalog with capability
-//! vectors and hourly costs, provisioned-instance lifecycle, and a
-//! billing meter over the simulation clock.  The GPU *device model* —
-//! how fast a simulated GPU executes an analysis program — lives in
-//! [`crate::profiler::calibration`]; this module only knows capacities.
+//! vectors and hourly costs, a pluggable [`PricingModel`] (reserved /
+//! on-demand / spot lease tiers and multi-region catalogs with
+//! cross-region transfer charges — see [`catalog`]), provisioned-
+//! instance lifecycle including vendor spot revocations, and a billing
+//! meter over the simulation clock with per-tier started-hour
+//! semantics (see [`billing`]).  The GPU *device model* — how fast a
+//! simulated GPU executes an analysis program — lives in
+//! [`crate::profiler::calibration`]; this module only knows capacities
+//! and prices.
 
 pub mod billing;
 pub mod catalog;
 pub mod instance;
 
 pub use billing::BillingMeter;
-pub use catalog::{Catalog, GpuSpec, InstanceType};
+pub use catalog::{
+    Catalog, GpuSpec, InstanceType, Offering, PricingModel, PricingTier, RegionSpec, TierSpec,
+};
 pub use instance::{InstanceId, InstanceState, SimInstance};

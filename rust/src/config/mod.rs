@@ -1,9 +1,9 @@
 //! Workload / scenario configuration (the paper's Table 5) and JSON
 //! config files for user-defined workloads.
 
-use crate::cloud::Catalog;
+use crate::cloud::{Catalog, PricingModel, PricingTier, RegionSpec, TierSpec};
 use crate::streams::StreamSpec;
-use crate::types::{FrameSize, Program, VGA};
+use crate::types::{Dollars, FrameSize, Program, VGA};
 use crate::util::error::{anyhow, Result};
 use crate::util::json::Json;
 use std::path::Path;
@@ -44,10 +44,11 @@ pub fn paper_scenario(number: u32) -> Result<Scenario> {
 }
 
 /// Parse a `"catalog": ["c4.2xlarge", ...]` field (the full Table 1
-/// catalog when absent).  Shared by scenario and trace configs.
+/// catalog when absent), plus an optional sibling `"pricing"` object
+/// (see [`pricing_from_json`]).  Shared by scenario and trace configs.
 pub(crate) fn catalog_from_json(v: &Json) -> Result<Catalog> {
-    match v.get("catalog") {
-        None => Ok(Catalog::aws_table1()),
+    let cat = match v.get("catalog") {
+        None => Catalog::aws_table1(),
         Some(c) => {
             let names: Vec<&str> = c
                 .as_arr()
@@ -59,9 +60,108 @@ pub(crate) fn catalog_from_json(v: &Json) -> Result<Catalog> {
             if cat.types.len() != names.len() {
                 return Err(anyhow!("unknown instance type in catalog {names:?}"));
             }
-            Ok(cat)
+            cat
         }
+    };
+    match v.get("pricing") {
+        None => Ok(cat),
+        Some(p) => Ok(cat.with_pricing(pricing_from_json(p)?)),
     }
+}
+
+/// Parse a `"pricing"` config object:
+///
+/// ```json
+/// {
+///   "tiers": [{"tier": "ondemand"}, {"tier": "spot", "factor": 0.35}],
+///   "regions": [
+///     {"name": "r0"},
+///     {"name": "r1", "factor": 1.05, "transfer_hourly": 0.014}
+///   ]
+/// }
+/// ```
+///
+/// Omitted `factor`s fall back to the tier's default discount (region
+/// factors to 1.0); omitted keys leave the flat default in place.
+pub(crate) fn pricing_from_json(v: &Json) -> Result<PricingModel> {
+    let mut pricing = PricingModel::default();
+    if let Some(rows) = v.get("tiers").and_then(Json::as_arr) {
+        let mut tiers = Vec::new();
+        for row in rows {
+            let tier: PricingTier = row
+                .str_field("tier")?
+                .parse()
+                .map_err(crate::util::error::Error::msg)?;
+            let factor = row
+                .get("factor")
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| tier.default_factor());
+            if factor <= 0.0 {
+                return Err(anyhow!("tier {tier} factor must be positive"));
+            }
+            tiers.push(TierSpec { tier, factor });
+        }
+        if tiers.is_empty() {
+            return Err(anyhow!("pricing.tiers must not be empty"));
+        }
+        pricing.tiers = tiers;
+    }
+    if let Some(rows) = v.get("regions").and_then(Json::as_arr) {
+        let mut regions = Vec::new();
+        for row in rows {
+            let name = row.str_field("name")?.to_string();
+            let factor = row.get("factor").and_then(Json::as_f64).unwrap_or(1.0);
+            let transfer = row.get("transfer_hourly").and_then(Json::as_f64).unwrap_or(0.0);
+            if factor <= 0.0 || transfer < 0.0 {
+                return Err(anyhow!("bad pricing for region {name:?}"));
+            }
+            regions.push(RegionSpec { name, factor, transfer_hourly: Dollars::from_f64(transfer) });
+        }
+        if regions.is_empty() {
+            return Err(anyhow!("pricing.regions must not be empty"));
+        }
+        pricing.regions = regions;
+    }
+    Ok(pricing)
+}
+
+/// Serialize a pricing model back to the config shape
+/// ([`pricing_from_json`] inverts it).
+pub(crate) fn pricing_to_json(p: &PricingModel) -> Json {
+    Json::obj(vec![
+        (
+            "tiers".to_string(),
+            Json::Arr(
+                p.tiers
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("tier".to_string(), Json::Str(t.tier.to_string())),
+                            ("factor".to_string(), Json::Num(t.factor)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "regions".to_string(),
+            Json::Arr(
+                p.regions
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name".to_string(), Json::Str(r.name.clone())),
+                            ("factor".to_string(), Json::Num(r.factor)),
+                            (
+                                "transfer_hourly".to_string(),
+                                Json::Num(r.transfer_hourly.as_f64()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// Parse config stream rows (`{"program", "fps", "cameras", "frame_h",
@@ -211,6 +311,42 @@ mod tests {
         assert!(Scenario::from_json(&Json::parse(bad_type).unwrap()).is_err());
         let bad_program = r#"{"name":"x","streams":[{"program":"resnet","fps":1}]}"#;
         assert!(Scenario::from_json(&Json::parse(bad_program).unwrap()).is_err());
+    }
+
+    #[test]
+    fn pricing_round_trip() {
+        let p = PricingModel {
+            tiers: vec![TierSpec::new(PricingTier::OnDemand), TierSpec::new(PricingTier::Spot)],
+            regions: vec![
+                RegionSpec { name: "r0".into(), factor: 1.0, transfer_hourly: Dollars::ZERO },
+                RegionSpec {
+                    name: "r1".into(),
+                    factor: 1.05,
+                    transfer_hourly: Dollars::from_f64(0.014),
+                },
+            ],
+        };
+        let back =
+            pricing_from_json(&Json::parse(&pricing_to_json(&p).to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.tiers.len(), 2);
+        assert_eq!(back.tiers[1].tier, PricingTier::Spot);
+        assert!((back.tiers[1].factor - 0.35).abs() < 1e-12);
+        assert_eq!(back.regions[1].name, "r1");
+        assert_eq!(back.regions[1].transfer_hourly, Dollars::from_f64(0.014));
+        // A catalog carrying this pricing round-trips through the
+        // scenario/trace config shape.
+        let cat = Catalog::paper_experiments().with_pricing(p);
+        let cfg = Json::obj(vec![
+            ("catalog".to_string(), Json::Arr(vec![Json::Str("c4.2xlarge".into())])),
+            ("pricing".to_string(), pricing_to_json(&cat.pricing)),
+        ]);
+        let parsed = catalog_from_json(&cfg).unwrap();
+        assert!(!parsed.pricing.is_flat());
+        assert_eq!(parsed.pricing.tiers.len(), 2);
+        // Unknown tier names and empty lists are rejected.
+        let bad = r#"{"tiers":[{"tier":"preemptible"}]}"#;
+        assert!(pricing_from_json(&Json::parse(bad).unwrap()).is_err());
+        assert!(pricing_from_json(&Json::parse(r#"{"regions":[]}"#).unwrap()).is_err());
     }
 
     #[test]

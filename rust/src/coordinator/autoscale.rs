@@ -76,7 +76,7 @@
 
 use super::pipeline::{EpochConsumer, PipelineExecutor};
 use super::{Coordinator, ProfiledWorkload};
-use crate::cloud::{BillingMeter, Catalog, InstanceId, InstanceState, SimInstance};
+use crate::cloud::{BillingMeter, Catalog, InstanceId, InstanceState, PricingTier, SimInstance};
 use crate::manager::{
     assign_best_effort, plan_transition, repack_onto, worth_reallocating, AllocationPlan,
     Reallocation, Strategy, TransitionAction,
@@ -238,6 +238,9 @@ pub struct EpochOutcome {
     pub gap: Option<f64>,
     /// Warm/cold provenance of the epoch's target plan.
     pub mode: SolveMode,
+    /// Spot instances reclaimed by the provider mid-epoch
+    /// (trace-scheduled revocation events).
+    pub revoked: u32,
 }
 
 /// Result of one policy over one trace.
@@ -292,6 +295,7 @@ impl FleetState {
                 solver: SolverKind::Exact,
                 instances: Vec::new(),
                 hourly_cost: Dollars::ZERO,
+                transfer_rate: Dollars::ZERO,
                 // An empty fleet is vacuously optimal.
                 lower_bound: Some(Dollars::ZERO),
             },
@@ -366,13 +370,13 @@ impl FleetState {
                     }
                 }
                 TransitionAction::Provision { type_name, count } => {
-                    let itype = catalog
-                        .get(type_name)
-                        .expect("plan types come from the catalog")
-                        .clone();
+                    let off = catalog
+                        .resolve(type_name)
+                        .expect("plan types come from the catalog");
                     for _ in 0..*count {
                         let mut inst =
-                            SimInstance::new(InstanceId(self.next_id), itype.clone(), now);
+                            SimInstance::new(InstanceId(self.next_id), off.itype.clone(), now);
+                        inst.tier = off.tier;
                         self.next_id += 1;
                         self.billing.on_provision(&inst);
                         inst.mark_running();
@@ -382,6 +386,38 @@ impl FleetState {
             }
         }
         self.plan = target.clone();
+    }
+
+    /// Provider-side spot reclaim at time `now`: revoke
+    /// `ceil(fraction x running spot)` instances — most recently
+    /// provisioned first, a deterministic stand-in for the market
+    /// preempting the newest capacity — and return the (offering) type
+    /// names reclaimed.  Billing forgives the revoked partial hour
+    /// ([`BillingMeter::on_revoke`]); on-demand and reserved instances
+    /// are never touched.
+    fn revoke_spot(&mut self, fraction: f64, now: f64) -> Vec<String> {
+        let mut spot: Vec<usize> = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.state == InstanceState::Running && i.tier == PricingTier::Spot)
+            .map(|(n, _)| n)
+            .collect();
+        if spot.is_empty() || fraction <= 0.0 {
+            return Vec::new();
+        }
+        let k = ((fraction * spot.len() as f64).ceil() as usize).min(spot.len());
+        spot.sort_by_key(|&n| self.instances[n].id.0);
+        spot.iter()
+            .rev()
+            .take(k)
+            .map(|&idx| {
+                let id = self.instances[idx].id;
+                self.instances[idx].terminate(now);
+                self.billing.on_revoke(id, now);
+                self.instances[idx].itype.name.clone()
+            })
+            .collect()
     }
 
     /// Terminate everything still running and price the whole span.
@@ -584,6 +620,8 @@ struct SimJob {
     fleet_size: usize,
     hourly_rate: Dollars,
     mode: SolveMode,
+    /// Spot instances reclaimed mid-epoch by revocation events.
+    revoked: u32,
 }
 
 /// Stage 2 — **actuate**: the only stage that mutates shared state.
@@ -658,8 +696,10 @@ impl ActuateStage<'_> {
         };
 
         let changed = realloc.provisioned > 0 || realloc.terminated > 0;
-        let (sim_plan, unserved) = if do_realloc {
-            self.state.apply(&realloc, &target, &trace.catalog, self.now);
+        let (mut sim_plan, mut unserved) = if do_realloc {
+            profiling::time_phase("billing:actuate", || {
+                self.state.apply(&realloc, &target, &trace.catalog, self.now);
+            });
             if i > 0 && changed {
                 self.reallocations += 1;
             }
@@ -688,6 +728,15 @@ impl ActuateStage<'_> {
         } else {
             (self.state.running_count() as u32, 0, 0)
         };
+        let hourly_rate = self.state.billing.hourly_rate(self.now);
+        // Mid-epoch spot reclaims fire after the boundary transition.
+        let revoked = self.apply_revocations(trace, profiled, i, &mut sim_plan, &mut unserved);
+        // Cross-region transfer accrues continuously at the serving
+        // plan's rate for the epoch's duration.
+        let transfer = sim_plan.transfer_rate.as_f64() * epoch.duration_s / 3600.0;
+        if transfer > 0.0 {
+            self.state.billing.add_transfer(Dollars::from_f64(transfer));
+        }
         let job = SimJob {
             index: i,
             start_s: self.now,
@@ -696,11 +745,87 @@ impl ActuateStage<'_> {
             reallocated: do_realloc && changed,
             churn,
             fleet_size: self.state.running_count(),
-            hourly_rate: self.state.billing.hourly_rate(self.now),
+            hourly_rate,
             mode,
+            revoked,
         };
         self.now += epoch.duration_s;
         (job, self.state.plan.clone())
+    }
+
+    /// Actuate the epoch's scheduled spot-market reclaim events.  Each
+    /// event terminates part of the running spot fleet mid-epoch
+    /// ([`FleetState::revoke_spot`]) and emergency-repacks the orphaned
+    /// streams through the warm-start delta path: the surviving fleet
+    /// becomes the incumbent and [`crate::manager::ResourceManager::allocate_warm`]
+    /// re-places only what the reclaim displaced (a cold solve runs
+    /// only if the warm quality gate fires).  Returns the number of
+    /// instances reclaimed this epoch.
+    fn apply_revocations(
+        &mut self,
+        trace: &WorkloadTrace,
+        profiled: &[ProfiledWorkload],
+        i: usize,
+        sim_plan: &mut AllocationPlan,
+        unserved: &mut Vec<usize>,
+    ) -> u32 {
+        let epoch = &trace.epochs[i];
+        if epoch.revocations.is_empty() {
+            return 0;
+        }
+        let pw = &profiled[i];
+        let mut events = epoch.revocations.clone();
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        let mut revoked = 0u32;
+        for event in events {
+            let at = self.now + event.at_s;
+            let reclaimed = self.state.revoke_spot(event.fraction, at);
+            if reclaimed.is_empty() {
+                continue;
+            }
+            revoked += reclaimed.len() as u32;
+            // Survivor fleet: the carried plan minus one entry per
+            // reclaimed instance (orphaning its streams).
+            let mut survivor = self.state.plan.clone();
+            for name in &reclaimed {
+                if let Some(pos) = survivor
+                    .instances
+                    .iter()
+                    .rposition(|inst| inst.type_name == *name)
+                {
+                    survivor.instances.remove(pos);
+                }
+            }
+            survivor.hourly_cost = survivor.instances.iter().map(|inst| inst.hourly_cost).sum();
+            survivor.lower_bound = None;
+            let repacked = if survivor.instances.is_empty() {
+                pw.allocate(self.config.strategy)
+            } else {
+                pw.manager()
+                    .allocate_warm(&epoch.streams, self.config.strategy, &survivor)
+            };
+            match repacked {
+                Ok(target) => {
+                    let realloc = plan_transition(&survivor, &target);
+                    profiling::time_phase("billing:actuate", || {
+                        self.state.apply(&realloc, &target, &trace.catalog, at);
+                    });
+                    self.reallocations += 1;
+                    *sim_plan = target;
+                    unserved.clear();
+                }
+                Err(_) => {
+                    // Degrade rather than refuse: keep the survivors
+                    // and best-effort the epoch's streams onto them.
+                    self.state.plan = survivor;
+                    let (plan, missed) = self.best_effort(trace, profiled, i);
+                    *sim_plan = plan;
+                    *unserved = missed;
+                }
+            }
+            self.peak_fleet = self.peak_fleet.max(self.state.running_count());
+        }
+        revoked
     }
 
     /// The churn-free lower bound: each epoch billed at its optimal
@@ -715,7 +840,7 @@ impl ActuateStage<'_> {
     ) -> (SimJob, AllocationPlan) {
         let PlannedEpoch { index: i, target: plan, mode, .. } = planned;
         let epoch = &trace.epochs[i];
-        self.oracle_billed += plan.hourly_cost.as_f64() * epoch.duration_s / 3600.0;
+        self.oracle_billed += plan.total_rate().as_f64() * epoch.duration_s / 3600.0;
         self.peak_fleet = self.peak_fleet.max(plan.instances.len());
         let (churn, changed) = if i == 0 {
             ((0, plan.instances.len() as u32, 0), true)
@@ -739,6 +864,7 @@ impl ActuateStage<'_> {
             fleet_size: plan.instances.len(),
             hourly_rate: plan.hourly_cost,
             mode,
+            revoked: 0,
         };
         self.state.plan = plan;
         self.now += epoch.duration_s;
@@ -815,6 +941,7 @@ impl BillStage {
             solver: job.sim_plan.solver,
             gap: job.sim_plan.gap(),
             mode: job.mode,
+            revoked: job.revoked,
         });
     }
 }
@@ -1300,6 +1427,61 @@ mod tests {
         assert_eq!(SolveMode::Warm.to_string(), "warm");
         assert_eq!(SolveMode::Cold.to_string(), "cold");
         assert_eq!(SolveMode::ColdRefresh.to_string(), "refresh");
+    }
+
+    #[test]
+    fn spot_revocations_repack_and_recover() {
+        let c = Coordinator::new();
+        let runner = AutoscaleRunner::new(&c);
+        let trace = WorkloadTrace::spot_market(7);
+        let out = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        assert_eq!(out.epochs.len(), 6);
+        // The tiered catalog's cheapest offerings are spot, so the
+        // scheduled reclaims find victims and force mid-epoch repacks.
+        assert!(out.epochs[1].revoked > 0, "epoch 1 reclaim must fire");
+        assert!(out.epochs[3].revoked > 0, "epoch 3 reclaim must fire");
+        for i in [0usize, 2, 4, 5] {
+            assert_eq!(out.epochs[i].revoked, 0, "epoch {i} has no reclaim");
+        }
+        // Orphaned streams are re-placed: every epoch still serves its
+        // full demand.
+        assert!(out.epochs.iter().all(|e| e.unserved == 0));
+        assert!(out.mean_performance >= 0.9, "perf {}", out.mean_performance);
+        // Emergency repacks count as reallocations.
+        assert!(out.reallocations >= 2);
+        assert!(out.total_billed > Dollars::ZERO);
+        // Seed-determinism: same trace, same numbers.
+        let again = runner.run(&trace, ScalePolicy::Reactive).unwrap();
+        assert_eq!(out.total_billed, again.total_billed);
+        assert_eq!(
+            out.epochs.iter().map(|e| e.revoked).collect::<Vec<_>>(),
+            again.epochs.iter().map(|e| e.revoked).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn revoked_spot_fleet_bills_less_than_on_demand() {
+        // Same demand and the same reclaim schedule, two catalogs:
+        // tiered (spot discount, revocations bite) vs the flat
+        // single-price catalog (all on-demand, reclaims find no
+        // victims).  Even paying for revocation churn, the spot fleet
+        // is cheaper end to end.
+        let c = Coordinator::new();
+        let runner = AutoscaleRunner::new(&c);
+        let spot = runner
+            .run(&WorkloadTrace::spot_market(7), ScalePolicy::Reactive)
+            .unwrap();
+        let mut flat = WorkloadTrace::spot_market(7);
+        flat.catalog = Catalog::paper_experiments();
+        let ondemand = runner.run(&flat, ScalePolicy::Reactive).unwrap();
+        // On-demand instances are never revoked.
+        assert!(ondemand.epochs.iter().all(|e| e.revoked == 0));
+        assert!(
+            spot.total_billed < ondemand.total_billed,
+            "spot {} must undercut on-demand {}",
+            spot.total_billed,
+            ondemand.total_billed
+        );
     }
 
     #[test]

@@ -185,11 +185,11 @@ impl Provisioned {
             .iter()
             .enumerate()
             .map(|(i, inst)| {
-                let itype = catalog
-                    .get(&inst.type_name)
-                    .expect("plan types come from the catalog")
-                    .clone();
-                let mut sim_inst = SimInstance::new(InstanceId(i as u32), itype, now);
+                let off = catalog
+                    .resolve(&inst.type_name)
+                    .expect("plan types come from the catalog");
+                let mut sim_inst = SimInstance::new(InstanceId(i as u32), off.itype, now);
+                sim_inst.tier = off.tier;
                 billing.on_provision(&sim_inst);
                 sim_inst.mark_running();
                 sim_inst

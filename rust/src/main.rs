@@ -10,8 +10,11 @@
 //! camcloud infer --program vgg16 ...     real PJRT inference on frames
 //! ```
 
+use camcloud::cloud::{PricingTier, RegionSpec, TierSpec};
 use camcloud::config::{paper_scenario, Scenario};
-use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::coordinator::{
+    AutoscaleConfig, AutoscaleOutcome, AutoscaleRunner, Coordinator, ScalePolicy,
+};
 use camcloud::manager::{ResourceManager, Strategy};
 use camcloud::packing::{SolveBudget, SolverChoice};
 use camcloud::profiler::store::ProfileStore;
@@ -19,8 +22,9 @@ use camcloud::reports;
 use camcloud::runtime::{default_artifacts_dir, ModelRuntime};
 use camcloud::sched::{Parallelism, SimConfig, SimEngine};
 use camcloud::streams::{Camera, Frame};
-use camcloud::types::{Program, VGA};
+use camcloud::types::{Dollars, Program, VGA};
 use camcloud::util::cli::Args;
+use camcloud::util::json::Json;
 use camcloud::workload::trace::WorkloadTrace;
 use camcloud::workload::FleetSpec;
 
@@ -68,9 +72,15 @@ fn print_help() {
          \u{20}                              allocate + simulate + performance/cost report\n\
          \u{20}  run --streams N [--seed S] ...\n\
          \u{20}                              same pipeline on a synthetic N-camera fleet\n\
-         \u{20}  trace --trace emergency|diurnal|churn|FILE [--policy NAME|all]\n\
+         \u{20}  trace --trace emergency|diurnal|churn|spot|FILE [--policy NAME|all]\n\
          \u{20}        [--strategy stX] [--seed S] [--cameras N] [--epochs N]\n\
          \u{20}        [--horizon H] [--engine event|fixed] [--out FILE] [--profile]\n\
+         \u{20}        [--tiers LIST] [--regions N]\n\
+         \u{20}        (--tiers name[=factor],... e.g. ondemand,spot=0.3 and --regions N\n\
+         \u{20}         overlay tiered/multi-region pricing on the trace's catalog;\n\
+         \u{20}         the spot builtin schedules mid-epoch spot revocations;\n\
+         \u{20}         --out FILE saves the trace plus per-policy per-epoch results\n\
+         \u{20}         with solver, warm/cold mode, and certified gap)\n\
          \u{20}        (--profile prints the per-phase wall-clock table; build with\n\
          \u{20}         --features profiling to record phases)\n\
          \u{20}                              online autoscaling over a demand trace:\n\
@@ -340,7 +350,7 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
     let epochs = args.u32_opt("epochs")?;
     let spec = args
         .opt("trace")
-        .ok_or("need --trace <emergency|diurnal|churn|FILE>")?;
+        .ok_or("need --trace <emergency|diurnal|churn|spot|FILE>")?;
     // Builtin names defer to `WorkloadTrace::builtin` (one source of
     // defaults); explicit --cameras/--epochs override its generators.
     let trace = match (spec, cameras, epochs) {
@@ -350,23 +360,13 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
             e.map(|e| e as usize).unwrap_or(WorkloadTrace::CHURN_EPOCHS),
             seed,
         ),
-        ("emergency" | "emergency-burst" | "diurnal" | "churn", _, _) => {
+        ("emergency" | "emergency-burst" | "diurnal" | "churn" | "spot" | "spot-market", _, _) => {
             WorkloadTrace::builtin(spec, seed).map_err(|e| e.to_string())?
         }
         (path, _, _) => WorkloadTrace::load(std::path::Path::new(path))
             .map_err(|e| format!("loading trace {path}: {e:#}"))?,
     };
-    if let Some(out) = args.opt("out") {
-        trace
-            .save(std::path::Path::new(out))
-            .map_err(|e| format!("saving trace {out}: {e:#}"))?;
-        println!(
-            "saved trace {:?} ({} epochs, {:.0}s) to {out}",
-            trace.name,
-            trace.epochs.len(),
-            trace.total_duration_s()
-        );
-    }
+    let trace = apply_pricing_flags(args, trace)?;
     let strategy: Strategy = args.opt_or("strategy", "st3").parse()?;
     let engine: SimEngine = match args.opt("engine") {
         Some(s) => s.parse()?,
@@ -398,6 +398,24 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
         }
     }
     print!("{}", reports::trace_policy_table(&trace.name, &outcomes).render());
+    // The --out file carries the trace config *and* the run's
+    // per-policy, per-epoch results (solver, warm/cold mode, certified
+    // gap), so it is written after the comparison ran.
+    if let Some(out) = args.opt("out") {
+        let mut doc = trace.to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("results".to_string(), trace_results_json(&outcomes));
+        }
+        std::fs::write(std::path::Path::new(out), doc.to_pretty())
+            .map_err(|e| format!("saving trace {out}: {e:#}"))?;
+        println!(
+            "saved trace {:?} ({} epochs, {:.0}s) and {} policy result(s) to {out}",
+            trace.name,
+            trace.epochs.len(),
+            trace.total_duration_s(),
+            outcomes.len()
+        );
+    }
     if args.has("profile") {
         // Per-phase wall-clock table (solve/actuate/simulate/bill and
         // portfolio arms); prints a rebuild hint unless the binary was
@@ -406,6 +424,108 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
     }
     let failed = outcomes.iter().any(|(_, o)| o.is_err());
     Ok(if failed { 1 } else { 0 })
+}
+
+/// `--tiers LIST` and `--regions N`: overlay a pricing model on the
+/// trace's catalog.  Without either flag the trace runs with whatever
+/// pricing it carries (flat for the classic builtins).
+fn apply_pricing_flags(args: &Args, mut trace: WorkloadTrace) -> Result<WorkloadTrace, String> {
+    let mut pricing = trace.catalog.pricing.clone();
+    let mut touched = false;
+    if let Some(spec) = args.opt("tiers") {
+        pricing.tiers = parse_tiers(spec)?;
+        touched = true;
+    }
+    if let Some(n) = args.u32_opt("regions")? {
+        if n == 0 {
+            return Err("--regions expects at least 1".into());
+        }
+        // Synthetic region grid: slightly pricier remote regions with
+        // growing cross-region transfer charges.
+        pricing.regions = (0..n)
+            .map(|i| RegionSpec {
+                name: format!("r{i}"),
+                factor: 1.0 + 0.05 * f64::from(i),
+                transfer_hourly: Dollars::from_f64(0.01 + 0.004 * f64::from(i)),
+            })
+            .collect();
+        touched = true;
+    }
+    if touched {
+        trace.catalog = trace.catalog.clone().with_pricing(pricing);
+    }
+    Ok(trace)
+}
+
+/// Parse `--tiers` syntax: `name[=factor]` entries, comma-separated,
+/// e.g. `ondemand,spot=0.3` or `reserved,ondemand,spot`.
+fn parse_tiers(spec: &str) -> Result<Vec<TierSpec>, String> {
+    let mut tiers = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, factor) = match part.split_once('=') {
+            Some((n, f)) => {
+                let factor: f64 = f
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad tier factor in {part:?}"))?;
+                (n.trim(), Some(factor))
+            }
+            None => (part, None),
+        };
+        let tier: PricingTier = name.parse()?;
+        let factor = factor.unwrap_or_else(|| tier.default_factor());
+        if !(factor > 0.0 && factor.is_finite()) {
+            return Err(format!("tier factor must be positive in {part:?}"));
+        }
+        tiers.push(TierSpec { tier, factor });
+    }
+    if tiers.is_empty() {
+        return Err("--tiers expects e.g. ondemand,spot=0.3".into());
+    }
+    Ok(tiers)
+}
+
+/// Per-policy, per-epoch results for the `--out` JSON: solver,
+/// warm/cold provenance, and certified gap alongside the billing and
+/// performance totals.
+fn trace_results_json(
+    outcomes: &[(ScalePolicy, camcloud::util::error::Result<AutoscaleOutcome>)],
+) -> Json {
+    Json::arr(outcomes.iter().map(|(policy, outcome)| match outcome {
+        Ok(o) => Json::obj(vec![
+            ("policy".to_string(), Json::Str(policy.to_string())),
+            ("total_billed".to_string(), Json::Num(o.total_billed.as_f64())),
+            ("peak_fleet".to_string(), Json::Num(o.peak_fleet as f64)),
+            ("mean_performance".to_string(), Json::Num(o.mean_performance)),
+            ("reallocations".to_string(), Json::Num(o.reallocations as f64)),
+            (
+                "epochs".to_string(),
+                Json::arr(o.epochs.iter().map(|e| {
+                    let mut fields = vec![
+                        ("label".to_string(), Json::Str(e.label.clone())),
+                        ("solver".to_string(), Json::Str(e.solver.to_string())),
+                        ("mode".to_string(), Json::Str(e.mode.to_string())),
+                        ("hourly_rate".to_string(), Json::Num(e.hourly_rate.as_f64())),
+                        ("performance".to_string(), Json::Num(e.performance)),
+                        ("unserved".to_string(), Json::Num(e.unserved as f64)),
+                        ("revoked".to_string(), Json::Num(f64::from(e.revoked))),
+                    ];
+                    if let Some(gap) = e.gap {
+                        fields.push(("gap".to_string(), Json::Num(gap)));
+                    }
+                    Json::obj(fields)
+                })),
+            ),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("policy".to_string(), Json::Str(policy.to_string())),
+            ("error".to_string(), Json::Str(format!("{e:#}"))),
+        ]),
+    }))
 }
 
 fn cmd_report(args: &Args) -> i32 {

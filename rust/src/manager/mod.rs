@@ -32,10 +32,12 @@ pub use realloc::{
 pub use strategy::Strategy;
 
 use crate::cloud::Catalog;
+use crate::packing::problem::GATE_DIM_CAP;
 use crate::packing::{BinType, Item, MvbpProblem, SolveBudget, SolverChoice};
 use crate::profiler::{ExecChoice, ResourceProfile};
 use crate::streams::StreamSpec;
-use crate::types::{DimLayout, Dollars};
+use crate::types::{DimLayout, Dollars, ResourceVec};
+use crate::util::profiling;
 
 /// Allocation failure modes.
 #[derive(Debug)]
@@ -111,6 +113,19 @@ pub struct ResourceManager<'p> {
 /// per-epoch quality drift.
 const WARM_GAP_FLOOR: f64 = 0.10;
 
+/// Deterministic home region of a stream: FNV-1a over its id, mod the
+/// region count.  Streams keep their home across epochs (same id →
+/// same region), so cross-region transfer charges reflect genuine
+/// remote placement, never hash churn between solves.
+pub(crate) fn home_region(id: &str, n_regions: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in id.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % n_regions.max(1) as u64) as usize
+}
+
 /// A built MVBP instance plus the mapping back to streams/choices.
 pub struct BuiltProblem {
     pub problem: MvbpProblem,
@@ -148,19 +163,51 @@ impl<'p> ResourceManager<'p> {
             return Err(AllocationError::EmptyCatalog(strategy));
         }
         let layout = catalog.layout();
+        let flat = catalog.pricing.is_flat();
+        let n_regions = catalog.pricing.regions.len().max(1);
+        // Region placement is encoded as extra "gate" dimensions: one
+        // per region, each bin capacious only in its own region's gate
+        // dim, each expanded choice demanding 1.0 in the gate dim of
+        // the region it runs in.  Flat or single-region pricing skips
+        // the machinery entirely, so those problems stay byte-identical
+        // to the pre-tier formulation.
+        let gated = !flat && n_regions > 1;
+        let dims = if gated { layout.dims() + n_regions } else { layout.dims() };
 
-        let bin_types: Vec<BinType> = catalog
-            .types
-            .iter()
-            .map(|t| BinType {
-                name: t.name.clone(),
-                cost: t.hourly_cost,
-                capacity: t.capability(layout).scale(self.headroom),
-            })
-            .collect();
+        let bin_types: Vec<BinType> = if flat {
+            catalog
+                .types
+                .iter()
+                .map(|t| BinType {
+                    name: t.name.clone(),
+                    cost: t.hourly_cost,
+                    capacity: t.capability(layout).scale(self.headroom),
+                })
+                .collect()
+        } else {
+            catalog
+                .offerings()
+                .into_iter()
+                .map(|off| {
+                    let base = off.itype.capability(layout).scale(self.headroom);
+                    let capacity = if gated {
+                        let mut v = ResourceVec::zeros(dims);
+                        for d in 0..layout.dims() {
+                            v[d] = base[d];
+                        }
+                        v[layout.dims() + off.region] = GATE_DIM_CAP;
+                        v
+                    } else {
+                        base
+                    };
+                    BinType { name: off.itype.name.clone(), cost: off.itype.hourly_cost, capacity }
+                })
+                .collect()
+        };
 
         let mut items = Vec::with_capacity(streams.len());
         let mut choice_map = Vec::with_capacity(streams.len());
+        let mut choice_costs: Vec<Vec<Dollars>> = Vec::new();
         let mut infeasible = Vec::new();
         for spec in streams {
             let profile = self
@@ -184,14 +231,45 @@ impl<'p> ResourceManager<'p> {
             if choices.is_empty() {
                 infeasible.push(spec.id());
             }
-            items.push(Item { id: spec.id(), choices });
-            choice_map.push(map);
+            if gated {
+                // Expand each device choice across regions, home region
+                // first so first-fit keeps its device-order preference
+                // and only pays transfer when the home region cannot
+                // host the stream.
+                let home = home_region(&spec.id(), n_regions);
+                let mut ex_choices = Vec::with_capacity(choices.len() * n_regions);
+                let mut ex_map = Vec::with_capacity(map.len() * n_regions);
+                let mut ex_costs = Vec::with_capacity(choices.len() * n_regions);
+                for r in std::iter::once(home).chain((0..n_regions).filter(|r| *r != home)) {
+                    let transfer = if r == home {
+                        Dollars::ZERO
+                    } else {
+                        catalog.pricing.regions[r].transfer_hourly
+                    };
+                    for (req, exec) in choices.iter().zip(&map) {
+                        let mut v = ResourceVec::zeros(dims);
+                        for d in 0..layout.dims() {
+                            v[d] = req[d];
+                        }
+                        v[layout.dims() + r] = 1.0;
+                        ex_choices.push(v);
+                        ex_map.push(*exec);
+                        ex_costs.push(transfer);
+                    }
+                }
+                items.push(Item { id: spec.id(), choices: ex_choices });
+                choice_map.push(ex_map);
+                choice_costs.push(ex_costs);
+            } else {
+                items.push(Item { id: spec.id(), choices });
+                choice_map.push(map);
+            }
         }
         if !infeasible.is_empty() {
             return Err(AllocationError::Infeasible { strategy, stream_ids: infeasible });
         }
 
-        let problem = MvbpProblem { dims: layout.dims(), bin_types, items };
+        let problem = MvbpProblem { dims, bin_types, items, choice_costs };
         // Latency-feasible choices can still exceed every instance
         // (e.g. desired rate needing 12 cores).  Report those too.
         let unpackable = problem.infeasible_items();
@@ -256,7 +334,9 @@ impl<'p> ResourceManager<'p> {
     ) -> Result<AllocationPlan, AllocationError> {
         let built = self.build_problem(streams, strategy)?;
         let mut bound_hint = None;
-        if let Some(outcome) = realloc::repack_incremental(&built, previous) {
+        if let Some(outcome) =
+            profiling::time_phase("warm:repack-delta", || realloc::repack_incremental(&built, previous))
+        {
             let threshold =
                 previous.gap().unwrap_or(0.0).max(WARM_GAP_FLOOR) + self.budget.warm_gap_margin;
             if outcome.gap() <= threshold {

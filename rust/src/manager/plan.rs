@@ -67,10 +67,27 @@ pub struct AllocationPlan {
     pub solver: SolverKind,
     pub instances: Vec<PlannedInstance>,
     pub hourly_cost: Dollars,
+    /// Cross-region data-transfer rate ($/h) this placement incurs —
+    /// the sum of per-assignment choice costs from the solve.  Zero
+    /// under flat pricing or single-region catalogs.
+    pub transfer_rate: Dollars,
     /// Certified cost lower bound from the solve that produced this
     /// plan (`None` for hand-built placements such as best-effort
     /// overflow or single-instance characterization runs).
     pub lower_bound: Option<Dollars>,
+}
+
+/// Drop trailing gate dimensions (region encoding) so plan vectors are
+/// always in the catalog's physical resource layout.
+fn truncated(v: &ResourceVec, dims: usize) -> ResourceVec {
+    if v.dims() == dims {
+        return v.clone();
+    }
+    let mut out = ResourceVec::zeros(dims);
+    for d in 0..dims {
+        out[d] = v[d];
+    }
+    out
 }
 
 impl AllocationPlan {
@@ -79,7 +96,14 @@ impl AllocationPlan {
     /// bound (same formula as [`SolveOutcome::gap`]).
     pub fn gap(&self) -> Option<f64> {
         let lb = self.lower_bound?;
-        Some(crate::packing::solver::certified_gap(self.hourly_cost, lb))
+        Some(crate::packing::solver::certified_gap(self.total_rate(), lb))
+    }
+
+    /// Full hourly burn rate: instance-hours plus cross-region
+    /// transfer.  This is the quantity the solver's objective (and its
+    /// certificate) covers, so gap/comparison logic uses it.
+    pub fn total_rate(&self) -> Dollars {
+        self.hourly_cost + self.transfer_rate
     }
 
     /// Map a certified solve outcome back into provisioning decisions.
@@ -91,7 +115,7 @@ impl AllocationPlan {
     ) -> AllocationPlan {
         let mut plan =
             AllocationPlan::from_solution(built, &outcome.solution, streams, strategy, outcome.solver);
-        plan.lower_bound = Some(outcome.lower_bound.min(plan.hourly_cost));
+        plan.lower_bound = Some(outcome.lower_bound.min(plan.total_rate()));
         plan
     }
 
@@ -104,27 +128,30 @@ impl AllocationPlan {
         strategy: Strategy,
         solver: SolverKind,
     ) -> AllocationPlan {
+        let dims = built.layout.dims();
         let mut instances = Vec::with_capacity(solution.bins.len());
+        let mut transfer_rate = Dollars::ZERO;
         for bin in &solution.bins {
             let bt = &built.problem.bin_types[bin.bin_type];
             let mut assignments = Vec::with_capacity(bin.assignments.len());
             for &(item, dense_choice) in &bin.assignments {
+                transfer_rate = transfer_rate + built.problem.choice_cost(item, dense_choice);
                 assignments.push(StreamAssignment {
                     stream_index: item,
                     stream_id: streams[item].id(),
                     choice: built.choice_map[item][dense_choice],
-                    requirement: built.problem.items[item].choices[dense_choice].clone(),
+                    requirement: truncated(&built.problem.items[item].choices[dense_choice], dims),
                 });
             }
             instances.push(PlannedInstance {
                 type_name: bt.name.clone(),
                 hourly_cost: bt.cost,
-                capacity: bt.capacity.clone(),
+                capacity: truncated(&bt.capacity, dims),
                 streams: assignments,
             });
         }
         let hourly_cost = instances.iter().map(|i| i.hourly_cost).sum();
-        AllocationPlan { strategy, solver, instances, hourly_cost, lower_bound: None }
+        AllocationPlan { strategy, solver, instances, hourly_cost, transfer_rate, lower_bound: None }
     }
 
     /// `(non_gpu, gpu)` instance counts — Table 6's "Instances" columns.
@@ -132,8 +159,8 @@ impl AllocationPlan {
         let mut non_gpu = 0;
         let mut gpu = 0;
         for inst in &self.instances {
-            match catalog.get(&inst.type_name) {
-                Some(t) if t.has_gpu() => gpu += 1,
+            match catalog.resolve(&inst.type_name) {
+                Some(off) if off.itype.has_gpu() => gpu += 1,
                 Some(_) => non_gpu += 1,
                 None => {}
             }
@@ -282,6 +309,7 @@ mod tests {
             solver: SolverKind::Portfolio,
             instances,
             hourly_cost,
+            transfer_rate: Dollars::ZERO,
             lower_bound: None,
         };
         let s = plan.summary();

@@ -96,7 +96,10 @@ pub fn plan_transition(current: &AllocationPlan, target: &AllocationPlan) -> Rea
         kept,
         provisioned,
         terminated,
-        hourly_delta: target.hourly_cost - current.hourly_cost,
+        // Compare full burn rates (instances + cross-region transfer)
+        // so the hysteresis gate sees savings a placement achieves by
+        // repatriating streams, not just by shrinking the fleet.
+        hourly_delta: target.total_rate() - current.total_rate(),
     }
 }
 
@@ -208,8 +211,13 @@ pub fn repack_onto(
 /// fossilizing half-empty instances.
 const CONSOLIDATE_BELOW: f64 = 0.5;
 
-fn approx_eq(a: &ResourceVec, b: &ResourceVec) -> bool {
-    a.dims() == b.dims() && a.0.iter().zip(&b.0).all(|(x, y)| (x - y).abs() <= 1e-9)
+/// Does choice vector `req` match the plan-recorded requirement `kept`
+/// on every *physical* dimension?  Plans never carry region-gate
+/// dimensions (they are truncated on the way out of the solver), so a
+/// gated problem's choices are compared on their physical prefix only;
+/// ungated problems have equal dims and this is exact equality.
+fn physical_eq(req: &ResourceVec, kept: &ResourceVec) -> bool {
+    req.dims() >= kept.dims() && (0..kept.dims()).all(|d| (req[d] - kept[d]).abs() <= 1e-9)
 }
 
 /// Warm-start packing of `built` seeded from `previous`:
@@ -267,17 +275,18 @@ pub(crate) fn repack_incremental(
             if placed[item] {
                 continue;
             }
+            // Fitting is part of choice selection: in a region-gated
+            // problem the same physical requirement appears once per
+            // region, and only the choice whose gate dimension matches
+            // this bin's region fits its residual.
             let Some(choice) = problem.items[item]
                 .choices
                 .iter()
-                .position(|req| approx_eq(req, &s.requirement))
+                .position(|req| physical_eq(req, &s.requirement) && req.fits(&residual))
             else {
-                continue; // rate/profile changed: re-pack as delta
+                continue; // rate/profile/capacity changed: re-pack as delta
             };
             let req = &problem.items[item].choices[choice];
-            if !req.fits(&residual) {
-                continue; // capacity model changed under us: delta
-            }
             residual.sub_assign(req);
             assignments.push((item, choice));
             placed[item] = true;
@@ -360,8 +369,9 @@ pub fn assign_best_effort(
         .iter()
         .map(|inst| {
             catalog
-                .get(&inst.type_name)
+                .resolve(&inst.type_name)
                 .expect("fleet types come from the catalog")
+                .itype
                 .capability(layout)
                 .scale(headroom)
         })
@@ -369,7 +379,7 @@ pub fn assign_best_effort(
     let gpu_counts: Vec<usize> = fleet
         .instances
         .iter()
-        .map(|inst| catalog.get(&inst.type_name).map_or(0, |t| t.gpus.len()))
+        .map(|inst| catalog.resolve(&inst.type_name).map_or(0, |off| off.itype.gpus.len()))
         .collect();
     let mut loads: Vec<ResourceVec> = fleet
         .instances
@@ -429,6 +439,9 @@ pub fn assign_best_effort(
         solver: fleet.solver,
         instances,
         hourly_cost: fleet.hourly_cost,
+        // Overflow placement ignores region choice, so it models no
+        // transfer charges.
+        transfer_rate: Dollars::ZERO,
         // A best-effort overflow placement is not a solve: no bound.
         lower_bound: None,
     };

@@ -77,12 +77,15 @@ pub fn group_classes_capped(
     let mut by_key: HashMap<Vec<u64>, usize> = HashMap::new();
     let mut classes: Vec<ItemClass> = Vec::new();
     for (i, item) in problem.items.iter().enumerate() {
-        let mut key = Vec::with_capacity(1 + item.choices.len() * problem.dims);
+        let mut key = Vec::with_capacity(1 + item.choices.len() * (problem.dims + 1));
         key.push(item.choices.len() as u64);
-        for choice in &item.choices {
+        for (c, choice) in item.choices.iter().enumerate() {
             for v in &choice.0 {
                 key.push(v.to_bits());
             }
+            // Choice costs are part of class identity: members must be
+            // interchangeable in the objective, not just in capacity.
+            key.push(problem.choice_cost(i, c).0 as u64);
         }
         match by_key.get(&key) {
             Some(&ci) => classes[ci].members.push(i as u32),
@@ -335,12 +338,13 @@ pub(crate) fn group_subset(problem: &MvbpProblem, items: &[usize]) -> Vec<ItemCl
     let mut classes: Vec<ItemClass> = Vec::new();
     for &i in items {
         let item = &problem.items[i];
-        let mut key = Vec::with_capacity(1 + item.choices.len() * problem.dims);
+        let mut key = Vec::with_capacity(1 + item.choices.len() * (problem.dims + 1));
         key.push(item.choices.len() as u64);
-        for choice in &item.choices {
+        for (c, choice) in item.choices.iter().enumerate() {
             for v in &choice.0 {
                 key.push(v.to_bits());
             }
+            key.push(problem.choice_cost(i, c).0 as u64);
         }
         match by_key.get(&key) {
             Some(&ci) => classes[ci].members.push(i as u32),
@@ -478,7 +482,12 @@ mod tests {
                 });
             }
         }
-        MvbpProblem { dims: bin_types[0].capacity.dims(), bin_types, items }
+        MvbpProblem {
+            dims: bin_types[0].capacity.dims(),
+            bin_types,
+            items,
+            choice_costs: vec![],
+        }
     }
 
     fn fixture() -> MvbpProblem {

@@ -242,7 +242,12 @@ mod tests {
 
     #[test]
     fn empty_problem_is_zero() {
-        let problem = MvbpProblem { dims: 1, bin_types: vec![bin("b", 1.0, &[1.0])], items: vec![] };
+        let problem = MvbpProblem {
+            dims: 1,
+            bin_types: vec![bin("b", 1.0, &[1.0])],
+            items: vec![],
+            choice_costs: vec![],
+        };
         assert_eq!(dff_lower_bound(&problem), Dollars::ZERO);
     }
 
@@ -255,6 +260,7 @@ mod tests {
             dims: 1,
             bin_types: vec![bin("b", 1.0, &[10.0])],
             items: (0..3).map(|i| item(&format!("i{i}"), &[&[6.0]])).collect(),
+            choice_costs: vec![],
         };
         let lb = dff_lower_bound(&problem);
         assert!(lb >= Dollars::from_f64(2.999), "got {lb}");
@@ -272,6 +278,7 @@ mod tests {
             items: (0..4)
                 .map(|i| item(&format!("s{i}"), &[&[4.0, 0.0], &[0.5, 4.0]]))
                 .collect(),
+            choice_costs: vec![],
         };
         let lb = dff_lower_bound(&problem);
         // Combined lambda = (1/4, 1/4): s_i = min(1.0, 1.125) = 1.0,
@@ -292,6 +299,7 @@ mod tests {
             dims: 1,
             bin_types: vec![bin("b", 1.0, &[10.0])],
             items: (0..4).map(|i| item(&format!("i{i}"), &[&[2.5]])).collect(),
+            choice_costs: vec![],
         };
         let lb = dff_lower_bound(&problem);
         assert!(lb >= Dollars::from_f64(0.99), "got {lb}");

@@ -410,13 +410,14 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
         for c in 0..n_choices {
             let req = &problem.items[item_idx].choices[c];
             if req.fits(&open[b].residual) {
+                let step_cost = cost + problem.choice_cost(item_idx, c);
                 open[b].residual.sub_assign(req);
-                if prune_child(ctx, k + 1, cost, open) {
+                if prune_child(ctx, k + 1, step_cost, open) {
                     open[b].residual.add_assign(req);
                     continue;
                 }
                 open[b].assignments.push((item_idx, c));
-                dfs(ctx, k + 1, cost, open);
+                dfs(ctx, k + 1, step_cost, open);
                 open[b].assignments.pop();
                 open[b].residual.add_assign(req);
                 if ctx.exhausted {
@@ -435,6 +436,7 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
         for c in 0..n_choices {
             let req = &problem.items[item_idx].choices[c];
             if req.fits(&bt.capacity) {
+                let step_cost = new_cost + problem.choice_cost(item_idx, c);
                 let mut residual = bt.capacity.clone();
                 residual.sub_assign(req);
                 open.push(OpenBin {
@@ -442,11 +444,11 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
                     residual,
                     assignments: vec![(item_idx, c)],
                 });
-                if prune_child(ctx, k + 1, new_cost, open) {
+                if prune_child(ctx, k + 1, step_cost, open) {
                     open.pop();
                     continue;
                 }
-                dfs(ctx, k + 1, new_cost, open);
+                dfs(ctx, k + 1, step_cost, open);
                 open.pop();
                 if ctx.exhausted {
                     return;
@@ -628,9 +630,10 @@ fn distribute(
             // branch for `k` runs.
             let mut k = placed;
             loop {
-                if !prune_class_child(ctx, ci, remaining - k, cost, bins) {
+                let run_cost = cost + problem.choice_cost(rep, c) * k;
+                if !prune_class_child(ctx, ci, remaining - k, run_cost, bins) {
                     bins[b].entries.push((ci, c, k));
-                    distribute(ctx, ci, remaining - k, cost, bins, (b, c + 1), last_fresh);
+                    distribute(ctx, ci, remaining - k, run_cost, bins, (b, c + 1), last_fresh);
                     bins[b].entries.pop();
                     if ctx.exhausted {
                         for _ in 0..k {
@@ -676,13 +679,14 @@ fn distribute(
                 for _ in 0..k {
                     residual.sub_assign(req);
                 }
+                let run_cost = new_cost + problem.choice_cost(rep, c) * k;
                 bins.push(ClassBin { bin_type: t, residual, entries: vec![(ci, c, k)] });
-                if prune_class_child(ctx, ci, remaining - k, new_cost, bins) {
+                if prune_class_child(ctx, ci, remaining - k, run_cost, bins) {
                     bins.pop();
                     continue;
                 }
                 let idx = bins.len() - 1;
-                distribute(ctx, ci, remaining - k, new_cost, bins, (idx, c + 1), Some((t, c, k)));
+                distribute(ctx, ci, remaining - k, run_cost, bins, (idx, c + 1), Some((t, c, k)));
                 bins.pop();
                 if ctx.exhausted {
                     return;
@@ -725,6 +729,7 @@ mod tests {
                 capacity: ResourceVec::from_slice(&[1.0]),
             }],
             items: vec![],
+            choice_costs: vec![],
         };
         let r = BranchAndBound::default().solve(&p).unwrap();
         assert!(r.solution.bins.is_empty());
@@ -765,6 +770,7 @@ mod tests {
                     ],
                 },
             ],
+            choice_costs: vec![],
         };
         let r = BranchAndBound::default().solve(&p).unwrap();
         assert_eq!(r.solution.bins.len(), 1);
@@ -799,6 +805,7 @@ mod tests {
                 id: "t".into(),
                 choices: vec![ResourceVec::from_slice(&[1.0])],
             }],
+            choice_costs: vec![],
         };
         let r = BranchAndBound::default().solve(&p).unwrap();
         assert_eq!(r.solution.cost(&p), Dollars::from_f64(0.4));
@@ -860,7 +867,12 @@ mod tests {
                 });
             }
         }
-        MvbpProblem { dims: base.dims, bin_types: base.bin_types.clone(), items }
+        MvbpProblem {
+            dims: base.dims,
+            bin_types: base.bin_types.clone(),
+            items,
+            choice_costs: vec![],
+        }
     }
 
     #[test]
@@ -916,6 +928,7 @@ mod tests {
                     ],
                 },
             ],
+            choice_costs: vec![],
         };
         let r = BranchAndBound::default().solve(&p).unwrap();
         r.solution.validate(&p).unwrap();
@@ -939,6 +952,7 @@ mod tests {
                     choices: vec![ResourceVec::from_slice(&[3.0])],
                 })
                 .collect(),
+            choice_costs: vec![],
         };
         let r = BranchAndBound::default().solve(&p).unwrap();
         r.solution.validate(&p).unwrap();

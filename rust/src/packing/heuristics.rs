@@ -205,7 +205,7 @@ pub(crate) fn best_new_bin(problem: &MvbpProblem, item: usize) -> Option<(usize,
         for (c, req) in problem.items[item].choices.iter().enumerate() {
             if req.fits(&bt.capacity) {
                 let slack = 1.0 - req.max_ratio(&bt.capacity);
-                let cost = bt.cost.as_f64();
+                let cost = bt.cost.as_f64() + problem.choice_cost(item, c).as_f64();
                 let better = match &best {
                     None => true,
                     Some((_, _, bc, bs)) => {
@@ -408,6 +408,7 @@ mod tests {
                     choices: vec![ResourceVec::from_slice(&[4.0])],
                 },
             ],
+            choice_costs: vec![],
         };
         let ffd = solve_first_fit(&p).unwrap();
         let exact = crate::packing::solve_exact(&p).unwrap();
@@ -470,7 +471,7 @@ mod tests {
                     }
                 })
                 .collect();
-            let p = MvbpProblem { dims, bin_types, items };
+            let p = MvbpProblem { dims, bin_types, items, choice_costs: vec![] };
             p.validate().unwrap();
             let ffd = solve_first_fit(&p).unwrap();
             let bfd = solve_best_fit(&p).unwrap();

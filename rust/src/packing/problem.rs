@@ -2,6 +2,18 @@
 
 use crate::types::{Dollars, ResourceVec};
 
+/// Capacity written into a synthetic *region-gate* dimension.
+///
+/// Multi-region problems append one extra dimension per region: a bin
+/// in region `r` gets `GATE_DIM_CAP` capacity in gate dimension `r`
+/// and zero in the others, while every expanded item choice carries
+/// `1.0` in the gate dimension of the region it targets — so a choice
+/// only fits bins of its region, with ordinary capacity arithmetic and
+/// no solver changes.  The cap is large enough that gate dimensions
+/// never bind (or meaningfully perturb utilization ratios) for any
+/// realistic bin population.
+pub(crate) const GATE_DIM_CAP: f64 = 1e6;
+
 /// A bin type: an instance type's cost and capacity vector.
 #[derive(Clone, Debug)]
 pub struct BinType {
@@ -31,6 +43,12 @@ pub struct MvbpProblem {
     pub dims: usize,
     pub bin_types: Vec<BinType>,
     pub items: Vec<Item>,
+    /// Optional per-(item, choice) assignment cost added to the bin-
+    /// opening objective — `choice_costs[i][c]` is charged whenever
+    /// item `i` is packed under choice `c` (cross-region data-transfer
+    /// cost in the tiered cloud model).  Empty means all-zero, which
+    /// is the classic MVBP objective.
+    pub choice_costs: Vec<Vec<Dollars>>,
 }
 
 /// One opened bin with its item assignments.
@@ -94,7 +112,39 @@ impl MvbpProblem {
                 }
             }
         }
+        if !self.choice_costs.is_empty() {
+            if self.choice_costs.len() != self.items.len() {
+                return Err(format!(
+                    "choice_costs covers {} items, problem has {}",
+                    self.choice_costs.len(),
+                    self.items.len()
+                ));
+            }
+            for (i, (item, costs)) in self.items.iter().zip(&self.choice_costs).enumerate() {
+                if costs.len() != item.choices.len() {
+                    return Err(format!(
+                        "item {} has {} choices but {} choice costs",
+                        item.id,
+                        item.choices.len(),
+                        costs.len()
+                    ));
+                }
+                if costs.iter().any(|c| *c < Dollars::ZERO) {
+                    return Err(format!("item {i} has a negative choice cost"));
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Assignment cost of packing item `i` under choice `c` (zero when
+    /// no choice costs are attached).
+    pub fn choice_cost(&self, i: usize, c: usize) -> Dollars {
+        self.choice_costs
+            .get(i)
+            .and_then(|cs| cs.get(c))
+            .copied()
+            .unwrap_or(Dollars::ZERO)
     }
 
     /// Whether item `i` under choice `c` fits into an *empty* bin of some type.
@@ -116,11 +166,17 @@ impl MvbpProblem {
 }
 
 impl Solution {
-    /// Total cost of all opened bins.
+    /// Total cost: opened bins plus per-assignment choice costs.
     pub fn cost(&self, problem: &MvbpProblem) -> Dollars {
         self.bins
             .iter()
-            .map(|b| problem.bin_types[b.bin_type].cost)
+            .map(|b| {
+                problem.bin_types[b.bin_type].cost
+                    + b.assignments
+                        .iter()
+                        .map(|&(i, c)| problem.choice_cost(i, c))
+                        .sum::<Dollars>()
+            })
             .sum()
     }
 
@@ -233,6 +289,7 @@ pub(crate) mod test_fixtures {
                     choices: vec![ResourceVec::from_slice(&[2.0, 2.0])],
                 },
             ],
+            choice_costs: vec![],
         }
     }
 }
@@ -341,6 +398,40 @@ mod tests {
             ],
         };
         assert!(dup.validate(&p).unwrap_err().contains("twice"));
+    }
+
+    #[test]
+    fn choice_costs_priced_and_validated() {
+        let mut p = small_problem();
+        let sol = Solution {
+            bins: vec![PackedBin {
+                bin_type: 1,
+                assignments: vec![(0, 0), (1, 1), (2, 0)],
+            }],
+        };
+        // No choice costs attached: classic objective.
+        assert_eq!(sol.cost(&p), Dollars::from_f64(1.8));
+        // Item b's second choice carries a transfer cost.
+        p.choice_costs = vec![
+            vec![Dollars::ZERO],
+            vec![Dollars::ZERO, Dollars::from_f64(0.2)],
+            vec![Dollars::ZERO],
+        ];
+        p.validate().unwrap();
+        assert_eq!(p.choice_cost(1, 1), Dollars::from_f64(0.2));
+        assert_eq!(p.choice_cost(2, 0), Dollars::ZERO);
+        assert_eq!(sol.cost(&p), Dollars::from_f64(2.0));
+        // Shape mismatches and negative costs are rejected.
+        let mut bad = small_problem();
+        bad.choice_costs = vec![vec![Dollars::ZERO]];
+        assert!(bad.validate().unwrap_err().contains("choice_costs"));
+        let mut neg = small_problem();
+        neg.choice_costs = vec![
+            vec![Dollars(-1)],
+            vec![Dollars::ZERO, Dollars::ZERO],
+            vec![Dollars::ZERO],
+        ];
+        assert!(neg.validate().unwrap_err().contains("negative choice cost"));
     }
 
     #[test]

@@ -261,7 +261,18 @@ pub fn certified_lower_bound(problem: &MvbpProblem) -> Dollars {
             best = dff;
         }
     }
-    best
+    // Choice-cost floor: every item pays at least its cheapest per-
+    // choice assignment cost on top of the bin-opening bound (zero
+    // unless the problem carries choice costs).
+    let floor: Dollars = (0..problem.items.len())
+        .map(|i| {
+            (0..problem.items[i].choices.len())
+                .map(|c| problem.choice_cost(i, c))
+                .min()
+                .unwrap_or(Dollars::ZERO)
+        })
+        .sum();
+    best + floor
 }
 
 /// Build a certified outcome.  A proven-optimal solution is its own
@@ -855,6 +866,7 @@ mod tests {
                     choices: vec![ResourceVec::from_slice(&[3.0 + (i % 3) as f64])],
                 })
                 .collect(),
+            choice_costs: vec![],
         };
         // aggregate off: the weights repeat (three classes), and the
         // point here is exercising the *sharded per-item* path.
@@ -878,7 +890,12 @@ mod tests {
                 });
             }
         }
-        MvbpProblem { dims: base.dims, bin_types: base.bin_types.clone(), items }
+        MvbpProblem {
+            dims: base.dims,
+            bin_types: base.bin_types.clone(),
+            items,
+            choice_costs: vec![],
+        }
     }
 
     #[test]
@@ -973,6 +990,7 @@ mod tests {
                 capacity: ResourceVec::from_slice(&[1.0]),
             }],
             items: vec![],
+            choice_costs: vec![],
         };
         let out = PortfolioSolver::default().solve(&p, &SolveBudget::default()).unwrap();
         assert_eq!(out.cost, Dollars::ZERO);
@@ -998,6 +1016,7 @@ mod tests {
                     choices: vec![ResourceVec::from_slice(&[6.0])],
                 })
                 .collect(),
+            choice_costs: vec![],
         };
         let lb = certified_lower_bound(&p);
         assert_eq!(lb, Dollars::from_f64(3.0));

@@ -11,7 +11,7 @@ use crate::metrics::{table::rate, Table};
 use crate::profiler::{ExecChoice, ResourceProfile};
 use crate::sched::{SimConfig, Simulation};
 use crate::streams::StreamSpec;
-use crate::types::{DimLayout, Program, VGA};
+use crate::types::{DimLayout, Dollars, Program, VGA};
 use std::collections::BTreeMap;
 
 /// Table 1: the instance catalog.
@@ -218,6 +218,7 @@ pub fn single_instance_run_with(
                 .collect(),
         }],
         hourly_cost: itype.hourly_cost,
+        transfer_rate: Dollars::ZERO,
         // Hand-built single-instance characterization, not a solve.
         lower_bound: None,
     };

@@ -246,8 +246,9 @@ impl Simulation {
         };
         for (inst_idx, inst) in plan.instances.iter().enumerate() {
             let itype = catalog
-                .get(&inst.type_name)
-                .unwrap_or_else(|| panic!("unknown instance type {}", inst.type_name));
+                .resolve(&inst.type_name)
+                .unwrap_or_else(|| panic!("unknown instance type {}", inst.type_name))
+                .itype;
             sim.add_device(inst_idx, 0, "cpu", itype.cpu_cores);
             for (g, gpu) in itype.gpus.iter().enumerate() {
                 sim.add_device(inst_idx, 1 + g, &format!("gpu{g}"), gpu.cores);

@@ -29,6 +29,12 @@ impl Dollars {
         self.0 as f64 / 1e6
     }
 
+    /// Scale by a dimensionless factor (pricing-tier and region
+    /// multipliers), rounding to the nearest micro-dollar.
+    pub fn scale(self, factor: f64) -> Dollars {
+        Dollars((self.0 as f64 * factor).round() as i64)
+    }
+
     /// Percentage saving of `self` relative to `baseline`.
     pub fn savings_vs(self, baseline: Dollars) -> f64 {
         if baseline.0 == 0 {

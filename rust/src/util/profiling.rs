@@ -11,6 +11,12 @@
 //!
 //! * the autoscale epoch loop — `epoch:solve`, `epoch:actuate`,
 //!   `epoch:simulate`, `epoch:bill` (`coordinator::autoscale`);
+//! * billing actuation — `billing:actuate` around each fleet
+//!   transition applied to the meter, at epoch boundaries and inside
+//!   mid-epoch spot-revocation repacks (`coordinator::autoscale`);
+//! * the warm-start repack delta — `warm:repack-delta` around the
+//!   incremental re-pack of orphaned/new streams against the kept
+//!   fleet (`manager`);
 //! * the portfolio arms — `arm:ff-*` / `arm:bf-*` per (greedy,
 //!   ordering) pair, `arm:*-shard` on the sharded path, and
 //!   `arm:exact-polish` (`packing::solver`).

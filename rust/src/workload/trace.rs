@@ -28,14 +28,25 @@
 //! [`WorkloadTrace::save`] and edited.
 
 use super::{FleetSpec, Workload};
-use crate::cloud::Catalog;
-use crate::config::{catalog_from_json, stream_rows_from_json, stream_to_json};
+use crate::cloud::{Catalog, PricingModel, PricingTier, TierSpec};
+use crate::config::{catalog_from_json, pricing_to_json, stream_rows_from_json, stream_to_json};
 use crate::streams::{Camera, StreamSpec};
 use crate::types::{Program, VGA};
 use crate::util::error::{anyhow, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::path::Path;
+
+/// A spot-market capacity reclaim inside an epoch: at `at_s` seconds
+/// into the epoch, the provider revokes `fraction` of the then-running
+/// spot instances.  On-demand and reserved instances are never touched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Revocation {
+    /// Offset into the epoch, seconds (`0 <= at_s <= duration_s`).
+    pub at_s: f64,
+    /// Fraction of running spot instances reclaimed, in `[0, 1]`.
+    pub fraction: f64,
+}
 
 /// One epoch of a demand timeline: the streams in force for a span.
 #[derive(Clone, Debug)]
@@ -44,6 +55,9 @@ pub struct Epoch {
     /// How long this demand holds, in simulated seconds (> 0).
     pub duration_s: f64,
     pub streams: Vec<StreamSpec>,
+    /// Seeded spot-revocation events inside this epoch (usually empty;
+    /// see the `spot` builtin).
+    pub revocations: Vec<Revocation>,
 }
 
 /// A named demand timeline over one catalog.
@@ -67,7 +81,31 @@ impl WorkloadTrace {
         streams: Vec<StreamSpec>,
     ) -> WorkloadTrace {
         assert!(duration_s > 0.0, "epoch duration must be positive");
-        self.epochs.push(Epoch { label: label.into(), duration_s, streams });
+        self.epochs.push(Epoch {
+            label: label.into(),
+            duration_s,
+            streams,
+            revocations: Vec::new(),
+        });
+        self
+    }
+
+    /// Append an epoch carrying spot-revocation events (builder style).
+    pub fn epoch_with_revocations(
+        mut self,
+        label: impl Into<String>,
+        duration_s: f64,
+        streams: Vec<StreamSpec>,
+        revocations: Vec<Revocation>,
+    ) -> WorkloadTrace {
+        assert!(duration_s > 0.0, "epoch duration must be positive");
+        for r in &revocations {
+            assert!(
+                (0.0..=duration_s).contains(&r.at_s) && (0.0..=1.0).contains(&r.fraction),
+                "revocation out of range"
+            );
+        }
+        self.epochs.push(Epoch { label: label.into(), duration_s, streams, revocations });
         self
     }
 
@@ -109,8 +147,9 @@ impl WorkloadTrace {
                 Self::CHURN_EPOCHS,
                 seed,
             )),
+            "spot" | "spot-market" => Ok(WorkloadTrace::spot_market(seed)),
             other => Err(anyhow!(
-                "unknown builtin trace {other:?} (expected emergency, diurnal, or churn)"
+                "unknown builtin trace {other:?} (expected emergency, diurnal, churn, or spot)"
             )),
         }
     }
@@ -210,6 +249,40 @@ impl WorkloadTrace {
         trace
     }
 
+    /// The spot-market scenario: a sustained monitoring fleet priced on
+    /// a two-tier catalog (on-demand plus a 35%-of-list spot tier)
+    /// where the provider reclaims half the spot fleet mid-epoch twice
+    /// over the timeline.  A reactive policy rides the discount and
+    /// re-packs orphaned streams on each revocation; a static on-demand
+    /// fleet pays list price but never churns — the trade the
+    /// `spot_market` bench quantifies.
+    ///
+    /// Camera identities persist across epochs (rates breathe ±10%), so
+    /// warm-start repacking keeps most placements at every boundary.
+    pub fn spot_market(seed: u64) -> WorkloadTrace {
+        let mut rng = Rng::new(seed ^ 0x0005_1d07);
+        let catalog = Catalog::paper_experiments().with_pricing(PricingModel::with_tiers(vec![
+            TierSpec::new(PricingTier::OnDemand),
+            TierSpec::new(PricingTier::Spot),
+        ]));
+        let mut trace = WorkloadTrace::new(format!("spot-{seed}"), catalog);
+        for e in 0..6u32 {
+            let streams: Vec<StreamSpec> = (0..8)
+                .map(|i| {
+                    StreamSpec::new(Camera::new(i, VGA), Program::Zf, rng.range_f64(0.45, 0.55))
+                })
+                .collect();
+            let revocations = if e == 1 || e == 3 {
+                vec![Revocation { at_s: rng.range_f64(900.0, 2700.0), fraction: 0.5 }]
+            } else {
+                Vec::new()
+            };
+            trace =
+                trace.epoch_with_revocations(format!("s{e:02}"), 3600.0, streams, revocations);
+        }
+        trace
+    }
+
     // ----- JSON persistence ---------------------------------------------
 
     /// Serialize to the trace config shape:
@@ -229,17 +302,34 @@ impl WorkloadTrace {
             .epochs
             .iter()
             .map(|e| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("label".to_string(), Json::Str(e.label.clone())),
                     ("duration_s".to_string(), Json::Num(e.duration_s)),
                     (
                         "streams".to_string(),
                         Json::Arr(e.streams.iter().map(stream_to_json).collect()),
                     ),
-                ])
+                ];
+                if !e.revocations.is_empty() {
+                    fields.push((
+                        "revocations".to_string(),
+                        Json::Arr(
+                            e.revocations
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("at_s".to_string(), Json::Num(r.at_s)),
+                                        ("fraction".to_string(), Json::Num(r.fraction)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                Json::obj(fields)
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("name".to_string(), Json::Str(self.name.clone())),
             (
                 "catalog".to_string(),
@@ -251,8 +341,12 @@ impl WorkloadTrace {
                         .collect(),
                 ),
             ),
-            ("epochs".to_string(), Json::Arr(epochs)),
-        ])
+        ];
+        if !self.catalog.pricing.is_flat() {
+            fields.push(("pricing".to_string(), pricing_to_json(&self.catalog.pricing)));
+        }
+        fields.push(("epochs".to_string(), Json::Arr(epochs)));
+        Json::obj(fields)
     }
 
     /// Parse the trace config shape (see [`WorkloadTrace::to_json`]).
@@ -270,7 +364,21 @@ impl WorkloadTrace {
                 return Err(anyhow!("epoch {label:?}: duration_s must be positive"));
             }
             let streams = stream_rows_from_json(row.arr_field("streams")?)?;
-            epochs.push(Epoch { label, duration_s, streams });
+            let mut revocations = Vec::new();
+            if let Some(rows) = row.get("revocations").and_then(Json::as_arr) {
+                for rr in rows {
+                    let at_s = rr.f64_field("at_s")?;
+                    let fraction = rr.f64_field("fraction")?;
+                    if !(0.0..=duration_s).contains(&at_s) {
+                        return Err(anyhow!("epoch {label:?}: revocation at_s out of range"));
+                    }
+                    if !(0.0..=1.0).contains(&fraction) {
+                        return Err(anyhow!("epoch {label:?}: revocation fraction out of [0, 1]"));
+                    }
+                    revocations.push(Revocation { at_s, fraction });
+                }
+            }
+            epochs.push(Epoch { label, duration_s, streams, revocations });
         }
         if epochs.is_empty() {
             return Err(anyhow!("trace has no epochs"));
@@ -385,7 +493,67 @@ mod tests {
         assert_eq!(WorkloadTrace::builtin("emergency", 1).unwrap().epochs.len(), 3);
         assert_eq!(WorkloadTrace::builtin("diurnal", 1).unwrap().epochs.len(), 24);
         assert_eq!(WorkloadTrace::builtin("churn", 1).unwrap().epochs.len(), 8);
+        assert_eq!(WorkloadTrace::builtin("spot", 1).unwrap().epochs.len(), 6);
         assert!(WorkloadTrace::builtin("sinusoid", 1).is_err());
+    }
+
+    #[test]
+    fn spot_trace_carries_tiers_and_seeded_revocations() {
+        let a = WorkloadTrace::spot_market(7);
+        let b = WorkloadTrace::spot_market(7);
+        assert!(!a.catalog.pricing.is_flat());
+        assert_eq!(a.catalog.pricing.tiers.len(), 2);
+        assert!(a
+            .catalog
+            .pricing
+            .tiers
+            .iter()
+            .any(|t| t.tier == PricingTier::Spot));
+        let revoking: Vec<usize> = a
+            .epochs
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| !e.revocations.is_empty())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(revoking, vec![1, 3]);
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.revocations, y.revocations);
+            for r in &x.revocations {
+                assert!((0.0..=x.duration_s).contains(&r.at_s));
+                assert_eq!(r.fraction, 0.5);
+            }
+        }
+        // Stable camera identities: warm repacks keep placements.
+        for e in &a.epochs {
+            assert_eq!(e.streams.len(), 8);
+            assert_eq!(e.streams[0].camera.id, 0);
+        }
+    }
+
+    #[test]
+    fn spot_json_round_trip_preserves_pricing_and_revocations() {
+        let t = WorkloadTrace::spot_market(3);
+        let back =
+            WorkloadTrace::from_json(&Json::parse(&t.to_json().to_pretty()).unwrap()).unwrap();
+        assert!(!back.catalog.pricing.is_flat());
+        assert_eq!(back.catalog.pricing.tiers.len(), 2);
+        for (x, y) in t.epochs.iter().zip(&back.epochs) {
+            assert_eq!(x.revocations.len(), y.revocations.len());
+            for (r, s) in x.revocations.iter().zip(&y.revocations) {
+                assert!((r.at_s - s.at_s).abs() < 1e-9);
+                assert_eq!(r.fraction, s.fraction);
+            }
+        }
+        // Out-of-range revocations are rejected on load.
+        let bad = r#"{"name":"x","epochs":[
+            {"duration_s":60,"streams":[{"program":"zf","fps":1}],
+             "revocations":[{"at_s":90,"fraction":0.5}]}]}"#;
+        assert!(WorkloadTrace::from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad2 = r#"{"name":"x","epochs":[
+            {"duration_s":60,"streams":[{"program":"zf","fps":1}],
+             "revocations":[{"at_s":30,"fraction":1.5}]}]}"#;
+        assert!(WorkloadTrace::from_json(&Json::parse(bad2).unwrap()).is_err());
     }
 
     #[test]

@@ -240,7 +240,7 @@ fn random_problem(rng: &mut camcloud::util::rng::Rng) -> MvbpProblem {
             }
         })
         .collect();
-    MvbpProblem { dims, bin_types, items }
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
 }
 
 #[test]
@@ -302,6 +302,7 @@ fn prop_exact_matches_1d_oracle() {
                         choices: vec![ResourceVec::from_slice(&[w as f64])],
                     })
                     .collect(),
+                choice_costs: vec![],
             };
             let exact = solve_exact(&problem).ok_or("exact failed")?;
             let bins = exact.bins.len() as u32;

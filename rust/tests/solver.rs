@@ -43,7 +43,7 @@ fn random_instance(rng: &mut Rng) -> MvbpProblem {
             }
         })
         .collect();
-    MvbpProblem { dims, bin_types, items }
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
 }
 
 /// The portfolio races FFD and BFD as arms (full-scan at these sizes),
@@ -162,7 +162,7 @@ fn random_high_multiplicity(rng: &mut Rng) -> MvbpProblem {
             });
         }
     }
-    MvbpProblem { dims, bin_types, items }
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
 }
 
 /// Aggregated-class packing must cost exactly what per-item packing
