@@ -55,6 +55,23 @@
 //! therefore translate directly into fewer cold solves on churny
 //! traces.
 //!
+//! **Cross-epoch solve memoization.**  Diurnal traces repeat: hour 26
+//! often demands the exact fleet hour 2 did.  Reactive cold solves
+//! therefore consult a bounded [`SolveCache`] keyed by an
+//! order-independent fingerprint of the aggregated problem plus the
+//! solver routing ([`solve_key`]); a hit replays the cached plan
+//! against the *current* epoch's streams — structurally re-validated
+//! and cost-checked before reuse, falling back to the cold solve on
+//! any mismatch — so repeat epochs skip the solve entirely.  Because
+//! the solver stack is deterministic, a validated replay is
+//! bit-identical to the solve it skips: every compared outcome field
+//! (costs, fleet, gap, provenance) is unchanged, and only the
+//! [`EpochOutcome::cached`] observability flag records that work was
+//! saved.  That flag is *not* part of the pipeline determinism
+//! contract — a mis-speculated pipelined plan can warm the cache for
+//! its own replan — which is why `tests/parallel.rs` compares
+//! everything except it.
+//!
 //! Four [`ScalePolicy`]s make the cost/performance trade-off
 //! measurable:
 //!
@@ -78,8 +95,8 @@ use super::pipeline::{EpochConsumer, PipelineExecutor};
 use super::{Coordinator, ProfiledWorkload};
 use crate::cloud::{BillingMeter, Catalog, InstanceId, InstanceState, PricingTier, SimInstance};
 use crate::manager::{
-    assign_best_effort, plan_transition, repack_onto, worth_reallocating, AllocationPlan,
-    Reallocation, Strategy, TransitionAction,
+    assign_best_effort, plan_transition, repack_onto, solve_key, worth_reallocating,
+    AllocationPlan, Reallocation, SolveCache, Strategy, TransitionAction,
 };
 use crate::packing::SolverKind;
 use crate::sched::{SimConfig, SimReport};
@@ -87,6 +104,7 @@ use crate::types::Dollars;
 use crate::util::error::{anyhow, Context, Result};
 use crate::util::profiling;
 use crate::workload::trace::WorkloadTrace;
+use std::sync::Mutex;
 
 /// Provisioning policy compared by the autoscale harness.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -188,6 +206,12 @@ pub struct AutoscaleConfig {
     /// teeth when the lower bound is tight — the DFF certificates are
     /// what let churny mixed-catalog traces skip most refresh solves.
     pub refresh_skip_gap: f64,
+    /// Memoize reactive cold solves across epochs (see the module
+    /// docs): repeat problems replay their validated cached plan
+    /// instead of re-solving.  Replays are bit-identical to the solves
+    /// they skip, so this is a pure wall-clock knob; disable it to
+    /// force every cold site to solve (ablations, timing baselines).
+    pub solve_cache: bool,
 }
 
 impl Default for AutoscaleConfig {
@@ -199,6 +223,7 @@ impl Default for AutoscaleConfig {
             cold_refresh_every: 8,
             cold_refresh_drift: 0.15,
             refresh_skip_gap: 0.05,
+            solve_cache: true,
         }
     }
 }
@@ -238,6 +263,12 @@ pub struct EpochOutcome {
     pub gap: Option<f64>,
     /// Warm/cold provenance of the epoch's target plan.
     pub mode: SolveMode,
+    /// The cold solve was skipped: the target plan was replayed from
+    /// the cross-epoch [`SolveCache`].  Observability only — replays
+    /// are bit-identical to the solves they skip, and this flag is
+    /// deliberately excluded from the pipeline determinism contract
+    /// (speculative planning may warm the cache for its own replan).
+    pub cached: bool,
     /// Spot instances reclaimed by the provider mid-epoch
     /// (trace-scheduled revocation events).
     pub revoked: u32,
@@ -472,6 +503,8 @@ pub(crate) struct PlannedEpoch {
     /// signal *and* the plan simulated when the gate keeps the fleet.
     serving: Option<AllocationPlan>,
     mode: SolveMode,
+    /// The target plan was replayed from the solve cache.
+    cached: bool,
 }
 
 /// Stage 1 — **plan**.  Pure in `(epoch index, seed)`: reads only the
@@ -487,6 +520,10 @@ struct PlanStage<'a> {
     /// Fresh per-epoch optimal plans (static policies only — used both
     /// for peak/mean selection and as serving candidates).
     fresh: Vec<AllocationPlan>,
+    /// Cross-epoch solve memoization (reactive policy only; `None`
+    /// when disabled).  Guarded by a mutex because the stage may run
+    /// speculatively on a pipeline worker.
+    cache: Option<Mutex<SolveCache>>,
 }
 
 impl PlanStage<'_> {
@@ -501,7 +538,13 @@ impl PlanStage<'_> {
                 let target = self.profiled[i]
                     .allocate(self.config.strategy)
                     .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-                Ok(PlannedEpoch { index: i, target, serving: None, mode: SolveMode::Cold })
+                Ok(PlannedEpoch {
+                    index: i,
+                    target,
+                    serving: None,
+                    mode: SolveMode::Cold,
+                    cached: false,
+                })
             }
             ScalePolicy::StaticPeak | ScalePolicy::StaticMean => {
                 let held = self
@@ -513,7 +556,13 @@ impl PlanStage<'_> {
                 // the epoch's fresh optimum doubles as the serving
                 // candidate.
                 let serving = self.serving_plan(i, &held, Some(&self.fresh[i]))?;
-                Ok(PlannedEpoch { index: i, target: held, serving, mode: SolveMode::Cold })
+                Ok(PlannedEpoch {
+                    index: i,
+                    target: held,
+                    serving,
+                    mode: SolveMode::Cold,
+                    cached: false,
+                })
             }
             ScalePolicy::Reactive => self.plan_reactive(i, seed),
         }
@@ -524,11 +573,11 @@ impl PlanStage<'_> {
         let epoch = &self.trace.epochs[i];
         let pw = &self.profiled[i];
         let strategy = self.config.strategy;
-        let (target, mode) = if seed.incumbent.instances.is_empty() {
-            let plan = pw
-                .allocate(strategy)
+        let (target, mode, cached) = if seed.incumbent.instances.is_empty() {
+            let (plan, cached) = self
+                .cold_solve(i)
                 .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-            (plan, SolveMode::Cold)
+            (plan, SolveMode::Cold, cached)
         } else if self.config.cold_refresh_every > 0
             && seed.warm_streak >= self.config.cold_refresh_every
         {
@@ -544,14 +593,14 @@ impl PlanStage<'_> {
             if plan.solver != SolverKind::WarmStart {
                 // allocate_warm already fell back to a cold solve on
                 // its own gate; that is the refresh.
-                (plan, SolveMode::ColdRefresh)
+                (plan, SolveMode::ColdRefresh, false)
             } else if plan.gap().map_or(false, |g| g <= self.config.refresh_skip_gap) {
-                (plan, SolveMode::Warm)
+                (plan, SolveMode::Warm, false)
             } else {
-                let cold = pw
-                    .allocate(strategy)
+                let (cold, cached) = self
+                    .cold_solve(i)
                     .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-                (cold, SolveMode::ColdRefresh)
+                (cold, SolveMode::ColdRefresh, cached)
             }
         } else {
             let plan = pw
@@ -567,21 +616,50 @@ impl PlanStage<'_> {
                     _ => false,
                 };
                 if drifted {
-                    let cold = pw
-                        .allocate(strategy)
+                    let (cold, cached) = self
+                        .cold_solve(i)
                         .with_context(|| format!("epoch {:?} not allocatable", epoch.label))?;
-                    (cold, SolveMode::ColdRefresh)
+                    (cold, SolveMode::ColdRefresh, cached)
                 } else {
-                    (plan, SolveMode::Warm)
+                    (plan, SolveMode::Warm, false)
                 }
             } else {
                 // allocate_warm already fell back to a cold solve on
                 // its own per-step quality gate.
-                (plan, SolveMode::Cold)
+                (plan, SolveMode::Cold, false)
             }
         };
         let serving = self.serving_plan(i, &seed.incumbent, Some(&target))?;
-        Ok(PlannedEpoch { index: i, target, serving, mode })
+        Ok(PlannedEpoch { index: i, target, serving, mode, cached })
+    }
+
+    /// Cold-solve epoch `i`, consulting the cross-epoch solve cache
+    /// when one is enabled.  The second element reports whether the
+    /// plan was *replayed* (`true`: the cache validated and reused a
+    /// prior epoch's plan, skipping the solve).  Misses and rejected
+    /// (stale) entries fall through to the cold solve and memoize its
+    /// result for later epochs.
+    fn cold_solve(
+        &self,
+        i: usize,
+    ) -> std::result::Result<(AllocationPlan, bool), crate::manager::AllocationError> {
+        let epoch = &self.trace.epochs[i];
+        let pw = &self.profiled[i];
+        let strategy = self.config.strategy;
+        let cache = match &self.cache {
+            Some(cache) => cache,
+            None => return pw.allocate(strategy).map(|plan| (plan, false)),
+        };
+        let mgr = pw.manager();
+        let built = mgr.build_problem(&epoch.streams, strategy)?;
+        let key = solve_key(&built.problem, strategy, mgr.solver, &mgr.budget);
+        let mut cache = cache.lock().expect("solve cache lock poisoned");
+        if let Some(plan) = cache.replay(key, &built, &epoch.streams, strategy) {
+            return Ok((plan, true));
+        }
+        let plan = mgr.solve_built(&built, &epoch.streams, strategy, None)?;
+        cache.insert(key, plan.clone());
+        Ok((plan, false))
     }
 
     /// Can `fleet` serve epoch `i` without provisioning?  When
@@ -620,6 +698,8 @@ struct SimJob {
     fleet_size: usize,
     hourly_rate: Dollars,
     mode: SolveMode,
+    /// The epoch's target plan was replayed from the solve cache.
+    cached: bool,
     /// Spot instances reclaimed mid-epoch by revocation events.
     revoked: u32,
 }
@@ -676,7 +756,7 @@ impl ActuateStage<'_> {
         profiled: &[ProfiledWorkload],
         planned: PlannedEpoch,
     ) -> (SimJob, AllocationPlan) {
-        let PlannedEpoch { index: i, target, serving, mode } = planned;
+        let PlannedEpoch { index: i, target, serving, mode, cached } = planned;
         let epoch = &trace.epochs[i];
         let realloc = plan_transition(&self.state.plan, &target);
         let do_realloc = match self.policy {
@@ -747,6 +827,7 @@ impl ActuateStage<'_> {
             fleet_size: self.state.running_count(),
             hourly_rate,
             mode,
+            cached,
             revoked,
         };
         self.now += epoch.duration_s;
@@ -838,7 +919,7 @@ impl ActuateStage<'_> {
         trace: &WorkloadTrace,
         planned: PlannedEpoch,
     ) -> (SimJob, AllocationPlan) {
-        let PlannedEpoch { index: i, target: plan, mode, .. } = planned;
+        let PlannedEpoch { index: i, target: plan, mode, cached, .. } = planned;
         let epoch = &trace.epochs[i];
         self.oracle_billed += plan.total_rate().as_f64() * epoch.duration_s / 3600.0;
         self.peak_fleet = self.peak_fleet.max(plan.instances.len());
@@ -864,6 +945,7 @@ impl ActuateStage<'_> {
             fleet_size: plan.instances.len(),
             hourly_rate: plan.hourly_cost,
             mode,
+            cached,
             revoked: 0,
         };
         self.state.plan = plan;
@@ -941,6 +1023,7 @@ impl BillStage {
             solver: job.sim_plan.solver,
             gap: job.sim_plan.gap(),
             mode: job.mode,
+            cached: job.cached,
             revoked: job.revoked,
         });
     }
@@ -1044,6 +1127,10 @@ impl<'a> AutoscaleRunner<'a> {
             profiled: &profiled,
             static_plan,
             fresh,
+            // Only the reactive policy re-solves the same problems
+            // across epochs; static/oracle pre-solve exactly once each.
+            cache: (policy == ScalePolicy::Reactive && self.config.solve_cache)
+                .then(|| Mutex::new(SolveCache::new(32))),
         };
         let mut driver = EpochDriver {
             trace,

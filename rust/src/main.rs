@@ -87,7 +87,9 @@ fn print_help() {
          \u{20}                              warm-started per-epoch re-solve + hysteresis,\n\
          \u{20}                              policies static-peak/static-mean/oracle/reactive\n\
          \u{20}  (allocate/run/trace/whatif also accept --solver auto|ffd|bfd|exact|portfolio,\n\
-         \u{20}   --solve-budget-ms MS, and --exact-cutoff N for the solver stack)\n\
+         \u{20}   --solve-budget-ms MS, --exact-cutoff N, and --exact-threads N — 0 = all\n\
+         \u{20}   cores — for the solver stack; exact results are bit-identical across\n\
+         \u{20}   thread counts)\n\
          \u{20}  (run/trace also accept --sim-threads N for sharded simulation — 0 = all\n\
          \u{20}   cores — and --pipeline on|off to overlap epoch solves with simulation;\n\
          \u{20}   parallel execution changes no results while solves fit the solve budget)\n\
@@ -101,8 +103,8 @@ fn print_help() {
 }
 
 /// `--solver {auto,ffd,bfd,exact,portfolio}` plus the solve-budget
-/// knobs (`--solve-budget-ms`, `--exact-cutoff`), shared by every mode
-/// that allocates.
+/// knobs (`--solve-budget-ms`, `--exact-cutoff`, `--exact-threads`),
+/// shared by every mode that allocates.
 fn solver_config(args: &Args) -> Result<(SolverChoice, SolveBudget), String> {
     let choice: SolverChoice = args.opt_or("solver", "auto").parse()?;
     let mut budget = SolveBudget::default();
@@ -111,6 +113,11 @@ fn solver_config(args: &Args) -> Result<(SolverChoice, SolveBudget), String> {
     }
     if let Some(cutoff) = args.u32_opt("exact-cutoff")? {
         budget.exact_cutoff = cutoff as usize;
+    }
+    // Multi-root parallel branch-and-bound; completed proofs are
+    // bit-identical for any value, so this is a pure wall-clock knob.
+    if let Some(threads) = args.u32_opt("exact-threads")? {
+        budget.exact_threads = threads as usize;
     }
     Ok((choice, budget))
 }
@@ -509,6 +516,7 @@ fn trace_results_json(
                         ("label".to_string(), Json::Str(e.label.clone())),
                         ("solver".to_string(), Json::Str(e.solver.to_string())),
                         ("mode".to_string(), Json::Str(e.mode.to_string())),
+                        ("cached".to_string(), Json::Bool(e.cached)),
                         ("hourly_rate".to_string(), Json::Num(e.hourly_rate.as_f64())),
                         ("performance".to_string(), Json::Num(e.performance)),
                         ("unserved".to_string(), Json::Num(e.unserved as f64)),

@@ -21,10 +21,12 @@
 
 pub mod plan;
 pub mod realloc;
+pub mod solve_cache;
 pub mod strategy;
 pub mod whatif;
 
 pub use plan::{AllocationPlan, PlannedInstance, StreamAssignment};
+pub use solve_cache::{solve_key, SolveCache, SolveKey};
 pub use realloc::{
     assign_best_effort, plan_transition, repack_onto, worth_reallocating, Reallocation,
     TransitionAction,
@@ -289,8 +291,10 @@ impl<'p> ResourceManager<'p> {
     /// map the certified outcome back to a plan.  `bound_hint` is a
     /// certified lower bound the caller already computed for this exact
     /// problem (the declined warm outcome's), forwarded so the solver
-    /// does not recompute it.
-    fn solve_built(
+    /// does not recompute it.  Crate-visible so the autoscaler's
+    /// memoized cold path can solve the problem it just fingerprinted
+    /// without building it twice.
+    pub(crate) fn solve_built(
         &self,
         built: &BuiltProblem,
         streams: &[StreamSpec],

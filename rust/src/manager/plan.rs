@@ -79,7 +79,7 @@ pub struct AllocationPlan {
 
 /// Drop trailing gate dimensions (region encoding) so plan vectors are
 /// always in the catalog's physical resource layout.
-fn truncated(v: &ResourceVec, dims: usize) -> ResourceVec {
+pub(crate) fn truncated(v: &ResourceVec, dims: usize) -> ResourceVec {
     if v.dims() == dims {
         return v.clone();
     }

@@ -1,0 +1,310 @@
+//! Cross-epoch solve memoization for trace-driven autoscaling.
+//!
+//! The built-in traces (diurnal above all) replay a small set of load
+//! levels over and over: hour 3 of day 2 poses the *same* MVBP
+//! instance as hour 3 of day 1, yet the reactive policy's periodic
+//! cold refresh re-solves it from scratch.  The [`SolveCache`] closes
+//! that loop: each cold solve's plan is stored under an
+//! order-independent fingerprint of the aggregated problem
+//! ([`crate::packing::problem_fingerprint`]) plus the solve
+//! configuration ([`solve_key`]), and a later epoch whose problem
+//! fingerprints identically replays the cached plan instead of
+//! searching again.
+//!
+//! A replay is **validated structurally before it is trusted**: every
+//! cached instance must resolve to a current bin type (same name,
+//! price, and physical capacity), every cached assignment to a current
+//! stream (by id) and a current requirement choice (same device, same
+//! bit-identical requirement vector), no stream may appear twice, and
+//! the reconstructed packing must pass `Solution::validate` against
+//! the *current* problem with its total rate equal to the cached
+//! plan's.  Anything less — a stale catalog, churned stream ids, a
+//! fingerprint collision — rejects the entry (evicting it) and falls
+//! back to the cold solve, so a hit can only ever reproduce what the
+//! cold solve would have produced.  Multi-region gated catalogs
+//! usually fail the gate-dimension validation and simply run cold:
+//! the cache targets the flat-pricing traces where epochs genuinely
+//! repeat.
+//!
+//! Hit/miss/reject counts live on the cache (surfaced in the epochs
+//! table) and in the `profiling` registry as `cache:hit` /
+//! `cache:miss` / `cache:reject` event counters.
+
+use super::plan::truncated;
+use super::{AllocationPlan, BuiltProblem, Strategy};
+use crate::packing::{
+    problem_fingerprint, MvbpProblem, PackedBin, Solution, SolveBudget, SolverChoice,
+};
+use crate::streams::StreamSpec;
+use crate::util::profiling;
+use std::collections::HashMap;
+
+/// Cache key: the problem fingerprint (two independent 64-bit digests)
+/// plus a digest of the solve configuration, so runs with different
+/// strategies, solver routings, or budgets never share entries.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct SolveKey(u64, u64, u64);
+
+/// Build the cache key for one solve of `problem` under the given
+/// strategy, solver routing, and the budget fields that change which
+/// solution a solve returns (`exact_cutoff` routes, `node_budget` caps
+/// the proof; wall-clock fields are excluded — they only matter on
+/// runs that were never deterministic to begin with).
+pub fn solve_key(
+    problem: &MvbpProblem,
+    strategy: Strategy,
+    solver: SolverChoice,
+    budget: &SolveBudget,
+) -> SolveKey {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut tag: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            tag ^= b as u64;
+            tag = tag.wrapping_mul(FNV_PRIME);
+        }
+    };
+    eat(strategy.to_string().as_bytes());
+    eat(solver.to_string().as_bytes());
+    eat(&(budget.exact_cutoff as u64).to_le_bytes());
+    eat(&budget.node_budget.to_le_bytes());
+    let (a, b) = problem_fingerprint(problem);
+    SolveKey(a, b, tag)
+}
+
+/// Bounded LRU of cold-solve plans, keyed by [`SolveKey`].
+pub struct SolveCache {
+    /// Most-recently-used first.
+    entries: Vec<(SolveKey, AllocationPlan)>,
+    cap: usize,
+    pub hits: u64,
+    pub misses: u64,
+    /// Lookups whose entry failed replay validation (stale catalog,
+    /// churned ids, fingerprint collision) — evicted, solved cold.
+    pub rejects: u64,
+}
+
+impl SolveCache {
+    pub fn new(cap: usize) -> SolveCache {
+        SolveCache { entries: Vec::new(), cap: cap.max(1), hits: 0, misses: 0, rejects: 0 }
+    }
+
+    /// Look up `key` and replay its plan against the *current* epoch's
+    /// built problem.  `None` means miss or failed validation (the
+    /// entry is evicted in the latter case): run the cold solve.
+    pub fn replay(
+        &mut self,
+        key: SolveKey,
+        built: &BuiltProblem,
+        streams: &[StreamSpec],
+        strategy: Strategy,
+    ) -> Option<AllocationPlan> {
+        let pos = match self.entries.iter().position(|(k, _)| *k == key) {
+            Some(pos) => pos,
+            None => {
+                self.misses += 1;
+                profiling::bump("cache:miss");
+                return None;
+            }
+        };
+        let (key, cached) = self.entries.remove(pos);
+        match rebuild(&cached, built, streams, strategy) {
+            Some(plan) => {
+                // Validated: move to front and replay.
+                self.entries.insert(0, (key, cached));
+                self.hits += 1;
+                profiling::bump("cache:hit");
+                Some(plan)
+            }
+            None => {
+                // Poisoned (stale catalog / churned ids / collision):
+                // the entry stays evicted and the epoch solves cold.
+                self.rejects += 1;
+                profiling::bump("cache:reject");
+                None
+            }
+        }
+    }
+
+    /// Store a cold solve's plan under `key`, replacing any existing
+    /// entry and evicting the least-recently-used past the cap.
+    pub fn insert(&mut self, key: SolveKey, plan: AllocationPlan) {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(pos);
+        }
+        self.entries.insert(0, (key, plan));
+        self.entries.truncate(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Re-express `cached` in terms of the current epoch's problem and
+/// stream list, validating every structural assumption along the way
+/// (see the module docs for the full checklist).  `None` = reject.
+fn rebuild(
+    cached: &AllocationPlan,
+    built: &BuiltProblem,
+    streams: &[StreamSpec],
+    strategy: Strategy,
+) -> Option<AllocationPlan> {
+    let problem = &built.problem;
+    let dims = built.layout.dims();
+    let index_of: HashMap<String, usize> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.id(), i))
+        .collect();
+    let mut used = vec![false; problem.items.len()];
+    let mut bins = Vec::with_capacity(cached.instances.len());
+    for inst in &cached.instances {
+        // Same catalog entry: name, price, and physical capacity must
+        // all still match.
+        let bin_type = problem.bin_types.iter().position(|bt| {
+            bt.name == inst.type_name
+                && bt.cost == inst.hourly_cost
+                && truncated(&bt.capacity, dims) == inst.capacity
+        })?;
+        let mut assignments = Vec::with_capacity(inst.streams.len());
+        for a in &inst.streams {
+            let item = *index_of.get(&a.stream_id)?;
+            if used[item] {
+                return None;
+            }
+            used[item] = true;
+            // Same requirement choice: device and bit-identical
+            // physical requirement vector.
+            let choice = (0..problem.items[item].choices.len()).find(|&c| {
+                built.choice_map[item][c] == a.choice
+                    && truncated(&problem.items[item].choices[c], dims) == a.requirement
+            })?;
+            assignments.push((item, choice));
+        }
+        bins.push(PackedBin { bin_type, assignments });
+    }
+    if !used.iter().all(|u| *u) {
+        return None; // cached plan does not cover this epoch's fleet
+    }
+    let solution = Solution { bins };
+    solution.validate(problem).ok()?;
+    let mut plan = AllocationPlan::from_solution(built, &solution, streams, strategy, cached.solver);
+    if plan.total_rate() != cached.total_rate() {
+        return None; // choice resolution drifted (e.g. region transfer)
+    }
+    // The problems fingerprint identically, so the cached certificate
+    // transfers; the clamp keeps the gap in [0, 1] even under an
+    // (astronomically unlikely) fingerprint collision.
+    plan.lower_bound = cached.lower_bound.map(|lb| lb.min(plan.total_rate()));
+    Some(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::manager::ResourceManager;
+    use crate::profiler::calibration::Calibration;
+    use crate::types::{Program, VGA};
+
+    fn fleet() -> Vec<StreamSpec> {
+        let mut v = StreamSpec::replicate(0, 2, VGA, Program::Vgg16, 0.20);
+        v.extend(StreamSpec::replicate(10, 2, VGA, Program::Zf, 0.50));
+        v
+    }
+
+    #[test]
+    fn hit_replays_a_cost_equal_plan_and_miss_precedes_it() {
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &cal);
+        let streams = fleet();
+        let strategy = Strategy::St3;
+        let built = mgr.build_problem(&streams, strategy).unwrap();
+        let plan = mgr.allocate(&streams, strategy).unwrap();
+        let key = solve_key(&built.problem, strategy, mgr.solver, &mgr.budget);
+
+        let mut cache = SolveCache::new(8);
+        assert!(cache.replay(key, &built, &streams, strategy).is_none());
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        cache.insert(key, plan.clone());
+
+        // The identical epoch replays the identical plan.
+        let replayed = cache.replay(key, &built, &streams, strategy).expect("cache hit");
+        assert_eq!(replayed, plan);
+        assert_eq!(cache.hits, 1);
+
+        // A later epoch enumerating the same fleet in reverse order
+        // fingerprints identically and replays a cost-equal plan with
+        // correctly remapped stream indices.
+        let mut reversed = streams.clone();
+        reversed.reverse();
+        let built2 = mgr.build_problem(&reversed, strategy).unwrap();
+        let key2 = solve_key(&built2.problem, strategy, mgr.solver, &mgr.budget);
+        assert_eq!(key, key2, "fingerprint must be item-order independent");
+        let remapped = cache.replay(key2, &built2, &reversed, strategy).expect("cache hit");
+        assert_eq!(remapped.total_rate(), plan.total_rate());
+        assert_eq!(remapped.lower_bound, plan.lower_bound);
+        for inst in &remapped.instances {
+            for a in &inst.streams {
+                assert_eq!(reversed[a.stream_index].id(), a.stream_id);
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_entry_is_rejected_and_evicted() {
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &cal);
+        let streams = fleet();
+        let strategy = Strategy::St3;
+        let built = mgr.build_problem(&streams, strategy).unwrap();
+        let plan = mgr.allocate(&streams, strategy).unwrap();
+        let key = solve_key(&built.problem, strategy, mgr.solver, &mgr.budget);
+
+        // A stale-catalog entry: the cached plan references an instance
+        // type that no longer exists.
+        let mut poisoned = plan.clone();
+        poisoned.instances[0].type_name = "retired-type".into();
+        let mut cache = SolveCache::new(8);
+        cache.insert(key, poisoned);
+        assert!(cache.replay(key, &built, &streams, strategy).is_none());
+        assert_eq!(cache.rejects, 1);
+        assert!(cache.is_empty(), "a rejected entry must be evicted");
+
+        // A plan that no longer covers the fleet (stream id churn) is
+        // rejected the same way.
+        let mut stale = plan.clone();
+        stale.instances[0].streams[0].stream_id = "cam-gone".into();
+        cache.insert(key, stale);
+        assert!(cache.replay(key, &built, &streams, strategy).is_none());
+        assert_eq!(cache.rejects, 2);
+    }
+
+    #[test]
+    fn lru_evicts_past_the_cap_and_different_budgets_never_share_keys() {
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &cal);
+        let streams = fleet();
+        let strategy = Strategy::St3;
+        let built = mgr.build_problem(&streams, strategy).unwrap();
+        let plan = mgr.allocate(&streams, strategy).unwrap();
+        let key = solve_key(&built.problem, strategy, mgr.solver, &mgr.budget);
+
+        let mut tight = mgr.budget;
+        tight.node_budget /= 2;
+        let other = solve_key(&built.problem, strategy, mgr.solver, &tight);
+        assert_ne!(key, other, "budget class must be part of the key");
+
+        let mut cache = SolveCache::new(1);
+        cache.insert(key, plan.clone());
+        cache.insert(other, plan);
+        assert_eq!(cache.len(), 1, "cap must bound the cache");
+        // The older entry was evicted.
+        assert!(cache.replay(key, &built, &streams, strategy).is_none());
+    }
+}

@@ -108,6 +108,72 @@ pub fn aggregation_pays(n_classes: usize, n_items: usize) -> bool {
     n_items > 0 && n_classes * 2 <= n_items
 }
 
+/// Order-independent fingerprint of an MVBP instance, for the
+/// epoch-level solve cache: two independent 64-bit digests (different
+/// FNV bases — colliding both at once is far harder than either alone)
+/// over the priced bin catalog (ordered — bin-type indices are
+/// semantic, they appear in solutions) and the *multiset* of item
+/// requirement classes (each item hashed by the same
+/// choices + choice-costs recipe [`group_classes_capped`] keys on,
+/// folded commutatively, so item order never matters — two epochs with
+/// the same class histogram fingerprint identically no matter how the
+/// fleet enumerates its streams).  Item ids are deliberately excluded:
+/// they don't constrain the packing, and the cache revalidates ids
+/// structurally before replaying a hit.
+pub fn problem_fingerprint(problem: &MvbpProblem) -> (u64, u64) {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    const FNV_OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_OFFSET_B: u64 = 0x6c62_272e_07bb_0142;
+    fn fnv_u64(mut h: u64, v: u64) -> u64 {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+    fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+        for &byte in bytes {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+    // Ordered catalog digest: dims, then every bin type's name, cost,
+    // and capacity.
+    let catalog = |seed: u64| -> u64 {
+        let mut h = fnv_u64(seed, problem.dims as u64);
+        h = fnv_u64(h, problem.bin_types.len() as u64);
+        for bt in &problem.bin_types {
+            h = fnv_u64(h, bt.name.len() as u64);
+            h = fnv_bytes(h, bt.name.as_bytes());
+            h = fnv_u64(h, bt.cost.0 as u64);
+            for v in &bt.capacity.0 {
+                h = fnv_u64(h, v.to_bits());
+            }
+        }
+        h
+    };
+    // Commutative item fold: each item's class digest (the
+    // `group_classes_capped` key recipe) summed with wrapping adds.
+    let items = |seed: u64| -> u64 {
+        let mut sum: u64 = 0;
+        for (i, item) in problem.items.iter().enumerate() {
+            let mut h = fnv_u64(seed, item.choices.len() as u64);
+            for (c, choice) in item.choices.iter().enumerate() {
+                for v in &choice.0 {
+                    h = fnv_u64(h, v.to_bits());
+                }
+                h = fnv_u64(h, problem.choice_cost(i, c).0 as u64);
+            }
+            sum = sum.wrapping_add(h);
+        }
+        sum
+    };
+    let a = fnv_u64(catalog(FNV_OFFSET_A), items(FNV_OFFSET_A));
+    let b = fnv_u64(catalog(FNV_OFFSET_B), items(FNV_OFFSET_B));
+    (a, b)
+}
+
 /// `floor((residual + eps) / req)` per dimension — an estimate of how
 /// many copies of `req` fit into `residual` in one step, under the
 /// shared [`ResourceVec::fits`] tolerance.  Dimensions with zero
@@ -657,5 +723,33 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn fingerprint_is_item_order_independent_and_content_sensitive() {
+        let p = fixture();
+        let base = problem_fingerprint(&p);
+
+        // Reversing the item list (and renaming ids) leaves the
+        // fingerprint unchanged: it digests the class multiset.
+        let mut reversed = p.clone();
+        reversed.items.reverse();
+        for (i, item) in reversed.items.iter_mut().enumerate() {
+            item.id = format!("renamed-{i}");
+        }
+        assert_eq!(problem_fingerprint(&reversed), base);
+
+        // Any change to a requirement, the catalog, or a price moves it.
+        let mut req = p.clone();
+        req.items[0].choices[0].0[0] += 1.0;
+        assert_ne!(problem_fingerprint(&req), base);
+
+        let mut priced = p.clone();
+        priced.bin_types[0].cost = priced.bin_types[0].cost + Dollars(1);
+        assert_ne!(problem_fingerprint(&priced), base);
+
+        let mut grown = p.clone();
+        grown.items.push(p.items[0].clone());
+        assert_ne!(problem_fingerprint(&grown), base);
     }
 }

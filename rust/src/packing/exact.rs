@@ -27,19 +27,72 @@
 //! Both modes prune on a per-dimension cost lower bound, evaluated in
 //! the *parent* before a child is expanded — a dominated child costs
 //! one bound evaluation instead of a call frame and a unit of node
-//! budget (for run branching this is the difference between paying
-//! O(1) and O(k) nodes per dominated run family).  The search is seeded
-//! with an incumbent — best-fit-decreasing by default, or any solution
-//! the caller already holds (the portfolio seeds its racing winner via
-//! [`BranchAndBound::solve_seeded`]).  Proven optimal at paper scale
-//! (validated against brute force in the property tests); past the node
-//! budget or wall-clock deadline it degrades gracefully to the best
-//! incumbent and reports `proven_optimal = false`.
+//! budget.  Everything the bound needs that is a function of the
+//! problem alone (capacity-per-dollar, relaxed demands, suffix sums)
+//! is precomputed once per solve into a read-only [`BoundCtx`] shared
+//! by every worker, so the per-node cost is one pass over dimensions.
+//! The search is seeded with an incumbent — best-fit-decreasing by
+//! default, or any solution the caller already holds (the portfolio
+//! seeds its racing winner via [`BranchAndBound::solve_seeded`]; an
+//! invalid seed is discarded and surfaced via
+//! [`ExactResult::seed_dropped`]).
+//!
+//! # Multi-root parallel search
+//!
+//! With [`BranchAndBound::threads`] != 1 the solve runs in two phases:
+//!
+//! 1. **Frontier expansion** (sequential): the root is expanded
+//!    level-synchronously — each round replaces every unexplored
+//!    subtree by its children, kept in DFS order, pruning only against
+//!    the *seed* incumbent — until the frontier holds enough subtree
+//!    tasks to feed the workers, the tree is enumerated outright, or
+//!    [`FRONTIER_MAX_ROUNDS`] rounds pass.  In class mode one round
+//!    expands the first unplaced class's `(bin, choice, count)`
+//!    placements; in per-item mode, the next item's choices.  Complete
+//!    solutions met along the way are kept as indexed leaf candidates.
+//! 2. **Subtree workers**: the frontier tasks run on the portfolio's
+//!    scoped task pool (`race_tasks`), each a full DFS over its
+//!    subtree.  Workers prune against their own local incumbent
+//!    (starting from the seed) exactly like the sequential search, and
+//!    *additionally* against a shared incumbent — an `AtomicU64`
+//!    holding the bits of the globally best recorded cost, maintained
+//!    with a lock-free `fetch_min` (solution costs are non-negative,
+//!    and non-negative IEEE doubles order like their bit patterns).
+//!
+//! # Determinism contract
+//!
+//! A run that completes its proof (`proven_optimal`) returns a
+//! bit-identical solution for *any* thread count: the first leaf in
+//! sequential DFS order attaining the optimal cost.  Two rules make
+//! this hold.  The shared incumbent prunes only *strictly* costlier
+//! subtrees (`bound >= shared + 1e-9`, vs the sequential-local
+//! `bound >= local - 1e-9`), so a subtree that could still tie the
+//! optimum is never shed on another worker's account; and the winner
+//! is chosen by the fixed tie-break (cost, then frontier entry index),
+//! never by arrival order.  Costs are whole micro-dollars, so distinct
+//! costs differ by >= 1e-6 and the epsilons cannot cross.
+//! `nodes_explored` — and therefore *where* a budget- or
+//! deadline-capped run stops — is **not** part of the contract for
+//! threads > 1: pruning depends on when workers publish improvements,
+//! so only completed proofs are bit-identical.
+//!
+//! # Budget semantics
+//!
+//! `node_budget` and the deadline bind globally.  Workers flush their
+//! local node count into a shared atomic in chunks of
+//! [`SHARED_FLUSH_MASK`]` + 1` nodes and trip a shared stop flag once
+//! the global count passes the budget or the deadline fires, so the
+//! budget overrun is bounded by `threads x chunk`.  Sequential runs
+//! (`threads == 1`) keep the exact single-counter semantics they have
+//! always had.
 
 use super::aggregate::{self, ItemClass};
 use super::heuristics::solve_best_fit;
 use super::problem::{MvbpProblem, PackedBin, Solution};
+use super::solver::race_tasks;
 use crate::types::{Dollars, ResourceVec};
+use crate::util::profiling;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Result of an exact solve, with optimality metadata.
@@ -48,10 +101,16 @@ pub struct ExactResult {
     pub solution: Solution,
     pub proven_optimal: bool,
     pub nodes_explored: u64,
+    /// The caller-supplied incumbent failed validation and was
+    /// discarded — the solve ran cold.  Surfaced (plus the
+    /// `exact:seed-dropped` profiling counter) so a broken seed path
+    /// upstream cannot masquerade as an intentional cold solve.
+    pub seed_dropped: bool,
 }
 
-/// Branch-and-bound solver with a configurable node budget and an
-/// optional wall-clock deadline.
+/// Branch-and-bound solver with a configurable node budget, an
+/// optional wall-clock deadline, and a worker thread count for the
+/// multi-root parallel search.
 pub struct BranchAndBound {
     pub node_budget: u64,
     /// Abandon the proof (keep the incumbent) once this instant passes.
@@ -65,41 +124,255 @@ pub struct BranchAndBound {
     /// flip it to measure what class branching buys under an identical
     /// node cap.
     pub per_item: bool,
+    /// Worker threads for the multi-root parallel search: `1` (the
+    /// default) is the classic sequential search, `0` means one per
+    /// available core, any value is clamped to 16.  Completed proofs
+    /// are bit-identical for every setting (see the module docs).
+    pub threads: usize,
 }
 
 /// Deadline polling interval mask (checked when `nodes & MASK == 0`).
 const DEADLINE_CHECK_MASK: u64 = 0xFFF;
 
+/// Parallel workers flush their local node count into the shared
+/// global counter — and poll the global budget and stop flag — every
+/// `SHARED_FLUSH_MASK + 1` nodes, bounding both the atomic traffic and
+/// the budget overrun (`threads x chunk` nodes worst case).
+const SHARED_FLUSH_MASK: u64 = 0xFF;
+
+/// Frontier expansion targets `threads * FRONTIER_FACTOR` subtree
+/// tasks so the task pool stays busy even when subtree sizes are
+/// skewed...
+const FRONTIER_FACTOR: usize = 4;
+
+/// ...but gives up after this many level-synchronous rounds (a
+/// too-deep frontier spends the budget on bookkeeping)...
+const FRONTIER_MAX_ROUNDS: usize = 4;
+
+/// ...and never holds more than this many tasks (memory guard against
+/// extremely bushy roots — each task clones its open-bin state).
+const FRONTIER_MAX_TASKS: usize = 4096;
+
 impl Default for BranchAndBound {
     fn default() -> Self {
         // Generous for paper-scale instances (<=30 items, <=4 types):
         // those need well under 1e5 nodes.
-        BranchAndBound { node_budget: 5_000_000, deadline: None, per_item: false }
+        BranchAndBound { node_budget: 5_000_000, deadline: None, per_item: false, threads: 1 }
     }
 }
 
+/// Read-only bound context shared by every worker of one solve: the
+/// per-dimension capacity-per-dollar vector, the relaxed one-copy
+/// demand per search position, and its suffix sums — everything the
+/// per-node lower bound needs that depends on the problem alone,
+/// hoisted out of the per-node path (and out of per-worker setup) so
+/// it is computed exactly once per solve.
+pub(crate) struct BoundCtx {
+    /// Per dimension: max over bin types of capacity/cost — the best
+    /// capacity purchasable per dollar.
+    dim_efficiency: Vec<f64>,
+    /// Relaxed one-copy demand (min over choices per dimension) per
+    /// search position: per *item* in per-item mode, per *class* in
+    /// class mode.
+    min_req: Vec<ResourceVec>,
+    /// `suffix_demand[k]` = total relaxed demand of positions `k..`
+    /// (count-weighted in class mode).
+    suffix_demand: Vec<ResourceVec>,
+}
+
+impl BoundCtx {
+    /// Bound context for the per-item search over `order`.
+    fn for_items(problem: &MvbpProblem, order: &[usize]) -> BoundCtx {
+        let dim_efficiency = dim_efficiencies(problem);
+        let min_req: Vec<ResourceVec> = (0..problem.items.len())
+            .map(|i| relaxed_req(problem, i))
+            .collect();
+        let mut suffix_demand = vec![ResourceVec::zeros(problem.dims); order.len() + 1];
+        for k in (0..order.len()).rev() {
+            suffix_demand[k] = suffix_demand[k + 1].add(&min_req[order[k]]);
+        }
+        BoundCtx { dim_efficiency, min_req, suffix_demand }
+    }
+
+    /// Bound context for the class search over `classes` (already in
+    /// search order); suffix demands are count-weighted.
+    fn for_classes(problem: &MvbpProblem, classes: &[ItemClass]) -> BoundCtx {
+        let dim_efficiency = dim_efficiencies(problem);
+        let min_req: Vec<ResourceVec> = classes
+            .iter()
+            .map(|class| relaxed_req(problem, class.rep))
+            .collect();
+        let mut suffix_demand = vec![ResourceVec::zeros(problem.dims); classes.len() + 1];
+        for k in (0..classes.len()).rev() {
+            let mut acc = suffix_demand[k + 1].clone();
+            let count = classes[k].count() as f64;
+            for d in 0..problem.dims {
+                acc.0[d] += min_req[k][d] * count;
+            }
+            suffix_demand[k] = acc;
+        }
+        BoundCtx { dim_efficiency, min_req, suffix_demand }
+    }
+}
+
+/// State shared by the workers of one multi-root parallel solve.
+struct SharedSearch {
+    /// Bits of the best cost (as `f64`) any worker has recorded.
+    /// Solution costs are non-negative (`MvbpProblem::validate`
+    /// rejects negative capacities, requirements, and costs), and
+    /// non-negative IEEE doubles order like their bit patterns, so
+    /// `fetch_min` on the bits is a lock-free monotone minimum.
+    best_bits: AtomicU64,
+    /// Global node counter (chunk-flushed; see [`SHARED_FLUSH_MASK`]).
+    nodes: AtomicU64,
+    /// Raised when the budget or deadline is hit anywhere: every
+    /// worker unwinds at its next flush point.
+    stop: AtomicBool,
+}
+
+impl SharedSearch {
+    fn new(seed_cost: Dollars, expansion_nodes: u64) -> SharedSearch {
+        SharedSearch {
+            best_bits: AtomicU64::new(seed_cost.as_f64().to_bits()),
+            nodes: AtomicU64::new(expansion_nodes),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    fn best(&self) -> f64 {
+        f64::from_bits(self.best_bits.load(Ordering::Relaxed))
+    }
+
+    fn relax(&self, cost: Dollars) {
+        self.best_bits.fetch_min(cost.as_f64().to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Node accounting for one search context: counter, budget, deadline,
+/// and — in a parallel worker — the handle to the shared counters
+/// (budget and deadline then bind globally).
+struct Accounting<'s> {
+    nodes: u64,
+    node_budget: u64,
+    deadline: Option<Instant>,
+    shared: Option<&'s SharedSearch>,
+    exhausted: bool,
+}
+
+impl<'s> Accounting<'s> {
+    fn new(
+        node_budget: u64,
+        deadline: Option<Instant>,
+        shared: Option<&'s SharedSearch>,
+    ) -> Accounting<'s> {
+        Accounting { nodes: 0, node_budget, deadline, shared, exhausted: false }
+    }
+
+    /// Count one node; `true` aborts the search (budget or deadline
+    /// hit — or, in a worker, another worker tripped the global stop).
+    #[inline]
+    fn step(&mut self) -> bool {
+        self.nodes += 1;
+        match self.shared {
+            None => {
+                if self.nodes > self.node_budget {
+                    self.exhausted = true;
+                    return true;
+                }
+                if self.nodes & DEADLINE_CHECK_MASK == 0 {
+                    if let Some(deadline) = self.deadline {
+                        if Instant::now() >= deadline {
+                            self.exhausted = true;
+                            return true;
+                        }
+                    }
+                }
+            }
+            Some(shared) => {
+                if self.nodes & SHARED_FLUSH_MASK == 0 {
+                    let chunk = SHARED_FLUSH_MASK + 1;
+                    let global = shared.nodes.fetch_add(chunk, Ordering::Relaxed) + chunk;
+                    if global > self.node_budget {
+                        shared.stop.store(true, Ordering::Relaxed);
+                    }
+                    if shared.stop.load(Ordering::Relaxed) {
+                        self.exhausted = true;
+                        return true;
+                    }
+                }
+                if self.nodes & DEADLINE_CHECK_MASK == 0 {
+                    if let Some(deadline) = self.deadline {
+                        if Instant::now() >= deadline {
+                            shared.stop.store(true, Ordering::Relaxed);
+                            self.exhausted = true;
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Push the nodes not yet flushed to the shared counter (flushes
+    /// happen exactly at chunk multiples, so the remainder is
+    /// `nodes % chunk`).  No-op for sequential accounting.
+    fn flush_remainder(&self) {
+        if let Some(shared) = self.shared {
+            shared.nodes.fetch_add(self.nodes & SHARED_FLUSH_MASK, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The bound value at or above which a node is pruned: the local
+/// incumbent less epsilon — and, under a shared incumbent, the
+/// globally best cost *plus* epsilon.  The shared term sheds only
+/// strictly costlier subtrees, so a subtree that could still tie the
+/// optimum always survives; that asymmetry is what keeps the parallel
+/// winner bit-identical to the sequential search (see module docs).
+#[inline]
+fn prune_limit(best_cost: Dollars, shared: Option<&SharedSearch>) -> f64 {
+    let local = best_cost.as_f64() - 1e-9;
+    match shared {
+        Some(s) => local.min(s.best() + 1e-9),
+        None => local,
+    }
+}
+
+#[derive(Clone)]
 struct OpenBin {
     bin_type: usize,
     residual: ResourceVec,
     assignments: Vec<(usize, usize)>,
 }
 
-struct SearchCtx<'p> {
+/// An unexplored per-item subtree: the DFS state at its root.
+#[derive(Clone)]
+struct ItemTask {
+    k: usize,
+    cost: Dollars,
+    open: Vec<OpenBin>,
+}
+
+/// One frontier entry of the per-item parallel search, in DFS order.
+enum ItemEntry {
+    Task(ItemTask),
+    Leaf { cost: Dollars, solution: Solution },
+}
+
+struct SearchCtx<'p, 's> {
     problem: &'p MvbpProblem,
     /// Item indices in search order (hardest first).
-    order: Vec<usize>,
-    /// Per dimension: max over bin types of capacity/cost — the best
-    /// capacity purchasable per dollar, used in the lower bound.
-    dim_efficiency: Vec<f64>,
-    /// Suffix sums of `min_req` along `order`: `suffix_demand[k]` = total
-    /// relaxed demand of items `order[k..]`.
-    suffix_demand: Vec<ResourceVec>,
+    order: &'s [usize],
+    bounds: &'s BoundCtx,
     best_cost: Dollars,
     best: Option<Solution>,
-    nodes: u64,
-    node_budget: u64,
-    deadline: Option<Instant>,
-    exhausted: bool,
+    acct: Accounting<'s>,
+    /// Frontier expansion: spill (collect, don't expand) subtrees
+    /// rooted at this depth into `spill` instead of recursing.
+    /// `usize::MAX` = off (normal search).
+    spill_depth: usize,
+    spill: Vec<ItemEntry>,
 }
 
 /// Per-dimension "best capacity per dollar" vector shared by both
@@ -166,8 +439,9 @@ impl BranchAndBound {
 
     /// Like [`BranchAndBound::solve`] but seeded with a caller-supplied
     /// incumbent (e.g. the portfolio's racing winner), skipping the
-    /// internal BFD pass.  An invalid or absent incumbent degrades to an
-    /// unseeded search.
+    /// internal BFD pass.  An invalid or absent incumbent degrades to
+    /// an unseeded search; a *dropped* (invalid) incumbent is counted
+    /// and surfaced via [`ExactResult::seed_dropped`].
     pub fn solve_seeded(
         &self,
         problem: &MvbpProblem,
@@ -182,25 +456,56 @@ impl BranchAndBound {
                 solution: Solution::default(),
                 proven_optimal: true,
                 nodes_explored: 0,
+                seed_dropped: false,
             });
         }
 
         // Incumbent (may not exist for pathological instances); an
-        // invalid seed is discarded rather than poisoning the bound.
+        // invalid seed is discarded rather than poisoning the bound —
+        // and the drop is surfaced, so a broken seed path upstream
+        // cannot silently masquerade as a cold solve.
+        let had_seed = incumbent.is_some();
         let incumbent = incumbent.filter(|s| s.validate(problem).is_ok());
+        let seed_dropped = had_seed && incumbent.is_none();
+        if seed_dropped {
+            profiling::bump("exact:seed-dropped");
+        }
 
         // Class-multiplicity branching engages exactly when aggregation
         // pays (the capped grouping aborts past items/2 classes, the
         // same "at least two items per class on average" gate the
         // greedy layer uses).
-        if !self.per_item {
-            if let Some(classes) =
-                aggregate::group_classes_capped(problem, problem.items.len() / 2)
-            {
-                return self.solve_class_search(problem, classes, incumbent);
-            }
-        }
+        let classes = (!self.per_item)
+            .then(|| aggregate::group_classes_capped(problem, problem.items.len() / 2))
+            .flatten();
+        let result = match classes {
+            Some(classes) => self.solve_class_search(problem, classes, incumbent),
+            None => self.solve_item_search(problem, incumbent),
+        };
+        result.map(|mut r| {
+            r.seed_dropped = seed_dropped;
+            r
+        })
+    }
 
+    /// Effective worker count: `0` means one per available core; any
+    /// value is clamped to 16 (the portfolio pool's cap).
+    fn effective_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .clamp(1, 16),
+            n => n.min(16),
+        }
+    }
+
+    /// The per-item search (sequential or multi-root parallel).
+    fn solve_item_search(
+        &self,
+        problem: &MvbpProblem,
+        incumbent: Option<Solution>,
+    ) -> Option<ExactResult> {
         // Hardest-first ordering: by decreasing "best-case fullness" —
         // min over choices of the max capacity ratio vs the roomiest bin.
         let roomiest = roomiest_capacity(problem);
@@ -216,41 +521,171 @@ impl BranchAndBound {
         // panic mid-sort, even on inputs validate would reject.
         order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
 
-        let dim_efficiency = dim_efficiencies(problem);
-
-        let min_req: Vec<ResourceVec> = (0..problem.items.len())
-            .map(|i| relaxed_req(problem, i))
-            .collect();
-
-        let mut suffix_demand = vec![ResourceVec::zeros(problem.dims); order.len() + 1];
-        for k in (0..order.len()).rev() {
-            suffix_demand[k] = suffix_demand[k + 1].add(&min_req[order[k]]);
-        }
-
+        let bounds = BoundCtx::for_items(problem, &order);
         let best_cost = incumbent
             .as_ref()
             .map(|s| s.cost(problem))
             .unwrap_or(Dollars(i64::MAX));
 
+        let threads = self.effective_threads();
+        if threads > 1 {
+            return self.solve_item_parallel(problem, &order, &bounds, incumbent, best_cost, threads);
+        }
+
         let mut ctx = SearchCtx {
             problem,
-            order,
-            dim_efficiency,
-            suffix_demand,
+            order: &order,
+            bounds: &bounds,
             best_cost,
             best: incumbent,
-            nodes: 0,
-            node_budget: self.node_budget,
-            deadline: self.deadline,
-            exhausted: false,
+            acct: Accounting::new(self.node_budget, self.deadline, None),
+            spill_depth: usize::MAX,
+            spill: Vec::new(),
         };
         let mut open: Vec<OpenBin> = Vec::new();
         dfs(&mut ctx, 0, Dollars::ZERO, &mut open);
 
         ctx.best.map(|solution| ExactResult {
             solution,
-            proven_optimal: !ctx.exhausted,
-            nodes_explored: ctx.nodes,
+            proven_optimal: !ctx.acct.exhausted,
+            nodes_explored: ctx.acct.nodes,
+            seed_dropped: false,
+        })
+    }
+
+    /// Multi-root parallel per-item search: expand the root frontier
+    /// sequentially, then race the subtree tasks on the portfolio's
+    /// worker pool under a shared incumbent (see module docs).
+    fn solve_item_parallel(
+        &self,
+        problem: &MvbpProblem,
+        order: &[usize],
+        bounds: &BoundCtx,
+        incumbent: Option<Solution>,
+        seed_cost: Dollars,
+        threads: usize,
+    ) -> Option<ExactResult> {
+        // Phase 1: level-synchronous frontier expansion.  Prunes only
+        // against the immutable seed cost — tightening here would prune
+        // by cross-subtree arrival order and break plan identity.
+        let mut ctx = SearchCtx {
+            problem,
+            order,
+            bounds,
+            best_cost: seed_cost,
+            best: None,
+            acct: Accounting::new(self.node_budget, self.deadline, None),
+            spill_depth: 0,
+            spill: Vec::new(),
+        };
+        let mut entries: Vec<ItemEntry> =
+            vec![ItemEntry::Task(ItemTask { k: 0, cost: Dollars::ZERO, open: Vec::new() })];
+        let target = (threads * FRONTIER_FACTOR).min(FRONTIER_MAX_TASKS);
+        for _ in 0..FRONTIER_MAX_ROUNDS {
+            let tasks = entries.iter().filter(|e| matches!(e, ItemEntry::Task(_))).count();
+            if tasks == 0 || tasks >= target || ctx.acct.exhausted {
+                break;
+            }
+            let mut next: Vec<ItemEntry> = Vec::with_capacity(entries.len() * 2);
+            for entry in entries {
+                match entry {
+                    ItemEntry::Leaf { .. } => next.push(entry),
+                    ItemEntry::Task(task) if ctx.acct.exhausted => {
+                        next.push(ItemEntry::Task(task));
+                    }
+                    ItemEntry::Task(task) => {
+                        ctx.spill_depth = task.k + 1;
+                        let mut open = task.open;
+                        dfs(&mut ctx, task.k, task.cost, &mut open);
+                        next.append(&mut ctx.spill);
+                    }
+                }
+            }
+            entries = next;
+        }
+        ctx.spill_depth = usize::MAX;
+        let expansion_nodes = ctx.acct.nodes;
+
+        let task_ids: Vec<usize> = entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| matches!(e, ItemEntry::Task(_)).then_some(i))
+            .collect();
+
+        // Fully enumerated during expansion (or the budget died there):
+        // compose the winner from the leaf candidates alone.
+        if task_ids.is_empty() || ctx.acct.exhausted {
+            let exhausted = ctx.acct.exhausted;
+            let (_, best) = compose_winner(
+                entries.into_iter().map(|e| match e {
+                    ItemEntry::Leaf { cost, solution } => Some((cost, solution)),
+                    ItemEntry::Task(_) => None,
+                }),
+                seed_cost,
+                incumbent,
+            );
+            return best.map(|solution| ExactResult {
+                solution,
+                proven_optimal: !exhausted,
+                nodes_explored: expansion_nodes,
+                seed_dropped: false,
+            });
+        }
+
+        // Phase 2: subtree workers under the shared incumbent.
+        let shared = SharedSearch::new(seed_cost, expansion_nodes);
+        let node_budget = self.node_budget;
+        let deadline = self.deadline;
+        let entries_ref = &entries;
+        let shared_ref = &shared;
+        let mut results = race_tasks(
+            threads,
+            task_ids.len(),
+            None, // no shedding: every subtree must run for the proof
+            |_| 0,
+            |i| {
+                let task = match &entries_ref[task_ids[i]] {
+                    ItemEntry::Task(task) => task,
+                    ItemEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
+                };
+                let mut wctx = SearchCtx {
+                    problem,
+                    order,
+                    bounds,
+                    best_cost: seed_cost,
+                    best: None,
+                    acct: Accounting::new(node_budget, deadline, Some(shared_ref)),
+                    spill_depth: usize::MAX,
+                    spill: Vec::new(),
+                };
+                let mut open = task.open.clone();
+                dfs(&mut wctx, task.k, task.cost, &mut open);
+                wctx.acct.flush_remainder();
+                wctx.best.map(|solution| (wctx.best_cost, solution))
+            },
+        );
+
+        // Deterministic winner: cheapest cost, then lowest frontier
+        // entry index — identical to the sequential first-improver.
+        let mut cursor = 0;
+        let (_, best) = compose_winner(
+            entries.iter().map(|e| match e {
+                ItemEntry::Leaf { cost, solution } => Some((*cost, solution.clone())),
+                ItemEntry::Task(_) => {
+                    let r = results[cursor].take();
+                    cursor += 1;
+                    r
+                }
+            }),
+            seed_cost,
+            incumbent,
+        );
+        let stopped = shared.stop.load(Ordering::Relaxed);
+        best.map(|solution| ExactResult {
+            solution,
+            proven_optimal: !stopped,
+            nodes_explored: shared.nodes.load(Ordering::Relaxed),
+            seed_dropped: false,
         })
     }
 
@@ -276,50 +711,214 @@ impl BranchAndBound {
         };
         classes.sort_by(|a, b| hardness(b.rep).total_cmp(&hardness(a.rep)));
 
-        let dim_efficiency = dim_efficiencies(problem);
-        let min_req: Vec<ResourceVec> = classes
-            .iter()
-            .map(|class| relaxed_req(problem, class.rep))
-            .collect();
-
-        let mut suffix_demand = vec![ResourceVec::zeros(problem.dims); classes.len() + 1];
-        for k in (0..classes.len()).rev() {
-            let mut acc = suffix_demand[k + 1].clone();
-            let count = classes[k].count() as f64;
-            for d in 0..problem.dims {
-                acc.0[d] += min_req[k][d] * count;
-            }
-            suffix_demand[k] = acc;
-        }
-
+        let bounds = BoundCtx::for_classes(problem, &classes);
         let best_cost = incumbent
             .as_ref()
             .map(|s| s.cost(problem))
             .unwrap_or(Dollars(i64::MAX));
-        let first_count = classes[0].count() as u32;
 
+        let threads = self.effective_threads();
+        if threads > 1 {
+            return self.solve_class_parallel(problem, &classes, &bounds, incumbent, best_cost, threads);
+        }
+
+        let first_count = classes[0].count() as u32;
         let mut ctx = ClassCtx {
             problem,
-            classes,
-            min_req,
-            dim_efficiency,
-            suffix_demand,
+            classes: &classes,
+            bounds: &bounds,
             best_cost,
             best: incumbent,
-            nodes: 0,
-            node_budget: self.node_budget,
-            deadline: self.deadline,
-            exhausted: false,
+            acct: Accounting::new(self.node_budget, self.deadline, None),
+            spill_depth: usize::MAX,
+            spill: Vec::new(),
         };
         let mut bins: Vec<ClassBin> = Vec::new();
-        distribute(&mut ctx, 0, first_count, Dollars::ZERO, &mut bins, (0, 0), None);
+        distribute(&mut ctx, 0, first_count, Dollars::ZERO, &mut bins, (0, 0), None, 0);
 
         ctx.best.map(|solution| ExactResult {
             solution,
-            proven_optimal: !ctx.exhausted,
-            nodes_explored: ctx.nodes,
+            proven_optimal: !ctx.acct.exhausted,
+            nodes_explored: ctx.acct.nodes,
+            seed_dropped: false,
         })
     }
+
+    /// Multi-root parallel class search — the class-mode twin of
+    /// [`BranchAndBound::solve_item_parallel`].
+    fn solve_class_parallel(
+        &self,
+        problem: &MvbpProblem,
+        classes: &[ItemClass],
+        bounds: &BoundCtx,
+        incumbent: Option<Solution>,
+        seed_cost: Dollars,
+        threads: usize,
+    ) -> Option<ExactResult> {
+        // Phase 1: frontier expansion, pruning only against the seed.
+        // Each round expands every task exactly one level (class-mode
+        // depth is relative to the task root, so the spill depth is a
+        // constant 1).
+        let mut ctx = ClassCtx {
+            problem,
+            classes,
+            bounds,
+            best_cost: seed_cost,
+            best: None,
+            acct: Accounting::new(self.node_budget, self.deadline, None),
+            spill_depth: 1,
+            spill: Vec::new(),
+        };
+        let root = ClassTask {
+            ci: 0,
+            remaining: classes[0].count() as u32,
+            cost: Dollars::ZERO,
+            bins: Vec::new(),
+            from: (0, 0),
+            last_fresh: None,
+        };
+        let mut entries: Vec<ClassEntry> = vec![ClassEntry::Task(root)];
+        let target = (threads * FRONTIER_FACTOR).min(FRONTIER_MAX_TASKS);
+        for _ in 0..FRONTIER_MAX_ROUNDS {
+            let tasks = entries.iter().filter(|e| matches!(e, ClassEntry::Task(_))).count();
+            if tasks == 0 || tasks >= target || ctx.acct.exhausted {
+                break;
+            }
+            let mut next: Vec<ClassEntry> = Vec::with_capacity(entries.len() * 2);
+            for entry in entries {
+                match entry {
+                    ClassEntry::Leaf { .. } => next.push(entry),
+                    ClassEntry::Task(task) if ctx.acct.exhausted => {
+                        next.push(ClassEntry::Task(task));
+                    }
+                    ClassEntry::Task(task) => {
+                        let mut bins = task.bins;
+                        distribute(
+                            &mut ctx,
+                            task.ci,
+                            task.remaining,
+                            task.cost,
+                            &mut bins,
+                            task.from,
+                            task.last_fresh,
+                            0,
+                        );
+                        next.append(&mut ctx.spill);
+                    }
+                }
+            }
+            entries = next;
+        }
+        ctx.spill_depth = usize::MAX;
+        let expansion_nodes = ctx.acct.nodes;
+
+        let task_ids: Vec<usize> = entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| matches!(e, ClassEntry::Task(_)).then_some(i))
+            .collect();
+
+        if task_ids.is_empty() || ctx.acct.exhausted {
+            let exhausted = ctx.acct.exhausted;
+            let (_, best) = compose_winner(
+                entries.into_iter().map(|e| match e {
+                    ClassEntry::Leaf { cost, solution } => Some((cost, solution)),
+                    ClassEntry::Task(_) => None,
+                }),
+                seed_cost,
+                incumbent,
+            );
+            return best.map(|solution| ExactResult {
+                solution,
+                proven_optimal: !exhausted,
+                nodes_explored: expansion_nodes,
+                seed_dropped: false,
+            });
+        }
+
+        // Phase 2: subtree workers under the shared incumbent.
+        let shared = SharedSearch::new(seed_cost, expansion_nodes);
+        let node_budget = self.node_budget;
+        let deadline = self.deadline;
+        let entries_ref = &entries;
+        let shared_ref = &shared;
+        let mut results = race_tasks(
+            threads,
+            task_ids.len(),
+            None, // no shedding: every subtree must run for the proof
+            |_| 0,
+            |i| {
+                let task = match &entries_ref[task_ids[i]] {
+                    ClassEntry::Task(task) => task,
+                    ClassEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
+                };
+                let mut wctx = ClassCtx {
+                    problem,
+                    classes,
+                    bounds,
+                    best_cost: seed_cost,
+                    best: None,
+                    acct: Accounting::new(node_budget, deadline, Some(shared_ref)),
+                    spill_depth: usize::MAX,
+                    spill: Vec::new(),
+                };
+                let mut bins = task.bins.clone();
+                distribute(
+                    &mut wctx,
+                    task.ci,
+                    task.remaining,
+                    task.cost,
+                    &mut bins,
+                    task.from,
+                    task.last_fresh,
+                    0,
+                );
+                wctx.acct.flush_remainder();
+                wctx.best.map(|solution| (wctx.best_cost, solution))
+            },
+        );
+
+        let mut cursor = 0;
+        let (_, best) = compose_winner(
+            entries.iter().map(|e| match e {
+                ClassEntry::Leaf { cost, solution } => Some((*cost, solution.clone())),
+                ClassEntry::Task(_) => {
+                    let r = results[cursor].take();
+                    cursor += 1;
+                    r
+                }
+            }),
+            seed_cost,
+            incumbent,
+        );
+        let stopped = shared.stop.load(Ordering::Relaxed);
+        best.map(|solution| ExactResult {
+            solution,
+            proven_optimal: !stopped,
+            nodes_explored: shared.nodes.load(Ordering::Relaxed),
+            seed_dropped: false,
+        })
+    }
+}
+
+/// Fold root-frontier candidates (in entry order) into the final
+/// winner: strictly-cheaper-than-seed candidates only, first entry
+/// winning cost ties — the same "first leaf attaining the optimum in
+/// DFS order" the sequential search returns.
+fn compose_winner(
+    candidates: impl Iterator<Item = Option<(Dollars, Solution)>>,
+    seed_cost: Dollars,
+    incumbent: Option<Solution>,
+) -> (Dollars, Option<Solution>) {
+    let mut best_cost = seed_cost;
+    let mut best = incumbent;
+    for (cost, solution) in candidates.flatten() {
+        if cost < best_cost {
+            best_cost = cost;
+            best = Some(solution);
+        }
+    }
+    (best_cost, best)
 }
 
 /// Cost lower bound for the remaining items `order[k..]` given open-bin
@@ -327,7 +926,7 @@ impl BranchAndBound {
 /// capacity-per-dollar in each dimension; the max over dimensions is a
 /// valid bound because every dollar buys capacity in all dims at once.
 fn lower_bound(ctx: &SearchCtx, k: usize, open: &[OpenBin]) -> f64 {
-    let demand = &ctx.suffix_demand[k];
+    let demand = &ctx.bounds.suffix_demand[k];
     let mut bound: f64 = 0.0;
     for d in 0..ctx.problem.dims {
         if demand[d] <= 0.0 {
@@ -335,53 +934,67 @@ fn lower_bound(ctx: &SearchCtx, k: usize, open: &[OpenBin]) -> f64 {
         }
         let residual: f64 = open.iter().map(|b| b.residual[d].max(0.0)).sum();
         let extra = demand[d] - residual;
-        if extra > 0.0 && ctx.dim_efficiency[d] > 0.0 {
-            bound = bound.max(extra / ctx.dim_efficiency[d]);
+        if extra > 0.0 && ctx.bounds.dim_efficiency[d] > 0.0 {
+            bound = bound.max(extra / ctx.bounds.dim_efficiency[d]);
         }
     }
     bound
 }
 
-/// The child's entry prune (`cost + lower_bound >= incumbent`),
-/// evaluated in the parent on the already-mutated state: dominated
-/// children are skipped without being expanded, so they cost one bound
-/// evaluation instead of a call frame and a unit of node budget.
+/// The child's entry prune (`cost + lower_bound >= limit`), evaluated
+/// in the parent on the already-mutated state: dominated children are
+/// skipped without being expanded, so they cost one bound evaluation
+/// instead of a call frame and a unit of node budget.
 fn prune_child(ctx: &SearchCtx, k: usize, cost: Dollars, open: &[OpenBin]) -> bool {
-    cost.as_f64() + lower_bound(ctx, k, open) >= ctx.best_cost.as_f64() - 1e-9
+    cost.as_f64() + lower_bound(ctx, k, open) >= prune_limit(ctx.best_cost, ctx.acct.shared)
+}
+
+/// Record a complete per-item packing: in normal search, tighten the
+/// (local) incumbent and publish to the shared one; during frontier
+/// expansion, collect it as an indexed leaf candidate instead (the
+/// incumbent must stay pinned at the seed there — see module docs).
+fn record_item_leaf(ctx: &mut SearchCtx, cost: Dollars, open: &[OpenBin]) {
+    if cost >= ctx.best_cost {
+        return;
+    }
+    let solution = Solution {
+        bins: open
+            .iter()
+            .map(|b| PackedBin {
+                bin_type: b.bin_type,
+                assignments: b.assignments.clone(),
+            })
+            .collect(),
+    };
+    if ctx.spill_depth != usize::MAX {
+        ctx.spill.push(ItemEntry::Leaf { cost, solution });
+        return;
+    }
+    ctx.best_cost = cost;
+    if let Some(shared) = ctx.acct.shared {
+        shared.relax(cost);
+    }
+    ctx.best = Some(solution);
 }
 
 fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
-    ctx.nodes += 1;
-    if ctx.nodes > ctx.node_budget {
-        ctx.exhausted = true;
+    // Frontier expansion: unexplored subtrees at the spill depth are
+    // collected (in DFS order) instead of expanded; complete leaves
+    // fall through to `record_item_leaf`, which collects them too.
+    if k == ctx.spill_depth && k < ctx.order.len() {
+        ctx.spill.push(ItemEntry::Task(ItemTask { k, cost, open: open.clone() }));
         return;
     }
-    if ctx.nodes & DEADLINE_CHECK_MASK == 0 {
-        if let Some(deadline) = ctx.deadline {
-            if Instant::now() >= deadline {
-                ctx.exhausted = true;
-                return;
-            }
-        }
+    if ctx.acct.step() {
+        return;
     }
     if k == ctx.order.len() {
-        if cost < ctx.best_cost {
-            ctx.best_cost = cost;
-            ctx.best = Some(Solution {
-                bins: open
-                    .iter()
-                    .map(|b| PackedBin {
-                        bin_type: b.bin_type,
-                        assignments: b.assignments.clone(),
-                    })
-                    .collect(),
-            });
-        }
+        record_item_leaf(ctx, cost, open);
         return;
     }
     // Prune: even the relaxed remainder cannot beat the incumbent.
     let lb = cost.as_f64() + lower_bound(ctx, k, open);
-    if lb >= ctx.best_cost.as_f64() - 1e-9 {
+    if lb >= prune_limit(ctx.best_cost, ctx.acct.shared) {
         return;
     }
 
@@ -420,7 +1033,7 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
                 dfs(ctx, k + 1, step_cost, open);
                 open[b].assignments.pop();
                 open[b].residual.add_assign(req);
-                if ctx.exhausted {
+                if ctx.acct.exhausted {
                     return;
                 }
             }
@@ -450,7 +1063,7 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
                 }
                 dfs(ctx, k + 1, step_cost, open);
                 open.pop();
-                if ctx.exhausted {
+                if ctx.acct.exhausted {
                     return;
                 }
             }
@@ -459,6 +1072,7 @@ fn dfs(ctx: &mut SearchCtx, k: usize, cost: Dollars, open: &mut Vec<OpenBin>) {
 }
 
 /// One open bin of the class search.
+#[derive(Clone)]
 struct ClassBin {
     bin_type: usize,
     residual: ResourceVec,
@@ -467,22 +1081,36 @@ struct ClassBin {
     entries: Vec<(usize, usize, u32)>,
 }
 
-struct ClassCtx<'p> {
+/// An unexplored class-mode subtree: the `distribute` state at its
+/// root.
+#[derive(Clone)]
+struct ClassTask {
+    ci: usize,
+    remaining: u32,
+    cost: Dollars,
+    bins: Vec<ClassBin>,
+    from: (usize, usize),
+    last_fresh: Option<(usize, usize, u32)>,
+}
+
+/// One frontier entry of the class-mode parallel search, in DFS order.
+enum ClassEntry {
+    Task(ClassTask),
+    Leaf { cost: Dollars, solution: Solution },
+}
+
+struct ClassCtx<'p, 's> {
     problem: &'p MvbpProblem,
     /// Classes in search order (hardest representative first).
-    classes: Vec<ItemClass>,
-    /// Relaxed one-copy demand per class (min over choices per dim).
-    min_req: Vec<ResourceVec>,
-    dim_efficiency: Vec<f64>,
-    /// `suffix_demand[k]` = relaxed demand of classes `k..`, counts
-    /// included.
-    suffix_demand: Vec<ResourceVec>,
+    classes: &'s [ItemClass],
+    bounds: &'s BoundCtx,
     best_cost: Dollars,
     best: Option<Solution>,
-    nodes: u64,
-    node_budget: u64,
-    deadline: Option<Instant>,
-    exhausted: bool,
+    acct: Accounting<'s>,
+    /// Frontier expansion: spill subtrees `spill_depth` levels below
+    /// the task root instead of recursing (`usize::MAX` = off).
+    spill_depth: usize,
+    spill: Vec<ClassEntry>,
 }
 
 /// Class-search analogue of [`lower_bound`]: relaxed demand of the
@@ -491,14 +1119,15 @@ struct ClassCtx<'p> {
 fn class_lower_bound(ctx: &ClassCtx, ci: usize, remaining: u32, bins: &[ClassBin]) -> f64 {
     let mut bound: f64 = 0.0;
     for d in 0..ctx.problem.dims {
-        let demand = ctx.suffix_demand[ci + 1][d] + ctx.min_req[ci][d] * remaining as f64;
+        let demand =
+            ctx.bounds.suffix_demand[ci + 1][d] + ctx.bounds.min_req[ci][d] * remaining as f64;
         if demand <= 0.0 {
             continue;
         }
         let residual: f64 = bins.iter().map(|b| b.residual[d].max(0.0)).sum();
         let extra = demand - residual;
-        if extra > 0.0 && ctx.dim_efficiency[d] > 0.0 {
-            bound = bound.max(extra / ctx.dim_efficiency[d]);
+        if extra > 0.0 && ctx.bounds.dim_efficiency[d] > 0.0 {
+            bound = bound.max(extra / ctx.bounds.dim_efficiency[d]);
         }
     }
     bound
@@ -516,17 +1145,19 @@ fn prune_class_child(
     cost: Dollars,
     bins: &[ClassBin],
 ) -> bool {
-    cost.as_f64() + class_lower_bound(ctx, ci, remaining, bins) >= ctx.best_cost.as_f64() - 1e-9
+    cost.as_f64() + class_lower_bound(ctx, ci, remaining, bins)
+        >= prune_limit(ctx.best_cost, ctx.acct.shared)
 }
 
 /// Expand the class-level bins to per-item assignments (members dealt
 /// out ascending, exactly like `aggregate::expand`) and record the
-/// solution if it beats the incumbent.
+/// solution if it beats the incumbent — or, during frontier expansion,
+/// collect it as an indexed leaf candidate (the incumbent stays pinned
+/// at the seed there; see module docs).
 fn record_class_leaf(ctx: &mut ClassCtx, cost: Dollars, bins: &[ClassBin]) {
     if cost >= ctx.best_cost {
         return;
     }
-    ctx.best_cost = cost;
     let mut cursor = vec![0usize; ctx.classes.len()];
     let mut out = Vec::with_capacity(bins.len());
     for bin in bins {
@@ -541,7 +1172,16 @@ fn record_class_leaf(ctx: &mut ClassCtx, cost: Dollars, bins: &[ClassBin]) {
         }
         out.push(PackedBin { bin_type: bin.bin_type, assignments });
     }
-    ctx.best = Some(Solution { bins: out });
+    let solution = Solution { bins: out };
+    if ctx.spill_depth != usize::MAX {
+        ctx.spill.push(ClassEntry::Leaf { cost, solution });
+        return;
+    }
+    ctx.best_cost = cost;
+    if let Some(shared) = ctx.acct.shared {
+        shared.relax(cost);
+    }
+    ctx.best = Some(solution);
 }
 
 /// Distribute the `remaining` unplaced copies of class `ci` and recurse
@@ -554,6 +1194,8 @@ fn record_class_leaf(ctx: &mut ClassCtx, cost: Dollars, bins: &[ClassBin]) {
 /// `(type, choice, count)` key of the class's most recent fresh-opened
 /// bin; fresh opens must not increase in that key, which sorts the
 /// interchangeable-at-open bins of one class into a canonical sequence.
+/// `depth` counts levels below the search (or subtree-task) root; the
+/// frontier expansion spills at `depth == ctx.spill_depth`.
 #[allow(clippy::too_many_arguments)]
 fn distribute(
     ctx: &mut ClassCtx,
@@ -563,19 +1205,23 @@ fn distribute(
     bins: &mut Vec<ClassBin>,
     from: (usize, usize),
     last_fresh: Option<(usize, usize, u32)>,
+    depth: usize,
 ) {
-    ctx.nodes += 1;
-    if ctx.nodes > ctx.node_budget {
-        ctx.exhausted = true;
+    // Frontier expansion: collect the subtree (in DFS order) instead
+    // of expanding it.
+    if depth == ctx.spill_depth {
+        ctx.spill.push(ClassEntry::Task(ClassTask {
+            ci,
+            remaining,
+            cost,
+            bins: bins.clone(),
+            from,
+            last_fresh,
+        }));
         return;
     }
-    if ctx.nodes & DEADLINE_CHECK_MASK == 0 {
-        if let Some(deadline) = ctx.deadline {
-            if Instant::now() >= deadline {
-                ctx.exhausted = true;
-                return;
-            }
-        }
+    if ctx.acct.step() {
+        return;
     }
     if remaining == 0 {
         if ci + 1 == ctx.classes.len() {
@@ -583,12 +1229,12 @@ fn distribute(
             return;
         }
         let next_count = ctx.classes[ci + 1].count() as u32;
-        distribute(ctx, ci + 1, next_count, cost, bins, (0, 0), None);
+        distribute(ctx, ci + 1, next_count, cost, bins, (0, 0), None, depth + 1);
         return;
     }
     // Prune: even the relaxed remainder cannot beat the incumbent.
     let lb = cost.as_f64() + class_lower_bound(ctx, ci, remaining, bins);
-    if lb >= ctx.best_cost.as_f64() - 1e-9 {
+    if lb >= prune_limit(ctx.best_cost, ctx.acct.shared) {
         return;
     }
 
@@ -633,9 +1279,18 @@ fn distribute(
                 let run_cost = cost + problem.choice_cost(rep, c) * k;
                 if !prune_class_child(ctx, ci, remaining - k, run_cost, bins) {
                     bins[b].entries.push((ci, c, k));
-                    distribute(ctx, ci, remaining - k, run_cost, bins, (b, c + 1), last_fresh);
+                    distribute(
+                        ctx,
+                        ci,
+                        remaining - k,
+                        run_cost,
+                        bins,
+                        (b, c + 1),
+                        last_fresh,
+                        depth + 1,
+                    );
                     bins[b].entries.pop();
-                    if ctx.exhausted {
+                    if ctx.acct.exhausted {
                         for _ in 0..k {
                             bins[b].residual.add_assign(req);
                         }
@@ -686,9 +1341,18 @@ fn distribute(
                     continue;
                 }
                 let idx = bins.len() - 1;
-                distribute(ctx, ci, remaining - k, run_cost, bins, (idx, c + 1), Some((t, c, k)));
+                distribute(
+                    ctx,
+                    ci,
+                    remaining - k,
+                    run_cost,
+                    bins,
+                    (idx, c + 1),
+                    Some((t, c, k)),
+                    depth + 1,
+                );
                 bins.pop();
-                if ctx.exhausted {
+                if ctx.acct.exhausted {
                     return;
                 }
             }
@@ -844,14 +1508,21 @@ mod tests {
             .solve_seeded(&p, Some(good.clone()))
             .unwrap();
         assert!(r.proven_optimal);
+        assert!(!r.seed_dropped, "a valid seed must not be flagged dropped");
         assert!(r.solution.cost(&p) <= good.cost(&p));
 
-        // An empty (invalid: items unpacked) seed must not be trusted.
+        // An empty (invalid: items unpacked) seed must not be trusted —
+        // and the drop must be surfaced.
         let r2 = BranchAndBound::default()
             .solve_seeded(&p, Some(Solution::default()))
             .unwrap();
         assert!(r2.proven_optimal);
+        assert!(r2.seed_dropped, "an invalid seed must be flagged dropped");
         assert_eq!(r2.solution.cost(&p), r.solution.cost(&p));
+
+        // An unseeded solve is a cold solve, not a dropped seed.
+        let r3 = BranchAndBound::default().solve_seeded(&p, None).unwrap();
+        assert!(!r3.seed_dropped);
     }
 
     /// `counts[i]` copies of `small_problem` item `i` — the class path
@@ -958,5 +1629,116 @@ mod tests {
         r.solution.validate(&p).unwrap();
         assert!(r.proven_optimal);
         assert_eq!(r.solution.cost(&p), Dollars::from_f64(4.0));
+    }
+
+    #[test]
+    fn bound_ctx_matches_per_call_computation_bitwise() {
+        // The hoisted BoundCtx must be bit-identical to computing each
+        // piece per call (the pre-hoist code path): same fold order,
+        // same arithmetic.
+        let p = replicated_fixture(&[4, 3, 5]);
+
+        // Per-item: order is by hardness, same as solve_item_search.
+        let roomiest = roomiest_capacity(&p);
+        let mut order: Vec<usize> = (0..p.items.len()).collect();
+        let hardness = |i: usize| -> f64 {
+            p.items[i]
+                .choices
+                .iter()
+                .map(|c| c.max_ratio(&roomiest))
+                .fold(f64::INFINITY, f64::min)
+        };
+        order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
+        let ctx = BoundCtx::for_items(&p, &order);
+        for (d, &eff) in ctx.dim_efficiency.iter().enumerate() {
+            assert_eq!(eff.to_bits(), dim_efficiencies(&p)[d].to_bits());
+        }
+        for k in (0..order.len()).rev() {
+            // Per-call recomputation: fold the relaxed demands from the
+            // end, exactly as the pre-hoist suffix construction did.
+            let mut acc = ResourceVec::zeros(p.dims);
+            for j in (k..order.len()).rev() {
+                acc = acc.add(&relaxed_req(&p, order[j]));
+            }
+            for d in 0..p.dims {
+                assert_eq!(
+                    ctx.suffix_demand[k][d].to_bits(),
+                    acc[d].to_bits(),
+                    "per-item suffix_demand[{k}][{d}] drifted from the per-call value"
+                );
+            }
+        }
+
+        // Class mode: classes sorted by representative hardness, same
+        // as solve_class_search.
+        let mut classes =
+            aggregate::group_classes_capped(&p, p.items.len() / 2).expect("aggregation pays here");
+        classes.sort_by(|a, b| hardness(b.rep).total_cmp(&hardness(a.rep)));
+        let cctx = BoundCtx::for_classes(&p, &classes);
+        for k in (0..classes.len()).rev() {
+            let mut acc = ResourceVec::zeros(p.dims);
+            for j in (k..classes.len()).rev() {
+                let req = relaxed_req(&p, classes[j].rep);
+                let count = classes[j].count() as f64;
+                for d in 0..p.dims {
+                    acc.0[d] += req[d] * count;
+                }
+            }
+            for d in 0..p.dims {
+                assert_eq!(
+                    cctx.suffix_demand[k][d].to_bits(),
+                    acc[d].to_bits(),
+                    "class suffix_demand[{k}][{d}] drifted from the per-call value"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_item_search_is_bit_identical_to_sequential() {
+        // small_problem has three distinct items, so aggregation never
+        // pays and this exercises the per-item parallel path.
+        let p = small_problem();
+        let seq = BranchAndBound::default().solve(&p).unwrap();
+        for threads in [2, 8] {
+            let par = BranchAndBound { threads, ..Default::default() }
+                .solve(&p)
+                .unwrap();
+            assert!(par.proven_optimal);
+            assert_eq!(par.solution, seq.solution, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_class_search_is_bit_identical_to_sequential() {
+        let p = replicated_fixture(&[4, 3, 5]);
+        let seq = BranchAndBound::default().solve(&p).unwrap();
+        for threads in [2, 8] {
+            let par = BranchAndBound { threads, ..Default::default() }
+                .solve(&p)
+                .unwrap();
+            assert!(par.proven_optimal);
+            assert_eq!(par.solution, seq.solution, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_all_cores_and_budget_exhaustion_degrade_gracefully() {
+        // threads: 0 = one per core; still proves and matches.
+        let p = replicated_fixture(&[4, 3, 5]);
+        let seq = BranchAndBound::default().solve(&p).unwrap();
+        let par = BranchAndBound { threads: 0, ..Default::default() }
+            .solve(&p)
+            .unwrap();
+        assert!(par.proven_optimal);
+        assert_eq!(par.solution, seq.solution);
+
+        // A starved global budget still returns the seed incumbent,
+        // flagged non-optimal.
+        let starved = BranchAndBound { threads: 4, node_budget: 1, ..Default::default() }
+            .solve(&p)
+            .unwrap();
+        starved.solution.validate(&p).unwrap();
+        assert!(!starved.proven_optimal);
     }
 }

@@ -74,7 +74,8 @@ pub mod problem;
 pub mod solver;
 
 pub use aggregate::{
-    aggregation_pays, group_classes, group_classes_capped, solve_greedy_aggregated, ItemClass,
+    aggregation_pays, group_classes, group_classes_capped, problem_fingerprint,
+    solve_greedy_aggregated, ItemClass,
 };
 pub use bounds::{dff_disabled, dff_lower_bound, set_dff_disabled};
 pub use exact::{solve_exact, BranchAndBound, ExactResult};

@@ -87,6 +87,12 @@ pub struct SolveBudget {
     /// gap may drift above the previous plan's before the manager falls
     /// back to a cold solve (see `ResourceManager::allocate_warm`).
     pub warm_gap_margin: f64,
+    /// Worker threads for the exact search's multi-root parallel mode:
+    /// `1` (the default) keeps the classic sequential search, `0` means
+    /// one per available core, clamped to 16 either way.  Completed
+    /// proofs are bit-identical for every setting (see
+    /// `packing::exact`), so this is a pure wall-clock knob.
+    pub exact_threads: usize,
 }
 
 impl Default for SolveBudget {
@@ -99,6 +105,7 @@ impl Default for SolveBudget {
             exact_cutoff: 24,
             node_budget: 5_000_000,
             warm_gap_margin: 0.05,
+            exact_threads: 1,
         }
     }
 }
@@ -378,6 +385,7 @@ impl Solver for ExactSolver {
         let bb = BranchAndBound {
             node_budget: budget.node_budget,
             deadline: budget.deadline(),
+            threads: budget.exact_threads,
             ..Default::default()
         };
         let result = bb.solve(problem)?;
@@ -446,10 +454,23 @@ impl PortfolioSolver {
     }
 }
 
-/// Run `count` tasks across a small scoped worker pool; returns one
-/// optional solution per task, in task order.  Workers claim tasks from
-/// an atomic cursor, so thread count never changes *which* solutions
-/// exist — only how fast they arrive.
+/// Default pool size for `count` tasks: one thread per core, clamped
+/// to 16, never more than the task count.
+fn pool_threads(count: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 16)
+        .min(count)
+}
+
+/// Run `count` tasks across a small scoped worker pool of `threads`
+/// workers; returns one optional result per task, in task order.
+/// Workers claim tasks from an atomic cursor, so thread count never
+/// changes *which* results exist — only how fast they arrive.  The
+/// exact search's multi-root parallel mode reuses this pool for its
+/// subtree tasks (`packing::exact`), hence the generic result type and
+/// the explicit thread count.
 ///
 /// An expired `deadline` sheds every task whose `arm_of` is > 0 at
 /// claim time: the first arm always completes, so a tight
@@ -458,21 +479,18 @@ impl PortfolioSolver {
 /// deadline is wall-clock-dependent; the default budget is far above
 /// any solve the tests or paper scale run, so results stay
 /// deterministic in practice.)
-fn race_tasks(
+pub(crate) fn race_tasks<T: Send>(
+    threads: usize,
     count: usize,
     deadline: Option<Instant>,
     arm_of: impl Fn(usize) -> usize + Sync,
-    run: impl Fn(usize) -> Option<Solution> + Sync,
-) -> Vec<Option<Solution>> {
+    run: impl Fn(usize) -> Option<T> + Sync,
+) -> Vec<Option<T>> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(2)
-        .clamp(1, 16)
-        .min(count);
+    let threads = threads.clamp(1, 16).min(count.max(1));
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Solution>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -505,6 +523,7 @@ fn run_tasks(
     deadline: Option<Instant>,
 ) -> Vec<Option<Solution>> {
     race_tasks(
+        pool_threads(tasks.len()),
         tasks.len(),
         deadline,
         |i| tasks[i].0,
@@ -543,6 +562,7 @@ impl PortfolioSolver {
             .flat_map(|&g| ItemOrder::ALL.iter().map(move |&o| (g, o)))
             .collect();
         let results = race_tasks(
+            pool_threads(arms.len()),
             arms.len(),
             deadline,
             |i| i,
@@ -585,12 +605,20 @@ impl PortfolioSolver {
             let bb = BranchAndBound {
                 node_budget: budget.node_budget.min(EXACT_ARM_NODE_CAP),
                 deadline,
+                threads: budget.exact_threads,
                 ..Default::default()
             };
             let incumbent = best.as_ref().map(|(s, _)| s.clone());
             let polished =
                 profiling::time_phase("arm:exact-polish", || bb.solve_seeded(problem, incumbent));
             if let Some(result) = polished {
+                // The racing winner already passed validate in the arm
+                // fold; if the polish dropped it, the seed path is
+                // broken upstream.
+                debug_assert!(
+                    !result.seed_dropped,
+                    "portfolio seeded the exact polish with an invalid incumbent"
+                );
                 if result.solution.validate(problem).is_ok() {
                     let cost = result.solution.cost(problem);
                     if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {

@@ -334,7 +334,9 @@ pub fn trace_policy_table(
 /// Per-epoch breakdown of one policy run, including which solver
 /// produced each epoch's serving plan, its warm/cold provenance (so
 /// warm-start ratcheting and forced cold refreshes are visible), and
-/// its certified optimality gap.
+/// its certified optimality gap.  Cold epochs whose plan was replayed
+/// from the cross-epoch solve cache are marked `+mem` in the Warm
+/// column — the solve was skipped, the plan is identical.
 pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
     let mut t = Table::new(&format!(
         "{} on {} ({}) — per-epoch timeline",
@@ -359,7 +361,7 @@ pub fn trace_epochs_table(outcome: &AutoscaleOutcome) -> Table {
             format!("{:.0}%", e.performance * 100.0),
             if e.unserved > 0 { e.unserved.to_string() } else { "-".into() },
             e.solver.to_string(),
-            e.mode.to_string(),
+            if e.cached { format!("{}+mem", e.mode) } else { e.mode.to_string() },
             match e.gap {
                 Some(g) => format!("{:.1}%", g * 100.0),
                 None => "-".into(),

@@ -67,7 +67,11 @@ impl std::fmt::Display for SimEngine {
 /// epoch pipeline yields identical outcomes whenever the solver stack
 /// is deterministic (its documented precondition: solves finish within
 /// the node budget before the `--solve-budget-ms` deadline fires —
-/// true by a wide margin at every scale this repo runs).
+/// true by a wide margin at every scale this repo runs).  The third
+/// parallelism knob, `--exact-threads` (`SolveBudget::exact_threads`),
+/// lives on the solve budget rather than here because it parallelizes
+/// *within* one solve; it carries the same contract — completed
+/// branch-and-bound proofs are bit-identical for any thread count.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Parallelism {
     /// Worker threads for sharded simulation; `0` (the default) means

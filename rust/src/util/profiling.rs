@@ -19,7 +19,11 @@
 //!   fleet (`manager`);
 //! * the portfolio arms — `arm:ff-*` / `arm:bf-*` per (greedy,
 //!   ordering) pair, `arm:*-shard` on the sharded path, and
-//!   `arm:exact-polish` (`packing::solver`).
+//!   `arm:exact-polish` (`packing::solver`);
+//! * event counters (via [`bump`], the `calls` column is the count) —
+//!   `exact:seed-dropped` when the exact search discards an invalid
+//!   incumbent (`packing::exact`), and the solve cache's `cache:hit` /
+//!   `cache:miss` / `cache:reject` (`manager::solve_cache`).
 //!
 //! The `camcloud trace --profile` flag prints the table via
 //! [`report`]; in a build without the feature it prints a rebuild hint
@@ -93,6 +97,14 @@ pub fn time_phase<T>(label: &'static str, f: impl FnOnce() -> T) -> T {
         let _ = label;
         f()
     }
+}
+
+/// Count one occurrence of `label`: a zero-duration [`time_phase`], so
+/// the `calls` column doubles as an event counter.  Free (and
+/// unrecorded) without the `profiling` feature.
+#[inline]
+pub fn bump(label: &'static str) {
+    time_phase(label, || ());
 }
 
 /// Everything recorded so far, sorted by label.  Always empty without

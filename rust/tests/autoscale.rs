@@ -166,3 +166,72 @@ fn saved_trace_reproduces_the_run() {
     assert_eq!(direct.reallocations, replayed.reallocations);
     assert_eq!(direct.epochs.len(), replayed.epochs.len());
 }
+
+/// Cross-epoch solve memoization: strict refresh settings force a cold
+/// solve every third epoch of a repeating trace, and every forced cold
+/// after the first re-solves a problem the cache has already seen.
+/// With the cache on (the default) those epochs replay the memoized
+/// plan — bit-identical to a run with the cache disabled on every
+/// outcome field; only the `cached` observability flag differs.
+#[test]
+fn solve_cache_replays_repeat_cold_epochs_identically() {
+    use camcloud::cloud::Catalog;
+    use camcloud::coordinator::SolveMode;
+    use camcloud::streams::StreamSpec;
+    use camcloud::types::{Program, VGA};
+
+    let c = Coordinator::new();
+    let base = StreamSpec::replicate(0, 4, VGA, Program::Zf, 0.5);
+    let mut trace = WorkloadTrace::new("repeat", Catalog::paper_experiments());
+    for i in 0..8 {
+        trace = trace.epoch(format!("e{i}"), 1800.0, base.clone());
+    }
+    // A negative skip threshold no certificate can meet: every second
+    // warm streak ends in a forced ColdRefresh solve of the identical
+    // problem epoch 0 solved (and memoized) cold.
+    let config = |solve_cache: bool| AutoscaleConfig {
+        strategy: Strategy::St1,
+        cold_refresh_every: 2,
+        refresh_skip_gap: -1.0,
+        solve_cache,
+        ..AutoscaleConfig::default()
+    };
+    let memoized = AutoscaleRunner::new(&c)
+        .with_config(config(true))
+        .run(&trace, ScalePolicy::Reactive)
+        .unwrap();
+    let cold = AutoscaleRunner::new(&c)
+        .with_config(config(false))
+        .run(&trace, ScalePolicy::Reactive)
+        .unwrap();
+
+    // The cache-off run never reports a replay; the cache-on run
+    // replays every forced refresh (all cold solves past epoch 0).
+    assert!(cold.epochs.iter().all(|e| !e.cached));
+    assert!(!memoized.epochs[0].cached, "first-ever solve cannot hit");
+    let refreshes: Vec<bool> = memoized
+        .epochs
+        .iter()
+        .filter(|e| e.mode == SolveMode::ColdRefresh)
+        .map(|e| e.cached)
+        .collect();
+    assert!(
+        refreshes.len() >= 2 && refreshes.iter().all(|&hit| hit),
+        "every forced refresh must replay the memoized plan: {refreshes:?}"
+    );
+
+    // Replays are bit-identical to the solves they skip.
+    assert_eq!(memoized.total_billed, cold.total_billed);
+    assert_eq!(memoized.peak_fleet, cold.peak_fleet);
+    assert_eq!(memoized.reallocations, cold.reallocations);
+    assert_eq!(memoized.mean_performance, cold.mean_performance);
+    assert_eq!(memoized.epochs.len(), cold.epochs.len());
+    for (x, y) in memoized.epochs.iter().zip(&cold.epochs) {
+        assert_eq!(x.hourly_rate, y.hourly_rate, "{}: cost diverges", x.label);
+        assert_eq!(x.fleet_size, y.fleet_size, "{}: fleet diverges", x.label);
+        assert_eq!(x.mode, y.mode, "{}: provenance diverges", x.label);
+        assert_eq!(x.solver, y.solver, "{}: solver diverges", x.label);
+        assert_eq!(x.gap, y.gap, "{}: certified gap diverges", x.label);
+        assert_eq!(x.performance, y.performance, "{}: performance diverges", x.label);
+    }
+}

@@ -1,0 +1,162 @@
+//! Cross-thread determinism of the multi-root parallel exact search:
+//! a completed branch-and-bound proof is bit-identical — same optimum,
+//! same plan, same provenance — at `threads` 1, 2, and 8, on random
+//! per-item instances and on high-multiplicity class instances.  Only
+//! `nodes_explored` (and where a budget cap lands) may differ, which
+//! is why these tests give every proof room to complete.
+
+use camcloud::packing::{
+    solve_greedy, BinType, BranchAndBound, Greedy, Item, ItemOrder, MvbpProblem,
+};
+use camcloud::types::{Dollars, ResourceVec};
+use camcloud::util::proptest::{check, Config};
+use camcloud::util::rng::Rng;
+
+/// Random feasible instance small enough that every proof completes
+/// well within the node budget (the determinism contract's domain).
+fn random_instance(rng: &mut Rng) -> MvbpProblem {
+    let dims = 2;
+    let n_types = 1 + rng.below(3) as usize;
+    let bin_types: Vec<BinType> = (0..n_types)
+        .map(|t| BinType {
+            name: format!("t{t}"),
+            cost: Dollars::from_f64(rng.range_f64(0.3, 3.0)),
+            capacity: ResourceVec((0..dims).map(|_| rng.range_f64(5.0, 14.0)).collect()),
+        })
+        .collect();
+    let n_items = 2 + rng.below(11) as usize;
+    let items: Vec<Item> = (0..n_items)
+        .map(|i| {
+            let n_choices = 1 + rng.below(3) as usize;
+            Item {
+                id: format!("i{i}"),
+                choices: (0..n_choices)
+                    .map(|_| ResourceVec((0..dims).map(|_| rng.range_f64(0.3, 4.5)).collect()))
+                    .collect(),
+            }
+        })
+        .collect();
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
+}
+
+/// Random high-multiplicity instance: 2-4 requirement classes, each
+/// replicated 3-8 times, so the class-mode (multiplicity) search runs.
+fn random_replicated_instance(rng: &mut Rng) -> MvbpProblem {
+    let dims = 2;
+    let bin_types = vec![
+        BinType {
+            name: "big".into(),
+            cost: Dollars::from_f64(rng.range_f64(1.5, 3.0)),
+            capacity: ResourceVec(vec![12.0, 12.0]),
+        },
+        BinType {
+            name: "small".into(),
+            cost: Dollars::from_f64(rng.range_f64(0.4, 1.2)),
+            capacity: ResourceVec(vec![6.0, 6.0]),
+        },
+    ];
+    let n_classes = 2 + rng.below(3) as usize;
+    let mut items = Vec::new();
+    for c in 0..n_classes {
+        let n_choices = 1 + rng.below(2) as usize;
+        let choices: Vec<ResourceVec> = (0..n_choices)
+            .map(|_| ResourceVec((0..dims).map(|_| rng.range_f64(0.5, 4.0)).collect()))
+            .collect();
+        let copies = 3 + rng.below(6) as usize;
+        for k in 0..copies {
+            items.push(Item { id: format!("c{c}-{k}"), choices: choices.clone() });
+        }
+    }
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
+}
+
+/// Solve `problem` at every requested thread count and check each
+/// parallel result against the sequential reference, field by field
+/// (excluding `nodes_explored`, which is thread-schedule-dependent).
+fn assert_thread_invariant(problem: &MvbpProblem, per_item: bool) -> Result<(), String> {
+    let solver = |threads: usize| BranchAndBound {
+        per_item,
+        threads,
+        ..Default::default()
+    };
+    let reference = solver(1)
+        .solve(problem)
+        .ok_or("sequential search must solve a feasible instance")?;
+    if !reference.proven_optimal {
+        return Err("reference proof did not complete within the default budget".into());
+    }
+    reference
+        .solution
+        .validate(problem)
+        .map_err(|e| format!("sequential solution invalid: {e}"))?;
+    for threads in [2, 8] {
+        let parallel = solver(threads)
+            .solve(problem)
+            .ok_or_else(|| format!("{threads}-thread search must solve what 1 thread solved"))?;
+        if !parallel.proven_optimal {
+            return Err(format!("{threads}-thread proof did not complete"));
+        }
+        if parallel.solution != reference.solution {
+            return Err(format!(
+                "{threads}-thread plan diverges from sequential (cost {} vs {})",
+                parallel.solution.cost(problem),
+                reference.solution.cost(problem)
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn parallel_per_item_search_matches_sequential_on_random_instances() {
+    check(
+        "exact-parallel-per-item",
+        Config { cases: 32, ..Default::default() },
+        random_instance,
+        |p| assert_thread_invariant(p, true),
+    );
+}
+
+#[test]
+fn parallel_class_search_matches_sequential_on_high_multiplicity_instances() {
+    check(
+        "exact-parallel-class",
+        Config { cases: 32, ..Default::default() },
+        random_replicated_instance,
+        |p| assert_thread_invariant(p, false),
+    );
+}
+
+/// Seeding never changes a completed proof's answer, sequential or
+/// parallel: a greedy incumbent only prunes, and an invalid incumbent
+/// is dropped (and surfaced) rather than corrupting the search.
+#[test]
+fn seeded_parallel_search_matches_seeded_sequential() {
+    check(
+        "exact-parallel-seeded",
+        Config { cases: 24, ..Default::default() },
+        random_instance,
+        |p| {
+            let seed = solve_greedy(p, Greedy::BestFit, ItemOrder::HardestFirst);
+            let solve = |threads: usize| {
+                BranchAndBound { per_item: true, threads, ..Default::default() }
+                    .solve_seeded(p, seed.clone())
+                    .ok_or("seeded search must solve a feasible instance")
+            };
+            let reference = solve(1)?;
+            if reference.seed_dropped {
+                return Err("a greedy seed can never be an invalid incumbent".into());
+            }
+            for threads in [2, 8] {
+                let parallel = solve(threads)?;
+                if parallel.solution != reference.solution {
+                    return Err(format!("{threads}-thread seeded plan diverges"));
+                }
+                if parallel.seed_dropped != reference.seed_dropped {
+                    return Err(format!("{threads}-thread seed provenance diverges"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
