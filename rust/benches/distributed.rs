@@ -1,0 +1,281 @@
+//! Bench: distributed execution over a loopback worker fleet.
+//!
+//! Three sections back the `--workers` tentpole, each sweeping the
+//! worker count over {0, 1, 2, 4} in-process loopback workers:
+//!
+//! * **Exact identity gate** (asserted always, smoke included) — the
+//!   symmetric class-gate instance proves its optimum at every worker
+//!   count, and every completed proof must be bit-identical to the
+//!   fleet-free solve: distribution is a wall-clock knob, never a
+//!   result change.
+//! * **Budget-saturated exact curve** (recorded, not gated) — the
+//!   weak-bound instance deterministically saturates its shared node
+//!   budget, so wall clock measures how the fleet behaves at the
+//!   budget wall.  No speedup is *expected* here: the budget itself is
+//!   the limiting resource, and every in-flight request may redundantly
+//!   re-explore up to one budget's worth of nodes (the post-`stop`
+//!   dispatch check bounds the overshoot).  The curve documents that
+//!   the wall-clock cost stays flat rather than degrading.
+//! * **Sharded-simulation scaling** (the ≥1.5x gate) — a 100,000-stream
+//!   quantized fleet simulates on one local thread vs one local thread
+//!   plus the fleet; shipping 4/5 of the shards to 4 loopback workers
+//!   must cut wall clock by at least 1.5x in full mode.  The merged
+//!   report must be bit-identical to the local run (asserted always).
+//!
+//! Writes `target/BENCH_9.json` for CI to archive.  Env knobs:
+//! `BENCH9_SMOKE` shrinks the instances and skips the timing gate.
+
+use camcloud::coordinator::Coordinator;
+use camcloud::manager::Strategy;
+use camcloud::net::{fleet, worker};
+use camcloud::packing::{BinType, BranchAndBound, ExactResult, Item, MvbpProblem};
+use camcloud::sched::{Parallelism, SimConfig};
+use camcloud::types::{Dollars, ResourceVec};
+use camcloud::util::bench::Bench;
+use camcloud::util::json::Json;
+use camcloud::workload::FleetSpec;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    let mut bench = Bench::new("distributed");
+    let smoke = std::env::var("BENCH9_SMOKE").is_ok();
+    let coordinator = Coordinator::new();
+
+    // Four loopback workers serving forever; each section registers the
+    // prefix it needs and clears the fleet when done.
+    let addrs: Vec<String> = (0..4).map(|_| worker::spawn_local(None).0).collect();
+
+    // ----- Exact identity gate (asserted always) ----------------------
+    // The class-gate instance from benches/hotpath.rs: BFD is baited to
+    // $960 against a $400 optimum, and the class search proves the
+    // optimum quickly — the proof must come back bit-identical from
+    // every fleet size.
+    let (classes, copies) = if smoke { (16u32, 20) } else { (64, 75) };
+    let gate = class_gate_problem(classes, copies);
+    let solve_gate = || -> ExactResult {
+        BranchAndBound { threads: 1, ..BranchAndBound::default() }
+            .solve(&gate)
+            .expect("class gate solves")
+    };
+    fleet::clear();
+    let reference = solve_gate();
+    assert!(reference.proven_optimal, "fleet-free class-gate proof must complete");
+    reference.solution.validate(&gate).expect("fleet-free solution validates");
+    let optimum = reference.solution.cost(&gate);
+    for &workers in &WORKER_COUNTS {
+        fleet::set_workers(&addrs[..workers]).expect("loopback workers reachable");
+        let distributed = solve_gate();
+        assert!(distributed.proven_optimal, "{workers}-worker class-gate proof must complete");
+        assert_eq!(
+            distributed.solution, reference.solution,
+            "distributed exact search diverged from fleet-free at {workers} worker(s)"
+        );
+    }
+    fleet::clear();
+    bench.record("exact_identity_items", gate.items.len() as f64);
+    bench.record("exact_identity_optimum", optimum.as_f64());
+
+    // ----- Budget-saturated exact curve (recorded) --------------------
+    let problem = weak_bound_problem(27);
+    let node_budget: u64 = if smoke { 100_000 } else { 2_000_000 };
+    let samples = if smoke { 1 } else { 2 };
+    let mut exact_curve: Vec<(usize, f64, u64)> = Vec::new();
+    for workers in [0usize, 1, 2, 4] {
+        fleet::clear();
+        if workers > 0 {
+            fleet::set_workers(&addrs[..workers]).expect("loopback workers reachable");
+        }
+        let bb = BranchAndBound {
+            node_budget,
+            per_item: true,
+            threads: 1,
+            ..BranchAndBound::default()
+        };
+        let mut result: Option<ExactResult> = None;
+        let p50 = bench
+            .measure(&format!("exact_weakbound_27i_w{workers}"), 0, samples, || {
+                result = Some(bb.solve(&problem).expect("weak-bound search keeps its incumbent"));
+            })
+            .p50();
+        let result = result.unwrap();
+        result.solution.validate(&problem).expect("budget-capped incumbent validates");
+        exact_curve.push((workers, p50, result.nodes_explored));
+    }
+    fleet::clear();
+
+    // ----- Sharded-simulation scaling (the ≥1.5x gate) ----------------
+    // A rate-quantized fleet so the 100k-stream allocation collapses
+    // into requirement classes; the plan spans thousands of instances,
+    // which is what makes instance-partition sharding meaningful.
+    let n_streams: u32 = if smoke { 5_000 } else { 100_000 };
+    let duration_s = if smoke { 60.0 } else { 600.0 };
+    let workload = FleetSpec::new(n_streams).seed(9).rate_levels(8).build();
+    let profiled = coordinator.profile_workload(workload);
+    let plan = profiled.allocate(Strategy::St3).expect("quantized fleet allocates");
+    assert!(plan.instances.len() > 4, "need enough instances to shard across the fleet");
+    bench.record("sim_streams", f64::from(n_streams));
+    bench.record("sim_instances", plan.instances.len() as f64);
+    let config = SimConfig::for_duration(duration_s)
+        .with_parallelism(Parallelism { sim_threads: 1, pipeline: false });
+
+    fleet::clear();
+    let local_report = profiled.simulation(&plan).run(config);
+    let mut sim_curve: Vec<(usize, f64)> = Vec::new();
+    let local_p50 = bench
+        .measure(&format!("sim_{n_streams}streams_w0"), 1, samples, || {
+            let mut sim = profiled.simulation(&plan);
+            std::hint::black_box(sim.run(config));
+        })
+        .p50();
+    sim_curve.push((0, local_p50));
+    for &workers in &WORKER_COUNTS {
+        fleet::set_workers(&addrs[..workers]).expect("loopback workers reachable");
+        // Identity gate (asserted always): the fleet-merged report is
+        // bit-identical to the local one at every worker count.
+        let distributed = profiled.simulation(&plan).run(config);
+        assert_eq!(distributed.streams, local_report.streams, "{workers} worker(s)");
+        assert_eq!(distributed.frames_completed, local_report.frames_completed);
+        assert_eq!(distributed.frames_dropped, local_report.frames_dropped);
+        let p50 = bench
+            .measure(&format!("sim_{n_streams}streams_w{workers}"), 1, samples, || {
+                let mut sim = profiled.simulation(&plan);
+                std::hint::black_box(sim.run(config));
+            })
+            .p50();
+        sim_curve.push((workers, p50));
+    }
+    fleet::clear();
+
+    let sim_speedup_4w = local_p50 / sim_curve.last().unwrap().1;
+    bench.record("sim_speedup_4w", sim_speedup_4w);
+    if !smoke {
+        assert!(
+            sim_speedup_4w >= 1.5,
+            "4 loopback workers must cut the {n_streams}-stream sharded simulation \
+             by >=1.5x vs one local thread, got {sim_speedup_4w:.2}x"
+        );
+    }
+
+    // ----- BENCH_9.json ----------------------------------------------
+    let curve_json = |curve: &[(usize, f64)]| {
+        Json::Arr(
+            curve
+                .iter()
+                .map(|&(w, p50)| {
+                    Json::obj(vec![
+                        ("workers".to_string(), Json::Num(w as f64)),
+                        ("p50_s".to_string(), Json::Num(p50)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    let record = vec![
+        ("suite".to_string(), Json::Str("distributed_fleet".to_string())),
+        ("smoke".to_string(), Json::Bool(smoke)),
+        (
+            "exact_identity".to_string(),
+            Json::obj(vec![
+                ("items".to_string(), Json::Num(gate.items.len() as f64)),
+                ("worker_counts".to_string(), Json::Arr(vec![
+                    Json::Num(0.0),
+                    Json::Num(1.0),
+                    Json::Num(2.0),
+                    Json::Num(4.0),
+                ])),
+                ("optimum".to_string(), Json::Num(optimum.as_f64())),
+            ]),
+        ),
+        (
+            "exact_budget_curve".to_string(),
+            Json::obj(vec![
+                ("items".to_string(), Json::Num(problem.items.len() as f64)),
+                ("node_budget".to_string(), Json::Num(node_budget as f64)),
+                (
+                    "by_workers".to_string(),
+                    Json::Arr(
+                        exact_curve
+                            .iter()
+                            .map(|&(w, p50, nodes)| {
+                                Json::obj(vec![
+                                    ("workers".to_string(), Json::Num(w as f64)),
+                                    ("p50_s".to_string(), Json::Num(p50)),
+                                    ("nodes_explored".to_string(), Json::Num(nodes as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "sharded_sim".to_string(),
+            Json::obj(vec![
+                ("streams".to_string(), Json::Num(f64::from(n_streams))),
+                ("instances".to_string(), Json::Num(plan.instances.len() as f64)),
+                ("duration_s".to_string(), Json::Num(duration_s)),
+                ("by_workers".to_string(), curve_json(&sim_curve)),
+                ("speedup_4w".to_string(), Json::Num(sim_speedup_4w)),
+            ]),
+        ),
+    ];
+    let json = Json::obj(record).to_pretty();
+    let path = std::path::Path::new("target/BENCH_9.json");
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_9.json");
+    println!("wrote {}", path.display());
+
+    bench.finish();
+}
+
+/// The symmetric class-gate instance (shape shared with
+/// `benches/hotpath.rs`, size-parameterized for smoke runs): the cheap
+/// small bin baits the BFD incumbent while the class search proves a
+/// much cheaper optimum quickly.
+fn class_gate_problem(classes: u32, copies: u32) -> MvbpProblem {
+    let bin_types = vec![
+        BinType {
+            name: "big".to_string(),
+            cost: Dollars::from_f64(2.5),
+            capacity: ResourceVec::from_slice(&[60.0, 1.0]),
+        },
+        BinType {
+            name: "small".to_string(),
+            cost: Dollars::from_f64(1.0),
+            capacity: ResourceVec::from_slice(&[10.0, 1.0]),
+        },
+    ];
+    let mut items = Vec::new();
+    for class in 0..classes {
+        for copy in 0..copies {
+            items.push(Item {
+                id: format!("c{class}-{copy}"),
+                choices: vec![ResourceVec::from_slice(&[2.0, f64::from(class + 1) * 1e-6])],
+            });
+        }
+    }
+    MvbpProblem { dims: 2, bin_types, items, choice_costs: vec![] }
+}
+
+/// Anti-correlated weak-bound instance (shape shared with
+/// `benches/hotpath.rs`): the dimension-projected bound cannot close
+/// the optimality gap, so the search deterministically saturates
+/// whatever node budget it is given.
+fn weak_bound_problem(n: usize) -> MvbpProblem {
+    let bin_types = vec![BinType {
+        name: "node".to_string(),
+        cost: Dollars::from_f64(1.0),
+        capacity: ResourceVec::from_slice(&[10.0, 10.0]),
+    }];
+    let shapes = [[6.0, 2.0], [2.0, 6.0], [5.0, 5.0]];
+    let items = (0..n)
+        .map(|i| Item {
+            id: format!("w{i}"),
+            choices: vec![ResourceVec::from_slice(&shapes[i % 3])],
+        })
+        .collect();
+    MvbpProblem { dims: 2, bin_types, items, choice_costs: vec![] }
+}

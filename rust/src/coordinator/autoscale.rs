@@ -102,8 +102,10 @@ use crate::packing::SolverKind;
 use crate::sched::{SimConfig, SimReport};
 use crate::types::Dollars;
 use crate::util::error::{anyhow, Context, Result};
+use crate::util::json::Json;
 use crate::util::profiling;
 use crate::workload::trace::WorkloadTrace;
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 /// Provisioning policy compared by the autoscale harness.
@@ -1063,15 +1065,31 @@ impl EpochConsumer for EpochDriver<'_> {
 pub struct AutoscaleRunner<'a> {
     pub coordinator: &'a Coordinator,
     pub config: AutoscaleConfig,
+    /// Persist the reactive policy's [`SolveCache`] across runs
+    /// (`--solve-cache-file`): loaded before the trace starts, saved
+    /// after it finishes.  Loaded entries are trusted no further than
+    /// in-memory ones — every hit passes the full structural replay
+    /// validation — so a stale or corrupt file costs cold solves, not
+    /// correctness.
+    pub solve_cache_file: Option<PathBuf>,
 }
 
 impl<'a> AutoscaleRunner<'a> {
     pub fn new(coordinator: &'a Coordinator) -> AutoscaleRunner<'a> {
-        AutoscaleRunner { coordinator, config: AutoscaleConfig::default() }
+        AutoscaleRunner {
+            coordinator,
+            config: AutoscaleConfig::default(),
+            solve_cache_file: None,
+        }
     }
 
     pub fn with_config(mut self, config: AutoscaleConfig) -> AutoscaleRunner<'a> {
         self.config = config;
+        self
+    }
+
+    pub fn with_solve_cache_file(mut self, path: Option<PathBuf>) -> AutoscaleRunner<'a> {
+        self.solve_cache_file = path;
         self
     }
 
@@ -1132,6 +1150,9 @@ impl<'a> AutoscaleRunner<'a> {
             cache: (policy == ScalePolicy::Reactive && self.config.solve_cache)
                 .then(|| Mutex::new(SolveCache::new(32))),
         };
+        if let (Some(path), Some(cache)) = (&self.solve_cache_file, &stage.cache) {
+            load_cache_file(cache, path);
+        }
         let mut driver = EpochDriver {
             trace,
             profiled: &profiled,
@@ -1157,6 +1178,9 @@ impl<'a> AutoscaleRunner<'a> {
             |i: usize, seed: &PlanSeed| stage.plan(i, seed),
             &mut driver,
         )?;
+        if let (Some(path), Some(cache)) = (&self.solve_cache_file, &stage.cache) {
+            save_cache_file(cache, path);
+        }
 
         let total_billed = if policy == ScalePolicy::Oracle {
             Dollars::from_f64(driver.actuate.oracle_billed)
@@ -1172,6 +1196,44 @@ impl<'a> AutoscaleRunner<'a> {
             driver.actuate.peak_fleet,
             driver.actuate.reallocations,
         ))
+    }
+}
+
+/// Load a `--solve-cache-file` into `cache`.  Every failure mode —
+/// missing file, bad JSON, stale format — warns and continues with
+/// whatever was loadable (usually nothing): the file is a wall-clock
+/// optimization, and replay validation already guards correctness.
+fn load_cache_file(cache: &Mutex<SolveCache>, path: &Path) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        // First run: the file does not exist yet and will be written
+        // when the trace finishes.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return,
+        Err(e) => {
+            eprintln!("warning: cannot read solve-cache file {}: {e}", path.display());
+            return;
+        }
+    };
+    let parsed = match Json::parse(&text) {
+        Ok(parsed) => parsed,
+        Err(e) => {
+            eprintln!("warning: solve-cache file {} is not valid JSON: {e}", path.display());
+            return;
+        }
+    };
+    let mut cache = cache.lock().expect("solve cache lock poisoned");
+    if let Err(e) = cache.load_json(&parsed) {
+        eprintln!("warning: ignoring solve-cache file {}: {e:#}", path.display());
+    }
+}
+
+/// Save `cache` back to the `--solve-cache-file` (MRU-first, so a
+/// later load into a smaller cache keeps the most useful entries).
+fn save_cache_file(cache: &Mutex<SolveCache>, path: &Path) {
+    let cache = cache.lock().expect("solve cache lock poisoned");
+    let text = format!("{}\n", cache.to_json().to_compact());
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("warning: cannot write solve-cache file {}: {e}", path.display());
     }
 }
 

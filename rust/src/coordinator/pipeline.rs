@@ -43,6 +43,16 @@
 //! deliberately starved `--solve-budget-ms` the portfolio may shed
 //! different arms depending on machine load — pipelined or not — and
 //! no execution mode can promise bit-equal plans.
+//!
+//! **Distribution.**  A registered worker fleet (`--workers`, see the
+//! [`net`](crate::net) module) slots in *under* this pipeline, not
+//! beside it: the plan stage's exact solves race frontier subtrees
+//! across workers and the simulate stage ships simulation shards to
+//! them, both behind seams that fold results exactly as the local
+//! thread pool would.  Worker count is therefore like `--sim-threads`
+//! — a wall-clock knob that never changes an outcome — and worker
+//! *loss* degrades to local re-execution of the lost work, so the
+//! pipeline's determinism contract survives an unreliable fleet.
 
 use crate::util::error::Result;
 

@@ -49,6 +49,12 @@
 //!   solves with periodic cold refresh, and a policy comparison
 //!   (static-peak / static-mean / oracle / reactive) under
 //!   started-hour billing.
+//! * [`net`] — coordinator/worker distribution over plain TCP
+//!   (`camcloud worker --listen` + `--workers` on the coordinator):
+//!   exact-search subtree batches and simulation instance partitions
+//!   shipped as length-prefixed JSON frames, raced against local
+//!   threads with retire-on-failure degradation and bit-identical
+//!   results for any worker count.
 //!
 //! Python is build-time only; the request path is entirely in this crate.
 //!
@@ -71,6 +77,7 @@ pub mod config;
 pub mod coordinator;
 pub mod manager;
 pub mod metrics;
+pub mod net;
 pub mod packing;
 pub mod util;
 pub mod profiler;

@@ -7,6 +7,7 @@
 //! camcloud run --scenario N ...          allocate + simulate + report
 //! camcloud trace --trace emergency ...   online autoscaling over a demand trace
 //! camcloud report --all | --table2 ...   regenerate paper tables/figures
+//! camcloud worker --listen HOST:PORT     serve solves/simulations to a coordinator
 //! camcloud infer --program vgg16 ...     real PJRT inference on frames
 //! ```
 
@@ -44,6 +45,7 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("report") => cmd_report(&args),
         Some("whatif") => cmd_whatif(&args),
+        Some("worker") => cmd_worker(&args),
         Some("infer") => cmd_infer(&args),
         Some("help") | None => {
             print_help();
@@ -93,6 +95,14 @@ fn print_help() {
          \u{20}  (run/trace also accept --sim-threads N for sharded simulation — 0 = all\n\
          \u{20}   cores — and --pipeline on|off to overlap epoch solves with simulation;\n\
          \u{20}   parallel execution changes no results while solves fit the solve budget)\n\
+         \u{20}  (run/trace also accept --workers host:port,... to distribute exact-search\n\
+         \u{20}   subtrees and simulation shards over camcloud worker processes; outcomes\n\
+         \u{20}   are bit-identical to in-process runs, and a lost worker degrades to\n\
+         \u{20}   local re-execution.  trace also accepts --solve-cache-file FILE to\n\
+         \u{20}   persist the reactive solve cache across runs)\n\
+         \u{20}  worker --listen HOST:PORT [--max-requests N]\n\
+         \u{20}                              serve exact-search and simulation requests to\n\
+         \u{20}                              a coordinator running with --workers\n\
          \u{20}  report --all|--table2|--table3|--table5|--table6|--fig5|--fig6\n\
          \u{20}                              regenerate the paper's tables and figures\n\
          \u{20}  whatif --scenario N [--strategy stX]\n\
@@ -177,6 +187,18 @@ fn parallelism_config(args: &Args) -> Result<Parallelism, String> {
         parallelism.pipeline = pipeline;
     }
     Ok(parallelism)
+}
+
+/// `--workers host:port,...`: register a worker fleet for distributed
+/// exact search and sharded simulation (see the `net` module docs).
+/// Without the flag everything runs in-process; with it, outcomes are
+/// bit-identical — workers are a wall-clock knob, like thread counts.
+fn apply_workers_flag(args: &Args) -> Result<(), String> {
+    if let Some(addrs) = args.list_opt("workers") {
+        let live = camcloud::net::fleet::set_workers(&addrs).map_err(|e| format!("{e:#}"))?;
+        eprintln!("workers: {live}/{} reachable", addrs.len());
+    }
+    Ok(())
 }
 
 fn sim_config(args: &Args, default_duration: f64) -> Result<SimConfig, String> {
@@ -302,6 +324,10 @@ fn cmd_run(args: &Args) -> i32 {
             return 2;
         }
     };
+    if let Err(e) = apply_workers_flag(args) {
+        eprintln!("error: {e}");
+        return 2;
+    }
     let duration = sim.duration_s;
     match args.opt("strategy") {
         Some(s) => {
@@ -380,6 +406,7 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
         None => SimEngine::default(),
     };
     let horizon_hours = args.f64_opt("horizon")?;
+    apply_workers_flag(args)?;
     let coordinator = coordinator_with_profiles(args)?;
     let config = AutoscaleConfig {
         strategy,
@@ -389,7 +416,9 @@ fn run_trace_cmd(args: &Args) -> Result<i32, String> {
         horizon_hours,
         ..AutoscaleConfig::default()
     };
-    let runner = AutoscaleRunner::new(&coordinator).with_config(config);
+    let runner = AutoscaleRunner::new(&coordinator)
+        .with_config(config)
+        .with_solve_cache_file(args.opt("solve-cache-file").map(std::path::PathBuf::from));
     let policies = args.one_or_all("policy", &ScalePolicy::ALL)?;
     println!(
         "trace {:?}: {} epochs over {:.1} h, strategy {strategy}, engine {engine}\n",
@@ -580,6 +609,46 @@ fn cmd_report(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// `camcloud worker --listen HOST:PORT [--max-requests N]`: the
+/// remote end of `--workers`.  Serves exact-search subtree batches and
+/// simulation shards sequentially until killed (or until
+/// `--max-requests` connections, which CI uses to bound smoke jobs).
+fn cmd_worker(args: &Args) -> i32 {
+    let addr = match args.opt("listen") {
+        Some(a) => a,
+        None => {
+            eprintln!("error: need --listen HOST:PORT (e.g. --listen 127.0.0.1:9001)");
+            return 2;
+        }
+    };
+    let max_requests = match args.u32_opt("max-requests") {
+        Ok(n) => n.map(|n| n as usize),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let listener = match std::net::TcpListener::bind(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("error: cannot listen on {addr}: {e}");
+            return 1;
+        }
+    };
+    match listener.local_addr() {
+        Ok(bound) => println!("camcloud worker listening on {bound}"),
+        Err(_) => println!("camcloud worker listening on {addr}"),
+    }
+    match camcloud::net::worker::serve(listener, camcloud::net::worker::WorkerOptions { max_requests })
+    {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
 }
 
 fn cmd_infer(args: &Args) -> i32 {

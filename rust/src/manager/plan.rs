@@ -2,10 +2,13 @@
 
 use super::strategy::Strategy;
 use super::BuiltProblem;
+use crate::net::proto::{dollars_from_json, dollars_to_json};
 use crate::packing::{Solution, SolveOutcome, SolverKind};
 use crate::profiler::ExecChoice;
 use crate::streams::StreamSpec;
 use crate::types::{Dollars, ResourceVec};
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// One stream placed on an instance.
@@ -233,6 +236,116 @@ impl AllocationPlan {
     }
 }
 
+fn vec_to_json(v: &ResourceVec) -> Json {
+    Json::arr(v.0.iter().map(|&x| Json::Num(x)))
+}
+
+fn vec_from_json(j: &Json) -> Result<ResourceVec> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("resource vector is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for x in arr {
+        out.push(x.as_f64().ok_or_else(|| anyhow!("resource component is not a number"))?);
+    }
+    Ok(ResourceVec::from_slice(&out))
+}
+
+/// Serialize a plan for persistence (solve-cache files).  Costs travel
+/// as exact micro-dollar integers and requirement vectors as plain f64
+/// arrays (`util::json` prints finite floats shortest-round-trip), so
+/// decode is bit-identical — [`plan_from_json`] is the exact inverse.
+pub fn plan_to_json(plan: &AllocationPlan) -> Json {
+    let instances = plan.instances.iter().map(|inst| {
+        let streams = inst.streams.iter().map(|s| {
+            Json::obj(vec![
+                ("stream_index".to_string(), Json::Num(s.stream_index as f64)),
+                ("stream_id".to_string(), Json::Str(s.stream_id.clone())),
+                ("choice".to_string(), Json::Num(s.choice.to_index() as f64)),
+                ("requirement".to_string(), vec_to_json(&s.requirement)),
+            ])
+        });
+        Json::obj(vec![
+            ("type_name".to_string(), Json::Str(inst.type_name.clone())),
+            ("hourly_cost".to_string(), dollars_to_json(inst.hourly_cost)),
+            ("capacity".to_string(), vec_to_json(&inst.capacity)),
+            ("streams".to_string(), Json::arr(streams)),
+        ])
+    });
+    Json::obj(vec![
+        ("strategy".to_string(), Json::Str(plan.strategy.to_string())),
+        ("solver".to_string(), Json::Str(plan.solver.to_string())),
+        ("instances".to_string(), Json::arr(instances)),
+        ("hourly_cost".to_string(), dollars_to_json(plan.hourly_cost)),
+        ("transfer_rate".to_string(), dollars_to_json(plan.transfer_rate)),
+        (
+            "lower_bound".to_string(),
+            match plan.lower_bound {
+                Some(lb) => dollars_to_json(lb),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Decode a plan serialized by [`plan_to_json`], checking the
+/// structural invariants construction guarantees (consistent vector
+/// dimensions per instance, instance costs summing to the plan's).
+/// Semantic validity against the *current* catalog and fleet is NOT
+/// checked here — that is the solve cache's replay validation.
+pub fn plan_from_json(j: &Json) -> Result<AllocationPlan> {
+    let strategy = j
+        .str_field("strategy")?
+        .parse::<Strategy>()
+        .map_err(|e| anyhow!("{e}"))?;
+    let solver = j
+        .str_field("solver")?
+        .parse::<SolverKind>()
+        .map_err(|e| anyhow!("{e}"))?;
+    let mut instances = Vec::new();
+    for inst in j.arr_field("instances")? {
+        let capacity = vec_from_json(inst.field("capacity")?)?;
+        let mut streams = Vec::new();
+        for s in inst.arr_field("streams")? {
+            let requirement = vec_from_json(s.field("requirement")?)?;
+            ensure!(
+                requirement.dims() == capacity.dims(),
+                "requirement dims {} != capacity dims {}",
+                requirement.dims(),
+                capacity.dims()
+            );
+            streams.push(StreamAssignment {
+                stream_index: usize::try_from(s.u64_field("stream_index")?)?,
+                stream_id: s.str_field("stream_id")?.to_string(),
+                choice: ExecChoice::from_index(usize::try_from(s.u64_field("choice")?)?),
+                requirement,
+            });
+        }
+        instances.push(PlannedInstance {
+            type_name: inst.str_field("type_name")?.to_string(),
+            hourly_cost: dollars_from_json(inst.field("hourly_cost")?)?,
+            capacity,
+            streams,
+        });
+    }
+    let hourly_cost = dollars_from_json(j.field("hourly_cost")?)?;
+    let from_instances: Dollars = instances.iter().map(|i| i.hourly_cost).sum();
+    ensure!(
+        hourly_cost == from_instances,
+        "plan hourly cost {hourly_cost} != sum of instance costs {from_instances}"
+    );
+    let lower_bound = match j.field("lower_bound")? {
+        Json::Null => None,
+        lb => Some(dollars_from_json(lb)?),
+    };
+    Ok(AllocationPlan {
+        strategy,
+        solver,
+        instances,
+        hourly_cost,
+        transfer_rate: dollars_from_json(j.field("transfer_rate")?)?,
+        lower_bound,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -318,6 +431,46 @@ mod tests {
         assert!(s.lines().count() < 64 * 18 + 10, "summary must be bounded");
         // Small plans still print in full.
         assert!(!plan_scenario2().summary().contains("more"));
+    }
+
+    #[test]
+    fn plans_round_trip_through_json_bit_identically() {
+        // A solved plan (carries a lower bound and real requirement
+        // vectors) must survive encode/decode unchanged — the solve
+        // cache file trusts this to reproduce in-memory entries.
+        let plan = plan_scenario2();
+        let decoded = plan_from_json(&plan_to_json(&plan)).unwrap();
+        assert_eq!(decoded, plan);
+
+        // GPU choices, no certificate, and a transfer rate all encode.
+        let hand_built = AllocationPlan {
+            strategy: Strategy::St2,
+            solver: SolverKind::WarmStart,
+            instances: vec![PlannedInstance {
+                type_name: "g2.8xlarge".into(),
+                hourly_cost: Dollars::from_f64(2.6),
+                capacity: ResourceVec::from_slice(&[28.8, 54.0, 1.0, 1.0, 1.0, 1.0]),
+                streams: vec![StreamAssignment {
+                    stream_index: 3,
+                    stream_id: "cam-3".into(),
+                    choice: ExecChoice::Gpu(2),
+                    requirement: ResourceVec::from_slice(&[0.1, 0.2, 0.0, 0.0, 0.3, 0.0]),
+                }],
+            }],
+            hourly_cost: Dollars::from_f64(2.6),
+            transfer_rate: Dollars::from_f64(0.017),
+            lower_bound: None,
+        };
+        let decoded = plan_from_json(&plan_to_json(&hand_built)).unwrap();
+        assert_eq!(decoded, hand_built);
+        assert_eq!(decoded.instances[0].streams[0].choice, ExecChoice::Gpu(2));
+
+        // Tampered plans are rejected, not silently accepted.
+        let mut j = plan_to_json(&hand_built);
+        if let Json::Obj(map) = &mut j {
+            map.insert("hourly_cost".to_string(), Json::Num(1.0));
+        }
+        assert!(plan_from_json(&j).is_err(), "cost mismatch must fail decode");
     }
 
     #[test]

@@ -30,14 +30,19 @@
 //! table) and in the `profiling` registry as `cache:hit` /
 //! `cache:miss` / `cache:reject` event counters.
 
-use super::plan::truncated;
+use super::plan::{plan_from_json, plan_to_json, truncated};
 use super::{AllocationPlan, BuiltProblem, Strategy};
 use crate::packing::{
     problem_fingerprint, MvbpProblem, PackedBin, Solution, SolveBudget, SolverChoice,
 };
 use crate::streams::StreamSpec;
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
 use crate::util::profiling;
 use std::collections::HashMap;
+
+/// `--solve-cache-file` format version.
+const FILE_VERSION: u64 = 1;
 
 /// Cache key: the problem fingerprint (two independent 64-bit digests)
 /// plus a digest of the solve configuration, so runs with different
@@ -142,6 +147,60 @@ impl SolveCache {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// Serialize the cache for `--solve-cache-file`, entries MRU-first.
+    /// Key digests travel as 16-hex-digit strings — they are full u64s,
+    /// which a JSON f64 number cannot carry exactly past 2^53.  The
+    /// runtime hit/miss/reject counters are not persisted.
+    pub fn to_json(&self) -> Json {
+        let entries = self.entries.iter().map(|(key, plan)| {
+            let digests = [key.0, key.1, key.2]
+                .iter()
+                .map(|d| Json::Str(format!("{d:016x}")))
+                .collect::<Vec<_>>();
+            Json::obj(vec![
+                ("key".to_string(), Json::arr(digests)),
+                ("plan".to_string(), plan_to_json(plan)),
+            ])
+        });
+        Json::obj(vec![
+            ("version".to_string(), Json::Num(FILE_VERSION as f64)),
+            ("entries".to_string(), Json::arr(entries)),
+        ])
+    }
+
+    /// Load entries serialized by [`SolveCache::to_json`], preserving
+    /// their MRU order (subject to this cache's cap).  Returns the
+    /// number of entries loaded.  Loaded plans get no trust beyond
+    /// in-memory ones: a hit still passes the full structural replay
+    /// validation before it is used, so a corrupted or stale file can
+    /// at worst cause cold solves, never a wrong plan.
+    pub fn load_json(&mut self, j: &Json) -> Result<usize> {
+        let version = j.u64_field("version")?;
+        ensure!(version == FILE_VERSION, "unsupported solve-cache file version {version}");
+        let entries = j.arr_field("entries")?;
+        let mut loaded = Vec::with_capacity(entries.len());
+        for entry in entries {
+            let digests = entry.arr_field("key")?;
+            ensure!(digests.len() == 3, "solve key must carry 3 digests");
+            let mut parts = [0u64; 3];
+            for (slot, d) in parts.iter_mut().zip(digests) {
+                let hex = d.as_str().ok_or_else(|| anyhow!("solve key digest is not a string"))?;
+                *slot = u64::from_str_radix(hex, 16)
+                    .map_err(|e| anyhow!("bad solve key digest {hex:?}: {e}"))?;
+            }
+            let plan = plan_from_json(entry.field("plan")?)?;
+            loaded.push((SolveKey(parts[0], parts[1], parts[2]), plan));
+        }
+        let count = loaded.len();
+        // Inserting in reverse replays the file's MRU order: the
+        // file's first (most recent) entry is inserted last and ends
+        // up at the front.
+        for (key, plan) in loaded.into_iter().rev() {
+            self.insert(key, plan);
+        }
+        Ok(count)
     }
 }
 
@@ -283,6 +342,88 @@ mod tests {
         cache.insert(key, stale);
         assert!(cache.replay(key, &built, &streams, strategy).is_none());
         assert_eq!(cache.rejects, 2);
+    }
+
+    #[test]
+    fn cache_round_trips_through_json_and_replayed_hits_match() {
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &cal);
+        let streams = fleet();
+        let strategy = Strategy::St3;
+        let built = mgr.build_problem(&streams, strategy).unwrap();
+        let plan = mgr.allocate(&streams, strategy).unwrap();
+        let key = solve_key(&built.problem, strategy, mgr.solver, &mgr.budget);
+
+        let mut cache = SolveCache::new(8);
+        cache.insert(key, plan.clone());
+
+        // Through text and back (exactly what --solve-cache-file does).
+        let text = cache.to_json().to_compact();
+        let mut restored = SolveCache::new(8);
+        let loaded = restored.load_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(loaded, 1);
+        assert_eq!(restored.len(), 1);
+
+        // A hit from the restored cache replays the identical plan —
+        // and went through the same structural validation as any
+        // in-memory hit.
+        let replayed = restored.replay(key, &built, &streams, strategy).expect("cache hit");
+        assert_eq!(replayed, plan);
+
+        // A stale loaded entry is still subject to replay validation:
+        // poison the plan in the serialized form and the hit degrades
+        // to a reject, never a wrong plan.
+        let mut j = cache.to_json();
+        if let Json::Obj(map) = &mut j {
+            if let Some(Json::Arr(entries)) = map.get_mut("entries") {
+                if let Json::Obj(entry) = &mut entries[0] {
+                    if let Some(Json::Obj(p)) = entry.get_mut("plan") {
+                        if let Some(Json::Arr(insts)) = p.get_mut("instances") {
+                            if let Json::Obj(inst) = &mut insts[0] {
+                                inst.insert(
+                                    "type_name".to_string(),
+                                    Json::Str("retired-type".to_string()),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut poisoned = SolveCache::new(8);
+        assert_eq!(poisoned.load_json(&j).unwrap(), 1);
+        assert!(poisoned.replay(key, &built, &streams, strategy).is_none());
+        assert_eq!(poisoned.rejects, 1);
+        assert!(poisoned.is_empty(), "rejected loaded entries are evicted");
+
+        // Unsupported versions and malformed keys fail loudly.
+        let stale = Json::parse("{\"version\":99,\"entries\":[]}").unwrap();
+        assert!(SolveCache::new(8).load_json(&stale).is_err());
+    }
+
+    #[test]
+    fn mru_order_survives_persistence() {
+        let cal = Calibration::paper();
+        let mgr = ResourceManager::new(Catalog::paper_experiments(), &cal);
+        let streams = fleet();
+        let strategy = Strategy::St3;
+        let built = mgr.build_problem(&streams, strategy).unwrap();
+        let plan = mgr.allocate(&streams, strategy).unwrap();
+        let key_a = solve_key(&built.problem, strategy, mgr.solver, &mgr.budget);
+        let mut tight = mgr.budget;
+        tight.node_budget /= 2;
+        let key_b = solve_key(&built.problem, strategy, mgr.solver, &tight);
+
+        let mut cache = SolveCache::new(8);
+        cache.insert(key_a, plan.clone());
+        cache.insert(key_b, plan.clone()); // b is now most recent
+
+        // Restore into a cap-1 cache: only the file's MRU entry fits.
+        let mut small = SolveCache::new(1);
+        small.load_json(&cache.to_json()).unwrap();
+        assert_eq!(small.len(), 1);
+        assert!(small.replay(key_b, &built, &streams, strategy).is_some());
+        assert!(small.replay(key_a, &built, &streams, strategy).is_none());
     }
 
     #[test]

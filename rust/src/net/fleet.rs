@@ -1,0 +1,186 @@
+//! The coordinator's view of the worker fleet.
+//!
+//! A process-global registry (set once from the CLI via
+//! [`set_workers`], queried by the dispatch seams in `packing::exact`
+//! and `sched::shard` via [`active`]) holds one [`Fleet`] of worker
+//! addresses.  Globality is deliberate: the fleet cuts *underneath*
+//! the solver and simulation APIs, which stay byte-for-byte identical
+//! — with no fleet registered (the default), every dispatch site takes
+//! its pre-existing local path.
+//!
+//! Failure model: workers are raced against local threads and are
+//! never load-bearing.  Every RPC opens a fresh connection (workers
+//! hold no per-coordinator state, so a crashed worker that restarts
+//! simply starts winning tasks again — but a worker marked dead by
+//! *this* coordinator stays dead for the run; re-pinging mid-search
+//! would add latency on the failure path for a rare win).  Any
+//! connect, I/O, timeout, protocol, or decode failure marks the worker
+//! dead, bumps the `net:worker-lost` profiling counter, and the caller
+//! re-runs the affected work locally — outcomes are unchanged by
+//! construction because workers only ever *race* work the coordinator
+//! can do itself.
+
+use crate::net::frame::{recv_json, send_json};
+use crate::net::proto::{check_hello, hello};
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
+use crate::util::profiling::{bump, time_phase};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a worker gets to accept a connection.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long a worker gets to read a request or produce a reply.  Long,
+/// because a reply can legitimately take a full subtree-batch solve.
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+struct Worker {
+    addr: SocketAddr,
+    /// The address as the user wrote it, for log lines.
+    label: String,
+    dead: AtomicBool,
+}
+
+/// An immutable set of worker addresses with per-worker liveness.
+pub struct Fleet {
+    workers: Vec<Worker>,
+}
+
+static FLEET: Mutex<Option<Arc<Fleet>>> = Mutex::new(None);
+
+impl Fleet {
+    /// Workers not yet marked dead.
+    pub fn live_count(&self) -> usize {
+        self.workers.iter().filter(|w| !w.dead.load(Ordering::Relaxed)).count()
+    }
+
+    /// Indices of live workers, for spawning one dispatch thread each.
+    pub(crate) fn live_indices(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .filter(|&i| !self.workers[i].dead.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// One request/response round trip against worker `widx` on a
+    /// fresh connection.  `None` means the worker is (now) dead and
+    /// the caller must run the shipped work locally.
+    pub fn rpc(&self, widx: usize, request: &Json) -> Option<Json> {
+        if self.workers[widx].dead.load(Ordering::Relaxed) {
+            return None;
+        }
+        match time_phase("net:rpc", || round_trip(self.workers[widx].addr, request)) {
+            Ok(reply) => Some(reply),
+            Err(e) => {
+                self.mark_dead(widx, &format!("{e:#}"));
+                None
+            }
+        }
+    }
+
+    /// Retire a worker (RPC failure, or a reply the caller could not
+    /// decode/validate).  Idempotent; logs and counts the first loss.
+    pub(crate) fn mark_dead(&self, widx: usize, reason: &str) {
+        if !self.workers[widx].dead.swap(true, Ordering::Relaxed) {
+            bump("net:worker-lost");
+            eprintln!(
+                "worker {} lost ({reason}); re-running its work locally",
+                self.workers[widx].label
+            );
+        }
+    }
+}
+
+/// Register the fleet for this process: resolve and ping every
+/// address, warn about (and retire) unreachable workers, and fail only
+/// if *none* respond.  Returns the live worker count.
+pub fn set_workers(addrs: &[String]) -> Result<usize> {
+    ensure!(!addrs.is_empty(), "worker list is empty");
+    let mut workers = Vec::with_capacity(addrs.len());
+    for label in addrs {
+        let (addr, dead) = match resolve(label) {
+            Ok(addr) => (addr, false),
+            Err(e) => {
+                bump("net:worker-lost");
+                eprintln!("worker {label} unresolvable ({e:#}); dropping it from the fleet");
+                (SocketAddr::from(([127, 0, 0, 1], 0)), true)
+            }
+        };
+        workers.push(Worker { addr, label: label.clone(), dead: AtomicBool::new(dead) });
+    }
+    let fleet = Arc::new(Fleet { workers });
+    for i in 0..fleet.workers.len() {
+        if fleet.workers[i].dead.load(Ordering::Relaxed) {
+            continue;
+        }
+        if let Err(e) = ping(fleet.workers[i].addr) {
+            fleet.mark_dead(i, &format!("handshake failed: {e:#}"));
+        }
+    }
+    let live = fleet.live_count();
+    ensure!(live > 0, "none of the {} workers are reachable", addrs.len());
+    *FLEET.lock().expect("fleet registry") = Some(fleet);
+    Ok(live)
+}
+
+/// Deregister the fleet; dispatch sites fall back to pure-local.
+pub fn clear() {
+    *FLEET.lock().expect("fleet registry") = None;
+}
+
+/// The registered fleet, if any worker in it is still live.
+pub fn active() -> Option<Arc<Fleet>> {
+    let fleet = FLEET.lock().expect("fleet registry").clone()?;
+    (fleet.live_count() > 0).then_some(fleet)
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("address {addr} resolves to nothing"))
+}
+
+fn round_trip(addr: SocketAddr, request: &Json) -> Result<Json> {
+    let mut stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    stream.set_nodelay(true)?;
+    send_json(&mut stream, &hello())?;
+    check_hello(&recv_json(&mut stream)?)?;
+    send_json(&mut stream, request)?;
+    let response = recv_json(&mut stream)?;
+    if response.str_field("type")? == "error" {
+        let message = response.str_field("message").unwrap_or("(no message)");
+        return Err(anyhow!("worker refused the request: {message}"));
+    }
+    Ok(response)
+}
+
+fn ping(addr: SocketAddr) -> Result<()> {
+    let request = Json::obj(vec![("type".to_string(), Json::Str("ping".to_string()))]);
+    let reply = round_trip(addr, &request)?;
+    let kind = reply.str_field("type")?;
+    ensure!(kind == "pong", "ping answered with {kind:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_unreachable_workers_is_an_error_and_registers_nothing() {
+        // Port 1 on loopback refuses connections immediately; the
+        // failed registration must leave the global fleet untouched.
+        let result = set_workers(&["127.0.0.1:1".to_string()]);
+        assert!(result.is_err());
+        assert!(active().is_none());
+    }
+
+    #[test]
+    fn empty_worker_list_is_an_error() {
+        assert!(set_workers(&[]).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Length-prefixed message framing over a byte stream.
+//!
+//! Every message on the wire is one *frame*: a 4-byte big-endian
+//! payload length followed by that many bytes of UTF-8 JSON
+//! (`util::json` compact form).  Framing is the only byte-level layer
+//! of the protocol — everything above it ([`crate::net::proto`]) works
+//! on [`Json`] values, so a malformed peer can at worst produce a
+//! parse error here, never a desynchronized stream interpretation.
+//!
+//! [`MAX_FRAME`] bounds the allocation a length prefix can demand, so
+//! a corrupt or hostile peer cannot make the reader allocate
+//! arbitrarily (the largest legitimate frames — serialized 100k-stream
+//! simulation shards — are tens of megabytes).
+
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+
+/// Upper bound on one frame's payload (256 MiB).
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Write one length-prefixed frame.
+pub fn write_frame(stream: &mut impl Write, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME,
+        "frame of {} bytes exceeds the {} byte cap",
+        payload.len(),
+        MAX_FRAME
+    );
+    stream.write_all(&(payload.len() as u32).to_be_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame(stream: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    ensure!(len <= MAX_FRAME, "peer announced a {len} byte frame (cap {MAX_FRAME})");
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// Serialize `msg` compactly and send it as one frame.
+pub fn send_json(stream: &mut impl Write, msg: &Json) -> Result<()> {
+    write_frame(stream, msg.to_compact().as_bytes())
+}
+
+/// Receive one frame and parse it as JSON.
+pub fn recv_json(stream: &mut impl Read) -> Result<Json> {
+    let payload = read_frame(stream)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| anyhow!("frame payload is not UTF-8: {e}"))?;
+    Ok(Json::parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_over_a_buffer() {
+        let msg = Json::obj(vec![
+            ("type".to_string(), Json::Str("ping".to_string())),
+            ("n".to_string(), Json::Num(42.0)),
+        ]);
+        let mut wire = Vec::new();
+        send_json(&mut wire, &msg).unwrap();
+        // 4-byte prefix + payload.
+        assert_eq!(wire.len(), 4 + msg.to_compact().len());
+        let back = recv_json(&mut wire.as_slice()).unwrap();
+        assert_eq!(back.to_compact(), msg.to_compact());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_be_bytes());
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&8u32.to_be_bytes());
+        wire.extend_from_slice(b"abc");
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+    }
+
+    #[test]
+    fn non_json_payload_is_an_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"not json").unwrap();
+        assert!(recv_json(&mut wire.as_slice()).is_err());
+    }
+}

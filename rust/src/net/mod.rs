@@ -1,0 +1,33 @@
+//! Coordinator/worker distribution over plain TCP.
+//!
+//! Threads ran out as a scaling axis (sharded simulation in PR 4,
+//! parallel branch-and-bound in PR 8 both saturate one machine); this
+//! module is the next rung: a zero-dependency wire protocol
+//! (`std::net` + length-prefixed `util::json` frames) that ships work
+//! to a fleet of `camcloud worker --listen ADDR` processes along the
+//! two axes the codebase already made shardable —
+//!
+//! * **exact-search root subtree tasks** (`packing::exact`'s frontier
+//!   unit): workers race batches of subtrees under the coordinator's
+//!   incumbent and the results fold through the same strict
+//!   `(cost, root index)` winner composition, so completed proofs are
+//!   bit-identical to in-process search;
+//! * **contiguous instance partitions for simulation**
+//!   (`sched::shard`'s unit): per-shard `SimReport`s merge in
+//!   instance-id order, which is partition-invariant, so fleet-sharded
+//!   runs are bit-identical to local ones.
+//!
+//! Layering: [`frame`] moves length-prefixed JSON over a byte stream;
+//! [`proto`] defines the handshake and the type encodings; [`fleet`]
+//! is the coordinator's process-global worker registry with the
+//! retire-on-failure liveness model; [`worker`] is the serve loop.
+//!
+//! With no fleet registered (the default — no `--workers` flag) every
+//! dispatch site runs its pre-existing local code path untouched, and
+//! any worker failure mid-run degrades to exactly that path for the
+//! affected work: workers *race*, they are never load-bearing.
+
+pub mod fleet;
+pub mod frame;
+pub mod proto;
+pub mod worker;

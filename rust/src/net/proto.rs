@@ -1,0 +1,461 @@
+//! Wire protocol: handshake and JSON encodings of the shipped types.
+//!
+//! Every connection starts with a hello exchange carrying
+//! [`PROTOCOL_VERSION`]; a version mismatch fails the handshake before
+//! any work is shipped, so a stale worker binary degrades to "worker
+//! lost" instead of silently mis-decoding requests.
+//!
+//! The encodings here cover what the two distribution axes ship:
+//! MVBP problems and solutions (exact-search subtree batches — the
+//! per-task search states themselves are encoded next to their private
+//! types in `packing::exact`), and simulation shards with their
+//! [`SimReport`]s.  Numbers ride as JSON numbers: `util::json` prints
+//! `f64`s in shortest-round-trip form and parses them back with
+//! correctly-rounded conversion, so every finite float survives the
+//! wire bit-exactly — the foundation of the distributed determinism
+//! guarantee.  [`Dollars`] travel as whole micro-dollar counts (always
+//! far below 2^53); the `i64::MAX` "no incumbent" sentinel travels as
+//! `null` because it is *not* representable in an `f64`.
+
+use crate::packing::{BinType, Item, MvbpProblem, PackedBin, Solution};
+use crate::metrics::{StreamPerf, UtilizationMeter};
+use crate::sched::sim::{Device, SimConfig, StreamExec};
+use crate::sched::{Parallelism, SimEngine, SimReport, Simulation};
+use crate::types::{Dollars, ResourceVec};
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Version of the coordinator/worker wire protocol.  Bumped on any
+/// encoding change; the handshake rejects mismatched peers.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// The handshake message either peer sends.
+pub fn hello() -> Json {
+    Json::obj(vec![
+        ("type".to_string(), Json::Str("hello".to_string())),
+        ("version".to_string(), Json::Num(PROTOCOL_VERSION as f64)),
+    ])
+}
+
+/// Validate a peer's handshake message.
+pub fn check_hello(msg: &Json) -> Result<()> {
+    let kind = msg.str_field("type")?;
+    ensure!(kind == "hello", "expected hello, got {kind:?}");
+    let version = msg.u64_field("version")?;
+    ensure!(
+        version == PROTOCOL_VERSION,
+        "protocol version mismatch: peer speaks v{version}, this binary v{PROTOCOL_VERSION}"
+    );
+    Ok(())
+}
+
+/// Micro-dollar encoding; the `i64::MAX` no-incumbent sentinel is
+/// `null` (it does not survive an `f64` round trip).
+pub(crate) fn dollars_to_json(d: Dollars) -> Json {
+    if d.0 == i64::MAX {
+        Json::Null
+    } else {
+        Json::Num(d.0 as f64)
+    }
+}
+
+pub(crate) fn dollars_from_json(j: &Json) -> Result<Dollars> {
+    match j {
+        Json::Null => Ok(Dollars(i64::MAX)),
+        _ => {
+            let micros = j.as_f64().ok_or_else(|| anyhow!("expected a micro-dollar number"))?;
+            ensure!(
+                micros.fract() == 0.0 && micros.abs() < 9e15,
+                "micro-dollar count {micros} is not a whole in-range integer"
+            );
+            Ok(Dollars(micros as i64))
+        }
+    }
+}
+
+pub(crate) fn resources_to_json(v: &ResourceVec) -> Json {
+    Json::arr(v.0.iter().map(|&x| Json::Num(x)))
+}
+
+pub(crate) fn resources_from_json(j: &Json, dims: usize) -> Result<ResourceVec> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("expected a resource vector array"))?;
+    ensure!(arr.len() == dims, "resource vector has {} dims, expected {dims}", arr.len());
+    let mut out = Vec::with_capacity(dims);
+    for x in arr {
+        out.push(x.as_f64().ok_or_else(|| anyhow!("resource vector entry is not a number"))?);
+    }
+    Ok(ResourceVec::from_slice(&out))
+}
+
+fn index_field(j: &Json, key: &str) -> Result<usize> {
+    Ok(j.u64_field(key)? as usize)
+}
+
+// ---------------------------------------------------------------- MVBP
+
+/// Encode a full MVBP problem (bin types, items with per-choice
+/// requirement vectors, optional per-choice costs).
+pub fn problem_to_json(problem: &MvbpProblem) -> Json {
+    Json::obj(vec![
+        ("dims".to_string(), Json::Num(problem.dims as f64)),
+        (
+            "bin_types".to_string(),
+            Json::arr(problem.bin_types.iter().map(|bt| {
+                Json::obj(vec![
+                    ("name".to_string(), Json::Str(bt.name.clone())),
+                    ("cost".to_string(), dollars_to_json(bt.cost)),
+                    ("capacity".to_string(), resources_to_json(&bt.capacity)),
+                ])
+            })),
+        ),
+        (
+            "items".to_string(),
+            Json::arr(problem.items.iter().map(|item| {
+                Json::obj(vec![
+                    ("id".to_string(), Json::Str(item.id.clone())),
+                    (
+                        "choices".to_string(),
+                        Json::arr(item.choices.iter().map(resources_to_json)),
+                    ),
+                ])
+            })),
+        ),
+        (
+            "choice_costs".to_string(),
+            Json::arr(
+                problem
+                    .choice_costs
+                    .iter()
+                    .map(|costs| Json::arr(costs.iter().map(|&c| dollars_to_json(c)))),
+            ),
+        ),
+    ])
+}
+
+/// Decode and validate an MVBP problem.
+pub fn problem_from_json(j: &Json) -> Result<MvbpProblem> {
+    let dims = index_field(j, "dims")?;
+    let mut bin_types = Vec::new();
+    for bt in j.arr_field("bin_types")? {
+        bin_types.push(BinType {
+            name: bt.str_field("name")?.to_string(),
+            cost: dollars_from_json(bt.field("cost")?)?,
+            capacity: resources_from_json(bt.field("capacity")?, dims)?,
+        });
+    }
+    let mut items = Vec::new();
+    for item in j.arr_field("items")? {
+        let mut choices = Vec::new();
+        for c in item.arr_field("choices")? {
+            choices.push(resources_from_json(c, dims)?);
+        }
+        items.push(Item { id: item.str_field("id")?.to_string(), choices });
+    }
+    let mut choice_costs = Vec::new();
+    for costs in j.arr_field("choice_costs")? {
+        let arr = costs.as_arr().ok_or_else(|| anyhow!("choice_costs row is not an array"))?;
+        let mut row = Vec::with_capacity(arr.len());
+        for c in arr {
+            row.push(dollars_from_json(c)?);
+        }
+        choice_costs.push(row);
+    }
+    let problem = MvbpProblem { dims, bin_types, items, choice_costs };
+    problem.validate().map_err(|e| anyhow!("decoded problem is invalid: {e:#}"))?;
+    Ok(problem)
+}
+
+/// Encode a packing solution (bin type + `(item, choice)` assignments
+/// per bin).
+pub fn solution_to_json(solution: &Solution) -> Json {
+    Json::arr(solution.bins.iter().map(|bin| {
+        Json::obj(vec![
+            ("bin_type".to_string(), Json::Num(bin.bin_type as f64)),
+            (
+                "assignments".to_string(),
+                Json::arr(bin.assignments.iter().map(|&(item, choice)| {
+                    Json::arr(vec![Json::Num(item as f64), Json::Num(choice as f64)])
+                })),
+            ),
+        ])
+    }))
+}
+
+/// Decode a packing solution (structural only — callers validate
+/// against their problem before trusting it).
+pub fn solution_from_json(j: &Json) -> Result<Solution> {
+    let mut bins = Vec::new();
+    for bin in j.as_arr().ok_or_else(|| anyhow!("expected a solution array"))? {
+        let mut assignments = Vec::new();
+        for pair in bin.arr_field("assignments")? {
+            let pair = pair.as_arr().ok_or_else(|| anyhow!("assignment is not a pair"))?;
+            ensure!(pair.len() == 2, "assignment pair has {} entries", pair.len());
+            let item = pair[0].as_u64().ok_or_else(|| anyhow!("assignment item index"))?;
+            let choice = pair[1].as_u64().ok_or_else(|| anyhow!("assignment choice index"))?;
+            assignments.push((item as usize, choice as usize));
+        }
+        bins.push(PackedBin { bin_type: index_field(bin, "bin_type")?, assignments });
+    }
+    Ok(Solution { bins })
+}
+
+// ---------------------------------------------------------- simulation
+
+/// Encode a (sub-)simulation: device capacities and their
+/// `(instance, slot)` index, plus the per-stream execution parameters.
+/// Utilization meters are *not* shipped — the receiver starts fresh
+/// ones, exactly like `sched::shard::extract` does for local shards.
+pub(crate) fn sim_to_json(sim: &Simulation) -> Json {
+    Json::obj(vec![
+        (
+            "devices".to_string(),
+            Json::arr(sim.devices.iter().map(|d| Json::Num(d.capacity))),
+        ),
+        (
+            "device_index".to_string(),
+            Json::arr(sim.device_index.iter().map(|(&(inst, slot), &dev)| {
+                Json::arr(vec![
+                    Json::Num(inst as f64),
+                    Json::Num(slot as f64),
+                    Json::Num(dev as f64),
+                ])
+            })),
+        ),
+        (
+            "device_names".to_string(),
+            Json::arr(sim.device_names.iter().map(|(inst, name)| {
+                Json::arr(vec![Json::Num(*inst as f64), Json::Str(name.clone())])
+            })),
+        ),
+        (
+            "streams".to_string(),
+            Json::arr(sim.streams.iter().map(|s| {
+                Json::obj(vec![
+                    ("instance".to_string(), Json::Num(s.instance as f64)),
+                    (
+                        "gpu_index".to_string(),
+                        s.gpu_index.map_or(Json::Null, |g| Json::Num(g as f64)),
+                    ),
+                    ("desired_fps".to_string(), Json::Num(s.desired_fps)),
+                    ("cpu_work".to_string(), Json::Num(s.cpu_work)),
+                    ("gpu_work".to_string(), Json::Num(s.gpu_work)),
+                    ("cpu_parallelism".to_string(), Json::Num(s.cpu_parallelism)),
+                    ("gpu_parallelism".to_string(), Json::Num(s.gpu_parallelism)),
+                    ("id".to_string(), Json::Str(s.id.clone())),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Decode a (sub-)simulation, starting fresh utilization meters.
+pub(crate) fn sim_from_json(j: &Json) -> Result<Simulation> {
+    let devices: Vec<Device> = j
+        .arr_field("devices")?
+        .iter()
+        .map(|d| {
+            d.as_f64()
+                .map(|capacity| Device { capacity, meter: UtilizationMeter::new() })
+                .ok_or_else(|| anyhow!("device capacity is not a number"))
+        })
+        .collect::<Result<_>>()?;
+    let mut device_index = BTreeMap::new();
+    for row in j.arr_field("device_index")? {
+        let row = row.as_arr().ok_or_else(|| anyhow!("device_index row is not an array"))?;
+        ensure!(row.len() == 3, "device_index row has {} entries", row.len());
+        let triple: Vec<usize> = row
+            .iter()
+            .map(|x| x.as_u64().map(|v| v as usize))
+            .collect::<Option<_>>()
+            .ok_or_else(|| anyhow!("device_index entry is not an index"))?;
+        ensure!(triple[2] < devices.len(), "device_index points past the device table");
+        device_index.insert((triple[0], triple[1]), triple[2]);
+    }
+    let mut device_names = Vec::new();
+    for row in j.arr_field("device_names")? {
+        let row = row.as_arr().ok_or_else(|| anyhow!("device_names row is not an array"))?;
+        ensure!(row.len() == 2, "device_names row has {} entries", row.len());
+        let inst = row[0].as_u64().ok_or_else(|| anyhow!("device_names instance index"))?;
+        let name = row[1].as_str().ok_or_else(|| anyhow!("device name is not a string"))?;
+        device_names.push((inst as usize, name.to_string()));
+    }
+    let mut streams = Vec::new();
+    for s in j.arr_field("streams")? {
+        streams.push(StreamExec {
+            instance: index_field(s, "instance")?,
+            gpu_index: match s.field("gpu_index")? {
+                Json::Null => None,
+                g => Some(g.as_u64().ok_or_else(|| anyhow!("gpu_index is not an index"))? as usize),
+            },
+            desired_fps: s.f64_field("desired_fps")?,
+            cpu_work: s.f64_field("cpu_work")?,
+            gpu_work: s.f64_field("gpu_work")?,
+            cpu_parallelism: s.f64_field("cpu_parallelism")?,
+            gpu_parallelism: s.f64_field("gpu_parallelism")?,
+            id: s.str_field("id")?.to_string(),
+        });
+    }
+    Ok(Simulation { devices, device_index, device_names, streams })
+}
+
+/// Encode the simulation config a shard runs under.  Parallelism knobs
+/// are not shipped: the worker runs its shard unsharded
+/// (`run_engine`), exactly like a local shard thread.
+pub fn sim_config_to_json(config: &SimConfig) -> Json {
+    Json::obj(vec![
+        ("duration_s".to_string(), Json::Num(config.duration_s)),
+        ("dt".to_string(), Json::Num(config.dt)),
+        ("queue_cap".to_string(), Json::Num(config.queue_cap as f64)),
+        ("engine".to_string(), Json::Str(config.engine.to_string())),
+    ])
+}
+
+pub fn sim_config_from_json(j: &Json) -> Result<SimConfig> {
+    let engine: SimEngine = j
+        .str_field("engine")?
+        .parse()
+        .map_err(|e: String| anyhow!("{e}"))?;
+    Ok(SimConfig {
+        duration_s: j.f64_field("duration_s")?,
+        dt: j.f64_field("dt")?,
+        queue_cap: index_field(j, "queue_cap")?,
+        engine,
+        parallelism: Parallelism { sim_threads: 1, pipeline: false },
+    })
+}
+
+/// Encode a shard's simulation report.
+pub fn report_to_json(report: &SimReport) -> Json {
+    Json::obj(vec![
+        (
+            "streams".to_string(),
+            Json::arr(report.streams.iter().map(|p| {
+                Json::obj(vec![
+                    ("stream_id".to_string(), Json::Str(p.stream_id.clone())),
+                    ("desired_fps".to_string(), Json::Num(p.desired_fps)),
+                    ("achieved_fps".to_string(), Json::Num(p.achieved_fps)),
+                ])
+            })),
+        ),
+        (
+            "device_utilization".to_string(),
+            Json::arr(report.device_utilization.iter().map(|((inst, name), (mean, peak))| {
+                Json::arr(vec![
+                    Json::Num(*inst as f64),
+                    Json::Str(name.clone()),
+                    Json::Num(*mean),
+                    Json::Num(*peak),
+                ])
+            })),
+        ),
+        ("frames_completed".to_string(), Json::Num(report.frames_completed as f64)),
+        ("frames_dropped".to_string(), Json::Num(report.frames_dropped as f64)),
+        ("duration_s".to_string(), Json::Num(report.duration_s)),
+    ])
+}
+
+pub fn report_from_json(j: &Json) -> Result<SimReport> {
+    let mut streams = Vec::new();
+    for p in j.arr_field("streams")? {
+        streams.push(StreamPerf {
+            stream_id: p.str_field("stream_id")?.to_string(),
+            desired_fps: p.f64_field("desired_fps")?,
+            achieved_fps: p.f64_field("achieved_fps")?,
+        });
+    }
+    let mut device_utilization = BTreeMap::new();
+    for row in j.arr_field("device_utilization")? {
+        let row = row.as_arr().ok_or_else(|| anyhow!("utilization row is not an array"))?;
+        ensure!(row.len() == 4, "utilization row has {} entries", row.len());
+        let inst = row[0].as_u64().ok_or_else(|| anyhow!("utilization instance index"))?;
+        let name = row[1].as_str().ok_or_else(|| anyhow!("utilization device name"))?;
+        let mean = row[2].as_f64().ok_or_else(|| anyhow!("utilization mean"))?;
+        let peak = row[3].as_f64().ok_or_else(|| anyhow!("utilization peak"))?;
+        device_utilization.insert((inst as usize, name.to_string()), (mean, peak));
+    }
+    Ok(SimReport {
+        streams,
+        device_utilization,
+        frames_completed: j.u64_field("frames_completed")?,
+        frames_dropped: j.u64_field("frames_dropped")?,
+        duration_s: j.f64_field("duration_s")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_problem() -> MvbpProblem {
+        MvbpProblem {
+            dims: 2,
+            bin_types: vec![BinType {
+                name: "big".into(),
+                cost: Dollars::from_f64(1.8),
+                capacity: ResourceVec::from_slice(&[8.0, 4.5]),
+            }],
+            items: vec![Item {
+                id: "s0".into(),
+                choices: vec![
+                    ResourceVec::from_slice(&[1.25, 0.0]),
+                    ResourceVec::from_slice(&[0.4, 2.0]),
+                ],
+            }],
+            choice_costs: vec![vec![Dollars::ZERO, Dollars::from_f64(0.01)]],
+        }
+    }
+
+    #[test]
+    fn hello_round_trips_and_rejects_other_versions() {
+        check_hello(&hello()).unwrap();
+        let stale = Json::obj(vec![
+            ("type".to_string(), Json::Str("hello".to_string())),
+            ("version".to_string(), Json::Num(999.0)),
+        ]);
+        assert!(check_hello(&stale).is_err());
+    }
+
+    #[test]
+    fn dollars_round_trip_including_the_sentinel() {
+        for d in [Dollars::ZERO, Dollars(123_456), Dollars(-42), Dollars(i64::MAX)] {
+            let j = dollars_to_json(d);
+            let text = j.to_compact();
+            let back = dollars_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, d);
+        }
+        assert_eq!(dollars_to_json(Dollars(i64::MAX)), Json::Null);
+    }
+
+    #[test]
+    fn problem_round_trips_bit_exactly() {
+        let problem = sample_problem();
+        let text = problem_to_json(&problem).to_compact();
+        let back = problem_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.dims, problem.dims);
+        assert_eq!(back.bin_types.len(), problem.bin_types.len());
+        assert_eq!(back.bin_types[0].cost, problem.bin_types[0].cost);
+        assert_eq!(back.bin_types[0].capacity.0, problem.bin_types[0].capacity.0);
+        assert_eq!(back.items[0].choices[1].0, problem.items[0].choices[1].0);
+        assert_eq!(back.choice_costs, problem.choice_costs);
+    }
+
+    #[test]
+    fn solution_round_trips() {
+        let solution = Solution {
+            bins: vec![PackedBin { bin_type: 0, assignments: vec![(0, 1), (2, 0)] }],
+        };
+        let text = solution_to_json(&solution).to_compact();
+        let back = solution_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, solution);
+    }
+
+    #[test]
+    fn invalid_decoded_problem_is_rejected() {
+        let mut j = problem_to_json(&sample_problem());
+        if let Json::Obj(map) = &mut j {
+            map.insert("dims".to_string(), Json::Num(7.0)); // capacity dims no longer match
+        }
+        assert!(problem_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! The worker side of the protocol: a sequential serve loop.
+//!
+//! A worker is stateless between requests — each accepted connection
+//! carries one hello exchange, one request, and one response, then
+//! closes.  Statelessness is what makes coordinator-side failure
+//! handling trivial: there is no session to resynchronize, so the
+//! coordinator can retire a worker at any point and re-run the shipped
+//! work locally with no cleanup protocol.
+//!
+//! The loop is deliberately sequential (one request at a time): a
+//! worker's unit of work is a whole subtree batch or simulation shard,
+//! which already saturates the machine, and the coordinator never has
+//! more than one request in flight per worker.  A request that fails —
+//! bad handshake, malformed payload, invalid task — is answered with
+//! an `error` message (when the stream still works) and logged; the
+//! loop itself never dies to a bad peer.
+
+use crate::net::frame::{recv_json, send_json};
+use crate::net::proto::{check_hello, hello, report_to_json, sim_config_from_json, sim_from_json};
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// A dead client must not wedge the serve loop.
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Knobs for [`serve`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOptions {
+    /// Exit the loop after this many accepted connections (every
+    /// connection counts, pings and failed handshakes included).
+    /// `None` serves forever.  Tests use small values to simulate a
+    /// worker dying mid-trace.
+    pub max_requests: Option<usize>,
+}
+
+/// Accept and answer requests until `options.max_requests` runs out
+/// (or forever).  Returns only on listener failure or request
+/// exhaustion — per-request errors are logged and survived.
+pub fn serve(listener: TcpListener, options: WorkerOptions) -> Result<()> {
+    let mut served = 0usize;
+    loop {
+        if options.max_requests.is_some_and(|max| served >= max) {
+            return Ok(());
+        }
+        let (mut stream, peer) = listener.accept()?;
+        served += 1;
+        if let Err(e) = handle(&mut stream) {
+            eprintln!("worker: request from {peer} failed: {e:#}");
+        }
+    }
+}
+
+/// Bind an ephemeral loopback port and serve it on a background
+/// thread.  Returns the address to hand to
+/// [`set_workers`](crate::net::fleet::set_workers) and the thread
+/// handle (which only finishes if `max_requests` is set).
+pub fn spawn_local(max_requests: Option<usize>) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback worker");
+    let addr = listener.local_addr().expect("loopback worker address").to_string();
+    let handle = std::thread::spawn(move || {
+        if let Err(e) = serve(listener, WorkerOptions { max_requests }) {
+            eprintln!("loopback worker exited: {e:#}");
+        }
+    });
+    (addr, handle)
+}
+
+fn error_response(e: &crate::util::error::Error) -> Json {
+    Json::obj(vec![
+        ("type".to_string(), Json::Str("error".to_string())),
+        ("message".to_string(), Json::Str(format!("{e:#}"))),
+    ])
+}
+
+fn handle(stream: &mut TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    stream.set_nodelay(true)?;
+    if let Err(e) = check_hello(&recv_json(stream)?) {
+        let _ = send_json(stream, &error_response(&e));
+        return Err(e);
+    }
+    send_json(stream, &hello())?;
+    let request = recv_json(stream)?;
+    match dispatch(&request) {
+        Ok(response) => send_json(stream, &response),
+        Err(e) => {
+            send_json(stream, &error_response(&e))?;
+            Err(e)
+        }
+    }
+}
+
+fn dispatch(request: &Json) -> Result<Json> {
+    match request.str_field("type")? {
+        "ping" => Ok(Json::obj(vec![("type".to_string(), Json::Str("pong".to_string()))])),
+        "exact" => crate::packing::exact::run_remote_exact(request),
+        "simulate" => {
+            let config = sim_config_from_json(request.field("config")?)?;
+            let mut sim = sim_from_json(request.field("sim")?)?;
+            let report = sim.run_engine(config);
+            Ok(Json::obj(vec![
+                ("type".to_string(), Json::Str("sim_result".to_string())),
+                ("report".to_string(), report_to_json(&report)),
+            ]))
+        }
+        other => Err(anyhow!("unknown request type {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::UtilizationMeter;
+    use crate::net::proto::{report_from_json, sim_config_to_json, sim_to_json};
+    use crate::sched::sim::{Device, StreamExec};
+    use crate::sched::{SimConfig, Simulation};
+    use std::collections::BTreeMap;
+
+    fn request(addr: &str, req: &Json) -> Result<Json> {
+        let mut stream = TcpStream::connect(addr)?;
+        send_json(&mut stream, &hello())?;
+        check_hello(&recv_json(&mut stream)?)?;
+        send_json(&mut stream, req)?;
+        recv_json(&mut stream)
+    }
+
+    fn tiny_sim() -> Simulation {
+        let mut device_index = BTreeMap::new();
+        device_index.insert((0, 0), 0);
+        Simulation {
+            devices: vec![Device { capacity: 4.0, meter: UtilizationMeter::new() }],
+            device_index,
+            device_names: vec![(0, "cpu".to_string())],
+            streams: vec![StreamExec {
+                instance: 0,
+                gpu_index: None,
+                desired_fps: 10.0,
+                cpu_work: 0.05,
+                gpu_work: 0.0,
+                cpu_parallelism: 1.0,
+                gpu_parallelism: 1.0,
+                id: "s0".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn loopback_worker_answers_ping_simulate_and_unknown() {
+        let (addr, _handle) = spawn_local(Some(4));
+
+        let ping = Json::obj(vec![("type".to_string(), Json::Str("ping".to_string()))]);
+        let pong = request(&addr, &ping).unwrap();
+        assert_eq!(pong.str_field("type").unwrap(), "pong");
+
+        // A remote simulate must produce exactly what run_engine does
+        // locally on the same shard.
+        let config = SimConfig::for_duration(2.0);
+        let mut local = tiny_sim();
+        let expected = local.run_engine(config);
+        let req = Json::obj(vec![
+            ("type".to_string(), Json::Str("simulate".to_string())),
+            ("config".to_string(), sim_config_to_json(&config)),
+            ("sim".to_string(), sim_to_json(&tiny_sim())),
+        ]);
+        let reply = request(&addr, &req).unwrap();
+        assert_eq!(reply.str_field("type").unwrap(), "sim_result");
+        let report = report_from_json(reply.field("report").unwrap()).unwrap();
+        assert_eq!(report.streams.len(), 1);
+        assert_eq!(report.streams[0].achieved_fps, expected.streams[0].achieved_fps);
+        assert_eq!(report.frames_completed, expected.frames_completed);
+        assert_eq!(report.frames_dropped, expected.frames_dropped);
+
+        // Unknown request types are answered with an error, and the
+        // loop survives to answer the next connection.
+        let bogus = Json::obj(vec![("type".to_string(), Json::Str("nonsense".to_string()))]);
+        let reply = request(&addr, &bogus).unwrap();
+        assert_eq!(reply.str_field("type").unwrap(), "error");
+        let pong = request(&addr, &ping).unwrap();
+        assert_eq!(pong.str_field("type").unwrap(), "pong");
+    }
+
+    #[test]
+    fn worker_dies_after_max_requests() {
+        let (addr, handle) = spawn_local(Some(1));
+        let ping = Json::obj(vec![("type".to_string(), Json::Str("ping".to_string()))]);
+        request(&addr, &ping).unwrap();
+        // The serve loop has exhausted its budget; the thread joins
+        // and the port stops answering.
+        handle.join().unwrap();
+        assert!(request(&addr, &ping).is_err());
+    }
+}

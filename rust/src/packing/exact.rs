@@ -89,11 +89,19 @@
 use super::aggregate::{self, ItemClass};
 use super::heuristics::solve_best_fit;
 use super::problem::{MvbpProblem, PackedBin, Solution};
-use super::solver::race_tasks;
+use super::solver::{race_chunks_remote, race_tasks};
+use crate::net::fleet::Fleet;
+use crate::net::proto::{
+    dollars_from_json, dollars_to_json, problem_from_json, problem_to_json, resources_from_json,
+    resources_to_json, solution_from_json, solution_to_json,
+};
 use crate::types::{Dollars, ResourceVec};
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
 use crate::util::profiling;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Result of an exact solve, with optimality metadata.
 #[derive(Clone, Debug)]
@@ -428,6 +436,44 @@ fn relaxed_req(problem: &MvbpProblem, item: usize) -> ResourceVec {
     )
 }
 
+/// Item indices in search order: hardest first, by decreasing
+/// "best-case fullness" — min over choices of the max capacity ratio vs
+/// the roomiest bin.  Factored out of the solve so a remote worker
+/// ([`run_remote_exact`]) re-derives the *bit-identical* ordering from
+/// the shipped problem: subtree tasks reference positions in this
+/// order, so coordinator and worker must agree on it exactly.
+fn item_search_order(problem: &MvbpProblem) -> Vec<usize> {
+    let roomiest = roomiest_capacity(problem);
+    let mut order: Vec<usize> = (0..problem.items.len()).collect();
+    let hardness = |i: usize| -> f64 {
+        problem.items[i]
+            .choices
+            .iter()
+            .map(|c| c.max_ratio(&roomiest))
+            .fold(f64::INFINITY, f64::min)
+    };
+    // total_cmp for the same reason as `Decreasing::order`: never
+    // panic mid-sort, even on inputs validate would reject.
+    order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
+    order
+}
+
+/// Classes in search order: hardest representative first — the
+/// class-level analogue of [`item_search_order`] (ties keep
+/// first-occurrence order: `sort_by` is stable).  Factored out for the
+/// same reason: remote workers must re-derive the identical order.
+fn sort_classes(problem: &MvbpProblem, classes: &mut [ItemClass]) {
+    let roomiest = roomiest_capacity(problem);
+    let hardness = |rep: usize| -> f64 {
+        problem.items[rep]
+            .choices
+            .iter()
+            .map(|c| c.max_ratio(&roomiest))
+            .fold(f64::INFINITY, f64::min)
+    };
+    classes.sort_by(|a, b| hardness(b.rep).total_cmp(&hardness(a.rep)));
+}
+
 impl BranchAndBound {
     /// Solve to proven optimality (within the node budget), seeding the
     /// search with a fresh best-fit-decreasing incumbent.
@@ -506,20 +552,7 @@ impl BranchAndBound {
         problem: &MvbpProblem,
         incumbent: Option<Solution>,
     ) -> Option<ExactResult> {
-        // Hardest-first ordering: by decreasing "best-case fullness" —
-        // min over choices of the max capacity ratio vs the roomiest bin.
-        let roomiest = roomiest_capacity(problem);
-        let mut order: Vec<usize> = (0..problem.items.len()).collect();
-        let hardness = |i: usize| -> f64 {
-            problem.items[i]
-                .choices
-                .iter()
-                .map(|c| c.max_ratio(&roomiest))
-                .fold(f64::INFINITY, f64::min)
-        };
-        // total_cmp for the same reason as `Decreasing::order`: never
-        // panic mid-sort, even on inputs validate would reject.
-        order.sort_by(|&a, &b| hardness(b).total_cmp(&hardness(a)));
+        let order = item_search_order(problem);
 
         let bounds = BoundCtx::for_items(problem, &order);
         let best_cost = incumbent
@@ -527,9 +560,15 @@ impl BranchAndBound {
             .map(|s| s.cost(problem))
             .unwrap_or(Dollars(i64::MAX));
 
+        // A registered worker fleet routes through the multi-root path
+        // even at one local thread — the frontier tasks are the unit of
+        // distribution.
         let threads = self.effective_threads();
-        if threads > 1 {
-            return self.solve_item_parallel(problem, &order, &bounds, incumbent, best_cost, threads);
+        let fleet = crate::net::fleet::active();
+        if threads > 1 || fleet.is_some() {
+            return self.solve_item_parallel(
+                problem, &order, &bounds, incumbent, best_cost, threads, fleet,
+            );
         }
 
         let mut ctx = SearchCtx {
@@ -556,6 +595,7 @@ impl BranchAndBound {
     /// Multi-root parallel per-item search: expand the root frontier
     /// sequentially, then race the subtree tasks on the portfolio's
     /// worker pool under a shared incumbent (see module docs).
+    #[allow(clippy::too_many_arguments)]
     fn solve_item_parallel(
         &self,
         problem: &MvbpProblem,
@@ -564,6 +604,7 @@ impl BranchAndBound {
         incumbent: Option<Solution>,
         seed_cost: Dollars,
         threads: usize,
+        fleet: Option<Arc<Fleet>>,
     ) -> Option<ExactResult> {
         // Phase 1: level-synchronous frontier expansion.  Prunes only
         // against the immutable seed cost — tightening here would prune
@@ -580,7 +621,12 @@ impl BranchAndBound {
         };
         let mut entries: Vec<ItemEntry> =
             vec![ItemEntry::Task(ItemTask { k: 0, cost: Dollars::ZERO, open: Vec::new() })];
-        let target = (threads * FRONTIER_FACTOR).min(FRONTIER_MAX_TASKS);
+        // Each fleet worker digests chunks of tasks, so it widens the
+        // frontier target like several local threads would.  Frontier
+        // *shape* is already non-contractual (it varies with `threads`
+        // too); the winner fold is what keeps proofs bit-identical.
+        let fan_out = threads + fleet.as_ref().map_or(0, |f| f.live_count() * FRONTIER_FACTOR);
+        let target = (fan_out * FRONTIER_FACTOR).min(FRONTIER_MAX_TASKS);
         for _ in 0..FRONTIER_MAX_ROUNDS {
             let tasks = entries.iter().filter(|e| matches!(e, ItemEntry::Task(_))).count();
             if tasks == 0 || tasks >= target || ctx.acct.exhausted {
@@ -632,37 +678,55 @@ impl BranchAndBound {
             });
         }
 
-        // Phase 2: subtree workers under the shared incumbent.
+        // Phase 2: subtree workers under the shared incumbent — local
+        // threads plus, with a fleet, one dispatcher per live worker
+        // shipping task chunks over the wire.
         let shared = SharedSearch::new(seed_cost, expansion_nodes);
         let node_budget = self.node_budget;
         let deadline = self.deadline;
         let entries_ref = &entries;
         let shared_ref = &shared;
-        let mut results = race_tasks(
+        let run_local = |i: usize| {
+            let task = match &entries_ref[task_ids[i]] {
+                ItemEntry::Task(task) => task,
+                ItemEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
+            };
+            let mut wctx = SearchCtx {
+                problem,
+                order,
+                bounds,
+                best_cost: seed_cost,
+                best: None,
+                acct: Accounting::new(node_budget, deadline, Some(shared_ref)),
+                spill_depth: usize::MAX,
+                spill: Vec::new(),
+            };
+            let mut open = task.open.clone();
+            dfs(&mut wctx, task.k, task.cost, &mut open);
+            wctx.acct.flush_remainder();
+            wctx.best.map(|solution| (wctx.best_cost, solution))
+        };
+        let serialize_tasks = || {
+            task_ids
+                .iter()
+                .map(|&id| match &entries_ref[id] {
+                    ItemEntry::Task(task) => item_task_to_json(task),
+                    ItemEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
+                })
+                .collect()
+        };
+        let mut results = race_frontier(
+            fleet.as_deref(),
             threads,
             task_ids.len(),
-            None, // no shedding: every subtree must run for the proof
-            |_| 0,
-            |i| {
-                let task = match &entries_ref[task_ids[i]] {
-                    ItemEntry::Task(task) => task,
-                    ItemEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
-                };
-                let mut wctx = SearchCtx {
-                    problem,
-                    order,
-                    bounds,
-                    best_cost: seed_cost,
-                    best: None,
-                    acct: Accounting::new(node_budget, deadline, Some(shared_ref)),
-                    spill_depth: usize::MAX,
-                    spill: Vec::new(),
-                };
-                let mut open = task.open.clone();
-                dfs(&mut wctx, task.k, task.cost, &mut open);
-                wctx.acct.flush_remainder();
-                wctx.best.map(|solution| (wctx.best_cost, solution))
-            },
+            "item",
+            seed_cost,
+            node_budget,
+            deadline,
+            problem,
+            shared_ref,
+            serialize_tasks,
+            run_local,
         );
 
         // Deterministic winner: cheapest cost, then lowest frontier
@@ -698,18 +762,7 @@ impl BranchAndBound {
         mut classes: Vec<ItemClass>,
         incumbent: Option<Solution>,
     ) -> Option<ExactResult> {
-        // Hardest representative first — the class-level analogue of
-        // the per-item ordering (ties keep first-occurrence order:
-        // sort_by is stable).
-        let roomiest = roomiest_capacity(problem);
-        let hardness = |rep: usize| -> f64 {
-            problem.items[rep]
-                .choices
-                .iter()
-                .map(|c| c.max_ratio(&roomiest))
-                .fold(f64::INFINITY, f64::min)
-        };
-        classes.sort_by(|a, b| hardness(b.rep).total_cmp(&hardness(a.rep)));
+        sort_classes(problem, &mut classes);
 
         let bounds = BoundCtx::for_classes(problem, &classes);
         let best_cost = incumbent
@@ -717,9 +770,14 @@ impl BranchAndBound {
             .map(|s| s.cost(problem))
             .unwrap_or(Dollars(i64::MAX));
 
+        // A registered worker fleet routes through the multi-root path
+        // even at one local thread, exactly like the per-item search.
         let threads = self.effective_threads();
-        if threads > 1 {
-            return self.solve_class_parallel(problem, &classes, &bounds, incumbent, best_cost, threads);
+        let fleet = crate::net::fleet::active();
+        if threads > 1 || fleet.is_some() {
+            return self.solve_class_parallel(
+                problem, &classes, &bounds, incumbent, best_cost, threads, fleet,
+            );
         }
 
         let first_count = classes[0].count() as u32;
@@ -746,6 +804,7 @@ impl BranchAndBound {
 
     /// Multi-root parallel class search — the class-mode twin of
     /// [`BranchAndBound::solve_item_parallel`].
+    #[allow(clippy::too_many_arguments)]
     fn solve_class_parallel(
         &self,
         problem: &MvbpProblem,
@@ -754,6 +813,7 @@ impl BranchAndBound {
         incumbent: Option<Solution>,
         seed_cost: Dollars,
         threads: usize,
+        fleet: Option<Arc<Fleet>>,
     ) -> Option<ExactResult> {
         // Phase 1: frontier expansion, pruning only against the seed.
         // Each round expands every task exactly one level (class-mode
@@ -778,7 +838,12 @@ impl BranchAndBound {
             last_fresh: None,
         };
         let mut entries: Vec<ClassEntry> = vec![ClassEntry::Task(root)];
-        let target = (threads * FRONTIER_FACTOR).min(FRONTIER_MAX_TASKS);
+        // Each fleet worker digests chunks of tasks, so it widens the
+        // frontier target like several local threads would.  Frontier
+        // *shape* is already non-contractual (it varies with `threads`
+        // too); the winner fold is what keeps proofs bit-identical.
+        let fan_out = threads + fleet.as_ref().map_or(0, |f| f.live_count() * FRONTIER_FACTOR);
+        let target = (fan_out * FRONTIER_FACTOR).min(FRONTIER_MAX_TASKS);
         for _ in 0..FRONTIER_MAX_ROUNDS {
             let tasks = entries.iter().filter(|e| matches!(e, ClassEntry::Task(_))).count();
             if tasks == 0 || tasks >= target || ctx.acct.exhausted {
@@ -836,46 +901,64 @@ impl BranchAndBound {
             });
         }
 
-        // Phase 2: subtree workers under the shared incumbent.
+        // Phase 2: subtree workers under the shared incumbent — local
+        // threads plus, with a fleet, one dispatcher per live worker
+        // shipping task chunks over the wire.
         let shared = SharedSearch::new(seed_cost, expansion_nodes);
         let node_budget = self.node_budget;
         let deadline = self.deadline;
         let entries_ref = &entries;
         let shared_ref = &shared;
-        let mut results = race_tasks(
+        let run_local = |i: usize| {
+            let task = match &entries_ref[task_ids[i]] {
+                ClassEntry::Task(task) => task,
+                ClassEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
+            };
+            let mut wctx = ClassCtx {
+                problem,
+                classes,
+                bounds,
+                best_cost: seed_cost,
+                best: None,
+                acct: Accounting::new(node_budget, deadline, Some(shared_ref)),
+                spill_depth: usize::MAX,
+                spill: Vec::new(),
+            };
+            let mut bins = task.bins.clone();
+            distribute(
+                &mut wctx,
+                task.ci,
+                task.remaining,
+                task.cost,
+                &mut bins,
+                task.from,
+                task.last_fresh,
+                0,
+            );
+            wctx.acct.flush_remainder();
+            wctx.best.map(|solution| (wctx.best_cost, solution))
+        };
+        let serialize_tasks = || {
+            task_ids
+                .iter()
+                .map(|&id| match &entries_ref[id] {
+                    ClassEntry::Task(task) => class_task_to_json(task),
+                    ClassEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
+                })
+                .collect()
+        };
+        let mut results = race_frontier(
+            fleet.as_deref(),
             threads,
             task_ids.len(),
-            None, // no shedding: every subtree must run for the proof
-            |_| 0,
-            |i| {
-                let task = match &entries_ref[task_ids[i]] {
-                    ClassEntry::Task(task) => task,
-                    ClassEntry::Leaf { .. } => unreachable!("task_ids index only Task entries"),
-                };
-                let mut wctx = ClassCtx {
-                    problem,
-                    classes,
-                    bounds,
-                    best_cost: seed_cost,
-                    best: None,
-                    acct: Accounting::new(node_budget, deadline, Some(shared_ref)),
-                    spill_depth: usize::MAX,
-                    spill: Vec::new(),
-                };
-                let mut bins = task.bins.clone();
-                distribute(
-                    &mut wctx,
-                    task.ci,
-                    task.remaining,
-                    task.cost,
-                    &mut bins,
-                    task.from,
-                    task.last_fresh,
-                    0,
-                );
-                wctx.acct.flush_remainder();
-                wctx.best.map(|solution| (wctx.best_cost, solution))
-            },
+            "class",
+            seed_cost,
+            node_budget,
+            deadline,
+            problem,
+            shared_ref,
+            serialize_tasks,
+            run_local,
         );
 
         let mut cursor = 0;
@@ -919,6 +1002,430 @@ fn compose_winner(
         }
     }
     (best_cost, best)
+}
+
+/// Phase-2 task racing with optional fleet distribution.  Without a
+/// fleet (or with every worker already dead) this is *exactly* the
+/// pre-existing local pool — `race_tasks` with no shedding.  With a
+/// fleet, `race_chunks_remote` adds one dispatcher thread per live
+/// worker: each claimed chunk is shipped as one `exact` request
+/// carrying the problem, the serialized subtree tasks, and the global
+/// incumbent at request-build time (improvement broadcast at chunk
+/// granularity — the shared incumbent only ever sheds strictly
+/// costlier subtrees, so a staler value merely prunes less).  A worker
+/// failure or malformed reply re-runs the chunk through `run_local`,
+/// and the winner fold upstream is order-strict, so outcomes are
+/// bit-identical for any worker count, deaths included.
+#[allow(clippy::too_many_arguments)]
+fn race_frontier(
+    fleet: Option<&Fleet>,
+    threads: usize,
+    count: usize,
+    mode: &str,
+    seed_cost: Dollars,
+    node_budget: u64,
+    deadline: Option<Instant>,
+    problem: &MvbpProblem,
+    shared: &SharedSearch,
+    serialize_tasks: impl FnOnce() -> Vec<Json>,
+    run_local: impl Fn(usize) -> Option<(Dollars, Solution)> + Sync,
+) -> Vec<Option<(Dollars, Solution)>> {
+    let live = fleet.map(|f| f.live_indices()).unwrap_or_default();
+    if live.is_empty() {
+        return race_tasks(
+            threads,
+            count,
+            None, // no shedding: every subtree must run for the proof
+            |_| 0,
+            run_local,
+        );
+    }
+    let fleet = fleet.expect("live workers imply a fleet");
+    let (problem_json, tasks): (Json, Vec<Json>) =
+        profiling::time_phase("net:serialize", || (problem_to_json(problem), serialize_tasks()));
+    // Chunks of ~count/(4 x workers): big enough to amortize a round
+    // trip, small enough to rebalance when subtree sizes skew.
+    let chunk = count.div_ceil(live.len() * FRONTIER_FACTOR).max(1);
+    race_chunks_remote(
+        live.len(),
+        threads,
+        count,
+        chunk,
+        |w, range| {
+            // Once the shared budget is exhausted a worker can only add
+            // redundant exploration (each request carries the full
+            // budget so completed proofs stay worker-count-invariant).
+            // Returning `None` downshifts this dispatcher to local
+            // claims — near-free once `stop` is set — without retiring
+            // the worker from the fleet.
+            if shared.stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            let request = Json::obj(vec![
+                ("type".to_string(), Json::Str("exact".to_string())),
+                ("mode".to_string(), Json::Str(mode.to_string())),
+                ("seed_cost".to_string(), dollars_to_json(seed_cost)),
+                ("incumbent".to_string(), Json::Num(shared.best())),
+                // Budgets beyond 2^53 nodes are unreachable wall-clock
+                // fiction; clamping keeps the JSON number exact.
+                (
+                    "node_budget".to_string(),
+                    Json::Num(node_budget.min(1 << 53) as f64),
+                ),
+                (
+                    "time_left_ms".to_string(),
+                    match deadline {
+                        Some(d) => Json::Num(
+                            d.saturating_duration_since(Instant::now()).as_millis() as f64,
+                        ),
+                        None => Json::Null,
+                    },
+                ),
+                ("problem".to_string(), problem_json.clone()),
+                ("tasks".to_string(), Json::arr(tasks[range.clone()].iter().cloned())),
+            ]);
+            let reply = fleet.rpc(live[w], &request)?;
+            match profiling::time_phase("net:merge", || {
+                merge_exact_reply(&reply, problem, shared, range.len())
+            }) {
+                Ok(results) => Some(results),
+                Err(e) => {
+                    fleet.mark_dead(live[w], &format!("bad exact reply: {e:#}"));
+                    None
+                }
+            }
+        },
+        run_local,
+    )
+}
+
+/// Decode and validate a worker's `exact_result` reply.  Shared state
+/// (incumbent, node count, stop flag) is touched only after the whole
+/// reply validates: a malformed reply must leave no trace, because its
+/// chunk is re-run locally as if the worker never existed.
+fn merge_exact_reply(
+    reply: &Json,
+    problem: &MvbpProblem,
+    shared: &SharedSearch,
+    expected: usize,
+) -> Result<Vec<Option<(Dollars, Solution)>>> {
+    let kind = reply.str_field("type")?;
+    ensure!(kind == "exact_result", "expected exact_result, got {kind:?}");
+    let nodes = reply.u64_field("nodes")?;
+    let exhausted = reply
+        .field("exhausted")?
+        .as_bool()
+        .ok_or_else(|| anyhow!("exhausted is not a bool"))?;
+    let candidates = reply.arr_field("candidates")?;
+    ensure!(
+        candidates.len() == expected,
+        "worker answered {} candidates for {expected} tasks",
+        candidates.len()
+    );
+    let mut out = Vec::with_capacity(expected);
+    for c in candidates {
+        match c {
+            Json::Null => out.push(None),
+            s => {
+                let solution = solution_from_json(s)?;
+                solution
+                    .validate(problem)
+                    .map_err(|e| anyhow!("worker solution invalid: {e:#}"))?;
+                // Recompute the cost locally: both sides sum the same
+                // whole micro-dollar bin + choice costs, so this equals
+                // the worker's running cost exactly — and a corrupt
+                // reply cannot smuggle in a mispriced candidate.
+                let cost = solution.cost(problem);
+                out.push(Some((cost, solution)));
+            }
+        }
+    }
+    for (cost, _) in out.iter().flatten() {
+        shared.relax(*cost);
+    }
+    shared.nodes.fetch_add(nodes, Ordering::Relaxed);
+    if exhausted {
+        shared.stop.store(true, Ordering::Relaxed);
+    }
+    Ok(out)
+}
+
+fn open_bin_to_json(bin: &OpenBin) -> Json {
+    Json::obj(vec![
+        ("t".to_string(), Json::Num(bin.bin_type as f64)),
+        ("r".to_string(), resources_to_json(&bin.residual)),
+        (
+            "a".to_string(),
+            Json::arr(bin.assignments.iter().map(|&(item, choice)| {
+                Json::arr(vec![Json::Num(item as f64), Json::Num(choice as f64)])
+            })),
+        ),
+    ])
+}
+
+/// Serialize a per-item subtree task.  The DFS state ships verbatim —
+/// residual capacities are `f64`s, which `util::json` round-trips
+/// bit-exactly, so the worker resumes the identical search state.
+fn item_task_to_json(task: &ItemTask) -> Json {
+    Json::obj(vec![
+        ("k".to_string(), Json::Num(task.k as f64)),
+        ("cost".to_string(), dollars_to_json(task.cost)),
+        ("open".to_string(), Json::arr(task.open.iter().map(open_bin_to_json))),
+    ])
+}
+
+/// Decode a per-item subtree task, bounds-checking every index: the
+/// search assumes well-formed state, and a worker must answer a
+/// corrupt task with an error, never a panic (one worker process
+/// serves many requests).
+fn item_task_from_json(j: &Json, problem: &MvbpProblem, n_positions: usize) -> Result<ItemTask> {
+    let k = j.u64_field("k")? as usize;
+    ensure!(k <= n_positions, "task depth {k} past the {n_positions} search positions");
+    let cost = dollars_from_json(j.field("cost")?)?;
+    let mut open = Vec::new();
+    for bin in j.arr_field("open")? {
+        let bin_type = bin.u64_field("t")? as usize;
+        ensure!(bin_type < problem.bin_types.len(), "open-bin type {bin_type} out of range");
+        let residual = resources_from_json(bin.field("r")?, problem.dims)?;
+        let mut assignments = Vec::new();
+        for pair in bin.arr_field("a")? {
+            let pair = pair.as_arr().ok_or_else(|| anyhow!("assignment is not a pair"))?;
+            ensure!(pair.len() == 2, "assignment pair has {} entries", pair.len());
+            let item = pair[0].as_u64().ok_or_else(|| anyhow!("assignment item index"))? as usize;
+            let choice =
+                pair[1].as_u64().ok_or_else(|| anyhow!("assignment choice index"))? as usize;
+            ensure!(item < problem.items.len(), "assigned item {item} out of range");
+            ensure!(
+                choice < problem.items[item].choices.len(),
+                "choice {choice} out of range for item {item}"
+            );
+            assignments.push((item, choice));
+        }
+        open.push(OpenBin { bin_type, residual, assignments });
+    }
+    Ok(ItemTask { k, cost, open })
+}
+
+/// Serialize a class-mode subtree task (the `distribute` state at its
+/// root: class cursor, unplaced copies, bins with `(class, choice,
+/// copies)` runs, placement cursor, fresh-open key).
+fn class_task_to_json(task: &ClassTask) -> Json {
+    Json::obj(vec![
+        ("ci".to_string(), Json::Num(task.ci as f64)),
+        ("rem".to_string(), Json::Num(task.remaining as f64)),
+        ("cost".to_string(), dollars_to_json(task.cost)),
+        (
+            "bins".to_string(),
+            Json::arr(task.bins.iter().map(|bin| {
+                Json::obj(vec![
+                    ("t".to_string(), Json::Num(bin.bin_type as f64)),
+                    ("r".to_string(), resources_to_json(&bin.residual)),
+                    (
+                        "e".to_string(),
+                        Json::arr(bin.entries.iter().map(|&(ci, c, copies)| {
+                            Json::arr(vec![
+                                Json::Num(ci as f64),
+                                Json::Num(c as f64),
+                                Json::Num(copies as f64),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+        (
+            "from".to_string(),
+            Json::arr(vec![Json::Num(task.from.0 as f64), Json::Num(task.from.1 as f64)]),
+        ),
+        (
+            "lf".to_string(),
+            match task.last_fresh {
+                None => Json::Null,
+                Some((t, c, copies)) => Json::arr(vec![
+                    Json::Num(t as f64),
+                    Json::Num(c as f64),
+                    Json::Num(copies as f64),
+                ]),
+            },
+        ),
+    ])
+}
+
+/// Decode a class-mode subtree task.  Beyond per-index bounds checks,
+/// this enforces the placement invariant `record_class_leaf` indexes
+/// class members by: classes before `ci` fully placed, `ci` missing
+/// exactly `remaining` copies, later classes untouched — so a corrupt
+/// task cannot drive the member-slicing past a class's member list.
+fn class_task_from_json(
+    j: &Json,
+    problem: &MvbpProblem,
+    classes: &[ItemClass],
+) -> Result<ClassTask> {
+    let ci = j.u64_field("ci")? as usize;
+    ensure!(ci < classes.len(), "task class {ci} out of range");
+    let remaining = u32::try_from(j.u64_field("rem")?)
+        .map_err(|_| anyhow!("remaining copy count overflows"))?;
+    let cost = dollars_from_json(j.field("cost")?)?;
+    let mut placed = vec![0usize; classes.len()];
+    let mut bins = Vec::new();
+    for bin in j.arr_field("bins")? {
+        let bin_type = bin.u64_field("t")? as usize;
+        ensure!(bin_type < problem.bin_types.len(), "class-bin type {bin_type} out of range");
+        let residual = resources_from_json(bin.field("r")?, problem.dims)?;
+        let mut entries = Vec::new();
+        for row in bin.arr_field("e")? {
+            let row = row.as_arr().ok_or_else(|| anyhow!("bin entry is not a triple"))?;
+            ensure!(row.len() == 3, "bin entry has {} fields", row.len());
+            let eci = row[0].as_u64().ok_or_else(|| anyhow!("entry class index"))? as usize;
+            let choice = row[1].as_u64().ok_or_else(|| anyhow!("entry choice index"))? as usize;
+            let copies = u32::try_from(
+                row[2].as_u64().ok_or_else(|| anyhow!("entry copy count"))?,
+            )
+            .map_err(|_| anyhow!("entry copy count overflows"))?;
+            ensure!(eci < classes.len(), "entry class {eci} out of range");
+            ensure!(
+                choice < problem.items[classes[eci].rep].choices.len(),
+                "entry choice {choice} out of range for class {eci}"
+            );
+            placed[eci] += copies as usize;
+            entries.push((eci, choice, copies));
+        }
+        bins.push(ClassBin { bin_type, residual, entries });
+    }
+    for (c, class) in classes.iter().enumerate() {
+        let expect = match c.cmp(&ci) {
+            std::cmp::Ordering::Less => class.count(),
+            std::cmp::Ordering::Equal => class
+                .count()
+                .checked_sub(remaining as usize)
+                .ok_or_else(|| anyhow!("remaining exceeds class {c}'s size"))?,
+            std::cmp::Ordering::Greater => 0,
+        };
+        ensure!(
+            placed[c] == expect,
+            "class {c} has {} copies placed, expected {expect}",
+            placed[c]
+        );
+    }
+    let from_arr = j.arr_field("from")?;
+    ensure!(from_arr.len() == 2, "placement cursor has {} fields", from_arr.len());
+    let from = (
+        from_arr[0].as_u64().ok_or_else(|| anyhow!("cursor bin index"))? as usize,
+        from_arr[1].as_u64().ok_or_else(|| anyhow!("cursor choice index"))? as usize,
+    );
+    ensure!(from.0 <= bins.len(), "cursor bin {} past the {} bins", from.0, bins.len());
+    let last_fresh = match j.field("lf")? {
+        Json::Null => None,
+        arr => {
+            let row = arr.as_arr().ok_or_else(|| anyhow!("fresh-open key is not a triple"))?;
+            ensure!(row.len() == 3, "fresh-open key has {} fields", row.len());
+            Some((
+                row[0].as_u64().ok_or_else(|| anyhow!("fresh-open type"))? as usize,
+                row[1].as_u64().ok_or_else(|| anyhow!("fresh-open choice"))? as usize,
+                u32::try_from(row[2].as_u64().ok_or_else(|| anyhow!("fresh-open count"))?)
+                    .map_err(|_| anyhow!("fresh-open count overflows"))?,
+            ))
+        }
+    };
+    Ok(ClassTask { ci, remaining, cost, bins, from, last_fresh })
+}
+
+/// Worker-side execution of one `exact` request: decode the problem,
+/// re-derive the search order (bit-identical to the coordinator's —
+/// [`item_search_order`] / [`sort_classes`] are shared code paths),
+/// validate and run each shipped subtree task sequentially under the
+/// request's seed + incumbent, and answer with one candidate per task.
+///
+/// Malformed requests return `Err` — the serve loop answers with an
+/// `error` message and survives; a worker must never panic on a bad
+/// payload.
+pub(crate) fn run_remote_exact(request: &Json) -> Result<Json> {
+    let problem = problem_from_json(request.field("problem")?)?;
+    let seed_cost = dollars_from_json(request.field("seed_cost")?)?;
+    let incumbent = request.f64_field("incumbent")?;
+    let node_budget = request.u64_field("node_budget")?;
+    let deadline = match request.field("time_left_ms")? {
+        Json::Null => None,
+        ms => {
+            let ms = ms.as_u64().ok_or_else(|| anyhow!("time_left_ms is not a count"))?;
+            Some(Instant::now() + Duration::from_millis(ms))
+        }
+    };
+    // Worker-local shared state: the request's incumbent seeds the
+    // prune bound, node budget and stop flag bind across this
+    // request's tasks (the budget is global only approximately — the
+    // same non-contract as local `nodes_explored` at threads > 1).
+    let shared = SharedSearch::new(seed_cost, 0);
+    shared.best_bits.fetch_min(incumbent.to_bits(), Ordering::Relaxed);
+
+    let tasks = request.arr_field("tasks")?;
+    let mut candidates = Vec::with_capacity(tasks.len());
+    match request.str_field("mode")? {
+        "item" => {
+            let order = item_search_order(&problem);
+            let bounds = BoundCtx::for_items(&problem, &order);
+            for t in tasks {
+                let task = item_task_from_json(t, &problem, order.len())?;
+                let mut wctx = SearchCtx {
+                    problem: &problem,
+                    order: &order,
+                    bounds: &bounds,
+                    best_cost: seed_cost,
+                    best: None,
+                    acct: Accounting::new(node_budget, deadline, Some(&shared)),
+                    spill_depth: usize::MAX,
+                    spill: Vec::new(),
+                };
+                let mut open = task.open;
+                dfs(&mut wctx, task.k, task.cost, &mut open);
+                wctx.acct.flush_remainder();
+                candidates
+                    .push(wctx.best.map(|s| solution_to_json(&s)).unwrap_or(Json::Null));
+            }
+        }
+        "class" => {
+            let mut classes =
+                aggregate::group_classes_capped(&problem, problem.items.len() / 2).ok_or_else(
+                    || anyhow!("class-mode request on a problem where aggregation does not engage"),
+                )?;
+            sort_classes(&problem, &mut classes);
+            let bounds = BoundCtx::for_classes(&problem, &classes);
+            for t in tasks {
+                let task = class_task_from_json(t, &problem, &classes)?;
+                let mut wctx = ClassCtx {
+                    problem: &problem,
+                    classes: &classes,
+                    bounds: &bounds,
+                    best_cost: seed_cost,
+                    best: None,
+                    acct: Accounting::new(node_budget, deadline, Some(&shared)),
+                    spill_depth: usize::MAX,
+                    spill: Vec::new(),
+                };
+                let mut bins = task.bins;
+                distribute(
+                    &mut wctx,
+                    task.ci,
+                    task.remaining,
+                    task.cost,
+                    &mut bins,
+                    task.from,
+                    task.last_fresh,
+                    0,
+                );
+                wctx.acct.flush_remainder();
+                candidates
+                    .push(wctx.best.map(|s| solution_to_json(&s)).unwrap_or(Json::Null));
+            }
+        }
+        other => return Err(anyhow!("unknown exact mode {other:?}")),
+    }
+    Ok(Json::obj(vec![
+        ("type".to_string(), Json::Str("exact_result".to_string())),
+        ("nodes".to_string(), Json::Num(shared.nodes.load(Ordering::Relaxed) as f64)),
+        ("exhausted".to_string(), Json::Bool(shared.stop.load(Ordering::Relaxed))),
+        ("candidates".to_string(), Json::arr(candidates)),
+    ]))
 }
 
 /// Cost lower bound for the remaining items `order[k..]` given open-bin

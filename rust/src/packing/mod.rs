@@ -112,3 +112,21 @@ impl std::fmt::Display for SolverKind {
         f.write_str(s)
     }
 }
+
+impl std::str::FromStr for SolverKind {
+    type Err = String;
+
+    /// Inverse of `Display` — plans round-trip through JSON (solve
+    /// cache persistence, wire protocol) by these exact names.
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "exact-bb" => Ok(SolverKind::Exact),
+            "ffd" => Ok(SolverKind::FirstFit),
+            "bfd" => Ok(SolverKind::BestFit),
+            "arcflow-1d" => Ok(SolverKind::ArcFlow1D),
+            "portfolio" => Ok(SolverKind::Portfolio),
+            "warm-start" => Ok(SolverKind::WarmStart),
+            other => Err(format!("unknown solver kind {other:?}")),
+        }
+    }
+}

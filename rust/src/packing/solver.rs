@@ -515,6 +515,83 @@ pub(crate) fn race_tasks<T: Send>(
         .collect()
 }
 
+/// [`race_tasks`]' remote sibling: the same claim-from-a-cursor pool,
+/// extended with `remote_workers` dispatcher threads that claim
+/// *chunks* of `chunk_size` consecutive tasks and ship each chunk to a
+/// fleet worker (`remote(w, range)`), while `local_threads` threads
+/// claim single tasks and run them in-process (`local(i)`).
+///
+/// The degradation contract is what makes workers safe to race: a
+/// dispatcher whose `remote` call fails (worker died, timed out, or
+/// replied malformed — anything but a full-length result vector) runs
+/// every task of the claimed chunk through `local` itself and then
+/// downshifts to single-task local claims, so every task always
+/// produces exactly the result the pure-local pool would have produced
+/// for it.  Task *results* never depend on who computed them — workers
+/// execute the identical search the local closure runs — so the
+/// caller's order-strict fold sees the same candidates regardless of
+/// worker count or worker deaths.
+pub(crate) fn race_chunks_remote<T: Send>(
+    remote_workers: usize,
+    local_threads: usize,
+    count: usize,
+    chunk_size: usize,
+    remote: impl Fn(usize, std::ops::Range<usize>) -> Option<Vec<Option<T>>> + Sync,
+    local: impl Fn(usize) -> Option<T> + Sync,
+) -> Vec<Option<T>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let chunk_size = chunk_size.max(1);
+    // Progress must never depend on the fleet: with no dispatchers
+    // there must be at least one local thread.
+    let local_threads = if remote_workers == 0 { local_threads.max(1) } else { local_threads };
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    let (cursor_ref, slots_ref, remote_ref, local_ref) = (&cursor, &slots, &remote, &local);
+    std::thread::scope(|scope| {
+        for w in 0..remote_workers {
+            scope.spawn(move || {
+                let mut alive = true;
+                loop {
+                    let step = if alive { chunk_size } else { 1 };
+                    let start = cursor_ref.fetch_add(step, Ordering::Relaxed);
+                    if start >= count {
+                        break;
+                    }
+                    let end = (start + step).min(count);
+                    if alive {
+                        match remote_ref(w, start..end) {
+                            Some(results) if results.len() == end - start => {
+                                for (offset, result) in results.into_iter().enumerate() {
+                                    *slots_ref[start + offset].lock().expect("task slot") = result;
+                                }
+                                continue;
+                            }
+                            _ => alive = false,
+                        }
+                    }
+                    for i in start..end {
+                        *slots_ref[i].lock().expect("task slot") = local_ref(i);
+                    }
+                }
+            });
+        }
+        for _ in 0..local_threads {
+            scope.spawn(move || loop {
+                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                *slots_ref[i].lock().expect("task slot") = local_ref(i);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().expect("task slot"))
+        .collect()
+}
+
 /// The per-item task runner: one greedy pass over one item slice per
 /// task (kept as the named entry point the shed-semantics test pins).
 fn run_tasks(

@@ -85,6 +85,21 @@ impl Args {
         }
     }
 
+    /// Parse `--key a,b,c` as a comma-separated list (entries trimmed,
+    /// empty ones dropped) — the `--workers host:port,...` grammar.
+    /// `None` when the flag is absent; a flag whose entries are all
+    /// empty yields an empty vec for the caller to reject with its own
+    /// message.
+    pub fn list_opt(&self, key: &str) -> Option<Vec<String>> {
+        self.opt(key).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
+
     /// Parse `--key on|off` (also accepts true/false, yes/no, 1/0) —
     /// the `--pipeline on|off` grammar.
     pub fn bool_opt(&self, key: &str) -> Result<Option<bool>, String> {
@@ -193,6 +208,17 @@ mod tests {
         assert_eq!(parse("x --pipeline 0").bool_opt("pipeline").unwrap(), Some(false));
         assert_eq!(parse("x").bool_opt("pipeline").unwrap(), None);
         assert!(parse("x --pipeline maybe").bool_opt("pipeline").is_err());
+    }
+
+    #[test]
+    fn list_opt_splits_commas_and_trims() {
+        let a = parse("trace --workers 127.0.0.1:9001,127.0.0.1:9002");
+        assert_eq!(
+            a.list_opt("workers").unwrap(),
+            vec!["127.0.0.1:9001".to_string(), "127.0.0.1:9002".to_string()]
+        );
+        assert_eq!(parse("trace").list_opt("workers"), None);
+        assert_eq!(parse("trace --workers ,,").list_opt("workers").unwrap(), Vec::<String>::new());
     }
 
     #[test]

@@ -20,10 +20,16 @@
 //! * the portfolio arms — `arm:ff-*` / `arm:bf-*` per (greedy,
 //!   ordering) pair, `arm:*-shard` on the sharded path, and
 //!   `arm:exact-polish` (`packing::solver`);
+//! * the distributed coordinator — `net:serialize` around encoding a
+//!   shipped shard or task batch, `net:rpc` around each worker
+//!   round trip, and `net:merge` around decoding + folding a worker's
+//!   reply (`net::fleet`, `packing::exact`, `sched::shard`);
 //! * event counters (via [`bump`], the `calls` column is the count) —
 //!   `exact:seed-dropped` when the exact search discards an invalid
-//!   incumbent (`packing::exact`), and the solve cache's `cache:hit` /
-//!   `cache:miss` / `cache:reject` (`manager::solve_cache`).
+//!   incumbent (`packing::exact`), the solve cache's `cache:hit` /
+//!   `cache:miss` / `cache:reject` (`manager::solve_cache`), and
+//!   `net:worker-lost` each time a fleet worker dies, times out, or
+//!   replies malformed and its work is re-run locally (`net::fleet`).
 //!
 //! The `camcloud trace --profile` flag prints the table via
 //! [`report`]; in a build without the feature it prints a rebuild hint

@@ -1,0 +1,357 @@
+//! Determinism and failure semantics of distributed execution: a
+//! loopback worker fleet must be a pure wall-clock knob.
+//!
+//! These are the acceptance gates for `--workers`: trace outcomes and
+//! exact-search proofs are bit-identical across {0, 1, 2, 4} workers,
+//! a worker dying mid-trace degrades to local re-execution with the
+//! same final outcome, and a worker speaking garbage is retired
+//! without corrupting anything.
+//!
+//! The worker fleet is process-global state
+//! ([`camcloud::net::fleet::set_workers`]), so every test serializes
+//! on one mutex and clears the fleet when done — the other test
+//! binaries never register workers, so they are unaffected.
+
+use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::manager::Strategy;
+use camcloud::net::frame::{recv_json, send_json};
+use camcloud::net::proto::{check_hello, hello};
+use camcloud::net::{fleet, worker};
+use camcloud::packing::{BinType, BranchAndBound, Item, MvbpProblem};
+use camcloud::sched::{Parallelism, SimConfig, SimEngine};
+use camcloud::types::{Dollars, ResourceVec};
+use camcloud::util::json::Json;
+use camcloud::util::rng::Rng;
+use camcloud::workload::trace::WorkloadTrace;
+use camcloud::workload::FleetSpec;
+use std::sync::{Mutex, MutexGuard};
+
+static FLEET_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize fleet-touching tests and guarantee the global fleet is
+/// cleared on the way out, pass or fail.
+struct FleetGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl FleetGuard {
+    fn acquire() -> FleetGuard {
+        let guard = FLEET_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        fleet::clear();
+        FleetGuard(guard)
+    }
+}
+
+impl Drop for FleetGuard {
+    fn drop(&mut self) {
+        fleet::clear();
+    }
+}
+
+/// Spawn `n` loopback workers (serving forever) and return their
+/// addresses.  The serve threads are daemons: they block in `accept`
+/// and die with the test process.
+fn spawn_workers(n: usize) -> Vec<String> {
+    (0..n).map(|_| worker::spawn_local(None).0).collect()
+}
+
+fn reactive_outcome(
+    trace: &WorkloadTrace,
+    engine: SimEngine,
+) -> camcloud::coordinator::AutoscaleOutcome {
+    let c = Coordinator::new();
+    let config = AutoscaleConfig {
+        sim: SimConfig::default()
+            .with_engine(engine)
+            .with_parallelism(Parallelism::default()),
+        ..AutoscaleConfig::default()
+    };
+    AutoscaleRunner::new(&c)
+        .with_config(config)
+        .run(trace, ScalePolicy::Reactive)
+        .expect("reactive policy runs")
+}
+
+/// Field-by-field outcome comparison — everything in the determinism
+/// contract (the `cached` observability flag is deliberately excluded,
+/// exactly as in `tests/parallel.rs`).
+fn assert_outcomes_identical(
+    label: &str,
+    a: &camcloud::coordinator::AutoscaleOutcome,
+    b: &camcloud::coordinator::AutoscaleOutcome,
+) {
+    assert_eq!(a.total_billed, b.total_billed, "{label}: billing diverges");
+    assert_eq!(a.peak_fleet, b.peak_fleet, "{label}: peak fleet diverges");
+    assert_eq!(a.reallocations, b.reallocations, "{label}: reallocations diverge");
+    assert_eq!(a.mean_performance, b.mean_performance, "{label}: performance diverges");
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{label}");
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        let e = format!("{label} epoch {}", x.label);
+        assert_eq!(x.hourly_rate, y.hourly_rate, "{e}: cost diverges");
+        assert_eq!(x.fleet_size, y.fleet_size, "{e}: fleet diverges");
+        assert_eq!(x.reallocated, y.reallocated, "{e}: serving decision diverges");
+        assert_eq!(x.kept, y.kept, "{e}");
+        assert_eq!(x.provisioned, y.provisioned, "{e}");
+        assert_eq!(x.terminated, y.terminated, "{e}");
+        assert_eq!(x.unserved, y.unserved, "{e}");
+        assert_eq!(x.revoked, y.revoked, "{e}: revocations diverge");
+        assert_eq!(x.solver, y.solver, "{e}: solver provenance diverges");
+        assert_eq!(x.mode, y.mode, "{e}: warm/cold provenance diverges");
+        assert_eq!(x.gap, y.gap, "{e}: certified gap diverges");
+        assert_eq!(x.performance, y.performance, "{e}: simulated performance diverges");
+        assert_eq!(x.frames_completed, y.frames_completed, "{e}");
+        assert_eq!(x.frames_dropped, y.frames_dropped, "{e}");
+    }
+}
+
+/// Trace outcomes are bit-identical across {0, 1, 2, 4} loopback
+/// workers on the diurnal and spot builtins, on both engines.
+#[test]
+fn trace_outcomes_are_bit_identical_across_worker_counts() {
+    let _guard = FleetGuard::acquire();
+    let addrs = spawn_workers(4);
+    let traces = [
+        WorkloadTrace::diurnal(10, 7),
+        WorkloadTrace::builtin("spot", 7).unwrap(),
+    ];
+    for trace in &traces {
+        for engine in [SimEngine::Event, SimEngine::FixedStep] {
+            fleet::clear();
+            let reference = reactive_outcome(trace, engine);
+            for workers in [1usize, 2, 4] {
+                fleet::set_workers(&addrs[..workers]).expect("loopback workers reachable");
+                let distributed = reactive_outcome(trace, engine);
+                assert_outcomes_identical(
+                    &format!("{}/{engine}/{workers} worker(s)", trace.name),
+                    &reference,
+                    &distributed,
+                );
+            }
+        }
+    }
+}
+
+/// Small feasible per-item instance (mirrors `tests/exact_parallel.rs`
+/// — kept small enough that every proof completes within the budget).
+fn random_instance(rng: &mut Rng) -> MvbpProblem {
+    let dims = 2;
+    let n_types = 1 + rng.below(3) as usize;
+    let bin_types: Vec<BinType> = (0..n_types)
+        .map(|t| BinType {
+            name: format!("t{t}"),
+            cost: Dollars::from_f64(rng.range_f64(0.3, 3.0)),
+            capacity: ResourceVec((0..dims).map(|_| rng.range_f64(5.0, 14.0)).collect()),
+        })
+        .collect();
+    let n_items = 2 + rng.below(11) as usize;
+    let items: Vec<Item> = (0..n_items)
+        .map(|i| {
+            let n_choices = 1 + rng.below(3) as usize;
+            Item {
+                id: format!("i{i}"),
+                choices: (0..n_choices)
+                    .map(|_| ResourceVec((0..dims).map(|_| rng.range_f64(0.3, 4.5)).collect()))
+                    .collect(),
+            }
+        })
+        .collect();
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
+}
+
+/// High-multiplicity instance that routes through the class search.
+fn random_replicated_instance(rng: &mut Rng) -> MvbpProblem {
+    let dims = 2;
+    let bin_types = vec![
+        BinType {
+            name: "big".into(),
+            cost: Dollars::from_f64(rng.range_f64(1.5, 3.0)),
+            capacity: ResourceVec(vec![12.0, 12.0]),
+        },
+        BinType {
+            name: "small".into(),
+            cost: Dollars::from_f64(rng.range_f64(0.4, 1.2)),
+            capacity: ResourceVec(vec![6.0, 6.0]),
+        },
+    ];
+    let n_classes = 2 + rng.below(3) as usize;
+    let mut items = Vec::new();
+    for c in 0..n_classes {
+        let n_choices = 1 + rng.below(2) as usize;
+        let choices: Vec<ResourceVec> = (0..n_choices)
+            .map(|_| ResourceVec((0..dims).map(|_| rng.range_f64(0.5, 4.0)).collect()))
+            .collect();
+        let copies = 3 + rng.below(6) as usize;
+        for k in 0..copies {
+            items.push(Item { id: format!("c{c}-{k}"), choices: choices.clone() });
+        }
+    }
+    MvbpProblem { dims, bin_types, items, choice_costs: vec![] }
+}
+
+/// Completed exact proofs — optimum, plan, provenance — are
+/// bit-identical at every worker count, in both search modes.
+#[test]
+fn exact_proofs_are_bit_identical_across_worker_counts() {
+    let _guard = FleetGuard::acquire();
+    let addrs = spawn_workers(4);
+    let mut rng = Rng::new(0xD157);
+    for case in 0..8 {
+        for per_item in [true, false] {
+            let problem = if per_item {
+                random_instance(&mut rng)
+            } else {
+                random_replicated_instance(&mut rng)
+            };
+            let solve = || {
+                BranchAndBound { per_item, threads: 2, ..Default::default() }
+                    .solve(&problem)
+                    .expect("feasible instance solves")
+            };
+            fleet::clear();
+            let reference = solve();
+            assert!(reference.proven_optimal, "case {case}: reference proof incomplete");
+            reference.solution.validate(&problem).expect("reference solution valid");
+            for workers in [1usize, 2, 4] {
+                fleet::set_workers(&addrs[..workers]).expect("loopback workers reachable");
+                let distributed = solve();
+                assert!(
+                    distributed.proven_optimal,
+                    "case {case}/{workers} worker(s): proof incomplete"
+                );
+                assert_eq!(
+                    distributed.solution, reference.solution,
+                    "case {case}/{workers} worker(s): per_item={per_item} plan diverges \
+                     (cost {} vs {})",
+                    distributed.solution.cost(&problem),
+                    reference.solution.cost(&problem)
+                );
+            }
+        }
+    }
+}
+
+/// A worker that dies mid-trace (its request budget runs out) is
+/// retired and its work re-executed locally: the run completes with
+/// the exact outcome of an in-process run.
+#[test]
+fn worker_death_mid_trace_degrades_to_local_with_identical_outcome() {
+    let _guard = FleetGuard::acquire();
+    let trace = WorkloadTrace::diurnal(8, 7);
+    let reference = reactive_outcome(&trace, SimEngine::Event);
+
+    // Each worker answers its registration ping plus two real requests,
+    // then its listener closes — from the coordinator's view it dies
+    // mid-trace.
+    let doomed: Vec<String> = (0..2).map(|_| worker::spawn_local(Some(3)).0).collect();
+    fleet::set_workers(&doomed).expect("doomed workers are up at registration");
+    let distributed = reactive_outcome(&trace, SimEngine::Event);
+    assert_outcomes_identical("diurnal/doomed workers", &reference, &distributed);
+    // Long diurnal traces issue far more than two requests per worker,
+    // so by the end every worker has been retired.
+    assert!(
+        fleet::active().is_none(),
+        "exhausted workers must be marked dead, not retried forever"
+    );
+}
+
+/// A worker that completes the handshake but answers requests with
+/// garbage is retired on its first malformed reply; the shipped work
+/// re-runs locally and nothing panics or diverges.
+#[test]
+fn malformed_worker_replies_degrade_to_local() {
+    let _guard = FleetGuard::acquire();
+
+    // A rogue worker: speaks the handshake and answers pings honestly
+    // (so registration succeeds), then replies to every real request
+    // with a structurally invalid message.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind rogue worker");
+    let addr = listener.local_addr().expect("rogue worker address").to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { break };
+            let _ = (|| -> camcloud::util::error::Result<()> {
+                check_hello(&recv_json(&mut stream)?)?;
+                send_json(&mut stream, &hello())?;
+                let request = recv_json(&mut stream)?;
+                let reply = if request.str_field("type")? == "ping" {
+                    Json::obj(vec![("type".to_string(), Json::Str("pong".to_string()))])
+                } else {
+                    // Right type tag, nonsense body: must fail the
+                    // coordinator's structural validation, not panic.
+                    Json::obj(vec![
+                        ("type".to_string(), Json::Str("sim_result".to_string())),
+                        ("report".to_string(), Json::Str("garbage".to_string())),
+                    ])
+                };
+                send_json(&mut stream, &reply)
+            })();
+        }
+    });
+    // An exact solve against the rogue fleet: the garbage reply fails
+    // structural validation, the chunk re-runs locally, and the proof
+    // matches the in-process one.  The first bad reply also retires
+    // the worker.
+    let problem = random_instance(&mut Rng::new(0xBAD));
+    let reference = BranchAndBound { per_item: true, threads: 2, ..Default::default() }
+        .solve(&problem)
+        .expect("feasible instance solves");
+    fleet::set_workers(std::slice::from_ref(&addr))
+        .expect("rogue worker answers the registration ping");
+    let distributed = BranchAndBound { per_item: true, threads: 2, ..Default::default() }
+        .solve(&problem)
+        .expect("feasible instance solves with a rogue fleet");
+    assert_eq!(distributed.solution, reference.solution);
+    assert_eq!(distributed.proven_optimal, reference.proven_optimal);
+    assert!(
+        fleet::active().is_none(),
+        "a worker caught lying must be retired, not consulted again"
+    );
+
+    // Distributed sharded simulation against the rogue fleet must
+    // produce exactly the local report.  A multi-instance fleet is
+    // needed for sharding (and thus shipping) to engage at all.
+    fleet::set_workers(std::slice::from_ref(&addr)).expect("rogue worker still answers pings");
+    let c = Coordinator::new();
+    let workload = FleetSpec::new(64).seed(7).build();
+    let profiled = c.profile_workload(workload);
+    let plan = profiled.allocate(Strategy::St3).expect("workload allocates");
+    assert!(plan.instances.len() > 1, "need a multi-instance plan to shard");
+    let config = SimConfig::for_duration(30.0)
+        .with_parallelism(Parallelism { sim_threads: 2, pipeline: true });
+    let distributed = profiled.simulation(&plan).run(config);
+    fleet::clear();
+    let local = profiled.simulation(&plan).run(config);
+    assert_eq!(distributed.streams, local.streams);
+    assert_eq!(distributed.frames_completed, local.frames_completed);
+    assert_eq!(distributed.frames_dropped, local.frames_dropped);
+}
+
+/// `--solve-cache-file` end to end: the first trace run writes the
+/// cache, a second run loads it, replays validated entries (visible as
+/// `cached` epochs), and produces a bit-identical outcome.
+#[test]
+fn solve_cache_file_round_trips_across_runs() {
+    let _guard = FleetGuard::acquire();
+    let path = std::env::temp_dir().join(format!(
+        "camcloud-solve-cache-test-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let trace = WorkloadTrace::diurnal(8, 7);
+    let c = Coordinator::new();
+    let runner = AutoscaleRunner::new(&c).with_solve_cache_file(Some(path.clone()));
+    let first = runner.run(&trace, ScalePolicy::Reactive).expect("first run");
+    assert!(path.exists(), "the run must write its solve cache");
+
+    let second = runner.run(&trace, ScalePolicy::Reactive).expect("second run");
+    assert_outcomes_identical("solve-cache-file reload", &first, &second);
+    // Epoch 0 is always a cold solve on a fresh cache; with the loaded
+    // file it replays the first run's plan instead.
+    assert!(!first.epochs[0].cached, "first run has nothing to replay");
+    assert!(second.epochs[0].cached, "second run must replay the persisted entry");
+
+    // A corrupt cache file warns, is ignored, and changes nothing.
+    std::fs::write(&path, "{not json").expect("write corrupt cache");
+    let third = runner.run(&trace, ScalePolicy::Reactive).expect("third run");
+    assert_outcomes_identical("corrupt solve-cache-file", &first, &third);
+    let _ = std::fs::remove_file(&path);
+}
