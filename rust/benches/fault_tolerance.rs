@@ -1,0 +1,215 @@
+//! Bench: the fault-tolerance layer's cost and its recovery behavior.
+//!
+//! Three sections back the self-healing-fleet tentpole:
+//!
+//! * **Clean-fleet overhead** (the ≤5% gate) — the same 2-worker
+//!   sharded-simulation workload runs under the full fault layer
+//!   (retries, breaker bookkeeping, cancellable RPCs, hedging) and
+//!   under a bare tuning with retries and hedging disabled.  The
+//!   tuned/bare wall-clock ratio is recorded always and gated ≤1.05
+//!   in full mode only (shared CI runners are too noisy for smoke
+//!   timing gates); the report-identity assertion runs always.
+//! * **Recovery** (asserted always, smoke included) — a worker dies
+//!   after its request budget, its breaker trips open, it restarts on
+//!   the same port, the half-open probe re-admits it (readmission
+//!   counter > 0), and the re-admitted worker serves a subsequent RPC.
+//! * **Chaos trace** (recorded + identity-asserted always) — the
+//!   diurnal trace under a kitchen-sink seeded fault schedule must
+//!   bill and simulate bit-identically to the fault-free zero-worker
+//!   baseline; the wall clock and the per-cause failure counters are
+//!   recorded.
+//!
+//! Writes `target/BENCH_10.json` for CI to archive.  Env knobs:
+//! `BENCH10_SMOKE` shrinks the workloads and skips the timing gate.
+
+use camcloud::coordinator::{AutoscaleRunner, Coordinator, ScalePolicy};
+use camcloud::manager::Strategy;
+use camcloud::net::fleet::{self, Fleet, FleetTuning, RpcClass};
+use camcloud::net::{chaos, worker};
+use camcloud::sched::{Parallelism, SimConfig};
+use camcloud::util::bench::Bench;
+use camcloud::util::json::Json;
+use camcloud::workload::trace::WorkloadTrace;
+use camcloud::workload::FleetSpec;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let mut bench = Bench::new("fault_tolerance");
+    let smoke = std::env::var("BENCH10_SMOKE").is_ok();
+    let coordinator = Coordinator::new();
+    fleet::clear();
+    chaos::disarm();
+
+    // ----- Clean-fleet overhead (tuned vs bare, 2 workers) ------------
+    let addrs: Vec<String> = (0..2).map(|_| worker::spawn_local(None).0).collect();
+    let n_streams: u32 = if smoke { 3_000 } else { 50_000 };
+    let duration_s = if smoke { 30.0 } else { 300.0 };
+    let samples = if smoke { 1 } else { 3 };
+    let workload = FleetSpec::new(n_streams).seed(9).rate_levels(8).build();
+    let profiled = coordinator.profile_workload(workload);
+    let plan = profiled.allocate(Strategy::St3).expect("quantized fleet allocates");
+    let config = SimConfig::for_duration(duration_s)
+        .with_parallelism(Parallelism { sim_threads: 1, pipeline: false });
+    let local_report = profiled.simulation(&plan).run(config);
+
+    let bare = FleetTuning { retries: 0, hedge: false, ..FleetTuning::default() };
+    let mut overhead: Vec<(&str, f64)> = Vec::new();
+    for (label, tuning) in [("bare", bare), ("tuned", FleetTuning::default())] {
+        fleet::set_workers_tuned(&addrs, tuning).expect("loopback workers reachable");
+        // Identity gate (asserted always): the fault layer changes no
+        // report bit, whichever tuning carries the RPCs.
+        let distributed = profiled.simulation(&plan).run(config);
+        assert_eq!(distributed.streams, local_report.streams, "{label} tuning");
+        assert_eq!(distributed.frames_completed, local_report.frames_completed, "{label}");
+        assert_eq!(distributed.frames_dropped, local_report.frames_dropped, "{label}");
+        let p50 = bench
+            .measure(&format!("sim_{n_streams}streams_2w_{label}"), 1, samples, || {
+                let mut sim = profiled.simulation(&plan);
+                std::hint::black_box(sim.run(config));
+            })
+            .p50();
+        overhead.push((label, p50));
+        fleet::clear();
+    }
+    let overhead_ratio = overhead[1].1 / overhead[0].1;
+    bench.record("clean_fleet_overhead_ratio", overhead_ratio);
+    if !smoke {
+        assert!(
+            overhead_ratio <= 1.05,
+            "the fault layer must cost <=5% on a clean fleet: tuned/bare = {overhead_ratio:.3}"
+        );
+    }
+
+    // ----- Recovery: death, restart, re-admission (asserted always) ---
+    // Runs against a private (non-registered) fleet so breaker clocks
+    // can be fast without touching the global registry.
+    let ping = Json::obj(vec![("type".to_string(), Json::Str("ping".to_string()))]);
+    let (addr, doomed_handle) = worker::spawn_local(Some(2));
+    let tuning = FleetTuning {
+        retries: 1,
+        backoff_base_ms: 2,
+        backoff_cap_ms: 10,
+        probe_cooldown_ms: 50,
+        probe_cooldown_cap_ms: 200,
+        ..FleetTuning::default()
+    };
+    // Request 1 is the registration ping; request 2 exhausts the budget.
+    let private = Fleet::connect(std::slice::from_ref(&addr), tuning).expect("worker reachable");
+    assert!(private.rpc(0, &ping, RpcClass::Ping).is_some(), "pre-death ping");
+    doomed_handle.join().expect("doomed worker serve loop");
+    assert!(private.rpc(0, &ping, RpcClass::Ping).is_none(), "dead worker must fail");
+    assert_eq!(private.live_count(), 0, "breaker must trip open");
+
+    let restart_started = Instant::now();
+    let mut rebound = false;
+    for _ in 0..250 {
+        if worker::spawn_on(&addr, None).is_ok() {
+            rebound = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(rebound, "could not restart the worker on {addr}");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while private.live_count() == 0 {
+        assert!(Instant::now() < deadline, "restarted worker never re-admitted");
+        let _ = private.ready_workers();
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let readmit_s = restart_started.elapsed().as_secs_f64();
+    let stats = private.stats();
+    assert!(stats.readmitted >= 1, "readmission must be counted ({stats:?})");
+    let reply = private
+        .rpc(0, &ping, RpcClass::Ping)
+        .expect("a re-admitted worker serves subsequent RPCs");
+    assert_eq!(reply.str_field("type").expect("typed reply"), "pong");
+    bench.record("readmit_after_restart_s", readmit_s);
+
+    // ----- Chaos trace (identity asserted, wall clock recorded) -------
+    let cameras = if smoke { 4 } else { 12 };
+    let trace = WorkloadTrace::diurnal(cameras, 7);
+    let runner = AutoscaleRunner::new(&coordinator);
+    fleet::clear();
+    let reference = runner.run(&trace, ScalePolicy::Reactive).expect("baseline trace");
+    let fast = FleetTuning {
+        retries: 2,
+        backoff_base_ms: 2,
+        backoff_cap_ms: 10,
+        probe_cooldown_ms: 50,
+        probe_cooldown_cap_ms: 400,
+        hedge_after_ms: 50,
+        ..FleetTuning::default()
+    };
+    fleet::set_workers_tuned(&addrs, fast).expect("loopback workers reachable");
+    chaos::arm(
+        chaos::ChaosConfig::parse(
+            "seed=7,connect=0.15,read-timeout=0.1,slow=0.15,slow-ms=60,disconnect=0.1,\
+             garbage=0.05",
+        )
+        .expect("valid chaos spec"),
+    );
+    let chaos_started = Instant::now();
+    let chaotic = runner.run(&trace, ScalePolicy::Reactive).expect("chaotic trace");
+    let chaos_trace_s = chaos_started.elapsed().as_secs_f64();
+    chaos::disarm();
+    let chaos_stats = fleet::stats().expect("fleet registered");
+    fleet::clear();
+    assert_eq!(chaotic.total_billed, reference.total_billed, "chaos must not change billing");
+    assert_eq!(chaotic.epochs.len(), reference.epochs.len());
+    for (x, y) in chaotic.epochs.iter().zip(&reference.epochs) {
+        assert_eq!(x.hourly_rate, y.hourly_rate, "epoch {}: cost diverges", x.label);
+        assert_eq!(x.performance, y.performance, "epoch {}: performance diverges", x.label);
+        assert_eq!(x.frames_completed, y.frames_completed, "epoch {}", x.label);
+        assert_eq!(x.frames_dropped, y.frames_dropped, "epoch {}", x.label);
+    }
+    bench.record("chaos_trace_s", chaos_trace_s);
+
+    // ----- BENCH_10.json ---------------------------------------------
+    let record = vec![
+        ("suite".to_string(), Json::Str("fault_tolerance".to_string())),
+        ("smoke".to_string(), Json::Bool(smoke)),
+        (
+            "clean_fleet_overhead".to_string(),
+            Json::obj(vec![
+                ("streams".to_string(), Json::Num(f64::from(n_streams))),
+                ("duration_s".to_string(), Json::Num(duration_s)),
+                ("bare_p50_s".to_string(), Json::Num(overhead[0].1)),
+                ("tuned_p50_s".to_string(), Json::Num(overhead[1].1)),
+                ("ratio".to_string(), Json::Num(overhead_ratio)),
+                ("gate".to_string(), Json::Num(1.05)),
+            ]),
+        ),
+        (
+            "recovery".to_string(),
+            Json::obj(vec![
+                ("readmitted".to_string(), Json::Num(stats.readmitted as f64)),
+                ("readmit_after_restart_s".to_string(), Json::Num(readmit_s)),
+                ("served_after_readmit".to_string(), Json::Bool(true)),
+            ]),
+        ),
+        (
+            "chaos_trace".to_string(),
+            Json::obj(vec![
+                ("cameras".to_string(), Json::Num(f64::from(cameras))),
+                ("epochs".to_string(), Json::Num(chaotic.epochs.len() as f64)),
+                ("wall_s".to_string(), Json::Num(chaos_trace_s)),
+                ("rpc_connect_failures".to_string(), Json::Num(chaos_stats.connect as f64)),
+                ("rpc_timeouts".to_string(), Json::Num(chaos_stats.timeout as f64)),
+                ("rpc_disconnects".to_string(), Json::Num(chaos_stats.disconnect as f64)),
+                ("workers_quarantined".to_string(), Json::Num(chaos_stats.garbage as f64)),
+                ("rpc_retried".to_string(), Json::Num(chaos_stats.retried as f64)),
+                ("claims_hedged".to_string(), Json::Num(chaos_stats.hedged as f64)),
+                ("workers_readmitted".to_string(), Json::Num(chaos_stats.readmitted as f64)),
+            ]),
+        ),
+    ];
+    let json = Json::obj(record).to_pretty();
+    let path = std::path::Path::new("target/BENCH_10.json");
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_10.json");
+    println!("wrote {}", path.display());
+
+    bench.finish();
+}

@@ -97,9 +97,14 @@ fn print_help() {
          \u{20}   parallel execution changes no results while solves fit the solve budget)\n\
          \u{20}  (run/trace also accept --workers host:port,... to distribute exact-search\n\
          \u{20}   subtrees and simulation shards over camcloud worker processes; outcomes\n\
-         \u{20}   are bit-identical to in-process runs, and a lost worker degrades to\n\
-         \u{20}   local re-execution.  trace also accepts --solve-cache-file FILE to\n\
-         \u{20}   persist the reactive solve cache across runs)\n\
+         \u{20}   are bit-identical to in-process runs.  Transient worker failures retry\n\
+         \u{20}   with backoff, lost workers trip a circuit breaker and are re-probed and\n\
+         \u{20}   re-admitted when they come back, and straggling claims are hedged\n\
+         \u{20}   locally.  --chaos seed=N,connect=R,read-timeout=R,write-timeout=R,\n\
+         \u{20}   slow=R,slow-ms=MS,disconnect=R,garbage=R (or CAMCLOUD_CHAOS) arms the\n\
+         \u{20}   deterministic fault injector for resilience testing.  trace also\n\
+         \u{20}   accepts --solve-cache-file FILE to persist the reactive solve cache\n\
+         \u{20}   across runs)\n\
          \u{20}  worker --listen HOST:PORT [--max-requests N]\n\
          \u{20}                              serve exact-search and simulation requests to\n\
          \u{20}                              a coordinator running with --workers\n\
@@ -193,10 +198,30 @@ fn parallelism_config(args: &Args) -> Result<Parallelism, String> {
 /// exact search and sharded simulation (see the `net` module docs).
 /// Without the flag everything runs in-process; with it, outcomes are
 /// bit-identical — workers are a wall-clock knob, like thread counts.
+/// Addresses are validated and deduped before any connection attempt.
+///
+/// `--chaos key=value,...` (or the `CAMCLOUD_CHAOS` env var) arms the
+/// deterministic fault injector for the run — keys `seed`, `connect`,
+/// `read-timeout`, `write-timeout`, `slow`, `slow-ms`, `disconnect`,
+/// `garbage` (rates in [0,1]).  It is armed *after* fleet registration
+/// so the injected schedule exercises the work RPCs, not the initial
+/// handshake.
 fn apply_workers_flag(args: &Args) -> Result<(), String> {
     if let Some(addrs) = args.list_opt("workers") {
+        let addrs =
+            camcloud::net::fleet::sanitize_workers(&addrs).map_err(|e| format!("{e:#}"))?;
         let live = camcloud::net::fleet::set_workers(&addrs).map_err(|e| format!("{e:#}"))?;
         eprintln!("workers: {live}/{} reachable", addrs.len());
+    }
+    let spec = match args.opt("chaos") {
+        Some(spec) => Some(spec.to_string()),
+        None => std::env::var("CAMCLOUD_CHAOS").ok().filter(|s| !s.is_empty()),
+    };
+    if let Some(spec) = spec {
+        let config =
+            camcloud::net::chaos::ChaosConfig::parse(&spec).map_err(|e| format!("{e:#}"))?;
+        camcloud::net::chaos::arm(config);
+        eprintln!("chaos: fault injection armed ({spec})");
     }
     Ok(())
 }

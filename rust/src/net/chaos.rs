@@ -1,0 +1,317 @@
+//! Deterministic, seeded fault injection for coordinator-side RPCs.
+//!
+//! Chaos is a test/diagnostic harness: when armed ([`arm`], via
+//! `--chaos SPEC` or the `CAMCLOUD_CHAOS` env knob), every RPC attempt
+//! the coordinator makes against a fleet worker first consults
+//! [`next_fault`], which may order one of six failure modes injected at
+//! the frame layer by `net::fleet::round_trip`:
+//!
+//! * **connect** — the connection is refused before any byte moves;
+//! * **read-timeout** / **write-timeout** — the attempt fails as if the
+//!   socket deadline fired (reported immediately rather than slept
+//!   through, so chaos soak tests stay fast);
+//! * **slow** — the real round trip completes, then the reply is
+//!   delayed by `slow-ms` (this is what exercises straggler hedging);
+//! * **disconnect** — a frame header promising more bytes than are ever
+//!   sent goes over a real connection, then the socket closes: both
+//!   peers observe a genuine mid-frame disconnect;
+//! * **garbage** — the reply is replaced by a well-framed JSON value
+//!   with a nonsense type, which must fail the caller's structural
+//!   validation and quarantine the "lying" worker.
+//!
+//! **Determinism.**  The fault ordered for attempt *n* against worker
+//! *w* is a pure function of `(seed, w, n)` — a splitmix64 hash mapped
+//! to `[0, 1)` and compared against the configured cumulative rates —
+//! so a given spec replays the identical per-worker fault sequence on
+//! every run.  (Which *logical* request lands on attempt ordinal *n*
+//! can shift with thread interleaving; the fleet's determinism
+//! guarantee is stronger than replay anyway: outcomes are bit-identical
+//! under *arbitrary* fault assignments, see `net::fleet`.)
+
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+
+/// One injected failure mode for a single RPC attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Refuse the connection outright.
+    Connect,
+    /// Fail the attempt as if the read deadline fired.
+    ReadTimeout,
+    /// Fail the attempt as if the write deadline fired.
+    WriteTimeout,
+    /// Complete the round trip, then delay the reply by this many ms.
+    Slow(u64),
+    /// Open a real connection, send a truncated frame, and hang up.
+    Disconnect,
+    /// Replace the reply with well-framed garbage JSON.
+    Garbage,
+}
+
+/// Per-fault-type injection rates plus the schedule seed.  Rates are
+/// probabilities in `[0, 1]` and must sum to at most 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// Seeds the per-(worker, attempt) fault schedule.
+    pub seed: u64,
+    pub connect: f64,
+    pub read_timeout: f64,
+    pub write_timeout: f64,
+    pub slow: f64,
+    /// Reply delay for `slow` faults, in milliseconds.
+    pub slow_ms: u64,
+    pub disconnect: f64,
+    pub garbage: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0,
+            connect: 0.0,
+            read_timeout: 0.0,
+            write_timeout: 0.0,
+            slow: 0.0,
+            slow_ms: 150,
+            disconnect: 0.0,
+            garbage: 0.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse a `key=value,...` spec, e.g.
+    /// `seed=42,connect=0.1,read-timeout=0.1,slow=0.2,slow-ms=300,disconnect=0.1,garbage=0.05`.
+    /// Unknown keys, unparsable values, out-of-range rates, and rate
+    /// sums above 1 are all hard errors — a typo must not silently arm
+    /// a different schedule.
+    pub fn parse(spec: &str) -> Result<ChaosConfig> {
+        let mut config = ChaosConfig::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("chaos spec entry {part:?} is not key=value"))?;
+            let rate = |slot: &mut f64| -> Result<()> {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| anyhow!("chaos rate {key}={value:?} is not a number"))?;
+                ensure!((0.0..=1.0).contains(&v), "chaos rate {key}={value} outside [0, 1]");
+                *slot = v;
+                Ok(())
+            };
+            match key.trim() {
+                "seed" => {
+                    config.seed = value
+                        .parse()
+                        .map_err(|_| anyhow!("chaos seed {value:?} is not a u64"))?;
+                }
+                "slow-ms" => {
+                    config.slow_ms = value
+                        .parse()
+                        .map_err(|_| anyhow!("chaos slow-ms {value:?} is not a u64"))?;
+                }
+                "connect" => rate(&mut config.connect)?,
+                "read-timeout" => rate(&mut config.read_timeout)?,
+                "write-timeout" => rate(&mut config.write_timeout)?,
+                "slow" => rate(&mut config.slow)?,
+                "disconnect" => rate(&mut config.disconnect)?,
+                "garbage" => rate(&mut config.garbage)?,
+                other => return Err(anyhow!("unknown chaos spec key {other:?}")),
+            }
+        }
+        ensure!(
+            config.total_rate() <= 1.0 + 1e-12,
+            "chaos rates sum to {:.3} (> 1)",
+            config.total_rate()
+        );
+        Ok(config)
+    }
+
+    fn total_rate(&self) -> f64 {
+        self.connect + self.read_timeout + self.write_timeout + self.slow + self.disconnect
+            + self.garbage
+    }
+}
+
+struct State {
+    config: ChaosConfig,
+    /// Per-worker attempt ordinals (index = fleet worker index).
+    attempts: Mutex<Vec<u64>>,
+}
+
+static CHAOS: Mutex<Option<Arc<State>>> = Mutex::new(None);
+
+/// Arm fault injection process-wide.  Resets the attempt ordinals, so
+/// re-arming the same config replays the same schedule from the top.
+pub fn arm(config: ChaosConfig) {
+    *CHAOS.lock().expect("chaos registry") =
+        Some(Arc::new(State { config, attempts: Mutex::new(Vec::new()) }));
+}
+
+/// Disarm fault injection; subsequent RPCs run clean.
+pub fn disarm() {
+    *CHAOS.lock().expect("chaos registry") = None;
+}
+
+/// The armed config, if any.
+pub fn armed() -> Option<ChaosConfig> {
+    CHAOS.lock().expect("chaos registry").as_ref().map(|s| s.config)
+}
+
+/// The fault (if any) ordered for the next RPC attempt against fleet
+/// worker `widx`.  Always `None` while disarmed.
+pub fn next_fault(widx: usize) -> Option<Fault> {
+    let state = CHAOS.lock().expect("chaos registry").clone()?;
+    let attempt = {
+        let mut attempts = state.attempts.lock().expect("chaos attempts");
+        if attempts.len() <= widx {
+            attempts.resize(widx + 1, 0);
+        }
+        let n = attempts[widx];
+        attempts[widx] += 1;
+        n
+    };
+    let c = &state.config;
+    let u = unit(c.seed, widx as u64, attempt);
+    let mut edge = c.connect;
+    if u < edge {
+        return Some(Fault::Connect);
+    }
+    edge += c.read_timeout;
+    if u < edge {
+        return Some(Fault::ReadTimeout);
+    }
+    edge += c.write_timeout;
+    if u < edge {
+        return Some(Fault::WriteTimeout);
+    }
+    edge += c.slow;
+    if u < edge {
+        return Some(Fault::Slow(c.slow_ms));
+    }
+    edge += c.disconnect;
+    if u < edge {
+        return Some(Fault::Disconnect);
+    }
+    edge += c.garbage;
+    if u < edge {
+        return Some(Fault::Garbage);
+    }
+    None
+}
+
+/// The well-framed nonsense a `garbage` fault substitutes for the real
+/// reply: valid JSON with a type no dispatch site accepts, so every
+/// caller's structural validation must reject it (and quarantine the
+/// worker) rather than panic or mis-merge.
+pub(crate) fn garbage_reply() -> Json {
+    Json::obj(vec![
+        ("type".to_string(), Json::Str("chaos-garbage".to_string())),
+        ("payload".to_string(), Json::Str("not a valid reply".to_string())),
+    ])
+}
+
+/// splitmix64 finalizer — the standard 64-bit avalanche mix.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Hash `(seed, widx, attempt)` to a uniform value in `[0, 1)`.
+fn unit(seed: u64, widx: u64, attempt: u64) -> f64 {
+    let h = mix64(seed ^ mix64(widx) ^ mix64(attempt).rotate_left(17));
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests in this module: chaos state is
+    /// process-global, and the lib test harness runs tests in parallel.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let c = ChaosConfig::parse(
+            "seed=42,connect=0.1,read-timeout=0.2,write-timeout=0.05,slow=0.15,slow-ms=300,\
+             disconnect=0.1,garbage=0.05",
+        )
+        .unwrap();
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.connect, 0.1);
+        assert_eq!(c.read_timeout, 0.2);
+        assert_eq!(c.write_timeout, 0.05);
+        assert_eq!(c.slow, 0.15);
+        assert_eq!(c.slow_ms, 300);
+        assert_eq!(c.disconnect, 0.1);
+        assert_eq!(c.garbage, 0.05);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(ChaosConfig::parse("bogus=1").is_err());
+        assert!(ChaosConfig::parse("connect").is_err());
+        assert!(ChaosConfig::parse("connect=nope").is_err());
+        assert!(ChaosConfig::parse("connect=1.5").is_err());
+        assert!(ChaosConfig::parse("connect=-0.1").is_err());
+        assert!(ChaosConfig::parse("seed=abc").is_err());
+        // Rates must sum to at most 1.
+        assert!(ChaosConfig::parse("connect=0.6,garbage=0.6").is_err());
+        // The empty spec arms a no-fault schedule (still a valid arm).
+        assert_eq!(ChaosConfig::parse("").unwrap(), ChaosConfig::default());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed_and_worker() {
+        let _guard = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let config = ChaosConfig::parse("seed=7,connect=0.3,slow=0.3,garbage=0.1").unwrap();
+        let draw = |widx: usize, n: usize| -> Vec<Option<Fault>> {
+            arm(config);
+            let faults = (0..n).map(|_| next_fault(widx)).collect();
+            disarm();
+            faults
+        };
+        // Re-arming replays the identical per-worker sequence.
+        assert_eq!(draw(0, 64), draw(0, 64));
+        assert_eq!(draw(3, 64), draw(3, 64));
+        // Distinct workers see distinct schedules (with these rates, 64
+        // identical draws by coincidence is a ~2^-64 event).
+        assert_ne!(draw(0, 64), draw(1, 64));
+        // A different seed reshuffles the schedule.
+        arm(ChaosConfig { seed: 8, ..config });
+        let other: Vec<Option<Fault>> = (0..64).map(|_| next_fault(0)).collect();
+        disarm();
+        assert_ne!(draw(0, 64), other);
+    }
+
+    #[test]
+    fn rates_are_roughly_honored_and_zero_rate_is_silent() {
+        let _guard = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        arm(ChaosConfig::parse("seed=1,connect=0.5").unwrap());
+        let n = 2000;
+        let hits = (0..n).filter(|_| next_fault(0) == Some(Fault::Connect)).count();
+        disarm();
+        // Loose 3-sigma-ish band around 0.5.
+        assert!((800..1200).contains(&hits), "got {hits}/{n} connect faults");
+
+        arm(ChaosConfig::default());
+        assert!((0..500).all(|_| next_fault(0).is_none()));
+        disarm();
+    }
+
+    #[test]
+    fn disarmed_is_faultless() {
+        let _guard = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        disarm();
+        assert_eq!(next_fault(0), None);
+        assert_eq!(armed(), None);
+    }
+}

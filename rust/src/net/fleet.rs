@@ -1,4 +1,5 @@
-//! The coordinator's view of the worker fleet.
+//! The coordinator's view of the worker fleet, with a self-healing
+//! failure model.
 //!
 //! A process-global registry (set once from the CLI via
 //! [`set_workers`], queried by the dispatch seams in `packing::exact`
@@ -8,119 +9,570 @@
 //! — with no fleet registered (the default), every dispatch site takes
 //! its pre-existing local path.
 //!
-//! Failure model: workers are raced against local threads and are
-//! never load-bearing.  Every RPC opens a fresh connection (workers
-//! hold no per-coordinator state, so a crashed worker that restarts
-//! simply starts winning tasks again — but a worker marked dead by
-//! *this* coordinator stays dead for the run; re-pinging mid-search
-//! would add latency on the failure path for a rare win).  Any
-//! connect, I/O, timeout, protocol, or decode failure marks the worker
-//! dead, bumps the `net:worker-lost` profiling counter, and the caller
-//! re-runs the affected work locally — outcomes are unchanged by
-//! construction because workers only ever *race* work the coordinator
-//! can do itself.
+//! **Failure model.**  Workers are raced against local threads and are
+//! never load-bearing, so any failure can be survived by re-running
+//! the affected work locally.  Failures are *classified*:
+//!
+//! * **transient** (connect refused, read/write timeout, disconnect) —
+//!   the RPC retries up to [`FleetTuning::retries`] times with capped
+//!   exponential backoff and deterministic seeded jitter; only
+//!   exhausted retries trip the worker's circuit breaker open;
+//! * **fatal** (the worker answered an explicit `error` reply) — the
+//!   breaker trips open immediately;
+//! * **protocol violation** (bad handshake, unparsable frame, a reply
+//!   that fails the caller's structural validation) — the worker is
+//!   quarantined for the rest of the run: a peer that *lies* is never
+//!   trusted again, while a peer that merely *fails* may heal.
+//!
+//! **Circuit breaker.**  Each worker is `Closed` (in rotation), `Open`
+//! (out of rotation, re-probed with a cheap `ping` once its cooldown
+//! elapses — the half-open state — and re-admitted on success, with the
+//! cooldown doubling per failed probe), or `Quarantined` (permanent).
+//! [`Fleet::ready_workers`], called by every dispatch site before
+//! fanning out, is the probe point: a worker that died and restarted
+//! mid-trace rejoins the fleet there instead of being lost for the run.
+//!
+//! **Per-request-type deadlines.**  A `ping` gets seconds, a simulation
+//! shard a minute, an exact subtree batch the full solve deadline
+//! ([`RpcClass`]) — so liveness probing never waits on the worst-case
+//! solve budget.
+//!
+//! Every terminal failure is visible: per-cause profiling counters
+//! (`net:rpc:connect`, `net:rpc:timeout`, `net:rpc:disconnect`,
+//! `net:rpc:garbage`, `net:rpc:retried`, `net:rpc:hedged`,
+//! `net:fleet:readmitted`) plus the always-compiled [`FleetStats`]
+//! snapshot.  Outcomes are unchanged by any of this, by construction:
+//! workers only ever *race* work the coordinator can do itself, every
+//! reply is re-validated, and the winner folds are order-strict.
 
+use crate::net::chaos::{self, Fault};
 use crate::net::frame::{recv_json, send_json};
 use crate::net::proto::{check_hello, hello};
 use crate::util::error::{anyhow, ensure, Result};
 use crate::util::json::Json;
 use crate::util::profiling::{bump, time_phase};
+use std::cell::Cell;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
-/// How long a worker gets to accept a connection.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Retry, backoff, re-probe, deadline, and hedging knobs.  The
+/// defaults suit real fleets; tests shrink the clocks so soak runs
+/// finish in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetTuning {
+    /// Extra attempts after the first for transient failures.
+    pub retries: u32,
+    /// First backoff step; doubles per retry.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling.
+    pub backoff_cap_ms: u64,
+    /// Seeds the deterministic backoff jitter.
+    pub jitter_seed: u64,
+    /// Cooldown before an `Open` worker is first re-probed; doubles
+    /// per failed probe.
+    pub probe_cooldown_ms: u64,
+    /// Re-probe cooldown ceiling.
+    pub probe_cooldown_cap_ms: u64,
+    /// Master switch for straggler hedging on the claim loops.
+    pub hedge: bool,
+    /// Floor before any in-flight remote claim can be hedged.
+    pub hedge_after_ms: u64,
+    /// A claim is a straggler once it exceeds this multiple of the
+    /// median completed-claim duration (with the floor above).
+    pub hedge_factor: f64,
+    /// Connect deadline for work-bearing RPCs.
+    pub connect_timeout_ms: u64,
+    /// Connect *and* I/O deadline for `ping` probes.
+    pub ping_timeout_ms: u64,
+    /// I/O deadline for `simulate` requests.
+    pub sim_timeout_ms: u64,
+    /// I/O deadline for `exact` requests (a reply can legitimately
+    /// take a full subtree-batch solve).
+    pub exact_timeout_ms: u64,
+}
 
-/// How long a worker gets to read a request or produce a reply.  Long,
-/// because a reply can legitimately take a full subtree-batch solve.
-const IO_TIMEOUT: Duration = Duration::from_secs(120);
+impl Default for FleetTuning {
+    fn default() -> FleetTuning {
+        FleetTuning {
+            retries: 2,
+            backoff_base_ms: 25,
+            backoff_cap_ms: 1_000,
+            jitter_seed: 0x5EED_CAFE,
+            probe_cooldown_ms: 2_000,
+            probe_cooldown_cap_ms: 30_000,
+            hedge: true,
+            hedge_after_ms: 500,
+            hedge_factor: 4.0,
+            connect_timeout_ms: 5_000,
+            ping_timeout_ms: 2_000,
+            sim_timeout_ms: 60_000,
+            exact_timeout_ms: 120_000,
+        }
+    }
+}
+
+/// What kind of request an RPC carries, for deadline selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RpcClass {
+    Ping,
+    Simulate,
+    Exact,
+}
+
+impl FleetTuning {
+    /// `(connect, io)` deadlines for one request class.
+    fn limits(&self, class: RpcClass) -> (Duration, Duration) {
+        let ms = Duration::from_millis;
+        match class {
+            RpcClass::Ping => (
+                ms(self.ping_timeout_ms.min(self.connect_timeout_ms)),
+                ms(self.ping_timeout_ms),
+            ),
+            RpcClass::Simulate => (ms(self.connect_timeout_ms), ms(self.sim_timeout_ms)),
+            RpcClass::Exact => (ms(self.connect_timeout_ms), ms(self.exact_timeout_ms)),
+        }
+    }
+}
+
+/// Circuit-breaker state of one worker.
+#[derive(Clone, Copy, Debug)]
+enum Breaker {
+    /// In rotation.
+    Closed,
+    /// Out of rotation; re-probed once `next_probe` passes.
+    Open { next_probe: Instant, failed_probes: u32 },
+    /// Out of rotation forever (protocol violation).
+    Quarantined,
+}
 
 struct Worker {
     addr: SocketAddr,
     /// The address as the user wrote it, for log lines.
     label: String,
-    dead: AtomicBool,
+    state: Mutex<Breaker>,
+    /// Sequence number feeding the deterministic backoff jitter.
+    jitter_seq: AtomicU64,
 }
 
-/// An immutable set of worker addresses with per-worker liveness.
+/// Monotonic failure/recovery counters, always compiled (unlike the
+/// feature-gated profiling registry) so tests and benches can assert
+/// on them.  Snapshot via [`Fleet::stats`].
+#[derive(Default)]
+struct Counters {
+    connect: AtomicU64,
+    timeout: AtomicU64,
+    disconnect: AtomicU64,
+    garbage: AtomicU64,
+    retried: AtomicU64,
+    hedged: AtomicU64,
+    readmitted: AtomicU64,
+}
+
+/// A point-in-time snapshot of a fleet's [`Counters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Connect-refused RPC attempts (including injected ones).
+    pub connect: u64,
+    /// Read/write-timeout RPC attempts.
+    pub timeout: u64,
+    /// Mid-stream disconnects.
+    pub disconnect: u64,
+    /// Protocol violations (quarantines).
+    pub garbage: u64,
+    /// RPCs that succeeded only after at least one retry.
+    pub retried: u64,
+    /// Straggler claims speculatively re-dispatched locally.
+    pub hedged: u64,
+    /// `Open -> Closed` re-admissions via a successful probe.
+    pub readmitted: u64,
+}
+
+/// An immutable set of worker addresses with per-worker breaker state.
 pub struct Fleet {
     workers: Vec<Worker>,
+    tuning: FleetTuning,
+    counters: Counters,
 }
 
 static FLEET: Mutex<Option<Arc<Fleet>>> = Mutex::new(None);
 
+/// Outcome of a cancellable RPC (see [`Fleet::rpc_cancellable`]).
+pub(crate) enum RpcOutcome {
+    /// The worker replied (the reply is *not* yet validated).
+    Reply(Json),
+    /// The worker failed terminally; its breaker is already updated.
+    Lost,
+    /// The caller's cancel predicate fired first; the in-flight
+    /// attempt resolves (and updates breaker state) in the background.
+    Abandoned,
+}
+
+/// How one round-trip attempt failed.
+enum RpcError {
+    /// Worth retrying: the worker may merely be restarting or slow.
+    Transient(TransientKind, String),
+    /// Not worth retrying, but the worker spoke the protocol
+    /// correctly (an explicit `error` reply): trip open, re-probe.
+    Fatal(String),
+    /// The peer violated the protocol: quarantine it.
+    Violation(String),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum TransientKind {
+    Connect,
+    Timeout,
+    Disconnect,
+}
+
 impl Fleet {
-    /// Workers not yet marked dead.
-    pub fn live_count(&self) -> usize {
-        self.workers.iter().filter(|w| !w.dead.load(Ordering::Relaxed)).count()
+    /// Build a fleet: resolve every address and ping each worker once
+    /// (with retries).  Workers that fail the registration ping start
+    /// `Open` and will be re-probed; the build only fails if *no*
+    /// worker is reachable (or an address does not resolve at all).
+    /// Does not touch the process-global registry — see
+    /// [`set_workers`] for that.
+    pub fn connect(addrs: &[String], tuning: FleetTuning) -> Result<Arc<Fleet>> {
+        ensure!(!addrs.is_empty(), "worker list is empty");
+        let mut workers = Vec::with_capacity(addrs.len());
+        for label in addrs {
+            let addr = resolve(label)?;
+            workers.push(Worker {
+                addr,
+                label: label.clone(),
+                state: Mutex::new(Breaker::Closed),
+                jitter_seq: AtomicU64::new(0),
+            });
+        }
+        let fleet = Arc::new(Fleet { workers, tuning, counters: Counters::default() });
+        let ping = ping_request();
+        for i in 0..fleet.workers.len() {
+            if let Some(reply) = fleet.rpc(i, &ping, RpcClass::Ping) {
+                if let Err(e) = expect_pong(&reply) {
+                    fleet.quarantine(i, &format!("registration ping: {e:#}"));
+                }
+            }
+        }
+        ensure!(
+            fleet.live_count() > 0,
+            "none of the {} workers are reachable",
+            addrs.len()
+        );
+        Ok(fleet)
     }
 
-    /// Indices of live workers, for spawning one dispatch thread each.
-    pub(crate) fn live_indices(&self) -> Vec<usize> {
+    /// Workers currently `Closed` (in rotation).
+    pub fn live_count(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| matches!(*w.state.lock().expect("worker state"), Breaker::Closed))
+            .count()
+    }
+
+    /// Workers not quarantined — `Closed` plus `Open` awaiting
+    /// re-probe.  This is what keeps a fleet of temporarily-dead
+    /// workers *registered* (so probing can heal it) while
+    /// [`live_count`](Fleet::live_count) reports nobody in rotation.
+    pub fn usable_count(&self) -> usize {
+        self.workers
+            .iter()
+            .filter(|w| !matches!(*w.state.lock().expect("worker state"), Breaker::Quarantined))
+            .count()
+    }
+
+    /// The dispatch-site entry point: re-probe every `Open` worker
+    /// whose cooldown has elapsed (the half-open state — one cheap
+    /// `ping` decides re-admission), then return the indices of
+    /// `Closed` workers, one dispatcher thread each.
+    pub fn ready_workers(&self) -> Vec<usize> {
+        for i in 0..self.workers.len() {
+            if self.claim_probe(i) {
+                self.probe(i);
+            }
+        }
         (0..self.workers.len())
-            .filter(|&i| !self.workers[i].dead.load(Ordering::Relaxed))
+            .filter(|&i| {
+                matches!(*self.workers[i].state.lock().expect("worker state"), Breaker::Closed)
+            })
             .collect()
     }
 
-    /// One request/response round trip against worker `widx` on a
-    /// fresh connection.  `None` means the worker is (now) dead and
-    /// the caller must run the shipped work locally.
-    pub fn rpc(&self, widx: usize, request: &Json) -> Option<Json> {
-        if self.workers[widx].dead.load(Ordering::Relaxed) {
-            return None;
+    /// Atomically claim the right to probe worker `i` if it is `Open`
+    /// and due, pushing `next_probe` forward so concurrent callers
+    /// skip it while the probe is in flight.
+    fn claim_probe(&self, i: usize) -> bool {
+        let mut state = self.workers[i].state.lock().expect("worker state");
+        match *state {
+            Breaker::Open { next_probe, failed_probes } if Instant::now() >= next_probe => {
+                *state = Breaker::Open {
+                    next_probe: Instant::now() + self.probe_cooldown(failed_probes),
+                    failed_probes,
+                };
+                true
+            }
+            _ => false,
         }
-        match time_phase("net:rpc", || round_trip(self.workers[widx].addr, request)) {
-            Ok(reply) => Some(reply),
-            Err(e) => {
-                self.mark_dead(widx, &format!("{e:#}"));
-                None
+    }
+
+    /// Half-open probe: one ping, no retries (probing is already
+    /// periodic).  Success re-admits; garbage quarantines; failure
+    /// doubles the cooldown.
+    fn probe(&self, i: usize) {
+        let fault = chaos::next_fault(i);
+        let (connect, io) = self.tuning.limits(RpcClass::Ping);
+        let outcome = round_trip(self.workers[i].addr, &ping_request(), connect, io, fault)
+            .and_then(|reply| {
+                expect_pong(&reply).map_err(|e| RpcError::Violation(format!("{e:#}")))
+            });
+        match outcome {
+            Ok(()) => {
+                *self.workers[i].state.lock().expect("worker state") = Breaker::Closed;
+                self.counters.readmitted.fetch_add(1, Ordering::Relaxed);
+                bump("net:fleet:readmitted");
+                eprintln!("worker {} re-admitted to the fleet", self.workers[i].label);
+            }
+            Err(RpcError::Violation(reason)) => self.quarantine(i, &reason),
+            Err(_) => {
+                let mut state = self.workers[i].state.lock().expect("worker state");
+                if let Breaker::Open { failed_probes, .. } = *state {
+                    let failed = failed_probes.saturating_add(1);
+                    *state = Breaker::Open {
+                        next_probe: Instant::now() + self.probe_cooldown(failed),
+                        failed_probes: failed,
+                    };
+                }
             }
         }
     }
 
-    /// Retire a worker (RPC failure, or a reply the caller could not
-    /// decode/validate).  Idempotent; logs and counts the first loss.
-    pub(crate) fn mark_dead(&self, widx: usize, reason: &str) {
-        if !self.workers[widx].dead.swap(true, Ordering::Relaxed) {
-            bump("net:worker-lost");
+    fn probe_cooldown(&self, failed_probes: u32) -> Duration {
+        let base = self.tuning.probe_cooldown_ms.max(1);
+        let ms = base
+            .saturating_shl(failed_probes.min(16))
+            .min(self.tuning.probe_cooldown_cap_ms.max(base));
+        Duration::from_millis(ms)
+    }
+
+    /// One request/response exchange against worker `widx`, retrying
+    /// transient failures with capped exponential backoff and seeded
+    /// jitter.  `None` means the worker's breaker is now open (or it
+    /// was already out of rotation) and the caller must run the
+    /// shipped work locally.  The reply is transport-valid but not
+    /// semantically validated — callers that find it structurally
+    /// wrong must call [`report_violation`](Fleet::report_violation).
+    pub fn rpc(&self, widx: usize, request: &Json, class: RpcClass) -> Option<Json> {
+        let (connect, io) = self.tuning.limits(class);
+        let mut attempt: u32 = 0;
+        loop {
+            if !matches!(
+                *self.workers[widx].state.lock().expect("worker state"),
+                Breaker::Closed
+            ) {
+                return None;
+            }
+            let fault = chaos::next_fault(widx);
+            let outcome =
+                time_phase("net:rpc", || round_trip(self.workers[widx].addr, request, connect, io, fault));
+            match outcome {
+                Ok(reply) => {
+                    if attempt > 0 {
+                        self.counters.retried.fetch_add(1, Ordering::Relaxed);
+                        bump("net:rpc:retried");
+                    }
+                    return Some(reply);
+                }
+                Err(RpcError::Transient(kind, reason)) => {
+                    match kind {
+                        TransientKind::Connect => {
+                            self.counters.connect.fetch_add(1, Ordering::Relaxed);
+                            bump("net:rpc:connect");
+                        }
+                        TransientKind::Timeout => {
+                            self.counters.timeout.fetch_add(1, Ordering::Relaxed);
+                            bump("net:rpc:timeout");
+                        }
+                        TransientKind::Disconnect => {
+                            self.counters.disconnect.fetch_add(1, Ordering::Relaxed);
+                            bump("net:rpc:disconnect");
+                        }
+                    }
+                    if attempt >= self.tuning.retries {
+                        self.trip_open(widx, &reason);
+                        return None;
+                    }
+                    attempt += 1;
+                    std::thread::sleep(self.backoff(widx, attempt));
+                }
+                Err(RpcError::Fatal(reason)) => {
+                    self.trip_open(widx, &reason);
+                    return None;
+                }
+                Err(RpcError::Violation(reason)) => {
+                    self.quarantine(widx, &reason);
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// [`rpc`](Fleet::rpc) running on a detached thread while this
+    /// thread polls `cancelled`.  When the predicate fires first the
+    /// call returns [`RpcOutcome::Abandoned`] immediately — the claim
+    /// loop's hedging uses this so a straggling worker cannot hold the
+    /// epoch barrier hostage for a full I/O deadline — and the
+    /// background attempt still settles breaker state when it
+    /// resolves.  Its late reply, if any, is discarded unmerged.
+    pub(crate) fn rpc_cancellable(
+        self: &Arc<Self>,
+        widx: usize,
+        request: Json,
+        class: RpcClass,
+        cancelled: &(dyn Fn() -> bool),
+    ) -> RpcOutcome {
+        let (tx, rx) = mpsc::channel();
+        let fleet = Arc::clone(self);
+        std::thread::spawn(move || {
+            let _ = tx.send(fleet.rpc(widx, &request, class));
+        });
+        loop {
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(Some(reply)) => return RpcOutcome::Reply(reply),
+                Ok(None) => return RpcOutcome::Lost,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if cancelled() {
+                        return RpcOutcome::Abandoned;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return RpcOutcome::Lost,
+            }
+        }
+    }
+
+    /// Capped exponential backoff with deterministic seeded jitter:
+    /// attempt `k` sleeps `base << (k-1)` (capped) plus a hash-derived
+    /// jitter of up to half the step — reproducible for a given
+    /// `(jitter_seed, worker, sequence)`, never synchronized across
+    /// workers.
+    fn backoff(&self, widx: usize, attempt: u32) -> Duration {
+        let step = self
+            .tuning
+            .backoff_base_ms
+            .max(1)
+            .saturating_shl(attempt.saturating_sub(1).min(16))
+            .min(self.tuning.backoff_cap_ms.max(1));
+        let seq = self.workers[widx].jitter_seq.fetch_add(1, Ordering::Relaxed);
+        let jitter = jitter_hash(self.tuning.jitter_seed, widx as u64, seq) % (step / 2 + 1);
+        Duration::from_millis(step + jitter)
+    }
+
+    /// A reply that failed the caller's structural validation: the
+    /// worker speaks the protocol but lies in it.  Quarantine — unlike
+    /// a crash, garbage does not heal with a restart probe.
+    pub(crate) fn report_violation(&self, widx: usize, reason: &str) {
+        self.quarantine(widx, reason);
+    }
+
+    fn quarantine(&self, widx: usize, reason: &str) {
+        let mut state = self.workers[widx].state.lock().expect("worker state");
+        if !matches!(*state, Breaker::Quarantined) {
+            *state = Breaker::Quarantined;
+            drop(state);
+            self.counters.garbage.fetch_add(1, Ordering::Relaxed);
+            bump("net:rpc:garbage");
             eprintln!(
-                "worker {} lost ({reason}); re-running its work locally",
+                "worker {} quarantined ({reason}); re-running its work locally",
                 self.workers[widx].label
             );
         }
     }
+
+    /// Trip the breaker open: out of rotation now, re-probed after the
+    /// cooldown.  Idempotent; quarantine is never downgraded.
+    fn trip_open(&self, widx: usize, reason: &str) {
+        let mut state = self.workers[widx].state.lock().expect("worker state");
+        if matches!(*state, Breaker::Closed) {
+            *state = Breaker::Open {
+                next_probe: Instant::now() + self.probe_cooldown(0),
+                failed_probes: 0,
+            };
+            drop(state);
+            eprintln!(
+                "worker {} lost ({reason}); re-running its work locally, will re-probe",
+                self.workers[widx].label
+            );
+        }
+    }
+
+    /// Count one hedged claim (called by the claim loops in
+    /// `packing::solver` / `sched::shard`).
+    pub(crate) fn note_hedged(&self) {
+        self.counters.hedged.fetch_add(1, Ordering::Relaxed);
+        bump("net:rpc:hedged");
+    }
+
+    /// Snapshot the failure/recovery counters.
+    pub fn stats(&self) -> FleetStats {
+        let c = &self.counters;
+        FleetStats {
+            connect: c.connect.load(Ordering::Relaxed),
+            timeout: c.timeout.load(Ordering::Relaxed),
+            disconnect: c.disconnect.load(Ordering::Relaxed),
+            garbage: c.garbage.load(Ordering::Relaxed),
+            retried: c.retried.load(Ordering::Relaxed),
+            hedged: c.hedged.load(Ordering::Relaxed),
+            readmitted: c.readmitted.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The tuning this fleet was built with.
+    pub fn tuning(&self) -> &FleetTuning {
+        &self.tuning
+    }
 }
 
-/// Register the fleet for this process: resolve and ping every
-/// address, warn about (and retire) unreachable workers, and fail only
-/// if *none* respond.  Returns the live worker count.
-pub fn set_workers(addrs: &[String]) -> Result<usize> {
+/// Syntactic validation + order-preserving dedup for a `--workers`
+/// list, applied at parse time so malformed addresses fail with a
+/// clear error instead of surfacing as connect failures mid-run.
+/// Duplicates are dropped with a warning (a doubled worker would just
+/// race itself).
+pub fn sanitize_workers(addrs: &[String]) -> Result<Vec<String>> {
     ensure!(!addrs.is_empty(), "worker list is empty");
-    let mut workers = Vec::with_capacity(addrs.len());
-    for label in addrs {
-        let (addr, dead) = match resolve(label) {
-            Ok(addr) => (addr, false),
-            Err(e) => {
-                bump("net:worker-lost");
-                eprintln!("worker {label} unresolvable ({e:#}); dropping it from the fleet");
-                (SocketAddr::from(([127, 0, 0, 1], 0)), true)
-            }
-        };
-        workers.push(Worker { addr, label: label.clone(), dead: AtomicBool::new(dead) });
-    }
-    let fleet = Arc::new(Fleet { workers });
-    for i in 0..fleet.workers.len() {
-        if fleet.workers[i].dead.load(Ordering::Relaxed) {
-            continue;
-        }
-        if let Err(e) = ping(fleet.workers[i].addr) {
-            fleet.mark_dead(i, &format!("handshake failed: {e:#}"));
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::with_capacity(addrs.len());
+    for raw in addrs {
+        let addr = raw.trim();
+        ensure!(!addr.is_empty(), "worker list contains an empty address");
+        let (host, port) = addr
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow!("worker address {addr:?} is missing a :port suffix"))?;
+        ensure!(!host.is_empty(), "worker address {addr:?} has an empty host");
+        let port: u16 = port
+            .parse()
+            .map_err(|_| anyhow!("worker address {addr:?} has an invalid port {port:?}"))?;
+        ensure!(port != 0, "worker address {addr:?} uses reserved port 0");
+        if seen.insert(addr.to_string()) {
+            out.push(addr.to_string());
+        } else {
+            eprintln!("warning: duplicate worker address {addr} ignored");
         }
     }
+    Ok(out)
+}
+
+/// Register the fleet for this process with default tuning.  Returns
+/// the live worker count.
+pub fn set_workers(addrs: &[String]) -> Result<usize> {
+    set_workers_tuned(addrs, FleetTuning::default())
+}
+
+/// [`set_workers`] with explicit tuning (tests shrink the backoff and
+/// probe clocks; benches disable hedging for baselines).
+pub fn set_workers_tuned(addrs: &[String], tuning: FleetTuning) -> Result<usize> {
+    let fleet = Fleet::connect(addrs, tuning)?;
     let live = fleet.live_count();
-    ensure!(live > 0, "none of the {} workers are reachable", addrs.len());
     *FLEET.lock().expect("fleet registry") = Some(fleet);
     Ok(live)
 }
@@ -130,40 +582,182 @@ pub fn clear() {
     *FLEET.lock().expect("fleet registry") = None;
 }
 
-/// The registered fleet, if any worker in it is still live.
+/// The registered fleet, if any worker in it could still serve —
+/// `Closed` workers plus `Open` ones awaiting a re-probe.  (Dispatch
+/// sites then call [`Fleet::ready_workers`], which is what actually
+/// probes and re-admits.)
 pub fn active() -> Option<Arc<Fleet>> {
     let fleet = FLEET.lock().expect("fleet registry").clone()?;
-    (fleet.live_count() > 0).then_some(fleet)
+    (fleet.usable_count() > 0).then_some(fleet)
+}
+
+/// Global stats accessor for tests/benches: the registered fleet's
+/// counter snapshot.
+pub fn stats() -> Option<FleetStats> {
+    FLEET.lock().expect("fleet registry").as_ref().map(|f| f.stats())
 }
 
 fn resolve(addr: &str) -> Result<SocketAddr> {
-    addr.to_socket_addrs()?
+    addr.to_socket_addrs()
+        .map_err(|e| anyhow!("worker address {addr:?} does not resolve: {e}"))?
         .next()
-        .ok_or_else(|| anyhow!("address {addr} resolves to nothing"))
+        .ok_or_else(|| anyhow!("worker address {addr:?} resolves to nothing"))
 }
 
-fn round_trip(addr: SocketAddr, request: &Json) -> Result<Json> {
-    let mut stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
-    stream.set_read_timeout(Some(IO_TIMEOUT))?;
-    stream.set_write_timeout(Some(IO_TIMEOUT))?;
-    stream.set_nodelay(true)?;
-    send_json(&mut stream, &hello())?;
-    check_hello(&recv_json(&mut stream)?)?;
-    send_json(&mut stream, request)?;
-    let response = recv_json(&mut stream)?;
-    if response.str_field("type")? == "error" {
+fn ping_request() -> Json {
+    Json::obj(vec![("type".to_string(), Json::Str("ping".to_string()))])
+}
+
+fn expect_pong(reply: &Json) -> Result<()> {
+    let kind = reply.str_field("type")?;
+    ensure!(kind == "pong", "ping answered with {kind:?}");
+    Ok(())
+}
+
+/// A `Read`/`Write` shim that remembers the `io::ErrorKind` of the
+/// last failing operation, so frame-level errors (which surface as
+/// opaque `util::error::Error`s) can still be classified as timeout
+/// vs. disconnect vs. parse-garbage.
+struct Recorded<'a> {
+    stream: &'a TcpStream,
+    kind: &'a Cell<Option<std::io::ErrorKind>>,
+}
+
+impl Read for Recorded<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let r = self.stream.read(buf);
+        if let Err(e) = &r {
+            self.kind.set(Some(e.kind()));
+        }
+        r
+    }
+}
+
+impl Write for Recorded<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let r = self.stream.write(buf);
+        if let Err(e) = &r {
+            self.kind.set(Some(e.kind()));
+        }
+        r
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        let r = self.stream.flush();
+        if let Err(e) = &r {
+            self.kind.set(Some(e.kind()));
+        }
+        r
+    }
+}
+
+/// Classify a frame-layer failure via the recorded I/O error kind: a
+/// fired socket deadline is a timeout, any other I/O error is a
+/// disconnect, and *no* recorded I/O error means the bytes arrived but
+/// did not parse — a protocol violation.
+fn classify_io(e: crate::util::error::Error, kind: Option<std::io::ErrorKind>) -> RpcError {
+    use std::io::ErrorKind::{TimedOut, WouldBlock};
+    match kind {
+        Some(TimedOut) | Some(WouldBlock) => RpcError::Transient(TransientKind::Timeout, format!("{e:#}")),
+        Some(_) => RpcError::Transient(TransientKind::Disconnect, format!("{e:#}")),
+        None => RpcError::Violation(format!("{e:#}")),
+    }
+}
+
+/// One request/response round trip on a fresh connection, with chaos
+/// injection (`fault`) woven through the frame layer.
+fn round_trip(
+    addr: SocketAddr,
+    request: &Json,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+    fault: Option<Fault>,
+) -> Result<Json, RpcError> {
+    match fault {
+        Some(Fault::Connect) => {
+            return Err(RpcError::Transient(
+                TransientKind::Connect,
+                "chaos: connection refused".to_string(),
+            ))
+        }
+        Some(Fault::WriteTimeout) => {
+            return Err(RpcError::Transient(
+                TransientKind::Timeout,
+                "chaos: write timed out".to_string(),
+            ))
+        }
+        Some(Fault::ReadTimeout) => {
+            return Err(RpcError::Transient(
+                TransientKind::Timeout,
+                "chaos: read timed out".to_string(),
+            ))
+        }
+        Some(Fault::Garbage) => return Ok(chaos::garbage_reply()),
+        _ => {}
+    }
+    let stream = TcpStream::connect_timeout(&addr, connect_timeout)
+        .map_err(|e| RpcError::Transient(TransientKind::Connect, e.to_string()))?;
+    let setup = stream
+        .set_read_timeout(Some(io_timeout))
+        .and_then(|()| stream.set_write_timeout(Some(io_timeout)))
+        .and_then(|()| stream.set_nodelay(true));
+    if let Err(e) = setup {
+        return Err(RpcError::Fatal(format!("socket setup failed: {e}")));
+    }
+    if let Some(Fault::Disconnect) = fault {
+        // A real mid-frame disconnect: promise 64 payload bytes, send
+        // 5, hang up.  The worker's read_exact fails exactly as it
+        // would against a crashing coordinator.
+        let mut s = &stream;
+        let _ = s.write_all(&64u32.to_be_bytes());
+        let _ = s.write_all(b"chaos");
+        let _ = s.flush();
+        return Err(RpcError::Transient(
+            TransientKind::Disconnect,
+            "chaos: disconnected mid-frame".to_string(),
+        ));
+    }
+    let kind = Cell::new(None);
+    let mut wire = Recorded { stream: &stream, kind: &kind };
+    let mut exchange = || -> Result<Json> {
+        send_json(&mut wire, &hello())?;
+        check_hello(&recv_json(&mut wire)?)?;
+        send_json(&mut wire, request)?;
+        recv_json(&mut wire)
+    };
+    let response = exchange().map_err(|e| classify_io(e, kind.get()))?;
+    let reply_type = response
+        .str_field("type")
+        .map_err(|e| RpcError::Violation(format!("reply has no type: {e:#}")))?;
+    if reply_type == "error" {
         let message = response.str_field("message").unwrap_or("(no message)");
-        return Err(anyhow!("worker refused the request: {message}"));
+        return Err(RpcError::Fatal(format!("worker refused the request: {message}")));
+    }
+    if let Some(Fault::Slow(ms)) = fault {
+        std::thread::sleep(Duration::from_millis(ms));
     }
     Ok(response)
 }
 
-fn ping(addr: SocketAddr) -> Result<()> {
-    let request = Json::obj(vec![("type".to_string(), Json::Str("ping".to_string()))]);
-    let reply = round_trip(addr, &request)?;
-    let kind = reply.str_field("type")?;
-    ensure!(kind == "pong", "ping answered with {kind:?}");
-    Ok(())
+/// splitmix64-style hash for backoff jitter.
+fn jitter_hash(seed: u64, widx: u64, seq: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(widx.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        .wrapping_add(seq.wrapping_mul(0xd134_2543_de82_ef95));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// `u64::checked_shl` with saturation to the cap-friendly maximum.
+trait SaturatingShl {
+    fn saturating_shl(self, shift: u32) -> u64;
+}
+
+impl SaturatingShl for u64 {
+    fn saturating_shl(self, shift: u32) -> u64 {
+        self.checked_shl(shift).unwrap_or(u64::MAX)
+    }
 }
 
 #[cfg(test)]
@@ -174,7 +768,8 @@ mod tests {
     fn all_unreachable_workers_is_an_error_and_registers_nothing() {
         // Port 1 on loopback refuses connections immediately; the
         // failed registration must leave the global fleet untouched.
-        let result = set_workers(&["127.0.0.1:1".to_string()]);
+        let tuning = FleetTuning { retries: 1, backoff_base_ms: 1, ..FleetTuning::default() };
+        let result = set_workers_tuned(&["127.0.0.1:1".to_string()], tuning);
         assert!(result.is_err());
         assert!(active().is_none());
     }
@@ -182,5 +777,69 @@ mod tests {
     #[test]
     fn empty_worker_list_is_an_error() {
         assert!(set_workers(&[]).is_err());
+    }
+
+    #[test]
+    fn unresolvable_address_is_a_clear_error() {
+        let e = Fleet::connect(
+            &["definitely-not-a-host.invalid:9001".to_string()],
+            FleetTuning::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("does not resolve"), "{e:#}");
+    }
+
+    #[test]
+    fn sanitize_accepts_dedupes_and_rejects() {
+        // Valid list with one duplicate: deduped, order preserved.
+        let addrs: Vec<String> = ["127.0.0.1:9001", "localhost:9002", "127.0.0.1:9001"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let clean = sanitize_workers(&addrs).unwrap();
+        assert_eq!(clean, vec!["127.0.0.1:9001".to_string(), "localhost:9002".to_string()]);
+
+        // Malformed addresses are rejected with a clear error.
+        for bad in ["no-port", ":9001", "host:", "host:notaport", "host:0", "host:65536", ""] {
+            let e = sanitize_workers(&[bad.to_string()]).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("worker")
+                    && (msg.contains("port") || msg.contains("host") || msg.contains("empty")),
+                "{bad:?}: {msg}"
+            );
+        }
+        assert!(sanitize_workers(&[]).is_err());
+    }
+
+    #[test]
+    fn backoff_is_capped_and_jitter_deterministic() {
+        let fleet = Fleet {
+            workers: vec![Worker {
+                addr: SocketAddr::from(([127, 0, 0, 1], 1)),
+                label: "test".to_string(),
+                state: Mutex::new(Breaker::Closed),
+                jitter_seq: AtomicU64::new(0),
+            }],
+            tuning: FleetTuning {
+                backoff_base_ms: 10,
+                backoff_cap_ms: 40,
+                ..FleetTuning::default()
+            },
+            counters: Counters::default(),
+        };
+        // Steps double (10, 20, 40) then cap at 40; jitter adds at most
+        // half a step.
+        for (attempt, step) in [(1u32, 10u64), (2, 20), (3, 40), (4, 40), (10, 40)] {
+            let d = fleet.backoff(0, attempt).as_millis() as u64;
+            assert!(
+                (step..=step + step / 2).contains(&d),
+                "attempt {attempt}: {d}ms outside [{step}, {}]",
+                step + step / 2
+            );
+        }
+        // Same (seed, worker, seq) -> same jitter.
+        assert_eq!(jitter_hash(1, 2, 3), jitter_hash(1, 2, 3));
+        assert_ne!(jitter_hash(1, 2, 3), jitter_hash(1, 2, 4));
     }
 }

@@ -1,4 +1,5 @@
-//! Coordinator/worker distribution over plain TCP.
+//! Coordinator/worker distribution over plain TCP, with a
+//! self-healing fleet.
 //!
 //! Threads ran out as a scaling axis (sharded simulation in PR 4,
 //! parallel branch-and-bound in PR 8 both saturate one machine); this
@@ -19,14 +20,31 @@
 //!
 //! Layering: [`frame`] moves length-prefixed JSON over a byte stream;
 //! [`proto`] defines the handshake and the type encodings; [`fleet`]
-//! is the coordinator's process-global worker registry with the
-//! retire-on-failure liveness model; [`worker`] is the serve loop.
+//! is the coordinator's process-global worker registry and failure
+//! model; [`chaos`] is the deterministic seeded fault injector that
+//! exercises it; [`worker`] is the serve loop.
+//!
+//! **The failure lifecycle** (see [`fleet`] for detail): each RPC
+//! classifies its failures — *transient* faults (connect refusal,
+//! timeout, disconnect) retry with capped exponential backoff and
+//! seeded jitter before tripping the worker's circuit breaker open;
+//! *fatal* errors trip it immediately; *protocol violations* (garbage
+//! replies) quarantine the worker for the run.  Open workers are
+//! periodically re-probed with `ping` (half-open) and re-admitted on
+//! success, so a worker that restarts mid-trace rejoins the fleet.
+//! Straggling remote claims are hedged: past a multiple of the median
+//! claim duration the coordinator re-runs the claim locally and takes
+//! whichever result lands first.
 //!
 //! With no fleet registered (the default — no `--workers` flag) every
 //! dispatch site runs its pre-existing local code path untouched, and
 //! any worker failure mid-run degrades to exactly that path for the
-//! affected work: workers *race*, they are never load-bearing.
+//! affected work: workers *race*, they are never load-bearing.  That
+//! is also why none of the above can change an outcome: every reply is
+//! re-validated, winner folds are order-strict, and hedged duplicates
+//! are resolved first-wins per already-deterministic slot.
 
+pub mod chaos;
 pub mod fleet;
 pub mod frame;
 pub mod proto;

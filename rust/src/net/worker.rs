@@ -59,12 +59,26 @@ pub fn serve(listener: TcpListener, options: WorkerOptions) -> Result<()> {
 pub fn spawn_local(max_requests: Option<usize>) -> (String, std::thread::JoinHandle<()>) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback worker");
     let addr = listener.local_addr().expect("loopback worker address").to_string();
-    let handle = std::thread::spawn(move || {
+    (addr, spawn_serve(listener, max_requests))
+}
+
+/// [`spawn_local`] on a *specific* address — restart-on-the-same-port
+/// tests use this to bring a dead worker back where the fleet expects
+/// it.  Returns an error if the address is still bound.
+pub fn spawn_on(addr: &str, max_requests: Option<usize>) -> Result<std::thread::JoinHandle<()>> {
+    let listener = TcpListener::bind(addr)?;
+    Ok(spawn_serve(listener, max_requests))
+}
+
+fn spawn_serve(
+    listener: TcpListener,
+    max_requests: Option<usize>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
         if let Err(e) = serve(listener, WorkerOptions { max_requests }) {
             eprintln!("loopback worker exited: {e:#}");
         }
-    });
-    (addr, handle)
+    })
 }
 
 fn error_response(e: &crate::util::error::Error) -> Json {
@@ -85,7 +99,20 @@ fn handle(stream: &mut TcpStream) -> Result<()> {
     send_json(stream, &hello())?;
     let request = recv_json(stream)?;
     match dispatch(&request) {
-        Ok(response) => send_json(stream, &response),
+        Ok(response) => {
+            send_json(stream, &response)?;
+            // Wait (briefly) for the peer's close so the worker ends up
+            // on the passive side of the TCP teardown: TIME_WAIT then
+            // lands on the coordinator's ephemeral port, not on the
+            // worker's listen port, and a worker that dies can restart
+            // on the same address immediately.  The coordinator drops
+            // its stream as soon as it has the reply, so this returns
+            // in microseconds on the normal path.
+            use std::io::Read;
+            let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+            let _ = stream.read(&mut [0u8; 1]);
+            Ok(())
+        }
         Err(e) => {
             send_json(stream, &error_response(&e))?;
             Err(e)

@@ -89,8 +89,8 @@
 use super::aggregate::{self, ItemClass};
 use super::heuristics::solve_best_fit;
 use super::problem::{MvbpProblem, PackedBin, Solution};
-use super::solver::{race_chunks_remote, race_tasks};
-use crate::net::fleet::Fleet;
+use super::solver::{race_chunks_remote, race_tasks, HedgeCfg, RemoteOutcome};
+use crate::net::fleet::{Fleet, RpcClass, RpcOutcome};
 use crate::net::proto::{
     dollars_from_json, dollars_to_json, problem_from_json, problem_to_json, resources_from_json,
     resources_to_json, solution_from_json, solution_to_json,
@@ -716,7 +716,7 @@ impl BranchAndBound {
                 .collect()
         };
         let mut results = race_frontier(
-            fleet.as_deref(),
+            fleet.as_ref(),
             threads,
             task_ids.len(),
             "item",
@@ -948,7 +948,7 @@ impl BranchAndBound {
                 .collect()
         };
         let mut results = race_frontier(
-            fleet.as_deref(),
+            fleet.as_ref(),
             threads,
             task_ids.len(),
             "class",
@@ -1005,20 +1005,22 @@ fn compose_winner(
 }
 
 /// Phase-2 task racing with optional fleet distribution.  Without a
-/// fleet (or with every worker already dead) this is *exactly* the
-/// pre-existing local pool — `race_tasks` with no shedding.  With a
-/// fleet, `race_chunks_remote` adds one dispatcher thread per live
+/// fleet (or with no worker currently in rotation) this is *exactly*
+/// the pre-existing local pool — `race_tasks` with no shedding.  With
+/// a fleet, `race_chunks_remote` adds one dispatcher thread per ready
 /// worker: each claimed chunk is shipped as one `exact` request
 /// carrying the problem, the serialized subtree tasks, and the global
 /// incumbent at request-build time (improvement broadcast at chunk
 /// granularity — the shared incumbent only ever sheds strictly
 /// costlier subtrees, so a staler value merely prunes less).  A worker
-/// failure or malformed reply re-runs the chunk through `run_local`,
-/// and the winner fold upstream is order-strict, so outcomes are
-/// bit-identical for any worker count, deaths included.
+/// failure re-runs the chunk through `run_local`, a malformed reply
+/// quarantines the worker, a straggling claim is hedged locally, and
+/// the winner fold upstream is order-strict — so outcomes are
+/// bit-identical for any worker count, deaths, restarts, and hedge
+/// timing included.
 #[allow(clippy::too_many_arguments)]
 fn race_frontier(
-    fleet: Option<&Fleet>,
+    fleet: Option<&Arc<Fleet>>,
     threads: usize,
     count: usize,
     mode: &str,
@@ -1030,7 +1032,10 @@ fn race_frontier(
     serialize_tasks: impl FnOnce() -> Vec<Json>,
     run_local: impl Fn(usize) -> Option<(Dollars, Solution)> + Sync,
 ) -> Vec<Option<(Dollars, Solution)>> {
-    let live = fleet.map(|f| f.live_indices()).unwrap_or_default();
+    // `ready_workers` is the probe point: `Open` workers whose
+    // cooldown elapsed get their half-open ping here, so a restarted
+    // worker rejoins before this fan-out rather than after the run.
+    let live = fleet.map(|f| f.ready_workers()).unwrap_or_default();
     if live.is_empty() {
         return race_tasks(
             threads,
@@ -1046,20 +1051,28 @@ fn race_frontier(
     // Chunks of ~count/(4 x workers): big enough to amortize a round
     // trip, small enough to rebalance when subtree sizes skew.
     let chunk = count.div_ceil(live.len() * FRONTIER_FACTOR).max(1);
+    let tuning = fleet.tuning();
+    let on_hedge = || fleet.note_hedged();
+    let hedge = tuning.hedge.then(|| HedgeCfg {
+        after: std::time::Duration::from_millis(tuning.hedge_after_ms),
+        factor: tuning.hedge_factor,
+        on_hedge: &on_hedge,
+    });
     race_chunks_remote(
         live.len(),
         threads,
         count,
         chunk,
-        |w, range| {
+        hedge,
+        |w, range, cancelled| {
             // Once the shared budget is exhausted a worker can only add
             // redundant exploration (each request carries the full
             // budget so completed proofs stay worker-count-invariant).
-            // Returning `None` downshifts this dispatcher to local
-            // claims — near-free once `stop` is set — without retiring
-            // the worker from the fleet.
+            // Failing the claim downshifts this dispatcher to local
+            // claims — near-free once `stop` is set — without touching
+            // the worker's breaker.
             if shared.stop.load(Ordering::Relaxed) {
-                return None;
+                return RemoteOutcome::Failed;
             }
             let request = Json::obj(vec![
                 ("type".to_string(), Json::Str("exact".to_string())),
@@ -1084,14 +1097,19 @@ fn race_frontier(
                 ("problem".to_string(), problem_json.clone()),
                 ("tasks".to_string(), Json::arr(tasks[range.clone()].iter().cloned())),
             ]);
-            let reply = fleet.rpc(live[w], &request)?;
+            let reply = match fleet.rpc_cancellable(live[w], request, RpcClass::Exact, &cancelled)
+            {
+                RpcOutcome::Reply(reply) => reply,
+                RpcOutcome::Abandoned => return RemoteOutcome::Abandoned,
+                RpcOutcome::Lost => return RemoteOutcome::Failed,
+            };
             match profiling::time_phase("net:merge", || {
                 merge_exact_reply(&reply, problem, shared, range.len())
             }) {
-                Ok(results) => Some(results),
+                Ok(results) => RemoteOutcome::Done(results),
                 Err(e) => {
-                    fleet.mark_dead(live[w], &format!("bad exact reply: {e:#}"));
-                    None
+                    fleet.report_violation(live[w], &format!("bad exact reply: {e:#}"));
+                    RemoteOutcome::Failed
                 }
             }
         },

@@ -515,80 +515,237 @@ pub(crate) fn race_tasks<T: Send>(
         .collect()
 }
 
+/// How one remote chunk claim resolved (see [`race_chunks_remote`]).
+pub(crate) enum RemoteOutcome<T> {
+    /// The worker replied and the reply validated: one result per task
+    /// in the claimed range.
+    Done(Vec<Option<T>>),
+    /// The worker failed terminally — the dispatcher must run the
+    /// chunk locally and downshift to single-task claims.
+    Failed,
+    /// The claim was hedged and the local re-run won: the in-flight
+    /// RPC was abandoned, its slots are already filled, and the
+    /// dispatcher stays in rotation.
+    Abandoned,
+}
+
+/// Straggler-hedging knobs for [`race_chunks_remote`], derived from
+/// [`FleetTuning`](crate::net::fleet::FleetTuning) by the dispatch
+/// sites.
+pub(crate) struct HedgeCfg<'a> {
+    /// Floor before any claim can be considered a straggler.
+    pub after: Duration,
+    /// A claim is overdue past `factor` × the median completed-claim
+    /// duration (subject to the floor above).
+    pub factor: f64,
+    /// Called once per hedged claim (counter hook).
+    pub on_hedge: &'a (dyn Fn() + Sync),
+}
+
+/// One in-flight (or settled) remote chunk claim.
+struct Claim {
+    range: std::ops::Range<usize>,
+    started: Instant,
+    done: bool,
+    hedged: bool,
+}
+
+/// Shared view of remote claim progress, for the hedging loop.
+struct Ledger {
+    claims: Vec<Claim>,
+    /// Durations of *completed* remote claims — the straggler
+    /// threshold is a multiple of their median.
+    durations: Vec<Duration>,
+}
+
+impl Ledger {
+    fn median_duration(&self) -> Duration {
+        if self.durations.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut sorted = self.durations.clone();
+        sorted.sort();
+        sorted[sorted.len() / 2]
+    }
+}
+
 /// [`race_tasks`]' remote sibling: the same claim-from-a-cursor pool,
 /// extended with `remote_workers` dispatcher threads that claim
 /// *chunks* of `chunk_size` consecutive tasks and ship each chunk to a
-/// fleet worker (`remote(w, range)`), while `local_threads` threads
-/// claim single tasks and run them in-process (`local(i)`).
+/// fleet worker (`remote(w, range, cancelled)`), while `local_threads`
+/// threads claim single tasks and run them in-process (`local(i)`).
 ///
 /// The degradation contract is what makes workers safe to race: a
-/// dispatcher whose `remote` call fails (worker died, timed out, or
-/// replied malformed — anything but a full-length result vector) runs
-/// every task of the claimed chunk through `local` itself and then
-/// downshifts to single-task local claims, so every task always
-/// produces exactly the result the pure-local pool would have produced
-/// for it.  Task *results* never depend on who computed them — workers
-/// execute the identical search the local closure runs — so the
-/// caller's order-strict fold sees the same candidates regardless of
-/// worker count or worker deaths.
+/// dispatcher whose claim [`Failed`](RemoteOutcome::Failed) runs every
+/// task of the chunk through `local` itself and then downshifts to
+/// single-task local claims, so every task always produces exactly the
+/// result the pure-local pool would have produced for it.
+///
+/// With `hedge` set, local threads that drain the cursor turn into
+/// straggler watchers: a remote claim outstanding longer than
+/// `factor` × the median completed-claim duration (floored at `after`)
+/// is re-run locally, and the `cancelled` predicate handed to `remote`
+/// turns true once every slot of its range is filled — the dispatcher
+/// abandons the RPC and stays in rotation.  Slots are first-wins:
+/// whichever copy of a task's result lands first is kept.  That is
+/// outcome-preserving because both copies are the *same* result —
+/// workers execute the identical search the local closure runs — so
+/// the caller's order-strict fold sees the same candidates regardless
+/// of worker count, worker deaths, or hedge timing.
 pub(crate) fn race_chunks_remote<T: Send>(
     remote_workers: usize,
     local_threads: usize,
     count: usize,
     chunk_size: usize,
-    remote: impl Fn(usize, std::ops::Range<usize>) -> Option<Vec<Option<T>>> + Sync,
+    hedge: Option<HedgeCfg<'_>>,
+    remote: impl Fn(usize, std::ops::Range<usize>, &dyn Fn() -> bool) -> RemoteOutcome<T> + Sync,
     local: impl Fn(usize) -> Option<T> + Sync,
 ) -> Vec<Option<T>> {
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::Mutex;
+    const HEDGE_POLL: Duration = Duration::from_millis(10);
     let chunk_size = chunk_size.max(1);
     // Progress must never depend on the fleet: with no dispatchers
     // there must be at least one local thread.
     let local_threads = if remote_workers == 0 { local_threads.max(1) } else { local_threads };
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
-    let (cursor_ref, slots_ref, remote_ref, local_ref) = (&cursor, &slots, &remote, &local);
+    // Outer `None` = unfilled; `Some(result)` = resolved (first-wins).
+    let slots: Vec<Mutex<Option<Option<T>>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    // Guards so each task runs `local` at most once even when a hedger
+    // and a downshifting dispatcher race for the same chunk.
+    let local_started: Vec<AtomicBool> = (0..count).map(|_| AtomicBool::new(false)).collect();
+    let ledger = Mutex::new(Ledger { claims: Vec::new(), durations: Vec::new() });
+
+    let filled = |i: usize| slots[i].lock().expect("task slot").is_some();
+    let fill = |i: usize, result: Option<T>| {
+        let mut slot = slots[i].lock().expect("task slot");
+        if slot.is_none() {
+            *slot = Some(result);
+        }
+    };
+    let run_local_once = |i: usize| {
+        if !local_started[i].swap(true, Ordering::Relaxed) && !filled(i) {
+            fill(i, local(i));
+        }
+    };
+
     std::thread::scope(|scope| {
         for w in 0..remote_workers {
+            let (run_local_once, filled, fill) = (&run_local_once, &filled, &fill);
+            let (cursor, ledger, remote) = (&cursor, &ledger, &remote);
             scope.spawn(move || {
                 let mut alive = true;
                 loop {
                     let step = if alive { chunk_size } else { 1 };
-                    let start = cursor_ref.fetch_add(step, Ordering::Relaxed);
+                    let start = cursor.fetch_add(step, Ordering::Relaxed);
                     if start >= count {
                         break;
                     }
                     let end = (start + step).min(count);
-                    if alive {
-                        match remote_ref(w, start..end) {
-                            Some(results) if results.len() == end - start => {
-                                for (offset, result) in results.into_iter().enumerate() {
-                                    *slots_ref[start + offset].lock().expect("task slot") = result;
-                                }
-                                continue;
-                            }
-                            _ => alive = false,
+                    if !alive {
+                        for i in start..end {
+                            run_local_once(i);
                         }
+                        continue;
                     }
-                    for i in start..end {
-                        *slots_ref[i].lock().expect("task slot") = local_ref(i);
+                    let claim_id = {
+                        let mut ledger = ledger.lock().expect("claim ledger");
+                        ledger.claims.push(Claim {
+                            range: start..end,
+                            started: Instant::now(),
+                            done: false,
+                            hedged: false,
+                        });
+                        ledger.claims.len() - 1
+                    };
+                    let cancelled = || (start..end).all(filled);
+                    let outcome = remote(w, start..end, &cancelled);
+                    let record = |with_duration: bool| {
+                        let mut ledger = ledger.lock().expect("claim ledger");
+                        let claim = &mut ledger.claims[claim_id];
+                        claim.done = true;
+                        if with_duration {
+                            let elapsed = claim.started.elapsed();
+                            ledger.durations.push(elapsed);
+                        }
+                    };
+                    match outcome {
+                        RemoteOutcome::Done(results) if results.len() == end - start => {
+                            record(true);
+                            for (offset, result) in results.into_iter().enumerate() {
+                                fill(start + offset, result);
+                            }
+                        }
+                        RemoteOutcome::Abandoned => record(false),
+                        _ => {
+                            record(false);
+                            alive = false;
+                            for i in start..end {
+                                run_local_once(i);
+                            }
+                        }
                     }
                 }
             });
         }
         for _ in 0..local_threads {
-            scope.spawn(move || loop {
-                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                if i >= count {
-                    break;
+            let (run_local_once, cursor, ledger, hedge) = (&run_local_once, &cursor, &ledger, &hedge);
+            scope.spawn(move || {
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= count {
+                        break;
+                    }
+                    run_local_once(i);
                 }
-                *slots_ref[i].lock().expect("task slot") = local_ref(i);
+                let Some(hedge) = hedge else { return };
+                // Straggler watch: re-run overdue remote claims
+                // locally until every claim is settled or hedged.
+                loop {
+                    let overdue = {
+                        let mut ledger = ledger.lock().expect("claim ledger");
+                        let threshold = hedge
+                            .after
+                            .max(ledger.median_duration().mul_f64(hedge.factor.max(1.0)));
+                        let mut pick: Option<(usize, Instant)> = None;
+                        let mut outstanding = false;
+                        for (id, claim) in ledger.claims.iter().enumerate() {
+                            if claim.done || claim.hedged {
+                                continue;
+                            }
+                            outstanding = true;
+                            if claim.started.elapsed() > threshold
+                                && pick.map_or(true, |(_, started)| claim.started < started)
+                            {
+                                pick = Some((id, claim.started));
+                            }
+                        }
+                        if !outstanding {
+                            return;
+                        }
+                        if let Some((id, _)) = pick {
+                            ledger.claims[id].hedged = true;
+                            Some(ledger.claims[id].range.clone())
+                        } else {
+                            None
+                        }
+                    };
+                    match overdue {
+                        Some(range) => {
+                            (hedge.on_hedge)();
+                            for i in range {
+                                run_local_once(i);
+                            }
+                        }
+                        None => std::thread::sleep(HEDGE_POLL),
+                    }
+                }
             });
         }
     });
     slots
         .into_iter()
-        .map(|slot| slot.into_inner().expect("task slot"))
+        .map(|slot| slot.into_inner().expect("task slot").expect("every task produced a result"))
         .collect()
 }
 
@@ -908,6 +1065,58 @@ mod tests {
             Box::new(ExactSolver),
             Box::new(PortfolioSolver::default()),
         ]
+    }
+
+    #[test]
+    fn hedging_rescues_a_straggling_remote_claim() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // One dispatcher whose every claim straggles forever: the
+        // remote closure only yields once the hedger has filled its
+        // slots.  Slow local claims guarantee the dispatcher gets a
+        // chunk before the cursor drains; the tiny hedge floor makes
+        // the watcher fire fast.
+        let hedges = AtomicUsize::new(0);
+        let results = race_chunks_remote(
+            1,
+            1,
+            4,
+            2,
+            Some(HedgeCfg {
+                after: Duration::from_millis(10),
+                factor: 2.0,
+                on_hedge: &|| {
+                    hedges.fetch_add(1, Ordering::Relaxed);
+                },
+            }),
+            |_w, _range, cancelled: &dyn Fn() -> bool| {
+                while !cancelled() {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                RemoteOutcome::Abandoned
+            },
+            |i| {
+                std::thread::sleep(Duration::from_millis(20));
+                Some(i * 10)
+            },
+        );
+        assert_eq!(results, vec![Some(0), Some(10), Some(20), Some(30)]);
+        assert!(hedges.load(Ordering::Relaxed) >= 1, "the straggler was never hedged");
+    }
+
+    #[test]
+    fn failed_remote_claims_degrade_to_local_results() {
+        // A dispatcher that always fails must still yield the local
+        // results for every task, with no hedging configured.
+        let results = race_chunks_remote(
+            2,
+            1,
+            7,
+            3,
+            None,
+            |_w, _range, _cancelled| RemoteOutcome::Failed::<Option<usize>>,
+            |i| Some(Some(i)),
+        );
+        assert_eq!(results, (0..7).map(|i| Some(Some(i))).collect::<Vec<_>>());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! partition/merge code path with one shard covering every instance.
 //!
 //! **Fleet distribution.**  With a worker fleet registered
-//! (`net::fleet`), the shard count grows by the live worker count and
+//! (`net::fleet`), the shard count grows by the ready worker count and
 //! one dispatcher thread per worker ships claimed shards over the wire
 //! (`simulate` requests) while local threads run shards in-process.
 //! The merge contract is partition-invariant — it consumes only shard
@@ -28,17 +28,23 @@
 //! shard's report is the worker's `run_engine` over the identical
 //! sub-simulation (floats round-trip the wire bit-exactly), so
 //! fleet-sharded runs stay bit-identical to local ones.  A worker that
-//! dies or replies malformed has its claimed shard re-run locally by
-//! the dispatcher thread; with no fleet registered this module is
-//! byte-for-byte the pre-existing local path.
+//! fails has its claimed shard re-run locally (with retries, breaker
+//! bookkeeping, and straggler hedging handled by `net::fleet` and
+//! `race_chunks_remote`); a malformed reply quarantines the worker.
+//! With no fleet registered this module is byte-for-byte the
+//! pre-existing local path.
 
 use super::sim::{Device, SimConfig, SimReport, Simulation};
 use crate::metrics::{StreamPerf, UtilizationMeter};
-use crate::net::{fleet::Fleet, proto};
+use crate::net::fleet::{Fleet, RpcClass, RpcOutcome};
+use crate::net::proto;
+use crate::packing::solver::{race_chunks_remote, HedgeCfg, RemoteOutcome};
 use crate::util::error::{ensure, Result};
 use crate::util::json::Json;
 use crate::util::profiling;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// One shard: instances `base..end` of the parent simulation, remapped
 /// to local 0-based indices.
@@ -97,12 +103,15 @@ fn extract(sim: &Simulation, base: usize, end: usize) -> Shard {
 pub(super) fn run_sharded(sim: &mut Simulation, config: SimConfig) -> SimReport {
     let n_instances = instance_count(sim);
     let workers = config.parallelism.effective_sim_threads().max(1);
-    // A registered fleet widens the partition by its live worker count;
-    // the merge is partition-invariant, so the shard count (like the
-    // thread count) never changes the merged report.
+    // A registered fleet widens the partition by its ready worker
+    // count; the merge is partition-invariant, so the shard count
+    // (like the thread count) never changes the merged report.
+    // `ready_workers` is also the probe point that re-admits `Open`
+    // workers whose cooldown elapsed — a worker that restarted
+    // mid-trace rejoins here.
     let fleet = crate::net::fleet::active();
-    let remote = fleet.as_ref().map_or(0, |f| f.live_count());
-    let shard_count = (workers + remote).min(n_instances).max(1);
+    let live = fleet.as_ref().map(|f| f.ready_workers()).unwrap_or_default();
+    let shard_count = (workers + live.len()).min(n_instances).max(1);
 
     // Contiguous instance ranges with sizes differing by at most one.
     let mut shards = Vec::with_capacity(shard_count);
@@ -119,8 +128,8 @@ pub(super) fn run_sharded(sim: &mut Simulation, config: SimConfig) -> SimReport 
     // in join, so K shards use exactly K threads.
     let reports: Vec<SimReport> = if shards.len() == 1 {
         shards.iter_mut().map(|sh| sh.sim.run_engine(config)).collect()
-    } else if let Some(fleet) = fleet {
-        run_mixed(&mut shards, config, &fleet, workers)
+    } else if let Some(fleet) = fleet.filter(|_| !live.is_empty()) {
+        run_mixed(&mut shards, config, &fleet, &live, workers)
     } else {
         let (last, rest) = shards.split_last_mut().expect("at least one shard");
         std::thread::scope(|scope| {
@@ -141,116 +150,100 @@ pub(super) fn run_sharded(sim: &mut Simulation, config: SimConfig) -> SimReport 
     merge(sim, config, &shards, reports)
 }
 
-/// Mixed local/remote shard execution: `local_threads` threads run
-/// claimed shards in-process while one dispatcher thread per live
-/// fleet worker ships its claims over the wire.  A dispatcher whose
-/// worker fails (RPC error or malformed reply) runs the claimed shard
-/// locally itself and stops dispatching — progress never depends on
-/// the fleet.  Reports land in shard order, feeding the unchanged
-/// instance-id-order merge.
+/// Mixed local/remote shard execution on `race_chunks_remote` with a
+/// chunk size of one shard: `local_threads` threads run claimed shards
+/// in-process while one dispatcher thread per ready fleet worker ships
+/// its claims over the wire.  The pool supplies the degradation
+/// contract — a failed claim re-runs locally, a straggling claim is
+/// hedged — and both copies of a shard's report are the same
+/// `run_engine` over the same sub-simulation, so first-wins slot
+/// filling cannot change the merge.  Requests serialize under the
+/// shard's cell lock but the RPC flies without it, so a hedger can run
+/// the shard while the wire is still pending.  Reports land in shard
+/// order, feeding the unchanged instance-id-order merge.
 fn run_mixed(
     shards: &mut [Shard],
     config: SimConfig,
-    fleet: &Fleet,
+    fleet: &Arc<Fleet>,
+    live: &[usize],
     local_threads: usize,
 ) -> Vec<SimReport> {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Mutex;
-
-    let live = fleet.live_indices();
     let count = shards.len();
-    let cursor = AtomicUsize::new(0);
     let cells: Vec<Mutex<&mut Shard>> = shards.iter_mut().map(Mutex::new).collect();
-    let slots: Vec<Mutex<Option<SimReport>>> = (0..count).map(|_| Mutex::new(None)).collect();
     let config_json = proto::sim_config_to_json(&config);
-    let (cursor_ref, cells_ref, slots_ref, live_ref, config_json_ref) =
-        (&cursor, &cells, &slots, &live, &config_json);
-    std::thread::scope(|scope| {
-        for w in 0..live.len() {
-            scope.spawn(move || {
-                let mut alive = true;
-                loop {
-                    let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                    if i >= count {
-                        break;
-                    }
-                    let mut guard = cells_ref[i].lock().expect("shard cell");
-                    let shard: &mut Shard = &mut guard;
-                    let report = if alive {
-                        match ship_shard(fleet, live_ref[w], shard, config_json_ref) {
-                            Some(report) => report,
-                            None => {
-                                alive = false;
-                                shard.sim.run_engine(config)
-                            }
-                        }
-                    } else {
-                        shard.sim.run_engine(config)
-                    };
-                    *slots_ref[i].lock().expect("shard slot") = Some(report);
-                }
-            });
-        }
-        for _ in 0..local_threads {
-            scope.spawn(move || loop {
-                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                if i >= count {
-                    break;
-                }
-                let mut guard = cells_ref[i].lock().expect("shard cell");
-                let report = guard.sim.run_engine(config);
-                *slots_ref[i].lock().expect("shard slot") = Some(report);
-            });
-        }
+    let tuning = fleet.tuning();
+    let on_hedge = || fleet.note_hedged();
+    let hedge = tuning.hedge.then(|| HedgeCfg {
+        after: Duration::from_millis(tuning.hedge_after_ms),
+        factor: tuning.hedge_factor,
+        on_hedge: &on_hedge,
     });
-    slots
+    let results = race_chunks_remote(
+        live.len(),
+        local_threads,
+        count,
+        1,
+        hedge,
+        |w, range, cancelled| {
+            let i = range.start;
+            // Serialize under the cell lock, release before the RPC.
+            let (request, expected_ids) = {
+                let guard = cells[i].lock().expect("shard cell");
+                let request = profiling::time_phase("net:serialize", || {
+                    Json::obj(vec![
+                        ("type".to_string(), Json::Str("simulate".to_string())),
+                        ("config".to_string(), config_json.clone()),
+                        ("sim".to_string(), proto::sim_to_json(&guard.sim)),
+                    ])
+                });
+                let ids: Vec<String> = guard.sim.streams.iter().map(|s| s.id.clone()).collect();
+                (request, ids)
+            };
+            let reply =
+                match fleet.rpc_cancellable(live[w], request, RpcClass::Simulate, cancelled) {
+                    RpcOutcome::Reply(reply) => reply,
+                    RpcOutcome::Abandoned => return RemoteOutcome::Abandoned,
+                    RpcOutcome::Lost => return RemoteOutcome::Failed,
+                };
+            match profiling::time_phase("net:merge", || decode_sim_reply(&reply, &expected_ids)) {
+                Ok(report) => RemoteOutcome::Done(vec![Some(report)]),
+                Err(e) => {
+                    fleet.report_violation(live[w], &format!("bad sim reply: {e:#}"));
+                    RemoteOutcome::Failed
+                }
+            }
+        },
+        |i| {
+            let mut guard = cells[i].lock().expect("shard cell");
+            Some(guard.sim.run_engine(config))
+        },
+    );
+    results
         .into_iter()
-        .map(|slot| {
-            slot.into_inner().expect("shard slot").expect("every shard produced a report")
-        })
+        .map(|report| report.expect("every shard produced a report"))
         .collect()
-}
-
-/// Ship one shard to fleet worker `widx`.  `None` means the worker is
-/// now dead and the caller runs the shard locally.
-fn ship_shard(fleet: &Fleet, widx: usize, shard: &Shard, config_json: &Json) -> Option<SimReport> {
-    let request = profiling::time_phase("net:serialize", || {
-        Json::obj(vec![
-            ("type".to_string(), Json::Str("simulate".to_string())),
-            ("config".to_string(), config_json.clone()),
-            ("sim".to_string(), proto::sim_to_json(&shard.sim)),
-        ])
-    });
-    let reply = fleet.rpc(widx, &request)?;
-    match profiling::time_phase("net:merge", || decode_sim_reply(&reply, shard)) {
-        Ok(report) => Some(report),
-        Err(e) => {
-            fleet.mark_dead(widx, &format!("bad sim reply: {e:#}"));
-            None
-        }
-    }
 }
 
 /// Decode and sanity-check a worker's `sim_result` reply.  The stream
 /// count and per-stream id order must match the shipped shard — the
 /// merge scatters by local stream index, so a short or reordered reply
 /// must be rejected (re-running the shard locally), never scattered.
-fn decode_sim_reply(reply: &Json, shard: &Shard) -> Result<SimReport> {
+fn decode_sim_reply(reply: &Json, expected_ids: &[String]) -> Result<SimReport> {
     let kind = reply.str_field("type")?;
     ensure!(kind == "sim_result", "expected sim_result, got {kind:?}");
     let report = proto::report_from_json(reply.field("report")?)?;
     ensure!(
-        report.streams.len() == shard.sim.streams.len(),
+        report.streams.len() == expected_ids.len(),
         "worker reported {} streams for a {}-stream shard",
         report.streams.len(),
-        shard.sim.streams.len()
+        expected_ids.len()
     );
-    for (perf, exec) in report.streams.iter().zip(&shard.sim.streams) {
+    for (perf, id) in report.streams.iter().zip(expected_ids) {
         ensure!(
-            perf.stream_id == exec.id,
+            perf.stream_id == *id,
             "worker stream order mismatch: got {:?}, expected {:?}",
             perf.stream_id,
-            exec.id
+            id
         );
     }
     Ok(report)

@@ -27,9 +27,14 @@
 //! * event counters (via [`bump`], the `calls` column is the count) —
 //!   `exact:seed-dropped` when the exact search discards an invalid
 //!   incumbent (`packing::exact`), the solve cache's `cache:hit` /
-//!   `cache:miss` / `cache:reject` (`manager::solve_cache`), and
-//!   `net:worker-lost` each time a fleet worker dies, times out, or
-//!   replies malformed and its work is re-run locally (`net::fleet`).
+//!   `cache:miss` / `cache:reject` (`manager::solve_cache`), and the
+//!   fleet's per-cause failure counters (`net::fleet`):
+//!   `net:rpc:connect` / `net:rpc:timeout` / `net:rpc:disconnect` per
+//!   transient RPC failure by cause, `net:rpc:garbage` per worker
+//!   quarantined for a protocol violation, `net:rpc:retried` per RPC
+//!   that succeeded only after retries, `net:rpc:hedged` per straggler
+//!   claim re-dispatched locally, and `net:fleet:readmitted` per
+//!   circuit-breaker re-admission of a recovered worker.
 //!
 //! The `camcloud trace --profile` flag prints the table via
 //! [`report`]; in a build without the feature it prints a rebuild hint

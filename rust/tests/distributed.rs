@@ -4,19 +4,24 @@
 //! These are the acceptance gates for `--workers`: trace outcomes and
 //! exact-search proofs are bit-identical across {0, 1, 2, 4} workers,
 //! a worker dying mid-trace degrades to local re-execution with the
-//! same final outcome, and a worker speaking garbage is retired
-//! without corrupting anything.
+//! same final outcome, a worker speaking garbage is quarantined
+//! without corrupting anything, a worker that restarts mid-trace is
+//! re-admitted by the circuit breaker, and the seeded chaos schedules
+//! (connect refusals, timeouts, slow replies, mid-frame disconnects,
+//! garbage replies) leave every outcome bit-identical to the
+//! fault-free zero-worker baseline.
 //!
-//! The worker fleet is process-global state
-//! ([`camcloud::net::fleet::set_workers`]), so every test serializes
-//! on one mutex and clears the fleet when done — the other test
-//! binaries never register workers, so they are unaffected.
+//! The worker fleet and the chaos injector are process-global state
+//! ([`camcloud::net::fleet::set_workers`], [`camcloud::net::chaos`]),
+//! so every test serializes on one mutex and clears both when done —
+//! the other test binaries never register workers, so they are
+//! unaffected.
 
 use camcloud::coordinator::{AutoscaleConfig, AutoscaleRunner, Coordinator, ScalePolicy};
 use camcloud::manager::Strategy;
 use camcloud::net::frame::{recv_json, send_json};
 use camcloud::net::proto::{check_hello, hello};
-use camcloud::net::{fleet, worker};
+use camcloud::net::{chaos, fleet, worker};
 use camcloud::packing::{BinType, BranchAndBound, Item, MvbpProblem};
 use camcloud::sched::{Parallelism, SimConfig, SimEngine};
 use camcloud::types::{Dollars, ResourceVec};
@@ -25,17 +30,20 @@ use camcloud::util::rng::Rng;
 use camcloud::workload::trace::WorkloadTrace;
 use camcloud::workload::FleetSpec;
 use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
 
 static FLEET_LOCK: Mutex<()> = Mutex::new(());
 
 /// Serialize fleet-touching tests and guarantee the global fleet is
-/// cleared on the way out, pass or fail.
+/// cleared and the chaos injector disarmed on the way out, pass or
+/// fail.
 struct FleetGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
 
 impl FleetGuard {
     fn acquire() -> FleetGuard {
         let guard = FLEET_LOCK.lock().unwrap_or_else(|p| p.into_inner());
         fleet::clear();
+        chaos::disarm();
         FleetGuard(guard)
     }
 }
@@ -43,6 +51,22 @@ impl FleetGuard {
 impl Drop for FleetGuard {
     fn drop(&mut self) {
         fleet::clear();
+        chaos::disarm();
+    }
+}
+
+/// Fleet tuning with the failure-handling clocks shrunk three orders
+/// of magnitude so chaos soaks churn through retries, breaker trips,
+/// re-probes, and hedges in test time instead of wall-clock minutes.
+fn fast_tuning() -> fleet::FleetTuning {
+    fleet::FleetTuning {
+        retries: 2,
+        backoff_base_ms: 2,
+        backoff_cap_ms: 10,
+        probe_cooldown_ms: 50,
+        probe_cooldown_cap_ms: 400,
+        hedge_after_ms: 50,
+        ..fleet::FleetTuning::default()
     }
 }
 
@@ -245,11 +269,11 @@ fn worker_death_mid_trace_degrades_to_local_with_identical_outcome() {
     let distributed = reactive_outcome(&trace, SimEngine::Event);
     assert_outcomes_identical("diurnal/doomed workers", &reference, &distributed);
     // Long diurnal traces issue far more than two requests per worker,
-    // so by the end every worker has been retired.
-    assert!(
-        fleet::active().is_none(),
-        "exhausted workers must be marked dead, not retried forever"
-    );
+    // so by the end every breaker has tripped open.  Dead-but-honest
+    // workers stay *registered* (the breaker would re-probe and
+    // re-admit them if they came back) but none is in rotation.
+    let handle = fleet::active().expect("open workers keep the fleet registered for re-probes");
+    assert_eq!(handle.live_count(), 0, "exhausted workers must be out of rotation");
 }
 
 /// A worker that completes the handshake but answers requests with
@@ -322,6 +346,132 @@ fn malformed_worker_replies_degrade_to_local() {
     assert_eq!(distributed.streams, local.streams);
     assert_eq!(distributed.frames_completed, local.frames_completed);
     assert_eq!(distributed.frames_dropped, local.frames_dropped);
+}
+
+/// Chaos soak, one schedule per fault type: the diurnal trace under a
+/// seeded fault-injection schedule must produce the bit-identical
+/// outcome of the fault-free zero-worker baseline, and the per-cause
+/// failure counters must prove the targeted fault actually fired.
+#[test]
+fn chaos_schedules_leave_trace_outcomes_bit_identical() {
+    let _guard = FleetGuard::acquire();
+    let addrs = spawn_workers(2);
+    let trace = WorkloadTrace::diurnal(8, 7);
+    let reference = reactive_outcome(&trace, SimEngine::Event);
+    // (label, spec, check): the check pins that the schedule exercised
+    // its fault path — a soak that injects nothing proves nothing.
+    type StatCheck = fn(&fleet::FleetStats) -> bool;
+    let schedules: &[(&str, &str, StatCheck)] = &[
+        ("connect-refusals", "seed=11,connect=0.4", |s| s.connect > 0),
+        ("timeouts", "seed=22,read-timeout=0.25,write-timeout=0.25", |s| s.timeout > 0),
+        // Slow replies are delivered, not failed: no counter to pin.
+        ("slow-replies", "seed=33,slow=0.5,slow-ms=120", |_| true),
+        ("disconnects", "seed=44,disconnect=0.4", |s| s.disconnect > 0),
+        ("garbage", "seed=55,garbage=0.25", |s| s.garbage > 0),
+    ];
+    for (label, spec, check) in schedules {
+        fleet::clear();
+        chaos::disarm();
+        fleet::set_workers_tuned(&addrs, fast_tuning()).expect("loopback workers reachable");
+        // Armed after registration, so the schedule hits the work RPCs.
+        chaos::arm(chaos::ChaosConfig::parse(spec).expect("valid chaos spec"));
+        let outcome = reactive_outcome(&trace, SimEngine::Event);
+        chaos::disarm();
+        let stats = fleet::stats().expect("fleet registered");
+        assert_outcomes_identical(&format!("chaos/{label}"), &reference, &outcome);
+        assert!(check(&stats), "chaos/{label}: schedule injected nothing ({stats:?})");
+    }
+}
+
+/// Kitchen-sink chaos: every fault type at once, over the spot trace
+/// (mid-epoch revocations) and over exact proofs in both search modes.
+/// Outcomes and proofs stay bit-identical to the fault-free baseline.
+#[test]
+fn chaos_kitchen_sink_keeps_spot_trace_and_exact_proofs_identical() {
+    let _guard = FleetGuard::acquire();
+    let addrs = spawn_workers(2);
+    let spec = "seed=7,connect=0.1,read-timeout=0.1,write-timeout=0.05,slow=0.15,slow-ms=80,\
+                disconnect=0.1,garbage=0.05";
+
+    let trace = WorkloadTrace::builtin("spot", 7).unwrap();
+    let reference = reactive_outcome(&trace, SimEngine::Event);
+    fleet::set_workers_tuned(&addrs, fast_tuning()).expect("loopback workers reachable");
+    chaos::arm(chaos::ChaosConfig::parse(spec).expect("valid chaos spec"));
+    let outcome = reactive_outcome(&trace, SimEngine::Event);
+    chaos::disarm();
+    assert_outcomes_identical("chaos/spot", &reference, &outcome);
+
+    let mut rng = Rng::new(0xFA17);
+    for case in 0..4 {
+        for per_item in [true, false] {
+            let problem = if per_item {
+                random_instance(&mut rng)
+            } else {
+                random_replicated_instance(&mut rng)
+            };
+            let solve = || {
+                BranchAndBound { per_item, threads: 2, ..Default::default() }
+                    .solve(&problem)
+                    .expect("feasible instance solves")
+            };
+            fleet::clear();
+            chaos::disarm();
+            let reference = solve();
+            assert!(reference.proven_optimal, "case {case}: reference proof incomplete");
+            // Fresh registration per case resets quarantines from the
+            // previous schedule; a per-case seed resets the ordinals.
+            fleet::set_workers_tuned(&addrs, fast_tuning()).expect("workers reachable");
+            chaos::arm(
+                chaos::ChaosConfig::parse(&format!("{spec},seed={}", 100 + case))
+                    .expect("valid chaos spec"),
+            );
+            let chaotic = solve();
+            chaos::disarm();
+            assert!(chaotic.proven_optimal, "case {case}: chaotic proof incomplete");
+            assert_eq!(
+                chaotic.solution, reference.solution,
+                "case {case}: per_item={per_item} plan diverges under chaos"
+            );
+        }
+    }
+}
+
+/// The circuit-breaker lifecycle end to end: a worker dies mid-trace,
+/// restarts on the same port, is re-probed and re-admitted, and the
+/// trace outcome still matches the zero-worker baseline bit for bit.
+#[test]
+fn restarted_worker_is_readmitted_mid_trace() {
+    let _guard = FleetGuard::acquire();
+    let trace = WorkloadTrace::diurnal(10, 7);
+    let reference = reactive_outcome(&trace, SimEngine::Event);
+
+    // Worker A serves the whole trace; worker B answers its
+    // registration ping plus two requests, dies, and restarts on the
+    // same port (the restarter retries bind while the OS releases it).
+    let (addr_a, _handle_a) = worker::spawn_local(None);
+    let (addr_b, doomed_handle) = worker::spawn_local(Some(3));
+    let rebind_addr = addr_b.clone();
+    let restarter = std::thread::spawn(move || {
+        doomed_handle.join().expect("doomed worker serve loop");
+        for _ in 0..250 {
+            match worker::spawn_on(&rebind_addr, None) {
+                Ok(_) => return,
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+        panic!("could not rebind restarted worker on {rebind_addr}");
+    });
+
+    fleet::set_workers_tuned(&[addr_a, addr_b], fast_tuning())
+        .expect("both workers up at registration");
+    let distributed = reactive_outcome(&trace, SimEngine::Event);
+    let stats = fleet::stats().expect("fleet registered");
+    assert_outcomes_identical("diurnal/restarted worker", &reference, &distributed);
+    assert!(
+        stats.readmitted > 0,
+        "the restarted worker was never re-admitted ({stats:?})"
+    );
+    restarter.join().expect("restarter thread");
 }
 
 /// `--solve-cache-file` end to end: the first trace run writes the
